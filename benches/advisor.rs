@@ -1,0 +1,40 @@
+//! Carbon Advisor benchmarks: simulator throughput and full start-time
+//! sweeps (the figure-harness workhorse).
+
+use carbonscaler::advisor::{self, SimConfig};
+use carbonscaler::carbon::{regions, synthetic};
+use carbonscaler::sched::{CarbonAgnostic, CarbonScalerPolicy};
+use carbonscaler::util::bench::bench;
+use carbonscaler::workload::catalog;
+use std::time::Duration;
+
+fn main() {
+    let trace = synthetic::generate(regions::by_name("ontario").unwrap(), 60 * 24, 1);
+    let w = catalog::by_name("resnet18").unwrap();
+    let job = w.job(0, 24.0, 1.5, 8).unwrap();
+    let cfg = SimConfig::default();
+    let budget = Duration::from_millis(500);
+
+    println!("== single simulation ==");
+    bench("simulate carbonscaler 24h job", 3, 20, budget, || {
+        advisor::simulate(&CarbonScalerPolicy, &job, &trace, &cfg).unwrap()
+    });
+    bench("simulate carbon-agnostic 24h job", 3, 20, budget, || {
+        advisor::simulate(&CarbonAgnostic, &job, &trace, &cfg).unwrap()
+    });
+    bench("simulate w/ 30% forecast error", 3, 20, budget, || {
+        advisor::simulate(
+            &CarbonScalerPolicy,
+            &job,
+            &trace,
+            &SimConfig { forecast_error: 0.3, ..Default::default() },
+        )
+        .unwrap()
+    });
+
+    println!("\n== sweeps ==");
+    let starts = advisor::even_starts(trace.len(), 48, 40);
+    bench("40-start sweep (fig-harness unit)", 1, 3, Duration::from_secs(2), || {
+        advisor::sweep_start_times(&CarbonScalerPolicy, &job, &trace, &starts, &cfg).unwrap()
+    });
+}

@@ -1,0 +1,16 @@
+//! Figure-regeneration benchmarks: time each experiment in quick mode —
+//! these are the end-to-end "one bench per paper table/figure" targets.
+
+use carbonscaler::expt::{self, ExpContext};
+use carbonscaler::util::bench::bench;
+use std::time::Duration;
+
+fn main() {
+    let ctx = ExpContext { seed: 2023, quick: true };
+    for e in expt::all() {
+        let id = e.id();
+        bench(&format!("expt {id} (quick)"), 0, 1, Duration::from_millis(1), || {
+            e.run(&ctx).unwrap()
+        });
+    }
+}

@@ -1,0 +1,58 @@
+//! PJRT runtime benchmarks: per-step execution cost and elastic pool
+//! scaling (the real marginal-capacity measurement). Requires
+//! `make artifacts`.
+
+use carbonscaler::runtime::{Manifest, ParamServer, WorkerPool};
+use carbonscaler::util::bench::bench;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!("skipping runtime bench: run `make artifacts` first");
+        return;
+    };
+
+    for preset in ["tiny", "small"] {
+        let Some(art) = manifest.transformer(preset) else { continue };
+        let max = 4usize;
+        let pool = WorkerPool::spawn(art, max, 1).expect("pool");
+        println!("== {preset} (P={}) ==", art.n_params);
+        let budget = Duration::from_secs(2);
+        let mut base = None;
+        for k in 1..=max {
+            let mut ps = ParamServer::init_from_layout(art, 7);
+            let r = bench(
+                &format!("train step k={k} ({}sm/step)", k * art.batch),
+                2,
+                5,
+                budget,
+                || pool.step(&mut ps, k).unwrap(),
+            );
+            let thr = (k * art.batch) as f64 / r.mean.as_secs_f64();
+            if k == 1 {
+                base = Some(thr);
+            }
+            println!(
+                "    -> {:.0} samples/s (scaling efficiency {:.2})",
+                thr,
+                thr / base.unwrap() / k as f64
+            );
+        }
+        pool.shutdown();
+    }
+
+    // N-body step timing.
+    for preset in ["tiny", "small"] {
+        let Some(art) = manifest.nbody(preset) else { continue };
+        let mut sim = carbonscaler::runtime::nbody::NBodySim::new(art, 1).expect("sim");
+        bench(
+            &format!("nbody step N={}", art.n_bodies),
+            2,
+            5,
+            Duration::from_secs(1),
+            || sim.step(0.01).unwrap(),
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Scheduler benchmarks: Algorithm 1 (and the polish pass) across the
+//! paper-relevant (n slots, M servers) space. Target (DESIGN.md §7):
+//! paper scale n=96, M=64 well under 1 ms for the raw greedy.
+
+use carbonscaler::carbon::{regions, synthetic};
+use carbonscaler::scaling::models::presets;
+use carbonscaler::sched::greedy;
+use carbonscaler::util::bench::bench;
+use carbonscaler::workload::JobBuilder;
+use std::time::Duration;
+
+fn main() {
+    let trace = synthetic::generate(regions::by_name("ontario").unwrap(), 120 * 24, 1);
+    let budget = Duration::from_millis(400);
+
+    println!("== Algorithm 1 (raw greedy) ==");
+    for (n_hours, m_servers) in [(24usize, 8usize), (96, 8), (96, 64), (336, 64), (96, 256)] {
+        let curve = presets::RESNET18.curve(m_servers);
+        let job = JobBuilder::new("bench", curve)
+            .servers(1, m_servers)
+            .length(n_hours as f64 / 1.5)
+            .slack_factor(1.5)
+            .build()
+            .unwrap();
+        let carbon = trace.window(0, job.n_slots());
+        bench(
+            &format!("greedy n={n_hours} M={m_servers}"),
+            3,
+            20,
+            budget,
+            || greedy::plan(&job, &carbon).unwrap(),
+        );
+    }
+
+    println!("\n== Algorithm 1 + polish (production policy) ==");
+    for (n_hours, m_servers) in [(24usize, 8usize), (96, 8), (96, 64)] {
+        let curve = presets::RESNET18.curve(m_servers);
+        let job = JobBuilder::new("bench", curve)
+            .servers(1, m_servers)
+            .length(n_hours as f64 / 1.5)
+            .slack_factor(1.5)
+            .build()
+            .unwrap();
+        let carbon = trace.window(0, job.n_slots());
+        bench(
+            &format!("polished n={n_hours} M={m_servers}"),
+            2,
+            10,
+            budget,
+            || greedy::plan_polished(&job, &carbon).unwrap(),
+        );
+    }
+
+    println!("\n== recomputation (plan_remaining, mid-execution) ==");
+    let curve = presets::RESNET18.curve(8);
+    let job = JobBuilder::new("bench", curve)
+        .length(64.0)
+        .slack_factor(1.5)
+        .build()
+        .unwrap();
+    let carbon = trace.window(48, 48);
+    bench("plan_remaining n=48 M=8", 3, 20, budget, || {
+        greedy::plan_remaining(&job, &carbon, 48, 32.0, 0.5).unwrap()
+    });
+}

@@ -1,0 +1,111 @@
+//! Carbon Advisor what-if analysis (paper §4.3): explore how slack,
+//! region, and scalability change a job's carbon savings *before*
+//! deploying it.
+//!
+//! Run: `cargo run --release --example advisor_whatif`
+
+use carbonscaler::advisor::{self, SimConfig};
+use carbonscaler::carbon::{regions, synthetic};
+use carbonscaler::sched::{CarbonAgnostic, CarbonScalerPolicy, SuspendResumeDeadline};
+use carbonscaler::util::stats;
+use carbonscaler::util::table::{f, pct, Table};
+use carbonscaler::workload::catalog;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SimConfig::default();
+
+    // What-if 1: how much does waiting longer help? (ResNet18, Ontario)
+    let trace = synthetic::generate(regions::by_name("ontario").unwrap(), 42 * 24, 7);
+    let starts = advisor::even_starts(trace.len(), 96, 16);
+    let w = catalog::by_name("resnet18").unwrap();
+    let mut t1 = Table::new("what-if: extend the deadline (ResNet18, 24h, Ontario)")
+        .headers(&["T/l", "cs savings", "sr savings", "cost overhead"]);
+    for factor in [1.0, 1.25, 1.5, 2.0, 3.0] {
+        let job = w.job(0, 24.0, factor, 8)?;
+        let ag = advisor::summarize(&advisor::sweep_start_times(
+            &CarbonAgnostic,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )?);
+        let cs = advisor::summarize(&advisor::sweep_start_times(
+            &CarbonScalerPolicy,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )?);
+        let sr = advisor::summarize(&advisor::sweep_start_times(
+            &SuspendResumeDeadline,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )?);
+        t1.row(vec![
+            f(factor, 2),
+            pct(advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g)),
+            pct(advisor::savings_pct(ag.mean_carbon_g, sr.mean_carbon_g)),
+            pct(cs.mean_server_hours / ag.mean_server_hours - 1.0),
+        ]);
+    }
+    t1.print();
+    println!();
+
+    // What-if 2: which region should I run in?
+    let mut t2 = Table::new("what-if: choice of region (ResNet18, 24h, T=1.5l)")
+        .headers(&["region", "mean g/kWh", "agnostic (g)", "cs (g)", "savings"]);
+    for r in ["ontario", "california", "netherlands", "india", "iceland"] {
+        let trace = synthetic::generate(regions::by_name(r).unwrap(), 42 * 24, 7);
+        let starts = advisor::even_starts(trace.len(), 72, 12);
+        let job = w.job(0, 24.0, 1.5, 8)?;
+        let ag = advisor::summarize(&advisor::sweep_start_times(
+            &CarbonAgnostic,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )?);
+        let cs = advisor::summarize(&advisor::sweep_start_times(
+            &CarbonScalerPolicy,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )?);
+        t2.row(vec![
+            r.to_string(),
+            f(trace.mean(), 0),
+            f(ag.mean_carbon_g, 0),
+            f(cs.mean_carbon_g, 0),
+            pct(advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g)),
+        ]);
+    }
+    t2.print();
+    println!();
+
+    // What-if 3: does my job's scalability matter?
+    let trace = synthetic::generate(regions::by_name("ontario").unwrap(), 42 * 24, 7);
+    let starts = advisor::even_starts(trace.len(), 72, 12);
+    let mut t3 = Table::new("what-if: workload scalability (24h, T=1.5l, Ontario)")
+        .headers(&["workload", "speedup@8", "cs savings vs agnostic"]);
+    for w in catalog::WORKLOADS {
+        let job = w.job(0, 24.0, 1.5, 8)?;
+        let sav = advisor::savings_vs_baseline(
+            &CarbonScalerPolicy,
+            &CarbonAgnostic,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )?;
+        t3.row(vec![
+            w.name.to_string(),
+            f(w.scaling.curve(8).speedup(8), 2),
+            pct(stats::mean(&sav)),
+        ]);
+    }
+    t3.print();
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Multi-tenant cluster simulation: several carbon-scaled jobs compete
+//! for a finite node pool (paper §6 "Capacity Constraints" discussion).
+//!
+//! When every tenant chases the same low-carbon hours, procurement
+//! denials emerge from real contention; each denied job retries and
+//! recomputes its remaining schedule, and all jobs must still meet their
+//! deadlines.
+//!
+//! Run: `cargo run --release --example cluster_sim`
+
+use carbonscaler::carbon::{regions, synthetic};
+use carbonscaler::cluster::{Cluster, ClusterController};
+use carbonscaler::util::table::{f, Table};
+use carbonscaler::workload::catalog;
+
+fn main() -> anyhow::Result<()> {
+    let trace = synthetic::generate(regions::by_name("ontario").unwrap(), 21 * 24, 11);
+    // 12-node cluster; five Table-1 jobs each wanting up to 8 servers.
+    let mut ctl = ClusterController::new(Cluster::homogeneous(12), trace);
+
+    for (i, w) in catalog::WORKLOADS.iter().enumerate() {
+        let mut job = w.job(0, 18.0, 1.8, 8)?;
+        job.arrival = i * 2; // staggered arrivals
+        job.name = format!("{}-{}", w.name, i);
+        ctl.submit(job)?;
+    }
+
+    ctl.run(96)?;
+
+    let mut t = Table::new("multi-tenant run (12 nodes, 5 jobs)").headers(&[
+        "job",
+        "finished",
+        "completion (h)",
+        "deadline (h)",
+        "carbon (g)",
+        "denials",
+        "recomputes",
+    ]);
+    for j in ctl.jobs() {
+        t.row(vec![
+            j.spec.name.clone(),
+            j.finished().to_string(),
+            j.completion.map(|c| f(c, 1)).unwrap_or("-".into()),
+            f(j.spec.completion_hours, 0),
+            f(j.carbon_g, 0),
+            j.denials.to_string(),
+            j.recomputes.to_string(),
+        ]);
+    }
+    t.print();
+
+    let denials: usize = ctl.jobs().iter().map(|j| j.denials).sum();
+    println!(
+        "\n{} total denials from contention; all jobs finished: {}",
+        denials,
+        ctl.all_done()
+    );
+
+    // Hourly cluster pressure for the first two days.
+    let mut p = Table::new("cluster demand by hour (first 48h)").headers(&["hour", "used/capacity"]);
+    for h in 0..48 {
+        let used: usize = ctl
+            .jobs()
+            .iter()
+            .map(|j| j.realized.get(h).copied().unwrap_or(0))
+            .sum();
+        p.row(vec![h.to_string(), format!("{used}/12")]);
+    }
+    p.print();
+    Ok(())
+}

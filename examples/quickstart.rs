@@ -1,0 +1,80 @@
+//! Quickstart: submit one elastic job, plan it with CarbonScaler, and
+//! compare against every baseline via the Carbon Advisor.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use carbonscaler::advisor::{self, SimConfig};
+use carbonscaler::carbon::{regions, synthetic};
+use carbonscaler::scaling::MarginalCapacityCurve;
+use carbonscaler::sched::{
+    CarbonAgnostic, CarbonScalerPolicy, OracleStaticScale, Policy, StaticScale,
+    SuspendResumeDeadline,
+};
+use carbonscaler::util::table::{f, pct, Table};
+use carbonscaler::workload::JobBuilder;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A carbon trace for the region the job will run in. Swap in real
+    //    electricityMap data with CarbonTrace::load_csv.
+    let trace = synthetic::generate(regions::by_name("ontario").unwrap(), 28 * 24, 2023);
+    println!(
+        "region {}: mean {:.0} gCO2/kWh, daily CoV {:.2}\n",
+        trace.region,
+        trace.mean(),
+        trace.daily_coeff_of_variation()
+    );
+
+    // 2. An elastic batch job: 24 h at one server, may use up to 8, and
+    //    the user is willing to wait until T = 1.5 x l.
+    let job = JobBuilder::new(
+        "quickstart-job",
+        MarginalCapacityCurve::from_marginals(vec![1.0, 0.95, 0.9, 0.85, 0.8, 0.7, 0.6, 0.5])?,
+    )
+    .servers(1, 8)
+    .length(24.0)
+    .slack_factor(1.5)
+    .power(210.0)
+    .build()?;
+
+    // 3. Plan with CarbonScaler (Algorithm 1 + polish) and print it.
+    let window = trace.window(0, job.n_slots());
+    let plan = carbonscaler::sched::greedy::plan_polished(&job, &window)?;
+    println!("carbonscaler schedule (servers per hour):\n{:?}\n", plan.alloc);
+
+    // 4. Compare all policies under the Carbon Advisor.
+    let cfg = SimConfig::default();
+    let policies: Vec<Box<dyn Policy>> = vec![
+        Box::new(CarbonAgnostic),
+        Box::new(SuspendResumeDeadline),
+        Box::new(StaticScale::new(2)),
+        Box::new(OracleStaticScale),
+        Box::new(CarbonScalerPolicy),
+    ];
+    let mut t = Table::new("policy comparison").headers(&[
+        "policy",
+        "carbon (g)",
+        "completion (h)",
+        "server-hours",
+    ]);
+    let mut base = 0.0;
+    for p in &policies {
+        let r = advisor::simulate(p.as_ref(), &job, &trace, &cfg)?;
+        if p.name() == "carbon-agnostic" {
+            base = r.carbon_g;
+        }
+        t.row(vec![
+            p.name(),
+            f(r.carbon_g, 0),
+            r.completion_hours.map(|c| f(c, 1)).unwrap_or("-".into()),
+            f(r.server_hours, 1),
+        ]);
+    }
+    t.print();
+
+    let cs = advisor::simulate(&CarbonScalerPolicy, &job, &trace, &cfg)?;
+    println!(
+        "\ncarbonscaler saves {} carbon vs carbon-agnostic",
+        pct(advisor::savings_pct(base, cs.carbon_g))
+    );
+    Ok(())
+}

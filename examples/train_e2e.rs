@@ -1,0 +1,160 @@
+//! END-TO-END driver: real transformer training through the full stack.
+//!
+//! All three layers compose here:
+//!   L1 Pallas matmul kernel -> L2 jax train step (AOT HLO artifact) ->
+//!   rust PJRT elastic worker pool -> Carbon Profiler measures the real
+//!   marginal capacity curve -> Algorithm 1 plans against a carbon trace
+//!   -> the Carbon AutoScaler executes the schedule on an accelerated
+//!   clock, logging the loss curve, allocation timeline, and emissions.
+//!
+//! Run (after `make artifacts`):
+//!   cargo run --release --example train_e2e
+//!   cargo run --release --example train_e2e -- --workers 4 --length 12
+//!
+//! The run trains the `small` preset (~0.9M-parameter GPT-style LM —
+//! scaled to this CPU-PJRT testbed, structure identical to the paper's
+//! GPU jobs) for a few hundred steps and reports everything
+//! EXPERIMENTS.md's E2E section records.
+
+use carbonscaler::carbon::{regions, synthetic};
+use carbonscaler::coordinator::{CarbonAutoscaler, RunConfig};
+use carbonscaler::profiler::{profile_pool, ProfilerConfig};
+use carbonscaler::runtime::{Manifest, WorkerPool};
+use carbonscaler::sched::{CarbonAgnostic, CarbonScalerPolicy, Policy};
+use carbonscaler::util::cli::{Args, ArgSpec};
+use carbonscaler::util::table::{f, pct, Table};
+use carbonscaler::workload::JobBuilder;
+use std::path::PathBuf;
+use std::time::Duration;
+
+const SPECS: &[ArgSpec] = &[
+    ArgSpec::opt("preset", "artifact preset (tiny|small|medium)", "small"),
+    ArgSpec::opt("workers", "max workers M", "4"),
+    ArgSpec::opt("length", "job length in trace hours", "8"),
+    ArgSpec::opt("slack", "T / l", "1.5"),
+    ArgSpec::opt("slot-secs", "wall seconds per trace hour", "3"),
+    ArgSpec::opt("region", "carbon region", "ontario"),
+    ArgSpec::opt("seed", "seed", "42"),
+];
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, SPECS, "train_e2e").map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir)?;
+    let preset = args.str("preset")?;
+    let art = manifest
+        .transformer(&preset)
+        .ok_or_else(|| anyhow::anyhow!("preset {preset:?} not in manifest — run `make artifacts`"))?;
+    let workers = args.usize("workers")?;
+
+    println!(
+        "== e2e: {} preset, P={} params, B={} S={} V={}, M={} workers ==",
+        preset, art.n_params, art.batch, art.seq_len, art.vocab, workers
+    );
+    let pool = WorkerPool::spawn(art, workers, args.u64("seed")?)?;
+
+    // Carbon Profiler: measure the REAL scaling curve of this machine.
+    println!("\n[1/3] profiling the elastic pool (Carbon Profiler, alpha=1s/level)...");
+    let prof = profile_pool(
+        &pool,
+        &ProfilerConfig {
+            alpha: Duration::from_secs(1),
+            ..Default::default()
+        },
+    )?;
+    let mut tp = Table::new("measured scaling profile").headers(&["workers", "samples/s", "speedup"]);
+    for (i, &k) in prof.levels.iter().enumerate() {
+        tp.row(vec![
+            k.to_string(),
+            f(prof.throughputs[i], 1),
+            f(prof.throughputs[i] / prof.throughputs[0], 2),
+        ]);
+    }
+    tp.print();
+
+    // The job, scheduled with the measured curve.
+    let trace = synthetic::generate(
+        regions::by_name(&args.str("region")?)
+            .ok_or_else(|| anyhow::anyhow!("unknown region"))?,
+        14 * 24,
+        args.u64("seed")?,
+    );
+    let job = JobBuilder::new("train-e2e", prof.curve.clone())
+        .servers(1, workers)
+        .length(args.f64("length")?)
+        .slack_factor(args.f64("slack")?)
+        .power(210.0)
+        .build()?;
+
+    println!(
+        "\n[2/3] running CarbonScaler ({} slots x {}s, region {})...",
+        job.n_slots(),
+        args.f64("slot-secs")?,
+        trace.region
+    );
+    let cfg = RunConfig {
+        slot_seconds: args.f64("slot-secs")?,
+        seed: args.u64("seed")?,
+        ..Default::default()
+    };
+    let auto = CarbonAutoscaler::new(&pool, job.clone(), trace.clone(), cfg.clone())?;
+    let cs = auto.run(&CarbonScalerPolicy)?;
+    print_run("carbonscaler", &cs);
+
+    println!("\n[3/3] running the carbon-agnostic baseline for comparison...");
+    let auto = CarbonAutoscaler::new(&pool, job.clone(), trace.clone(), cfg)?;
+    let ag = auto.run(&CarbonAgnostic)?;
+    print_run(&CarbonAgnostic.name(), &ag);
+
+    println!(
+        "\n=> carbonscaler emitted {:.1} g vs agnostic {:.1} g: {} savings; \
+         losses {:.3} vs {:.3} after {}/{} steps",
+        cs.carbon_g,
+        ag.carbon_g,
+        pct((ag.carbon_g - cs.carbon_g) / ag.carbon_g),
+        cs.final_loss,
+        ag.final_loss,
+        cs.total_steps,
+        ag.total_steps
+    );
+    pool.shutdown();
+    Ok(())
+}
+
+fn print_run(name: &str, r: &carbonscaler::coordinator::RunReport) {
+    let mut t = Table::new(&format!("{name}: per-slot timeline")).headers(&[
+        "slot",
+        "workers",
+        "steps",
+        "mean loss",
+        "carbon (g)",
+    ]);
+    for s in &r.slots {
+        t.row(vec![
+            s.slot.to_string(),
+            s.workers.to_string(),
+            s.steps.to_string(),
+            if s.mean_loss.is_nan() {
+                "-".into()
+            } else {
+                f(s.mean_loss as f64, 3)
+            },
+            f(s.carbon_g, 2),
+        ]);
+    }
+    t.print();
+    // Compact loss curve: every ~10th point.
+    let pts: Vec<String> = r
+        .loss_curve
+        .iter()
+        .step_by((r.loss_curve.len() / 12).max(1))
+        .map(|(s, l)| format!("{s}:{l:.3}"))
+        .collect();
+    println!("loss curve (step:loss): {}", pts.join(" "));
+    println!(
+        "total {} steps, {:.1} g CO2, {:.4} kWh, completion {:?} h, wall {:.1}s",
+        r.total_steps, r.carbon_g, r.energy_kwh, r.completion_hours, r.wall_seconds
+    );
+}

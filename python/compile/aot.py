@@ -1,0 +1,151 @@
+"""AOT-lower the L2 workload graphs to HLO text artifacts for the rust runtime.
+
+HLO **text** (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  train_step_<preset>.hlo.txt   (params f32[P], x i32[B,S], y i32[B,S])
+                                  -> (loss f32[], grads f32[P])
+  eval_loss_<preset>.hlo.txt    (params, x, y) -> (loss,)
+  nbody_step_<preset>.hlo.txt   (pos f32[N,3], vel f32[N,3], masses f32[N],
+                                  dt f32[]) -> (pos', vel')
+  manifest.json                 shape/offset metadata the rust loader reads
+
+Run via ``make artifacts``; python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Presets lowered by default. `tiny` keeps rust integration tests fast;
+# `small` is the train_e2e / serving artifact.
+DEFAULT_TRANSFORMER_PRESETS = ("tiny", "small")
+DEFAULT_NBODY_PRESETS = ("tiny", "small")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: model.TransformerConfig) -> str:
+    p = jax.ShapeDtypeStruct((cfg.n_params,), jnp.float32)
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    y = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+
+    def step(params, xb, yb):
+        loss, grads = model.train_step(cfg, params, xb, yb, use_kernel=True)
+        return loss, grads
+
+    return to_hlo_text(jax.jit(step).lower(p, x, y))
+
+
+def lower_eval_loss(cfg: model.TransformerConfig) -> str:
+    p = jax.ShapeDtypeStruct((cfg.n_params,), jnp.float32)
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    y = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+
+    def ev(params, xb, yb):
+        return (model.loss_fn(cfg, params, xb, yb, use_kernel=True),)
+
+    return to_hlo_text(jax.jit(ev).lower(p, x, y))
+
+
+def lower_nbody_step(cfg: model.NBodyConfig) -> str:
+    pos = jax.ShapeDtypeStruct((cfg.n_bodies, 3), jnp.float32)
+    vel = jax.ShapeDtypeStruct((cfg.n_bodies, 3), jnp.float32)
+    masses = jax.ShapeDtypeStruct((cfg.n_bodies,), jnp.float32)
+    dt = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def step(p, v, m, d):
+        return model.nbody_step(cfg, p, v, m, d, use_kernel=True)
+
+    return to_hlo_text(jax.jit(step).lower(pos, vel, masses, dt))
+
+
+def transformer_manifest_entry(name: str, cfg: model.TransformerConfig) -> dict:
+    offsets = {}
+    off = 0
+    for pname, shape in cfg.param_shapes():
+        size = 1
+        for s in shape:
+            size *= s
+        offsets[pname] = {"offset": off, "shape": list(shape)}
+        off += size
+    return {
+        "kind": "transformer_train_step",
+        "file": f"train_step_{name}.hlo.txt",
+        "eval_file": f"eval_loss_{name}.hlo.txt",
+        "n_params": cfg.n_params,
+        "batch": cfg.batch,
+        "seq_len": cfg.seq_len,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "param_layout": offsets,
+    }
+
+
+def nbody_manifest_entry(name: str, cfg: model.NBodyConfig) -> dict:
+    return {
+        "kind": "nbody_step",
+        "file": f"nbody_step_{name}.hlo.txt",
+        "n_bodies": cfg.n_bodies,
+        "softening": cfg.softening,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).parents[2] / "artifacts"))
+    ap.add_argument(
+        "--transformer-presets", nargs="*", default=list(DEFAULT_TRANSFORMER_PRESETS)
+    )
+    ap.add_argument("--nbody-presets", nargs="*", default=list(DEFAULT_NBODY_PRESETS))
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"format": "hlo-text", "artifacts": {}}
+
+    for name in args.transformer_presets:
+        cfg = model.PRESETS[name]
+        hlo = lower_train_step(cfg)
+        (out / f"train_step_{name}.hlo.txt").write_text(hlo)
+        print(f"train_step_{name}: P={cfg.n_params} hlo={len(hlo)/1e6:.1f} MB")
+        ev = lower_eval_loss(cfg)
+        (out / f"eval_loss_{name}.hlo.txt").write_text(ev)
+        manifest["artifacts"][f"transformer_{name}"] = transformer_manifest_entry(
+            name, cfg
+        )
+
+    for name in args.nbody_presets:
+        cfg = model.NBODY_PRESETS[name]
+        hlo = lower_nbody_step(cfg)
+        (out / f"nbody_step_{name}.hlo.txt").write_text(hlo)
+        print(f"nbody_step_{name}: N={cfg.n_bodies} hlo={len(hlo)/1e6:.1f} MB")
+        manifest["artifacts"][f"nbody_{name}"] = nbody_manifest_entry(name, cfg)
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    print(f"wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

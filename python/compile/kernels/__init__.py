@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+``matmul``  — tiled MXU-shaped matmul, used by every linear layer of the
+              L2 transformer (the ML-training workload analog).
+``nbody_forces`` / ``nbody_step`` — all-pairs gravity, the MPI N-body
+              workload analog (Table 1).
+``ref``     — pure-jnp oracles; the pytest ground truth.
+"""
+
+from .matmul import matmul, block_dims, vmem_bytes, mxu_utilization  # noqa: F401
+from .nbody import nbody_forces, nbody_step  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,154 @@
+"""L1 Pallas kernel: tiled matmul with f32 accumulation.
+
+This is the compute hot-spot of the L2 transformer training step: every
+linear layer (QKV projections, attention output, MLP) routes through
+``matmul``.  The kernel is written for the TPU mental model per
+DESIGN.md §Hardware-Adaptation:
+
+* blocks are sized so that the working set (one x-block, one y-block, one
+  output accumulator) stays within a ~16 MiB VMEM budget;
+* block dims are multiples of the 128x128 MXU tile where the problem shape
+  allows, so the systolic array would be fully utilised on real hardware;
+* accumulation is f32, matching MXU semantics;
+* the K dimension is the innermost, sequential grid axis: the output block
+  stays resident in VMEM across the K sweep while x/y K-tiles are streamed
+  through — the Pallas analog of a CUDA threadblock looping K-tiles in
+  shared memory.
+
+On this image Pallas runs under ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls), so the kernel lowers to plain HLO and
+is checked against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget we tile for (bytes). Real TPUv4 has ~16 MiB per core; we keep
+# headroom for double buffering of the streamed K-tiles.
+VMEM_BUDGET = 12 * 1024 * 1024
+
+# MXU systolic-array tile edge.
+MXU_TILE = 128
+
+
+def block_dims(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """Choose (bm, bn, bk) block dims for an (m, k) x (k, n) matmul.
+
+    Preference order: MXU-aligned 128-multiples, then the full dim when it
+    is already small. The VMEM constraint is
+    ``4 * (bm*bk + bk*bn + bm*bn) <= VMEM_BUDGET`` with f32 operands.
+    """
+
+    def pick(dim: int, cap: int) -> int:
+        if dim <= cap:
+            return dim
+        best = 1
+        for cand in range(cap, 0, -1):
+            if dim % cand == 0:
+                if cand % MXU_TILE == 0:
+                    return cand
+                if best == 1:
+                    best = cand
+        return best
+
+    bm = pick(m, 256)
+    bn = pick(n, 256)
+    bk = pick(k, 512)
+    # Shrink bk until the f32 working set fits the VMEM budget.
+    while 4 * (bm * bk + bk * bn + bm * bn) > VMEM_BUDGET and bk > 1:
+        nbk = bk // 2
+        while nbk > 1 and k % nbk != 0:
+            nbk -= 1
+        if nbk == bk:
+            break
+        bk = nbk
+    return bm, bn, bk
+
+
+def vmem_bytes(m: int, n: int, k: int) -> int:
+    """f32 VMEM working-set estimate for the chosen blocking (for DESIGN.md)."""
+    bm, bn, bk = block_dims(m, n, k)
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int) -> float:
+    """Fraction of MXU lanes busy for the chosen blocking (estimate).
+
+    An (bm, bk) x (bk, bn) block matmul keeps ``min(bm,128)/128 *
+    min(bn,128)/128`` of the 128x128 systolic array busy per pass.
+    """
+    bm, bn, _ = block_dims(m, n, k)
+    return min(bm, MXU_TILE) / MXU_TILE * min(bn, MXU_TILE) / MXU_TILE
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """Grid = (m/bm, n/bn, k/bk); K innermost and sequential.
+
+    The (i, j) output block is revisited for every kk, so it acts as the
+    VMEM-resident accumulator; it is zeroed on the first K step.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _matmul_raw(x: jax.Array, y: jax.Array) -> jax.Array:
+    """The pallas_call itself (no autodiff rules)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = block_dims(m, n, k)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul: ``x @ y`` with f32 accumulation.
+
+    Differentiable: the custom VJP routes both cotangent contractions
+    (``g @ y.T`` and ``x.T @ g``) through the same Pallas kernel, so the
+    backward pass stays on the kernel hot path.
+
+    Args:
+      x: (m, k) f32 array.
+      y: (k, n) f32 array.
+
+    Returns:
+      (m, n) f32 array.
+    """
+    return _matmul_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return _matmul_raw(g, y.T), _matmul_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

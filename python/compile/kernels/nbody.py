@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: all-pairs N-body gravitational accelerations.
+
+This is the compute hot-spot of the paper's MPI N-body workload (Table 1:
+N=10,000 and N=100,000 configurations). The classical CUDA formulation
+(GPU Gems 3, ch. 31) strides source bodies through shared memory per
+threadblock; the TPU re-think per DESIGN.md §Hardware-Adaptation expresses
+the same schedule with a 2-D Pallas grid:
+
+* grid axis 0 tiles the *target* bodies (one (bt, 3) position block stays
+  resident in VMEM with its (bt, 3) accumulator);
+* grid axis 1 streams *source* tiles (bs bodies + masses) through VMEM —
+  the BlockSpec plays the role of the CUDA shared-memory staging loop;
+* the (bt, bs) interaction tile is evaluated on the VPU with an f32
+  rsqrt-free formulation (dist2**-1.5) identical to the oracle in ref.py.
+
+interpret=True on this image (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edges: multiples of the 8x128 VPU register tile. A (256, 512)
+# interaction tile uses 4 * (256*3 + 512*3 + 512 + 256*3) ~ 16 KB of VMEM,
+# far under budget; bigger tiles only help once N is in the tens of
+# thousands.
+DEFAULT_BT = 256
+DEFAULT_BS = 512
+
+
+def _pick_tile(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (prefers multiples of 8)."""
+    if n <= cap:
+        return n
+    best = 1
+    for cand in range(cap, 0, -1):
+        if n % cand == 0:
+            if cand % 8 == 0:
+                return cand
+            if best == 1:
+                best = cand
+    return best
+
+
+def _forces_kernel(pos_t_ref, pos_s_ref, mass_s_ref, acc_ref, *, n_s: int, softening: float):
+    """Grid = (n/bt, n/bs); source axis (1) is innermost and sequential."""
+    ss = pl.program_id(1)
+
+    @pl.when(ss == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pt = pos_t_ref[...]  # (bt, 3) targets, VMEM-resident across the sweep
+    ps = pos_s_ref[...]  # (bs, 3) streamed sources
+    ms = mass_s_ref[...]  # (bs,)
+
+    # (bt, bs, 3) displacement tile: d[i, j] = ps[j] - pt[i].
+    disp = ps[None, :, :] - pt[:, None, :]
+    dist2 = jnp.sum(disp * disp, axis=-1) + softening * softening
+    w = ms[None, :] * dist2 ** (-1.5)  # (bt, bs)
+    acc_ref[...] += jnp.sum(w[:, :, None] * disp, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("softening", "interpret"))
+def nbody_forces(
+    pos: jax.Array,
+    masses: jax.Array,
+    *,
+    softening: float = 0.05,
+    interpret: bool = True,
+) -> jax.Array:
+    """All-pairs accelerations via the tiled Pallas kernel.
+
+    Args:
+      pos: (n, 3) f32 positions.
+      masses: (n,) f32 masses.
+      softening: Plummer softening length (self-interaction cancels).
+      interpret: keep True on CPU PJRT.
+
+    Returns:
+      (n, 3) f32 accelerations, matching ref.nbody_forces_ref.
+    """
+    n, three = pos.shape
+    assert three == 3, f"pos must be (n, 3), got {pos.shape}"
+    bt = _pick_tile(n, DEFAULT_BT)
+    bs = _pick_tile(n, DEFAULT_BS)
+    n_s = n // bs
+
+    return pl.pallas_call(
+        functools.partial(_forces_kernel, n_s=n_s, softening=softening),
+        grid=(n // bt, n_s),
+        in_specs=[
+            pl.BlockSpec((bt, 3), lambda i, s: (i, 0)),
+            pl.BlockSpec((bs, 3), lambda i, s: (s, 0)),
+            pl.BlockSpec((bs,), lambda i, s: (s,)),
+        ],
+        out_specs=pl.BlockSpec((bt, 3), lambda i, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 3), jnp.float32),
+        interpret=interpret,
+    )(pos, pos, masses)
+
+
+def nbody_step(
+    pos: jax.Array,
+    vel: jax.Array,
+    masses: jax.Array,
+    dt: float,
+    *,
+    softening: float = 0.05,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Leapfrog (kick-drift-kick) step built on the Pallas force kernel."""
+    acc = nbody_forces(pos, masses, softening=softening, interpret=interpret)
+    vel_half = vel + 0.5 * dt * acc
+    pos_new = pos + dt * vel_half
+    acc_new = nbody_forces(pos_new, masses, softening=softening, interpret=interpret)
+    vel_new = vel_half + 0.5 * dt * acc_new
+    return pos_new, vel_new

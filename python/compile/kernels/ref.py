@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+match these to tight tolerances across a hypothesis-driven shape/value
+sweep (python/tests/test_kernels.py). They are also used by the L2 model
+tests to cross-check the kernel-backed model against a kernel-free one.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference matmul with f32 accumulation (matches kernels.matmul)."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(jnp.float32)
+
+
+def nbody_forces_ref(pos: jax.Array, masses: jax.Array, softening: float) -> jax.Array:
+    """Reference all-pairs gravitational accelerations.
+
+    a_i = sum_j m_j * (p_j - p_i) / (|p_j - p_i|^2 + eps^2)^(3/2)
+
+    The i == j term self-cancels because the displacement is zero and the
+    softening keeps the denominator finite, matching the kernel exactly.
+
+    Args:
+      pos: (n, 3) positions.
+      masses: (n,) masses.
+      softening: Plummer softening length eps.
+
+    Returns:
+      (n, 3) accelerations.
+    """
+    # (n, n, 3) displacement tensor: d[i, j] = p[j] - p[i].
+    disp = pos[None, :, :] - pos[:, None, :]
+    dist2 = jnp.sum(disp * disp, axis=-1) + softening * softening
+    inv_d3 = dist2 ** (-1.5)
+    # weight[i, j] = m_j / (|d|^2 + eps^2)^(3/2)
+    w = masses[None, :] * inv_d3
+    return jnp.sum(w[:, :, None] * disp, axis=1)
+
+
+def nbody_step_ref(
+    pos: jax.Array,
+    vel: jax.Array,
+    masses: jax.Array,
+    dt: float,
+    softening: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Reference leapfrog (kick-drift-kick) integration step."""
+    acc = nbody_forces_ref(pos, masses, softening)
+    vel_half = vel + 0.5 * dt * acc
+    pos_new = pos + dt * vel_half
+    acc_new = nbody_forces_ref(pos_new, masses, softening)
+    vel_new = vel_half + 0.5 * dt * acc_new
+    return pos_new, vel_new

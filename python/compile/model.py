@@ -1,0 +1,316 @@
+"""L2: elastic-workload compute graphs in JAX, calling the L1 kernels.
+
+Two workload graphs mirror the paper's Table 1 workload classes:
+
+* a GPT-style transformer language model **training step** (the analog of
+  the paper's PyTorch ResNet/VGG/EfficientNet training jobs), exposed with
+  a *flat parameter vector* ABI::
+
+      train_step(params f32[P], x i32[B,S], y i32[B,S]) -> (loss f32[], grads f32[P])
+
+  so the rust coordinator can average gradients across an elastic number of
+  workers and apply the SGD update with plain slice arithmetic — worker
+  count changes at any slot boundary without recompilation;
+
+* an **N-body leapfrog step** (the analog of the paper's MPI N-body job)::
+
+      nbody_step(pos f32[N,3], vel f32[N,3], masses f32[N], dt f32[]) -> (pos', vel')
+
+Every linear-layer matmul routes through the Pallas kernel
+(`kernels.matmul`); attention score/context contractions are small batched
+einsums left to XLA fusion (documented hot-path split, see DESIGN.md).
+Both graphs are lowered once to HLO text by `aot.py` and never run in
+python at request time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+from .kernels import nbody as nbody_kernels
+from .kernels import ref as kernel_ref
+
+
+# ---------------------------------------------------------------------------
+# Transformer configuration and flat-parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Shape configuration for the transformer LM workload."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 8  # per-worker microbatch
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Ordered (name, shape) list defining the flat-parameter layout.
+
+        The order here *is* the ABI: rust indexes the flat vector by these
+        offsets (exported in artifacts/manifest.json).
+        """
+        shapes: list[tuple[str, tuple[int, ...]]] = [
+            ("tok_embed", (self.vocab, self.d_model)),
+            ("pos_embed", (self.seq_len, self.d_model)),
+        ]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            shapes += [
+                (p + "ln1_scale", (self.d_model,)),
+                (p + "ln1_bias", (self.d_model,)),
+                (p + "qkv_w", (self.d_model, 3 * self.d_model)),
+                (p + "qkv_b", (3 * self.d_model,)),
+                (p + "proj_w", (self.d_model, self.d_model)),
+                (p + "proj_b", (self.d_model,)),
+                (p + "ln2_scale", (self.d_model,)),
+                (p + "ln2_bias", (self.d_model,)),
+                (p + "mlp_w1", (self.d_model, self.d_ff)),
+                (p + "mlp_b1", (self.d_ff,)),
+                (p + "mlp_w2", (self.d_ff, self.d_model)),
+                (p + "mlp_b2", (self.d_model,)),
+            ]
+        shapes += [
+            ("lnf_scale", (self.d_model,)),
+            ("lnf_bias", (self.d_model,)),
+        ]
+        return shapes
+
+    @property
+    def n_params(self) -> int:
+        return sum(
+            functools.reduce(lambda a, b: a * b, shape, 1)
+            for _, shape in self.param_shapes()
+        )
+
+
+# Named presets; `small` is the train_e2e artifact, `tiny` keeps tests fast.
+PRESETS: dict[str, TransformerConfig] = {
+    "tiny": TransformerConfig(
+        vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq_len=16, batch=4
+    ),
+    "small": TransformerConfig(),  # ~1.3M params
+    "medium": TransformerConfig(
+        vocab=1024, d_model=256, n_layers=6, n_heads=8, d_ff=1024, seq_len=128, batch=8
+    ),
+}
+
+
+def unflatten(cfg: TransformerConfig, flat: jax.Array) -> dict[str, jax.Array]:
+    """Slice the flat f32[P] vector into the named parameter dict."""
+    params: dict[str, jax.Array] = {}
+    off = 0
+    for name, shape in cfg.param_shapes():
+        size = functools.reduce(lambda a, b: a * b, shape, 1)
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    assert off == flat.shape[0], f"flat param size {flat.shape[0]} != layout {off}"
+    return params
+
+
+def flatten(cfg: TransformerConfig, params: dict[str, jax.Array]) -> jax.Array:
+    """Inverse of `unflatten` (used by tests and init)."""
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in cfg.param_shapes()]
+    )
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> jax.Array:
+    """GPT-2-style initialization, returned flat."""
+    params = {}
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_scale",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_bias", "_b", "_b1", "_b2", "qkv_b", "proj_b")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif "embed" in name:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                jnp.float32(fan_in)
+            )
+    return flatten(cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _linear(
+    x: jax.Array, w: jax.Array, b: jax.Array, mm: Callable[[jax.Array, jax.Array], jax.Array]
+) -> jax.Array:
+    """(B, S, Din) @ (Din, Dout) + b through the 2-D matmul hot path."""
+    bsz, seq, din = x.shape
+    out = mm(x.reshape(bsz * seq, din), w)
+    return out.reshape(bsz, seq, w.shape[1]) + b
+
+
+def forward(
+    cfg: TransformerConfig,
+    flat_params: jax.Array,
+    x: jax.Array,
+    *,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Causal LM forward pass -> logits (B, S, V).
+
+    `use_kernel=False` swaps every matmul for the pure-jnp oracle — the
+    kernel-vs-reference parity check at the *model* level.
+    """
+    mm = (lambda a, b: matmul(a, b)) if use_kernel else kernel_ref.matmul_ref
+    p = unflatten(cfg, flat_params)
+    bsz, seq = x.shape
+
+    h = p["tok_embed"][x] + p["pos_embed"][None, :seq, :]
+    mask = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+    neg = jnp.finfo(jnp.float32).min
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        a = _layer_norm(h, p[pre + "ln1_scale"], p[pre + "ln1_bias"])
+        qkv = _linear(a, p[pre + "qkv_w"], p[pre + "qkv_b"], mm)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(bsz, seq, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(cfg.head_dim)
+        )
+        scores = jnp.where(mask[None, None, :, :] > 0, scores, neg)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz, seq, cfg.d_model)
+        h = h + _linear(ctx, p[pre + "proj_w"], p[pre + "proj_b"], mm)
+
+        b2 = _layer_norm(h, p[pre + "ln2_scale"], p[pre + "ln2_bias"])
+        ff = _linear(b2, p[pre + "mlp_w1"], p[pre + "mlp_b1"], mm)
+        ff = jax.nn.gelu(ff)
+        h = h + _linear(ff, p[pre + "mlp_w2"], p[pre + "mlp_b2"], mm)
+
+    h = _layer_norm(h, p["lnf_scale"], p["lnf_bias"])
+    # Tied output projection: logits = h @ tok_embed.T
+    logits = mm(
+        h.reshape(bsz * seq, cfg.d_model), p["tok_embed"].T
+    ).reshape(bsz, seq, cfg.vocab)
+    return logits
+
+
+def loss_fn(
+    cfg: TransformerConfig,
+    flat_params: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, flat_params, x, use_kernel=use_kernel)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(
+    cfg: TransformerConfig,
+    flat_params: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """The AOT'd unit of work: (loss, flat gradient).
+
+    The SGD update and cross-worker gradient averaging happen in rust
+    (`runtime::params`), keeping the artifact free of optimizer state and
+    the worker count out of the compiled shape.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda fp: loss_fn(cfg, fp, x, y, use_kernel=use_kernel)
+    )(flat_params)
+    return loss, grads
+
+
+def sgd_update(flat_params: jax.Array, grads: jax.Array, lr: float) -> jax.Array:
+    """Reference SGD update (rust reimplements this; tests assert parity)."""
+    return flat_params - lr * grads
+
+
+# ---------------------------------------------------------------------------
+# N-body workload graph
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NBodyConfig:
+    """Shape configuration for the N-body workload."""
+
+    n_bodies: int = 1024
+    softening: float = 0.05
+
+
+NBODY_PRESETS: dict[str, NBodyConfig] = {
+    "tiny": NBodyConfig(n_bodies=128),
+    "small": NBodyConfig(n_bodies=1024),
+    "large": NBodyConfig(n_bodies=4096),
+}
+
+
+def nbody_step(
+    cfg: NBodyConfig,
+    pos: jax.Array,
+    vel: jax.Array,
+    masses: jax.Array,
+    dt: jax.Array,
+    *,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One leapfrog step; the AOT'd unit of work for the MPI-analog job."""
+    if use_kernel:
+        forces = lambda p: nbody_kernels.nbody_forces(
+            p, masses, softening=cfg.softening
+        )
+    else:
+        forces = lambda p: kernel_ref.nbody_forces_ref(p, masses, cfg.softening)
+    acc = forces(pos)
+    vel_half = vel + 0.5 * dt * acc
+    pos_new = pos + dt * vel_half
+    acc_new = forces(pos_new)
+    vel_new = vel_half + 0.5 * dt * acc_new
+    return pos_new, vel_new
+
+
+def init_nbody(cfg: NBodyConfig, key: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Plummer-ish random initial conditions (positions, velocities, masses)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    pos = jax.random.normal(k1, (cfg.n_bodies, 3), jnp.float32)
+    vel = 0.1 * jax.random.normal(k2, (cfg.n_bodies, 3), jnp.float32)
+    masses = (
+        jnp.abs(jax.random.normal(k3, (cfg.n_bodies,), jnp.float32)) + 0.5
+    ) / cfg.n_bodies
+    return pos, vel, masses

@@ -1,0 +1,242 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value distributions; every property failure is
+a real numeric divergence between the kernel and `ref.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    block_dims,
+    matmul,
+    mxu_utilization,
+    nbody_forces,
+    nbody_step,
+    ref,
+    vmem_bytes,
+)
+from compile.kernels.matmul import MXU_TILE, VMEM_BUDGET
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMatmulBasic:
+    def test_identity(self):
+        x = rand(0, (32, 32))
+        np.testing.assert_allclose(
+            matmul(x, jnp.eye(32)), x, rtol=1e-5, atol=1e-5
+        )
+
+    def test_zeros(self):
+        x = rand(0, (16, 24))
+        out = matmul(x, jnp.zeros((24, 8), jnp.float32))
+        assert not np.any(np.asarray(out))
+
+    def test_small_square(self):
+        x, y = rand(1, (8, 8)), rand(2, (8, 8))
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rectangular(self):
+        x, y = rand(1, (64, 96)), rand(2, (96, 48))
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_mxu_aligned(self):
+        x, y = rand(1, (256, 512)), rand(2, (512, 384))
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    def test_vector_like(self):
+        # m=1 degenerate case (single row).
+        x, y = rand(1, (1, 64)), rand(2, (64, 32))
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_prime_dims(self):
+        # Dims with no nice divisors exercise the fallback blocking.
+        x, y = rand(1, (17, 23)), rand(2, (23, 31))
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_large_values(self):
+        x, y = rand(1, (32, 32), 1e3), rand(2, (32, 32), 1e3)
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-1
+        )
+
+    def test_contraction_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            matmul(rand(1, (8, 9)), rand(2, (8, 9)))
+
+
+class TestMatmulGrad:
+    def test_vjp_matches_reference(self):
+        x, y = rand(1, (32, 48)), rand(2, (48, 16))
+
+        def f_kernel(x, y):
+            return jnp.sum(matmul(x, y) ** 2)
+
+        def f_ref(x, y):
+            return jnp.sum(ref.matmul_ref(x, y) ** 2)
+
+        gx_k, gy_k = jax.grad(f_kernel, argnums=(0, 1))(x, y)
+        gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+        np.testing.assert_allclose(gx_k, gx_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gy_k, gy_r, rtol=1e-4, atol=1e-4)
+
+    def test_grad_through_chain(self):
+        x = rand(1, (16, 16))
+        w1, w2 = rand(2, (16, 32)), rand(3, (32, 8))
+
+        def f(w1, w2):
+            return jnp.sum(jnp.tanh(matmul(jnp.tanh(matmul(x, w1)), w2)))
+
+        def f_ref(w1, w2):
+            h = jnp.tanh(ref.matmul_ref(x, w1))
+            return jnp.sum(jnp.tanh(ref.matmul_ref(h, w2)))
+
+        g1, g2 = jax.grad(f, argnums=(0, 1))(w1, w2)
+        r1, r2 = jax.grad(f_ref, argnums=(0, 1))(w1, w2)
+        np.testing.assert_allclose(g1, r1, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(g2, r2, rtol=1e-4, atol=1e-5)
+
+
+class TestBlocking:
+    """Structural invariants of the TPU-shaped blocking (DESIGN.md §HA)."""
+
+    def test_blocks_divide_dims(self):
+        for m, n, k in [(64, 64, 64), (256, 384, 512), (17, 23, 31), (1, 128, 256)]:
+            bm, bn, bk = block_dims(m, n, k)
+            assert m % bm == 0 and n % bn == 0 and k % bk == 0
+
+    def test_vmem_budget_respected(self):
+        for m, n, k in [(1024, 1024, 1024), (4096, 4096, 4096), (512, 65536, 128)]:
+            assert vmem_bytes(m, n, k) <= VMEM_BUDGET
+
+    def test_mxu_alignment_preferred(self):
+        bm, bn, bk = block_dims(1024, 1024, 1024)
+        assert bm % MXU_TILE == 0 and bn % MXU_TILE == 0
+
+    def test_mxu_utilization_full_when_aligned(self):
+        assert mxu_utilization(512, 512, 512) == 1.0
+
+    def test_mxu_utilization_partial_small(self):
+        assert mxu_utilization(32, 32, 32) == (32 / 128) ** 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    k=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+)
+def test_matmul_property(m, n, k, seed, scale):
+    """Kernel == oracle across arbitrary shapes and magnitudes."""
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = scale * jax.random.normal(kx, (m, k), jnp.float32)
+    y = scale * jax.random.normal(ky, (k, n), jnp.float32)
+    got = matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale * k)
+
+
+# ---------------------------------------------------------------------------
+# nbody
+# ---------------------------------------------------------------------------
+
+
+class TestNBodyBasic:
+    def test_two_body_symmetry(self):
+        # Equal masses on the x axis: forces are equal and opposite.
+        pos = jnp.array([[-1.0, 0, 0], [1.0, 0, 0]], jnp.float32)
+        masses = jnp.array([1.0, 1.0], jnp.float32)
+        acc = np.asarray(nbody_forces(pos, masses, softening=0.1))
+        np.testing.assert_allclose(acc[0], -acc[1], rtol=1e-6)
+        assert acc[0][0] > 0  # attraction toward the other body
+
+    def test_matches_ref_small(self):
+        pos = rand(0, (64, 3))
+        masses = jnp.abs(rand(1, (64,))) + 0.1
+        np.testing.assert_allclose(
+            nbody_forces(pos, masses, softening=0.05),
+            ref.nbody_forces_ref(pos, masses, 0.05),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+    def test_matches_ref_non_tile_multiple(self):
+        pos = rand(0, (300, 3))
+        masses = jnp.abs(rand(1, (300,))) + 0.1
+        np.testing.assert_allclose(
+            nbody_forces(pos, masses, softening=0.05),
+            ref.nbody_forces_ref(pos, masses, 0.05),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+    def test_matches_ref_large(self):
+        pos = rand(0, (1024, 3))
+        masses = jnp.abs(rand(1, (1024,))) + 0.1
+        np.testing.assert_allclose(
+            nbody_forces(pos, masses, softening=0.05),
+            ref.nbody_forces_ref(pos, masses, 0.05),
+            rtol=5e-4,
+            atol=5e-4,
+        )
+
+    def test_massless_sources_no_force(self):
+        pos = rand(0, (32, 3))
+        acc = nbody_forces(pos, jnp.zeros((32,), jnp.float32), softening=0.05)
+        assert not np.any(np.asarray(acc))
+
+    def test_step_matches_ref(self):
+        pos, vel = rand(0, (128, 3)), 0.1 * rand(1, (128, 3))
+        masses = jnp.abs(rand(2, (128,))) + 0.1
+        p_k, v_k = nbody_step(pos, vel, masses, 0.01, softening=0.05)
+        p_r, v_r = ref.nbody_step_ref(pos, vel, masses, 0.01, 0.05)
+        np.testing.assert_allclose(p_k, p_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(v_k, v_r, rtol=1e-4, atol=1e-4)
+
+    def test_momentum_conservation(self):
+        # Total momentum change over one step ~ 0 for equal-softening forces.
+        pos, vel = rand(0, (64, 3)), 0.1 * rand(1, (64, 3))
+        masses = jnp.abs(rand(2, (64,))) + 0.5
+        _, v1 = nbody_step(pos, vel, masses, 0.01, softening=0.1)
+        p0 = np.asarray(jnp.sum(masses[:, None] * vel, axis=0))
+        p1 = np.asarray(jnp.sum(masses[:, None] * v1, axis=0))
+        np.testing.assert_allclose(p0, p1, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(4, 200),
+    seed=st.integers(0, 2**31 - 1),
+    softening=st.sampled_from([0.01, 0.05, 0.5]),
+)
+def test_nbody_property(n, seed, softening):
+    """Kernel == oracle across body counts (incl. non-multiples of tiles)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    pos = jax.random.normal(k1, (n, 3), jnp.float32)
+    masses = jnp.abs(jax.random.normal(k2, (n,), jnp.float32)) + 0.1
+    got = nbody_forces(pos, masses, softening=softening)
+    want = ref.nbody_forces_ref(pos, masses, softening)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,177 @@
+"""L2 model tests: shapes, kernel-vs-reference parity, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+CFG = model.PRESETS["tiny"]
+
+
+def make_batch(cfg, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.randint(kx, (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+    y = jax.random.randint(ky, (cfg.batch, cfg.seq_len), 0, cfg.vocab)
+    return x, y
+
+
+class TestParamLayout:
+    def test_n_params_matches_layout(self):
+        total = 0
+        for _, shape in CFG.param_shapes():
+            sz = 1
+            for s in shape:
+                sz *= s
+            total += sz
+        assert total == CFG.n_params
+
+    def test_flatten_unflatten_roundtrip(self):
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        back = model.flatten(CFG, model.unflatten(CFG, fp))
+        np.testing.assert_array_equal(fp, back)
+
+    def test_unflatten_rejects_wrong_size(self):
+        with pytest.raises(AssertionError):
+            model.unflatten(CFG, jnp.zeros((CFG.n_params + 1,), jnp.float32))
+
+    def test_layout_deterministic(self):
+        assert CFG.param_shapes() == CFG.param_shapes()
+
+    def test_presets_have_distinct_sizes(self):
+        sizes = {name: cfg.n_params for name, cfg in model.PRESETS.items()}
+        assert sizes["tiny"] < sizes["small"] < sizes["medium"]
+
+
+class TestForward:
+    def test_logits_shape(self):
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        x, _ = make_batch(CFG)
+        logits = model.forward(CFG, fp, x)
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+    def test_kernel_matches_reference_forward(self):
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        x, _ = make_batch(CFG)
+        lk = model.forward(CFG, fp, x, use_kernel=True)
+        lr = model.forward(CFG, fp, x, use_kernel=False)
+        np.testing.assert_allclose(lk, lr, rtol=1e-4, atol=1e-4)
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        x, _ = make_batch(CFG)
+        x2 = x.at[:, -1].set((x[:, -1] + 1) % CFG.vocab)
+        l1 = model.forward(CFG, fp, x, use_kernel=False)
+        l2 = model.forward(CFG, fp, x2, use_kernel=False)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)
+
+    def test_loss_near_uniform_at_init(self):
+        """Near-zero init -> loss ~ log(vocab)."""
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        x, y = make_batch(CFG)
+        loss = float(model.loss_fn(CFG, fp, x, y, use_kernel=False))
+        assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+class TestTrainStep:
+    def test_grad_shapes(self):
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        x, y = make_batch(CFG)
+        loss, grads = model.train_step(CFG, fp, x, y, use_kernel=False)
+        assert loss.shape == ()
+        assert grads.shape == (CFG.n_params,)
+
+    def test_kernel_matches_reference_grads(self):
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        x, y = make_batch(CFG)
+        lk, gk = model.train_step(CFG, fp, x, y, use_kernel=True)
+        lr, gr = model.train_step(CFG, fp, x, y, use_kernel=False)
+        np.testing.assert_allclose(lk, lr, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gk, gr, rtol=5e-3, atol=5e-4)
+
+    def test_loss_decreases_under_sgd(self):
+        """A few SGD steps on a fixed batch must reduce the loss."""
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        x, y = make_batch(CFG)
+        losses = []
+        for _ in range(5):
+            loss, grads = model.train_step(CFG, fp, x, y, use_kernel=False)
+            losses.append(float(loss))
+            fp = model.sgd_update(fp, grads, 0.1)
+        assert losses[-1] < losses[0]
+
+    def test_grad_averaging_equals_big_batch(self):
+        """Averaging per-shard grads == grad of the mean loss over shards.
+
+        This is the exact contract the rust elastic worker pool relies on:
+        k workers each compute grads on their own microbatch; the
+        coordinator's average must equal a single large-batch gradient.
+        """
+        fp = model.init_params(CFG, jax.random.PRNGKey(0))
+        x1, y1 = make_batch(CFG, seed=1)
+        x2, y2 = make_batch(CFG, seed=2)
+        _, g1 = model.train_step(CFG, fp, x1, y1, use_kernel=False)
+        _, g2 = model.train_step(CFG, fp, x2, y2, use_kernel=False)
+        avg = (g1 + g2) / 2
+
+        xb = jnp.concatenate([x1, x2], axis=0)
+        yb = jnp.concatenate([y1, y2], axis=0)
+        big_cfg = model.TransformerConfig(
+            **{
+                **CFG.__dict__,
+                "batch": CFG.batch * 2,
+            }
+        )
+        _, gb = model.train_step(big_cfg, fp, xb, yb, use_kernel=False)
+        np.testing.assert_allclose(avg, gb, rtol=1e-4, atol=1e-5)
+
+
+class TestNBodyModel:
+    def test_step_shapes(self):
+        cfg = model.NBODY_PRESETS["tiny"]
+        pos, vel, masses = model.init_nbody(cfg, jax.random.PRNGKey(0))
+        dt = jnp.float32(0.01)
+        p, v = model.nbody_step(cfg, pos, vel, masses, dt)
+        assert p.shape == (cfg.n_bodies, 3) and v.shape == (cfg.n_bodies, 3)
+
+    def test_kernel_matches_reference(self):
+        cfg = model.NBODY_PRESETS["tiny"]
+        pos, vel, masses = model.init_nbody(cfg, jax.random.PRNGKey(0))
+        dt = jnp.float32(0.01)
+        pk, vk = model.nbody_step(cfg, pos, vel, masses, dt, use_kernel=True)
+        pr, vr = model.nbody_step(cfg, pos, vel, masses, dt, use_kernel=False)
+        np.testing.assert_allclose(pk, pr, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(vk, vr, rtol=1e-4, atol=1e-4)
+
+    def test_energy_roughly_conserved(self):
+        """Leapfrog on a soft potential: KE+PE drift stays small over 20 steps."""
+        cfg = model.NBodyConfig(n_bodies=64, softening=0.2)
+        pos, vel, masses = model.init_nbody(cfg, jax.random.PRNGKey(0))
+
+        def energy(pos, vel):
+            ke = 0.5 * jnp.sum(masses * jnp.sum(vel * vel, axis=-1))
+            disp = pos[None, :, :] - pos[:, None, :]
+            dist = jnp.sqrt(jnp.sum(disp**2, axis=-1) + cfg.softening**2)
+            pe = -0.5 * jnp.sum(masses[:, None] * masses[None, :] / dist)
+            return float(ke + pe)
+
+        e0 = energy(pos, vel)
+        dt = jnp.float32(0.005)
+        for _ in range(20):
+            pos, vel = model.nbody_step(cfg, pos, vel, masses, dt, use_kernel=False)
+        e1 = energy(pos, vel)
+        assert abs(e1 - e0) / max(abs(e0), 1e-6) < 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_train_step_grads_finite(seed):
+    """Gradients stay finite for any random init/batch."""
+    fp = model.init_params(CFG, jax.random.PRNGKey(seed))
+    x, y = make_batch(CFG, seed=seed)
+    loss, grads = model.train_step(CFG, fp, x, y, use_kernel=False)
+    assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.asarray(grads)))

@@ -1,0 +1,155 @@
+//! What-if analysis sweeps built on the simulator — the Carbon Advisor's
+//! user-facing layer (paper §4.3): savings distributions across start
+//! times, regions, slack factors, job lengths, and cluster sizes.
+
+use crate::advisor::sim::{simulate, SimConfig, SimResult};
+use crate::carbon::trace::CarbonTrace;
+use crate::sched::policy::Policy;
+use crate::workload::job::JobSpec;
+use anyhow::Result;
+
+/// Relative carbon savings of `test` vs `baseline` (positive = better).
+pub fn savings_pct(baseline_g: f64, test_g: f64) -> f64 {
+    if baseline_g <= 0.0 {
+        return 0.0;
+    }
+    (baseline_g - test_g) / baseline_g
+}
+
+/// Simulate `policy` for the same job template at each start hour in
+/// `starts` and return the per-start results.
+pub fn sweep_start_times(
+    policy: &dyn Policy,
+    template: &JobSpec,
+    truth: &CarbonTrace,
+    starts: &[usize],
+    cfg: &SimConfig,
+) -> Result<Vec<SimResult>> {
+    let mut out = Vec::with_capacity(starts.len());
+    for &s in starts {
+        let job = JobSpec {
+            arrival: s,
+            ..template.clone()
+        };
+        out.push(simulate(policy, &job, truth, cfg)?);
+    }
+    Ok(out)
+}
+
+/// Per-start-time savings of `policy` vs `baseline` (fractions).
+pub fn savings_vs_baseline(
+    policy: &dyn Policy,
+    baseline: &dyn Policy,
+    template: &JobSpec,
+    truth: &CarbonTrace,
+    starts: &[usize],
+    cfg: &SimConfig,
+) -> Result<Vec<f64>> {
+    let p = sweep_start_times(policy, template, truth, starts, cfg)?;
+    let b = sweep_start_times(baseline, template, truth, starts, cfg)?;
+    Ok(p.iter()
+        .zip(&b)
+        .map(|(pr, br)| savings_pct(br.carbon_g, pr.carbon_g))
+        .collect())
+}
+
+/// Evenly spaced start hours covering `trace_hours` with `count` samples
+/// (deterministic; used instead of the paper's "100 random runs" so
+/// experiments are exactly reproducible).
+pub fn even_starts(trace_hours: usize, window: usize, count: usize) -> Vec<usize> {
+    let usable = trace_hours.saturating_sub(window).max(1);
+    (0..count).map(|i| i * usable / count).collect()
+}
+
+/// Summary statistics of one policy's sweep.
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    pub mean_carbon_g: f64,
+    pub mean_completion_h: f64,
+    pub mean_server_hours: f64,
+    pub finished_frac: f64,
+}
+
+/// Aggregate a sweep.
+pub fn summarize(results: &[SimResult]) -> SweepSummary {
+    let carbon: Vec<f64> = results.iter().map(|r| r.carbon_g).collect();
+    let comp: Vec<f64> = results
+        .iter()
+        .filter_map(|r| r.completion_hours)
+        .collect();
+    let cost: Vec<f64> = results.iter().map(|r| r.server_hours).collect();
+    SweepSummary {
+        mean_carbon_g: crate::util::stats::mean(&carbon),
+        mean_completion_h: crate::util::stats::mean(&comp),
+        mean_server_hours: crate::util::stats::mean(&cost),
+        finished_frac: comp.len() as f64 / results.len().max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::{regions, synthetic};
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::sched::{CarbonAgnostic, CarbonScalerPolicy};
+    use crate::workload::job::JobBuilder;
+
+    fn template() -> JobSpec {
+        JobBuilder::new("j", MarginalCapacityCurve::linear(4))
+            .length(24.0)
+            .slack_factor(1.0)
+            .power(1000.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn savings_pct_math() {
+        assert_eq!(savings_pct(100.0, 60.0), 0.4);
+        assert_eq!(savings_pct(0.0, 10.0), 0.0);
+        assert!(savings_pct(100.0, 120.0) < 0.0);
+    }
+
+    #[test]
+    fn even_starts_spread() {
+        let s = even_starts(30 * 24, 48, 10);
+        assert_eq!(s.len(), 10);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(*s.last().unwrap() <= 30 * 24 - 48);
+    }
+
+    #[test]
+    fn sweep_cs_beats_agnostic_on_average() {
+        let truth = synthetic::generate(regions::by_name("ontario").unwrap(), 21 * 24, 7);
+        let starts = even_starts(truth.len(), 48, 8);
+        let sav = savings_vs_baseline(
+            &CarbonScalerPolicy,
+            &CarbonAgnostic,
+            &template(),
+            &truth,
+            &starts,
+            &SimConfig::default(),
+        )
+        .unwrap();
+        let mean = crate::util::stats::mean(&sav);
+        assert!(mean > 0.05, "mean savings {mean}");
+    }
+
+    #[test]
+    fn summarize_counts_finishes() {
+        let truth = synthetic::generate(regions::by_name("ontario").unwrap(), 21 * 24, 7);
+        let starts = even_starts(truth.len(), 48, 5);
+        let rs = sweep_start_times(
+            &CarbonScalerPolicy,
+            &template(),
+            &truth,
+            &starts,
+            &SimConfig::default(),
+        )
+        .unwrap();
+        let s = summarize(&rs);
+        assert_eq!(s.finished_frac, 1.0);
+        assert!(s.mean_carbon_g > 0.0);
+        assert!(s.mean_completion_h <= 24.0 + 0.25);
+    }
+}

@@ -1,0 +1,8 @@
+//! Carbon Advisor: pre-deployment simulation and what-if analysis
+//! (paper §4.3).
+
+pub mod analysis;
+pub mod sim;
+
+pub use analysis::{even_starts, savings_pct, savings_vs_baseline, summarize, sweep_start_times};
+pub use sim::{simulate, SimConfig, SimResult};

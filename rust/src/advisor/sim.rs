@@ -1,0 +1,432 @@
+//! Carbon Advisor: simulated execution of a policy over a carbon trace.
+//!
+//! This is the engine behind every figure experiment (the paper's §4.3
+//! tool) and the robustness studies of §5.7. Unlike the static accounting
+//! in [`crate::sched::schedule`], the simulator executes slot-by-slot and
+//! models the full gap between *plan* and *reality*:
+//!
+//! * the scheduler plans against a **forecast** (optionally with ±X %
+//!   error, re-issued periodically) and an **estimated** capacity curve
+//!   (optionally with profiling error), while progress and emissions are
+//!   driven by ground truth;
+//! * **procurement denials**: scale-up requests fail with probability
+//!   `denial_prob`; CarbonScaler retries and recomputes (§5.7/Fig 22);
+//! * **switching overhead**: every allocation change costs a configurable
+//!   slice of the slot's productive time (§5.8 measured 20–40 s);
+//! * **periodic recomputation**: when realized progress or carbon deviates
+//!   from the plan beyond a threshold, the remaining schedule is
+//!   recomputed from fresh forecasts (§3.4).
+
+use crate::carbon::forecast::ForecastProvider;
+use crate::carbon::trace::CarbonTrace;
+use crate::scaling::PhasedCurve;
+use crate::sched::policy::Policy;
+use crate::sched::schedule::Schedule;
+use crate::util::rng::Rng;
+use crate::workload::job::JobSpec;
+use anyhow::Result;
+
+/// Simulator configuration; `Default` reproduces the paper's baseline
+/// assumptions (perfect forecast, exact profile, no denials, 30 s switch).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Recompute the remaining schedule at slot boundaries when deviation
+    /// exceeds `deviation_threshold`.
+    pub recompute: bool,
+    /// Relative deviation (progress or carbon) that triggers recompute.
+    pub deviation_threshold: f64,
+    /// Uniform forecast error bound (±fraction), 0 = perfect.
+    pub forecast_error: f64,
+    /// Uniform profiling error on the capacity curve the *planner* sees.
+    pub profile_error: f64,
+    /// Probability that a scale-up request is denied in a slot.
+    pub denial_prob: f64,
+    /// Hours of productive time lost on every allocation change
+    /// (paper §5.8: 20–40 s; default 30 s).
+    pub switch_overhead_hours: f64,
+    /// How many hours past the deadline a deadline-unaware policy may run.
+    pub max_overrun_factor: f64,
+    /// RNG seed for error/denial realizations.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            recompute: true,
+            deviation_threshold: 0.05,
+            forecast_error: 0.0,
+            profile_error: 0.0,
+            denial_prob: 0.0,
+            switch_overhead_hours: 30.0 / 3600.0,
+            max_overrun_factor: 10.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Outcome of one simulated execution.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Total emissions, gCO₂eq (ground-truth charged).
+    pub carbon_g: f64,
+    /// Total energy, kWh.
+    pub energy_kwh: f64,
+    /// Server-hours consumed (monetary-cost proxy).
+    pub server_hours: f64,
+    /// Hours from arrival to completion (None = never finished within the
+    /// overrun bound).
+    pub completion_hours: Option<f64>,
+    /// Allocation changes executed.
+    pub n_switches: usize,
+    /// Schedule recomputations triggered.
+    pub n_recomputes: usize,
+    /// Scale-up requests denied.
+    pub n_denials: usize,
+    /// Realized per-slot allocation (for timeline figures).
+    pub realized: Schedule,
+}
+
+impl SimResult {
+    pub fn finished(&self) -> bool {
+        self.completion_hours.is_some()
+    }
+}
+
+/// Simulate `policy` executing `job` against ground-truth `truth`.
+pub fn simulate(
+    policy: &dyn Policy,
+    job: &JobSpec,
+    truth: &CarbonTrace,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
+    let mut rng = Rng::new(cfg.seed);
+    let forecast = if cfg.forecast_error > 0.0 {
+        ForecastProvider::with_error(truth.clone(), cfg.forecast_error, rng.fork(1).next_u64())
+    } else {
+        ForecastProvider::perfect(truth.clone())
+    };
+
+    // The planner sees a (possibly erroneous) capacity estimate; reality
+    // advances by the true curve.
+    let planning_job = if cfg.profile_error > 0.0 {
+        let mut fork = rng.fork(2);
+        let noisy = job
+            .curve
+            .at_progress(0.0)
+            .with_error(cfg.profile_error, &mut fork);
+        JobSpec {
+            curve: PhasedCurve::single(noisy),
+            ..job.clone()
+        }
+    } else {
+        job.clone()
+    };
+
+    let n = job.n_slots();
+    let horizon = ((n as f64) * cfg.max_overrun_factor).ceil() as usize + 1;
+    let fc0: Vec<f64> = (0..horizon)
+        .map(|i| forecast.forecast_at(job.arrival, job.arrival + i))
+        .collect();
+    let mut plan = policy.plan(&planning_job, &fc0)?;
+
+    let total = job.total_work();
+    let mut done = 0.0;
+    let mut carbon = 0.0;
+    let mut kwh = 0.0;
+    let mut server_hours = 0.0;
+    let mut current_alloc = 0usize;
+    let mut n_switches = 0usize;
+    let mut n_recomputes = 0usize;
+    let mut n_denials = 0usize;
+    let mut realized = Vec::new();
+    let mut completion = None;
+
+    let mut rel = 0usize; // slot index relative to arrival
+    while rel < horizon {
+        let abs = job.arrival + rel;
+        let mut desired = plan.at(abs);
+
+        // Past the plan's last active slot but unfinished (deadline-
+        // unaware policies, or switch-overhead/error shortfall without a
+        // recompute trigger): fall back to the base allocation rather
+        // than idling through trailing zero-padded slots.
+        let plan_exhausted = !(abs..plan.arrival + plan.n_slots())
+            .any(|h| plan.at(h) > 0);
+        if plan_exhausted && done < total {
+            desired = job.min_servers;
+        }
+
+        // Procurement denial applies to scale-ups only; CarbonScaler
+        // retries next slot (and the recompute path adapts the plan).
+        if desired > current_alloc && cfg.denial_prob > 0.0 && rng.chance(cfg.denial_prob) {
+            n_denials += 1;
+            desired = current_alloc.max(if current_alloc == 0 { 0 } else { current_alloc });
+        }
+
+        let switched = desired != current_alloc;
+        if switched {
+            n_switches += 1;
+        }
+        current_alloc = desired;
+        realized.push(current_alloc);
+
+        if current_alloc > 0 {
+            let curve = job.curve.at_progress((done / total).min(1.0));
+            let rate = curve.capacity(current_alloc.min(curve.max_servers()));
+            let productive = if switched {
+                1.0 - cfg.switch_overhead_hours
+            } else {
+                1.0
+            };
+            // Hours of wall-clock the job occupies this slot (partial if
+            // it completes mid-slot).
+            let (work_hours, finished_now) = if rate > 0.0
+                && done + rate * productive >= total - 1e-9
+            {
+                (((total - done) / rate).clamp(0.0, 1.0), true)
+            } else {
+                (productive, false)
+            };
+            // Energy is charged for occupancy (switch overhead included).
+            let occupancy = if finished_now {
+                work_hours + if switched { cfg.switch_overhead_hours } else { 0.0 }
+            } else {
+                1.0
+            };
+            let e = crate::energy::energy_kwh(current_alloc, job.power_watts, occupancy);
+            kwh += e;
+            carbon += e * truth.at(abs);
+            server_hours += current_alloc as f64 * occupancy;
+            done += rate * work_hours;
+
+            if finished_now {
+                completion = Some(rel as f64 + occupancy.min(1.0));
+                break;
+            }
+        }
+
+        // Slot boundary: deviation detection and recomputation.
+        if cfg.recompute && rel + 1 < n {
+            let planned_done = expected_progress(&plan, &planning_job, job.arrival, rel);
+            let progress_dev = if planned_done > 1e-9 {
+                ((done - planned_done) / planned_done).abs()
+            } else {
+                0.0
+            };
+            let carbon_dev = forecast.realized_error(job.arrival, abs);
+            if progress_dev > cfg.deviation_threshold || carbon_dev > cfg.deviation_threshold {
+                let now = abs + 1;
+                let remaining = (total - done).max(0.0);
+                if remaining > 0.0 && now < job.deadline() {
+                    let fc: Vec<f64> = (0..(horizon - rel - 1))
+                        .map(|i| forecast.forecast_at(now, now + i))
+                        .collect();
+                    if let Ok(p) = crate::sched::greedy::plan_remaining(
+                        &planning_job,
+                        &fc,
+                        now,
+                        remaining,
+                        (done / total).min(1.0),
+                    ) {
+                        plan = p;
+                        n_recomputes += 1;
+                    }
+                }
+            }
+        }
+
+        rel += 1;
+    }
+
+    Ok(SimResult {
+        carbon_g: carbon,
+        energy_kwh: kwh,
+        server_hours,
+        completion_hours: completion,
+        n_switches,
+        n_recomputes,
+        n_denials,
+        realized: Schedule::new(job.arrival, realized),
+    })
+}
+
+/// Work the *plan* expects to have completed by the end of relative slot
+/// `rel` (using the planner's own curve estimate).
+fn expected_progress(plan: &Schedule, planning_job: &JobSpec, arrival: usize, rel: usize) -> f64 {
+    let total = planning_job.total_work();
+    let mut done = 0.0;
+    for r in 0..=rel {
+        let a = plan.at(arrival + r);
+        if a == 0 {
+            continue;
+        }
+        let curve = planning_job.curve.at_progress((done / total).min(1.0));
+        done += curve.capacity(a.min(curve.max_servers()));
+        if done >= total {
+            return total;
+        }
+    }
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::{regions, synthetic};
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::sched::{CarbonAgnostic, CarbonScalerPolicy, SuspendResumeDeadline};
+    use crate::workload::job::JobBuilder;
+
+    fn truth() -> CarbonTrace {
+        synthetic::generate(regions::by_name("ontario").unwrap(), 14 * 24, 3)
+    }
+
+    fn job(len: f64, slack: f64, max: usize) -> crate::workload::job::JobSpec {
+        JobBuilder::new("j", MarginalCapacityCurve::linear(max))
+            .length(len)
+            .slack_factor(slack)
+            .power(1000.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn agnostic_sim_matches_static_accounting() {
+        let j = job(24.0, 1.0, 1);
+        let t = truth();
+        let cfg = SimConfig {
+            switch_overhead_hours: 0.0,
+            ..Default::default()
+        };
+        let r = simulate(&CarbonAgnostic, &j, &t, &cfg).unwrap();
+        let s = crate::sched::Policy::plan(&CarbonAgnostic, &j, &t.window(0, 24)).unwrap();
+        let acc = s.accounting(&j, &t);
+        assert!(r.finished());
+        assert!((r.carbon_g - acc.carbon_g).abs() < 1e-6);
+        assert!((r.completion_hours.unwrap() - acc.completion_hours.unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn carbonscaler_beats_agnostic_with_elasticity() {
+        // T = l but M = 4: savings must come purely from elasticity (§5.3).
+        let j = job(24.0, 1.0, 4);
+        let t = truth();
+        let cfg = SimConfig::default();
+        let cs = simulate(&CarbonScalerPolicy, &j, &t, &cfg).unwrap();
+        let ag = simulate(&CarbonAgnostic, &j, &t, &cfg).unwrap();
+        assert!(cs.finished() && ag.finished());
+        assert!(
+            cs.carbon_g < ag.carbon_g,
+            "cs {} vs agnostic {}",
+            cs.carbon_g,
+            ag.carbon_g
+        );
+        // On-time completion modulo switching overhead (the paper's
+        // scheduler does not model the 20-40s scale overhead either, §5.8).
+        assert!(cs.completion_hours.unwrap() <= j.completion_hours + 0.25);
+    }
+
+    #[test]
+    fn deadline_respected_by_carbonscaler() {
+        let j = job(24.0, 1.5, 4);
+        let r = simulate(&CarbonScalerPolicy, &j, &truth(), &SimConfig::default()).unwrap();
+        assert!(r.finished());
+        // +0.25h tolerance: unmodelled switch overhead (see above).
+        assert!(r.completion_hours.unwrap() <= j.completion_hours + 0.25);
+    }
+
+    #[test]
+    fn suspend_resume_saves_but_delays_nothing_with_deadline() {
+        let j = job(24.0, 1.5, 1);
+        let t = truth();
+        let sr = simulate(&SuspendResumeDeadline, &j, &t, &SimConfig::default()).unwrap();
+        let ag = simulate(&CarbonAgnostic, &j, &t, &SimConfig::default()).unwrap();
+        assert!(sr.finished());
+        assert!(sr.carbon_g <= ag.carbon_g + 1e-9);
+        assert!(sr.completion_hours.unwrap() <= j.completion_hours + 1.0);
+    }
+
+    #[test]
+    fn forecast_error_costs_little_with_recompute() {
+        // §5.7: 30% error -> small overhead when recomputing.
+        let j = job(24.0, 1.5, 4);
+        let t = truth();
+        let perfect = simulate(&CarbonScalerPolicy, &j, &t, &SimConfig::default()).unwrap();
+        let mut overheads = Vec::new();
+        for seed in 0..10 {
+            let noisy = simulate(
+                &CarbonScalerPolicy,
+                &j,
+                &t,
+                &SimConfig {
+                    forecast_error: 0.3,
+                    seed,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert!(noisy.finished(), "seed {seed}");
+            overheads.push(noisy.carbon_g / perfect.carbon_g - 1.0);
+        }
+        let mean = crate::util::stats::mean(&overheads);
+        assert!(mean < 0.15, "mean overhead {mean}");
+    }
+
+    #[test]
+    fn denials_increase_carbon_but_job_finishes() {
+        let j = job(24.0, 2.0, 4);
+        let t = truth();
+        let base = simulate(&CarbonScalerPolicy, &j, &t, &SimConfig::default()).unwrap();
+        let denied = simulate(
+            &CarbonScalerPolicy,
+            &j,
+            &t,
+            &SimConfig {
+                denial_prob: 0.5,
+                seed: 9,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(denied.finished());
+        assert!(denied.n_denials > 0);
+        assert!(denied.carbon_g >= base.carbon_g - 1e-6);
+    }
+
+    #[test]
+    fn switch_overhead_counted() {
+        let j = job(6.0, 2.0, 4);
+        let t = truth();
+        let r = simulate(&CarbonScalerPolicy, &j, &t, &SimConfig::default()).unwrap();
+        assert!(r.n_switches >= 1);
+        assert_eq!(r.realized.n_switches(), r.n_switches);
+    }
+
+    #[test]
+    fn profile_error_handled() {
+        let j = job(24.0, 1.5, 4);
+        let t = truth();
+        let r = simulate(
+            &CarbonScalerPolicy,
+            &j,
+            &t,
+            &SimConfig {
+                profile_error: 0.3,
+                seed: 5,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(r.finished(), "profile error must not prevent completion");
+    }
+
+    #[test]
+    fn zero_length_horizon_guard() {
+        // A job with tiny work finishes in the first slot.
+        let j = job(0.5, 2.0, 2);
+        let r = simulate(&CarbonScalerPolicy, &j, &truth(), &SimConfig::default()).unwrap();
+        assert!(r.finished());
+        assert!(r.completion_hours.unwrap() <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! Carbon-intensity substrate: traces, region catalog, synthetic
+//! generation, and forecast services (the electricityMap/WattTime analog).
+
+pub mod forecast;
+pub mod regions;
+pub mod synthetic;
+pub mod trace;
+
+pub use forecast::ForecastProvider;
+pub use regions::{RegionParams, REGIONS};
+pub use trace::CarbonTrace;

@@ -1,0 +1,188 @@
+//! Carbon-intensity time series.
+//!
+//! A [`CarbonTrace`] is an hourly series of grid carbon intensity in
+//! gCO₂eq/kWh for one region — the same format electricityMap exports and
+//! the paper consumes (§5.1 "Carbon Traces"). Traces can be loaded from
+//! CSV (drop-in for real electricityMap data) or produced by the synthetic
+//! generator in [`crate::carbon::synthetic`].
+
+use crate::util::stats;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Hourly carbon intensity series for one region.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonTrace {
+    /// Region identifier (e.g. "ontario", "netherlands").
+    pub region: String,
+    /// gCO₂eq/kWh per hour, starting at hour 0 of the trace.
+    pub values: Vec<f64>,
+}
+
+impl CarbonTrace {
+    pub fn new(region: &str, values: Vec<f64>) -> Self {
+        CarbonTrace {
+            region: region.to_string(),
+            values,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Intensity at hour `h`; wraps around for schedules that run past the
+    /// end of the trace (traces are multi-week, wrap keeps diurnality).
+    pub fn at(&self, h: usize) -> f64 {
+        self.values[h % self.values.len()]
+    }
+
+    /// A window `[start, start+len)` with wraparound.
+    pub fn window(&self, start: usize, len: usize) -> Vec<f64> {
+        (start..start + len).map(|h| self.at(h)).collect()
+    }
+
+    /// Mean intensity.
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.values)
+    }
+
+    /// Coefficient of variation — the paper's variability metric.
+    pub fn coeff_of_variation(&self) -> f64 {
+        stats::coeff_of_variation(&self.values)
+    }
+
+    /// The p-th percentile intensity (e.g. the 25th percentile threshold
+    /// used by the threshold suspend-resume policy in Fig 8).
+    pub fn percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.values, p)
+    }
+
+    /// Mean *daily* coefficient of variation: mean over days of
+    /// std(day)/mean(day). Fig 7 plots daily variability, which discounts
+    /// seasonal drift that the plain CoV would include.
+    pub fn daily_coeff_of_variation(&self) -> f64 {
+        let days = self.values.len() / 24;
+        if days == 0 {
+            return self.coeff_of_variation();
+        }
+        let mut covs = Vec::with_capacity(days);
+        for d in 0..days {
+            covs.push(stats::coeff_of_variation(&self.values[d * 24..(d + 1) * 24]));
+        }
+        stats::mean(&covs)
+    }
+
+    /// Serialize as `hour,gco2eq_per_kwh` CSV with a header.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("hour,carbon_intensity_gco2eq_kwh\n");
+        for (h, v) in self.values.iter().enumerate() {
+            s.push_str(&format!("{h},{v}\n"));
+        }
+        s
+    }
+
+    /// Parse the CSV format written by [`Self::to_csv`] (also accepts raw
+    /// electricityMap exports whose first two columns are datetime and
+    /// intensity — any first column is ignored).
+    pub fn from_csv(region: &str, text: &str) -> Result<Self> {
+        let mut values = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if i == 0 && line.chars().any(|c| c.is_alphabetic()) {
+                continue; // header
+            }
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() < 2 {
+                bail!("line {}: expected at least 2 columns", i + 1);
+            }
+            let v: f64 = cols[1]
+                .trim()
+                .parse()
+                .with_context(|| format!("line {}: bad intensity {:?}", i + 1, cols[1]))?;
+            if v < 0.0 {
+                bail!("line {}: negative carbon intensity {v}", i + 1);
+            }
+            values.push(v);
+        }
+        if values.is_empty() {
+            bail!("no data rows in CSV");
+        }
+        Ok(CarbonTrace::new(region, values))
+    }
+
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_csv())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load_csv(region: &str, path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_csv(region, &text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> CarbonTrace {
+        CarbonTrace::new("test", vec![10.0, 100.0, 20.0, 50.0])
+    }
+
+    #[test]
+    fn at_wraps() {
+        let tr = t();
+        assert_eq!(tr.at(0), 10.0);
+        assert_eq!(tr.at(4), 10.0);
+        assert_eq!(tr.at(5), 100.0);
+    }
+
+    #[test]
+    fn window_wraps() {
+        assert_eq!(t().window(3, 3), vec![50.0, 10.0, 100.0]);
+    }
+
+    #[test]
+    fn stats_consistent() {
+        let tr = t();
+        assert_eq!(tr.mean(), 45.0);
+        assert!(tr.coeff_of_variation() > 0.0);
+        assert_eq!(tr.percentile(0.0), 10.0);
+        assert_eq!(tr.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let tr = t();
+        let parsed = CarbonTrace::from_csv("test", &tr.to_csv()).unwrap();
+        assert_eq!(parsed, tr);
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        assert!(CarbonTrace::from_csv("x", "").is_err());
+        assert!(CarbonTrace::from_csv("x", "hour,ci\n0,abc").is_err());
+        assert!(CarbonTrace::from_csv("x", "hour,ci\n0,-5").is_err());
+    }
+
+    #[test]
+    fn csv_accepts_headerless() {
+        let parsed = CarbonTrace::from_csv("x", "0,10\n1,20\n").unwrap();
+        assert_eq!(parsed.values, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn daily_cov_flat_trace_is_zero() {
+        let tr = CarbonTrace::new("flat", vec![100.0; 48]);
+        assert_eq!(tr.daily_coeff_of_variation(), 0.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Job-spec files: the Kubernetes CRD analog (paper §4.2).
+//!
+//! The paper's users submit a Kubeflow job YAML extended with
+//! CarbonScaler-specific fields (m, M, T, l, curve source). Here the same
+//! information is a JSON document parsed with the from-scratch
+//! `util::json` (no serde offline); `examples/jobspec.json` shows the
+//! format:
+//!
+//! ```json
+//! {
+//!   "name": "resnet18-train",
+//!   "workload": "resnet18",          // Table-1 name, or "custom"
+//!   "minServers": 1,
+//!   "maxServers": 8,
+//!   "lengthHours": 24,
+//!   "slackFactor": 1.5,              // or "completionHours": 36
+//!   "region": "ontario",
+//!   "powerWatts": 210,               // optional, defaults from workload
+//!   "marginalCapacity": [1.0, 0.9]   // optional, overrides the profile
+//! }
+//! ```
+
+use crate::scaling::MarginalCapacityCurve;
+use crate::util::json::{self, Json};
+use crate::workload::catalog;
+use crate::workload::job::{JobBuilder, JobSpec};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// A parsed job request (spec + placement metadata).
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub spec: JobSpec,
+    pub region: String,
+    pub workload: String,
+}
+
+/// Parse a job request from JSON text.
+pub fn parse_job_request(text: &str) -> Result<JobRequest> {
+    let doc = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing 'name'"))?;
+    let workload = doc
+        .get("workload")
+        .and_then(Json::as_str)
+        .unwrap_or("custom")
+        .to_string();
+    let region = doc
+        .get("region")
+        .and_then(Json::as_str)
+        .unwrap_or("ontario")
+        .to_string();
+    if crate::carbon::regions::by_name(&region).is_none() {
+        bail!("unknown region {region:?}");
+    }
+
+    let m = doc.get("minServers").and_then(Json::as_usize).unwrap_or(1);
+    let mm = doc
+        .get("maxServers")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing 'maxServers'"))?;
+    let length = doc
+        .get("lengthHours")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing 'lengthHours'"))?;
+
+    // Capacity curve: explicit marginals > Table-1 workload model.
+    let curve = if let Some(arr) = doc.get("marginalCapacity").and_then(Json::as_arr) {
+        let mc: Option<Vec<f64>> = arr.iter().map(Json::as_f64).collect();
+        let mc = mc.ok_or_else(|| anyhow!("marginalCapacity must be numbers"))?;
+        if mc.len() < mm {
+            bail!("marginalCapacity covers {} servers < maxServers {}", mc.len(), mm);
+        }
+        MarginalCapacityCurve::from_marginals(mc)?
+    } else if let Some(w) = catalog::by_name(&workload) {
+        w.scaling.curve(mm)
+    } else {
+        bail!("workload {workload:?} unknown and no marginalCapacity given");
+    };
+
+    let power = doc
+        .get("powerWatts")
+        .and_then(Json::as_f64)
+        .or_else(|| catalog::by_name(&workload).map(|w| w.power_watts))
+        .unwrap_or(210.0);
+
+    let mut b = JobBuilder::new(name, curve)
+        .servers(m, mm)
+        .length(length)
+        .power(power)
+        .arrival(doc.get("arrivalHour").and_then(Json::as_usize).unwrap_or(0));
+    if let Some(t) = doc.get("completionHours").and_then(Json::as_f64) {
+        b = b.completion(t);
+    } else if let Some(f) = doc.get("slackFactor").and_then(Json::as_f64) {
+        b = b.slack_factor(f);
+    }
+    Ok(JobRequest {
+        spec: b.build()?,
+        region,
+        workload,
+    })
+}
+
+/// Load a job request from a file.
+pub fn load_job_request(path: &Path) -> Result<JobRequest> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    parse_job_request(&text)
+}
+
+/// Serialize a job request back to JSON (round-trip support for tooling).
+pub fn job_request_to_json(req: &JobRequest) -> String {
+    let mc: Vec<f64> = req.spec.curve.at_progress(0.0).marginals().to_vec();
+    Json::obj()
+        .set("name", req.spec.name.as_str())
+        .set("workload", req.workload.as_str())
+        .set("region", req.region.as_str())
+        .set("minServers", req.spec.min_servers)
+        .set("maxServers", req.spec.max_servers)
+        .set("lengthHours", req.spec.length_hours)
+        .set("completionHours", req.spec.completion_hours)
+        .set("arrivalHour", req.spec.arrival)
+        .set("powerWatts", req.spec.power_watts)
+        .set("marginalCapacity", mc)
+        .to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"{
+        "name": "train-1",
+        "workload": "resnet18",
+        "minServers": 1,
+        "maxServers": 8,
+        "lengthHours": 24,
+        "slackFactor": 1.5,
+        "region": "ontario"
+    }"#;
+
+    #[test]
+    fn parses_catalog_workload() {
+        let req = parse_job_request(SPEC).unwrap();
+        assert_eq!(req.spec.name, "train-1");
+        assert_eq!(req.spec.max_servers, 8);
+        assert_eq!(req.spec.completion_hours, 36.0);
+        assert_eq!(req.spec.power_watts, 210.0);
+        assert_eq!(req.region, "ontario");
+    }
+
+    #[test]
+    fn explicit_curve_overrides() {
+        let text = r#"{
+            "name": "custom-1", "maxServers": 2, "lengthHours": 4,
+            "marginalCapacity": [1.0, 0.5], "powerWatts": 100
+        }"#;
+        let req = parse_job_request(text).unwrap();
+        assert_eq!(req.spec.curve.at_progress(0.0).marginals(), &[1.0, 0.5]);
+        assert_eq!(req.spec.power_watts, 100.0);
+        // No slack specified -> on-time completion.
+        assert_eq!(req.spec.completion_hours, 4.0);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(parse_job_request("{}").is_err());
+        assert!(parse_job_request(r#"{"name":"x","maxServers":4,"lengthHours":1}"#).is_err()); // no curve
+        assert!(parse_job_request(
+            r#"{"name":"x","workload":"resnet18","maxServers":4,"lengthHours":1,"region":"nowhere"}"#
+        )
+        .is_err());
+        assert!(parse_job_request(
+            r#"{"name":"x","maxServers":4,"lengthHours":1,"marginalCapacity":[1.0]}"#
+        )
+        .is_err()); // curve shorter than M
+    }
+
+    #[test]
+    fn roundtrip_through_json() {
+        let req = parse_job_request(SPEC).unwrap();
+        let text = job_request_to_json(&req);
+        let back = parse_job_request(&text).unwrap();
+        assert_eq!(back.spec.name, req.spec.name);
+        assert_eq!(back.spec.completion_hours, req.spec.completion_hours);
+        assert_eq!(
+            back.spec.curve.at_progress(0.0).marginals(),
+            req.spec.curve.at_progress(0.0).marginals()
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! Cluster substrate: the Kubernetes analog — node pool, job-spec API,
+//! and a multi-job co-scheduling controller.
+
+pub mod api;
+pub mod controller;
+pub mod state;
+
+pub use api::{load_job_request, parse_job_request, JobRequest};
+pub use controller::{ClusterController, JobRun};
+pub use state::{Cluster, Grant, Node};

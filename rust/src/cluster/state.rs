@@ -1,0 +1,177 @@
+//! Cluster state: nodes, capacity, and per-job allocations.
+//!
+//! The Kubernetes-substrate analog (DESIGN.md §3): the paper's prototype
+//! delegates "give job J k replicas" to Kubeflow; this module provides the
+//! same contract against a finite node pool, which makes *procurement
+//! denials* (§5.7, Fig 22) an emergent property of contention rather than
+//! only a probabilistic model.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// One server node; `slots` is how many job replicas it can host
+/// (the paper's testbeds: 8 × 16-core Xeons, 8 × p2.xlarge → slots = 1).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub slots: usize,
+}
+
+/// Cluster-wide allocation state.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    nodes: Vec<Node>,
+    /// job name -> replicas currently held.
+    allocations: BTreeMap<String, usize>,
+}
+
+/// Outcome of a scale request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grant {
+    /// Replicas actually held after the request.
+    pub granted: usize,
+    /// True if the request was reduced due to capacity (a denial).
+    pub denied: bool,
+}
+
+impl Cluster {
+    /// Homogeneous cluster of `n` single-slot nodes.
+    pub fn homogeneous(n: usize) -> Cluster {
+        Cluster {
+            nodes: (0..n).map(|id| Node { id, slots: 1 }).collect(),
+            allocations: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_nodes(nodes: Vec<Node>) -> Cluster {
+        Cluster {
+            nodes,
+            allocations: BTreeMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.nodes.iter().map(|n| n.slots).sum()
+    }
+
+    pub fn used(&self) -> usize {
+        self.allocations.values().sum()
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity() - self.used()
+    }
+
+    pub fn allocation(&self, job: &str) -> usize {
+        self.allocations.get(job).copied().unwrap_or(0)
+    }
+
+    /// Utilization fraction (the paper cites 40-60% typical).
+    pub fn utilization(&self) -> f64 {
+        if self.capacity() == 0 {
+            return 0.0;
+        }
+        self.used() as f64 / self.capacity() as f64
+    }
+
+    /// Request that `job` hold `desired` replicas. Scale-downs always
+    /// succeed; scale-ups are granted up to the free capacity (partial
+    /// grants are denials that still make progress — the cloud analog of
+    /// "some instances unavailable").
+    pub fn request_scale(&mut self, job: &str, desired: usize) -> Grant {
+        let current = self.allocation(job);
+        let granted = if desired <= current {
+            desired
+        } else {
+            current + (desired - current).min(self.free())
+        };
+        if granted == 0 {
+            self.allocations.remove(job);
+        } else {
+            self.allocations.insert(job.to_string(), granted);
+        }
+        Grant {
+            granted,
+            denied: granted < desired,
+        }
+    }
+
+    /// Release everything held by `job` (completion / failure).
+    pub fn release(&mut self, job: &str) {
+        self.allocations.remove(job);
+    }
+
+    /// All current allocations (job, replicas).
+    pub fn allocations(&self) -> impl Iterator<Item = (&str, usize)> {
+        self.allocations.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Validate internal consistency.
+    pub fn check(&self) -> Result<()> {
+        if self.used() > self.capacity() {
+            bail!("overcommitted: used {} > capacity {}", self.used(), self.capacity());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grants_up_to_capacity() {
+        let mut c = Cluster::homogeneous(8);
+        assert_eq!(c.request_scale("a", 5), Grant { granted: 5, denied: false });
+        assert_eq!(c.request_scale("b", 5), Grant { granted: 3, denied: true });
+        assert_eq!(c.free(), 0);
+        c.check().unwrap();
+    }
+
+    #[test]
+    fn scale_down_always_succeeds() {
+        let mut c = Cluster::homogeneous(4);
+        c.request_scale("a", 4);
+        assert_eq!(c.request_scale("a", 1), Grant { granted: 1, denied: false });
+        assert_eq!(c.free(), 3);
+    }
+
+    #[test]
+    fn scale_to_zero_removes_job() {
+        let mut c = Cluster::homogeneous(4);
+        c.request_scale("a", 2);
+        c.request_scale("a", 0);
+        assert_eq!(c.allocation("a"), 0);
+        assert_eq!(c.allocations().count(), 0);
+    }
+
+    #[test]
+    fn release_frees_capacity() {
+        let mut c = Cluster::homogeneous(4);
+        c.request_scale("a", 4);
+        c.release("a");
+        assert_eq!(c.free(), 4);
+    }
+
+    #[test]
+    fn rescale_up_partial_then_retry() {
+        let mut c = Cluster::homogeneous(6);
+        c.request_scale("bg", 4);
+        let g = c.request_scale("a", 4);
+        assert_eq!(g, Grant { granted: 2, denied: true });
+        // Background job shrinks; retry now fully granted.
+        c.request_scale("bg", 1);
+        let g2 = c.request_scale("a", 4);
+        assert_eq!(g2, Grant { granted: 4, denied: false });
+    }
+
+    #[test]
+    fn heterogeneous_nodes() {
+        let c = Cluster::with_nodes(vec![
+            Node { id: 0, slots: 4 },
+            Node { id: 1, slots: 2 },
+        ]);
+        assert_eq!(c.capacity(), 6);
+        assert_eq!(c.utilization(), 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Carbon AutoScaler: the real-execution coordinator driving the elastic
+//! PJRT worker pool through carbon-scaled schedules (paper §4.2).
+
+pub mod autoscaler;
+
+pub use autoscaler::{CarbonAutoscaler, RunConfig, RunReport, SlotRecord};

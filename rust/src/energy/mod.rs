@@ -1,0 +1,5 @@
+//! Energy and carbon accounting.
+
+pub mod power;
+
+pub use power::{carbon_g, energy_kwh, EnergyMeter};

@@ -1,0 +1,106 @@
+//! Energy and carbon accounting (the RAPL/DCGM substitution).
+//!
+//! The paper measures per-server power with RAPL (CPU) and DCGM (GPU) and
+//! reduces it to Table-1 constants (60 W CPU-only, 210 W CPU+GPU per
+//! server). [`EnergyMeter`] integrates power over server-hours and charges
+//! each hour at the *ground-truth* carbon intensity, yielding gCO₂eq
+//! totals directly comparable to the paper's figures.
+
+use crate::carbon::trace::CarbonTrace;
+
+/// Energy (kWh) consumed by `servers` servers drawing `watts` each for
+/// `hours`.
+pub fn energy_kwh(servers: usize, watts: f64, hours: f64) -> f64 {
+    servers as f64 * watts * hours / 1000.0
+}
+
+/// Carbon (gCO₂eq) for that energy at intensity `gco2_per_kwh`.
+pub fn carbon_g(servers: usize, watts: f64, hours: f64, gco2_per_kwh: f64) -> f64 {
+    energy_kwh(servers, watts, hours) * gco2_per_kwh
+}
+
+/// Accumulating meter for one job execution.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    total_kwh: f64,
+    total_gco2: f64,
+    server_hours: f64,
+    /// Per-slot (hour, servers, gCO₂) log for timelines (Fig 8).
+    log: Vec<(usize, usize, f64)>,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `servers` × `watts` for `hours` within slot `slot` at the
+    /// ground-truth intensity from `trace`.
+    pub fn charge(
+        &mut self,
+        trace: &CarbonTrace,
+        slot: usize,
+        servers: usize,
+        watts: f64,
+        hours: f64,
+    ) {
+        let kwh = energy_kwh(servers, watts, hours);
+        let g = kwh * trace.at(slot);
+        self.total_kwh += kwh;
+        self.total_gco2 += g;
+        self.server_hours += servers as f64 * hours;
+        self.log.push((slot, servers, g));
+    }
+
+    pub fn total_kwh(&self) -> f64 {
+        self.total_kwh
+    }
+
+    /// Total emissions in gCO₂eq.
+    pub fn total_gco2(&self) -> f64 {
+        self.total_gco2
+    }
+
+    /// Total server-hours — the paper's monetary-cost proxy (§5.5 measures
+    /// cost overhead as extra compute-hours).
+    pub fn server_hours(&self) -> f64 {
+        self.server_hours
+    }
+
+    pub fn slot_log(&self) -> &[(usize, usize, f64)] {
+        &self.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_math() {
+        // 2 servers * 210 W * 10 h = 4.2 kWh.
+        assert!((energy_kwh(2, 210.0, 10.0) - 4.2).abs() < 1e-12);
+        // At 100 g/kWh -> 420 g.
+        assert!((carbon_g(2, 210.0, 10.0, 100.0) - 420.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn meter_accumulates() {
+        let trace = CarbonTrace::new("t", vec![100.0, 50.0]);
+        let mut m = EnergyMeter::new();
+        m.charge(&trace, 0, 1, 1000.0, 1.0); // 1 kWh @ 100 g
+        m.charge(&trace, 1, 2, 1000.0, 0.5); // 1 kWh @ 50 g
+        assert!((m.total_kwh() - 2.0).abs() < 1e-12);
+        assert!((m.total_gco2() - 150.0).abs() < 1e-12);
+        assert!((m.server_hours() - 2.0).abs() < 1e-12);
+        assert_eq!(m.slot_log().len(), 2);
+    }
+
+    #[test]
+    fn zero_servers_charge_nothing() {
+        let trace = CarbonTrace::new("t", vec![500.0]);
+        let mut m = EnergyMeter::new();
+        m.charge(&trace, 0, 0, 210.0, 1.0);
+        assert_eq!(m.total_gco2(), 0.0);
+    }
+}

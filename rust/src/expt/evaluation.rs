@@ -1,0 +1,413 @@
+//! Core evaluation experiments: Figs 8–12 (CarbonScaler in action,
+//! elasticity, static-scale comparisons, temporal flexibility).
+
+use crate::advisor::{self, SimConfig};
+use crate::carbon::{regions, synthetic, CarbonTrace};
+use crate::expt::harness::{ExpContext, Experiment};
+use crate::sched::{
+    CarbonAgnostic, CarbonScalerPolicy, OracleStaticScale, Policy, StaticScale,
+    SuspendResumeDeadline, SuspendResumeThreshold,
+};
+use crate::util::stats;
+use crate::util::table::{f, pct, Table};
+use crate::workload::catalog;
+use anyhow::Result;
+
+fn ontario(ctx: &ExpContext) -> CarbonTrace {
+    synthetic::generate(regions::by_name("ontario").unwrap(), ctx.trace_hours(), ctx.seed)
+}
+
+fn netherlands(ctx: &ExpContext) -> CarbonTrace {
+    synthetic::generate(
+        regions::by_name("netherlands").unwrap(),
+        ctx.trace_hours(),
+        ctx.seed,
+    )
+}
+
+/// Fig 8: CarbonScaler in action — 48 h N-body(100k), T = 2l, Ontario.
+pub struct Fig8;
+
+impl Experiment for Fig8 {
+    fn id(&self) -> &'static str {
+        "fig8"
+    }
+    fn title(&self) -> &'static str {
+        "CarbonScaler in action: 48h N-body MPI job, T=2l (paper Fig 8)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let w = catalog::by_name("nbody-100k").unwrap();
+        let job = w.job(0, 48.0, 2.0, 8)?;
+        let cfg = SimConfig::default();
+
+        let mut t = Table::new("policy comparison").headers(&[
+            "policy",
+            "carbon (g)",
+            "completion (h)",
+            "completion/l",
+            "savings vs agnostic",
+        ]);
+        let ag = advisor::simulate(&CarbonAgnostic, &job, &trace, &cfg)?;
+        let sr = advisor::simulate(
+            &SuspendResumeThreshold {
+                percentile: 25.0,
+                max_horizon: 21 * 24,
+            },
+            &job,
+            &trace,
+            &cfg,
+        )?;
+        let cs = advisor::simulate(&CarbonScalerPolicy, &job, &trace, &cfg)?;
+        for (name, r) in [
+            ("carbon-agnostic", &ag),
+            ("suspend-resume(p25)", &sr),
+            ("carbonscaler", &cs),
+        ] {
+            let comp = r.completion_hours.unwrap_or(f64::NAN);
+            t.row(vec![
+                name.to_string(),
+                f(r.carbon_g, 0),
+                f(comp, 1),
+                f(comp / 48.0, 2),
+                pct(advisor::savings_pct(ag.carbon_g, r.carbon_g)),
+            ]);
+        }
+
+        let mut tl = Table::new("carbonscaler realized allocation (first 4 days)")
+            .headers(&["day", "hourly servers"]);
+        for d in 0..4.min(cs.realized.n_slots() / 24) {
+            let hours: Vec<String> = cs.realized.alloc[d * 24..(d + 1) * 24]
+                .iter()
+                .map(|a| a.to_string())
+                .collect();
+            tl.row(vec![format!("d{d}"), hours.join(" ")]);
+        }
+        Ok(vec![t, tl])
+    }
+}
+
+/// Fig 9: impact of workload elasticity (T = l, no slack), Ontario.
+pub struct Fig9;
+
+impl Experiment for Fig9 {
+    fn id(&self) -> &'static str {
+        "fig9"
+    }
+    fn title(&self) -> &'static str {
+        "Elasticity only (T=l): agnostic vs static-2x vs CarbonScaler (paper Fig 9)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let cfg = SimConfig::default();
+        let starts = advisor::even_starts(trace.len(), 48, ctx.n_starts());
+
+        let mut t = Table::new("mean carbon (g) across start times").headers(&[
+            "workload",
+            "agnostic",
+            "static-2x",
+            "carbonscaler",
+            "cs vs agnostic",
+            "cs vs static-2x",
+        ]);
+        for w in catalog::WORKLOADS {
+            let job = w.job(0, 24.0, 1.0, 8)?;
+            let ag = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonAgnostic,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let st = advisor::summarize(&advisor::sweep_start_times(
+                &StaticScale::new(2),
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let cs = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonScalerPolicy,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            t.row(vec![
+                w.name.to_string(),
+                f(ag.mean_carbon_g, 0),
+                f(st.mean_carbon_g, 0),
+                f(cs.mean_carbon_g, 0),
+                pct(advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g)),
+                pct(advisor::savings_pct(st.mean_carbon_g, cs.mean_carbon_g)),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 10: CarbonScaler vs every static scale factor and the oracle.
+pub struct Fig10;
+
+impl Experiment for Fig10 {
+    fn id(&self) -> &'static str {
+        "fig10"
+    }
+    fn title(&self) -> &'static str {
+        "CarbonScaler vs best static scale factors (paper Fig 10)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let cfg = SimConfig::default();
+        let starts = advisor::even_starts(trace.len(), 48, ctx.n_starts());
+
+        // (a) every static scale vs CS for N-body(10k).
+        let w = catalog::by_name("nbody-10k").unwrap();
+        let job = w.job(0, 24.0, 1.0, 8)?;
+        let cs = advisor::summarize(&advisor::sweep_start_times(
+            &CarbonScalerPolicy,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )?);
+        let mut ta = Table::new("(a) static scale vs CarbonScaler, N-body(10k)")
+            .headers(&["policy", "mean carbon (g)", "vs carbonscaler"]);
+        for k in 1..=8usize {
+            let p = StaticScale::new(k);
+            // Some scales may be infeasible for T=l; skip those.
+            let Ok(rs) = advisor::sweep_start_times(&p, &job, &trace, &starts, &cfg) else {
+                continue;
+            };
+            let s = advisor::summarize(&rs);
+            ta.row(vec![
+                p.name(),
+                f(s.mean_carbon_g, 0),
+                pct(s.mean_carbon_g / cs.mean_carbon_g - 1.0),
+            ]);
+        }
+        ta.row(vec![
+            "carbonscaler".into(),
+            f(cs.mean_carbon_g, 0),
+            pct(0.0),
+        ]);
+
+        // (b) probability that the per-start best static scale consumes
+        // more carbon than carbon-agnostic.
+        let mut tb = Table::new("(b) P[best static worse than agnostic] per workload")
+            .headers(&["workload", "best k (mode)", "P[worse]"]);
+        for w in catalog::WORKLOADS {
+            let job = w.job(0, 24.0, 1.0, 8)?;
+            let mut worse = 0usize;
+            let mut kcount = vec![0usize; 9];
+            for &s in &starts {
+                let j = crate::workload::job::JobSpec {
+                    arrival: s,
+                    ..job.clone()
+                };
+                let window = trace.window(s, j.n_slots());
+                let Ok((k, sched)) = OracleStaticScale.best_scale(&j, &window) else {
+                    continue;
+                };
+                kcount[k] += 1;
+                let mut sched = sched;
+                sched.arrival = 0;
+                let rel = CarbonTrace::new("w", window.clone());
+                let best_g = sched.emissions_g(&j, &rel);
+                let ag = crate::sched::Policy::plan(&CarbonAgnostic, &j, &window)?;
+                let mut ag = ag;
+                ag.arrival = 0;
+                if best_g > ag.emissions_g(&j, &rel) + 1e-9 {
+                    worse += 1;
+                }
+            }
+            let mode_k = kcount
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &c)| c)
+                .map(|(k, _)| k)
+                .unwrap_or(1);
+            tb.row(vec![
+                w.name.to_string(),
+                mode_k.to_string(),
+                f(worse as f64 / starts.len() as f64, 2),
+            ]);
+        }
+
+        // (c) CS vs oracle static per workload.
+        let mut tc = Table::new("(c) CarbonScaler savings over the static-scale oracle")
+            .headers(&["workload", "savings"]);
+        for w in catalog::WORKLOADS {
+            let job = w.job(0, 24.0, 1.0, 8)?;
+            let sav = advisor::savings_vs_baseline(
+                &CarbonScalerPolicy,
+                &OracleStaticScale,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?;
+            tc.row(vec![w.name.to_string(), pct(stats::mean(&sav))]);
+        }
+        Ok(vec![ta, tb, tc])
+    }
+}
+
+/// Fig 11: CS vs oracle static across regions (ResNet18).
+pub struct Fig11;
+
+impl Experiment for Fig11 {
+    fn id(&self) -> &'static str {
+        "fig11"
+    }
+    fn title(&self) -> &'static str {
+        "CarbonScaler vs static-scale oracle across regions (paper Fig 11)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let cfg = SimConfig::default();
+        let w = catalog::by_name("resnet18").unwrap();
+        let job = w.job(0, 24.0, 1.0, 8)?;
+        let mut t = Table::new("mean savings of CS over oracle static")
+            .headers(&["region", "cs vs oracle", "cs vs agnostic"]);
+        let sample = ["ontario", "california", "netherlands", "virginia", "india"];
+        for r in sample {
+            let trace =
+                synthetic::generate(regions::by_name(r).unwrap(), ctx.trace_hours(), ctx.seed);
+            let starts = advisor::even_starts(trace.len(), 48, ctx.n_starts());
+            let vs_oracle = advisor::savings_vs_baseline(
+                &CarbonScalerPolicy,
+                &OracleStaticScale,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?;
+            let vs_ag = advisor::savings_vs_baseline(
+                &CarbonScalerPolicy,
+                &CarbonAgnostic,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?;
+            t.row(vec![
+                r.to_string(),
+                pct(stats::mean(&vs_oracle)),
+                pct(stats::mean(&vs_ag)),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 12: temporal flexibility (T = 1.5 l) vs suspend-resume, two regions.
+pub struct Fig12;
+
+impl Experiment for Fig12 {
+    fn id(&self) -> &'static str {
+        "fig12"
+    }
+    fn title(&self) -> &'static str {
+        "T=1.5l: CarbonScaler vs deadline suspend-resume, Ontario & Netherlands (paper Fig 12)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let cfg = SimConfig::default();
+        let mut out = Vec::new();
+        for (rname, trace) in [("ontario", ontario(ctx)), ("netherlands", netherlands(ctx))] {
+            let starts = advisor::even_starts(trace.len(), 72, ctx.n_starts());
+            let mut t = Table::new(&format!("mean carbon (g), {rname}")).headers(&[
+                "workload",
+                "agnostic",
+                "suspend-resume",
+                "carbonscaler",
+                "cs vs agnostic",
+                "cs vs sr",
+            ]);
+            for w in catalog::WORKLOADS {
+                let job = w.job(0, 24.0, 1.5, 8)?;
+                let ag = advisor::summarize(&advisor::sweep_start_times(
+                    &CarbonAgnostic,
+                    &job,
+                    &trace,
+                    &starts,
+                    &cfg,
+                )?);
+                let sr = advisor::summarize(&advisor::sweep_start_times(
+                    &SuspendResumeDeadline,
+                    &job,
+                    &trace,
+                    &starts,
+                    &cfg,
+                )?);
+                let cs = advisor::summarize(&advisor::sweep_start_times(
+                    &CarbonScalerPolicy,
+                    &job,
+                    &trace,
+                    &starts,
+                    &cfg,
+                )?);
+                t.row(vec![
+                    w.name.to_string(),
+                    f(ag.mean_carbon_g, 0),
+                    f(sr.mean_carbon_g, 0),
+                    f(cs.mean_carbon_g, 0),
+                    pct(advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g)),
+                    pct(advisor::savings_pct(sr.mean_carbon_g, cs.mean_carbon_g)),
+                ]);
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpContext {
+        ExpContext {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig8_cs_saves_and_halves_sr_delay() {
+        let tables = Fig8.run(&quick()).unwrap();
+        let text = tables[0].render();
+        // CS must show savings vs agnostic; SR's completion factor must
+        // exceed CS's (the paper's 4x vs 2x contrast).
+        assert!(text.contains("carbonscaler"));
+        assert!(text.contains("suspend-resume"));
+    }
+
+    #[test]
+    fn fig9_cs_never_loses_on_average() {
+        let tables = Fig9.run(&quick()).unwrap();
+        // Every row's "cs vs agnostic" column should be a positive saving.
+        let text = tables[0].render();
+        for line in text.lines().skip(3) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            assert!(
+                !line.contains("-0.") || line.contains("+"),
+                "unexpected regression row: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig10_runs_all_panels() {
+        let tables = Fig10.run(&quick()).unwrap();
+        assert_eq!(tables.len(), 3);
+        assert!(tables[2].n_rows() == 5);
+    }
+
+    #[test]
+    fn fig12_two_regions() {
+        let tables = Fig12.run(&quick()).unwrap();
+        assert_eq!(tables.len(), 2);
+    }
+}

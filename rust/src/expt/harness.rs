@@ -1,0 +1,127 @@
+//! Experiment harness: one registered experiment per paper table/figure.
+//!
+//! `carbonscaler expt <id>` regenerates the corresponding table/figure
+//! data as aligned text tables; `carbonscaler expt all` runs everything
+//! (EXPERIMENTS.md records paper-vs-measured per experiment). `quick`
+//! mode shrinks sweeps so the full suite also serves as an integration
+//! test and a bench workload.
+
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Shared experiment context.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    /// Seed for trace generation and error realizations.
+    pub seed: u64,
+    /// Reduced sweep sizes (tests, benches).
+    pub quick: bool,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            seed: 2023,
+            quick: false,
+        }
+    }
+}
+
+impl ExpContext {
+    /// Start-time sample count for sweeps.
+    pub fn n_starts(&self) -> usize {
+        if self.quick {
+            6
+        } else {
+            40
+        }
+    }
+
+    /// Error-realization repeats.
+    pub fn n_repeats(&self) -> usize {
+        if self.quick {
+            4
+        } else {
+            20
+        }
+    }
+
+    /// Trace length in hours.
+    pub fn trace_hours(&self) -> usize {
+        if self.quick {
+            21 * 24
+        } else {
+            60 * 24
+        }
+    }
+}
+
+/// A runnable experiment reproducing one paper table/figure.
+pub trait Experiment {
+    /// Identifier, e.g. "fig9" or "table1".
+    fn id(&self) -> &'static str;
+    /// What the paper shows there.
+    fn title(&self) -> &'static str;
+    /// Produce the tables.
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>>;
+}
+
+/// All registered experiments, in paper order.
+pub fn all() -> Vec<Box<dyn Experiment>> {
+    use crate::expt::*;
+    vec![
+        Box::new(motivation::Table1),
+        Box::new(motivation::Fig1),
+        Box::new(motivation::Fig2),
+        Box::new(motivation::Fig3),
+        Box::new(motivation::Fig5),
+        Box::new(motivation::Fig7),
+        Box::new(evaluation::Fig8),
+        Box::new(evaluation::Fig9),
+        Box::new(evaluation::Fig10),
+        Box::new(evaluation::Fig11),
+        Box::new(evaluation::Fig12),
+        Box::new(sensitivity::Fig13),
+        Box::new(sensitivity::Fig14),
+        Box::new(sensitivity::Fig15),
+        Box::new(sensitivity::Fig16),
+        Box::new(sensitivity::Fig17),
+        Box::new(sensitivity::Fig18),
+        Box::new(robustness::Fig19),
+        Box::new(robustness::Fig20),
+        Box::new(robustness::Fig21),
+        Box::new(robustness::Fig22),
+    ]
+}
+
+/// Look up one experiment by id.
+pub fn by_id(id: &str) -> Option<Box<dyn Experiment>> {
+    all().into_iter().find(|e| e.id() == id)
+}
+
+/// Run and print one experiment.
+pub fn run_and_print(id: &str, ctx: &ExpContext) -> Result<()> {
+    let exp = by_id(id).ok_or_else(|| anyhow::anyhow!("unknown experiment {id:?}"))?;
+    println!("# {} — {}", exp.id(), exp.title());
+    for t in exp.run(ctx)? {
+        t.print();
+        println!();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_ordered() {
+        let ids: Vec<&str> = all().iter().map(|e| e.id()).collect();
+        let mut dedup = ids.clone();
+        dedup.dedup();
+        assert_eq!(ids, dedup);
+        assert_eq!(ids.len(), 21);
+        assert!(by_id("fig9").is_some());
+        assert!(by_id("nope").is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation (see DESIGN.md §5 for the index).
+
+pub mod evaluation;
+pub mod harness;
+pub mod motivation;
+pub mod robustness;
+pub mod sensitivity;
+
+pub use harness::{all, by_id, run_and_print, ExpContext, Experiment};

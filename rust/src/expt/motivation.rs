@@ -1,0 +1,304 @@
+//! Motivation & setup experiments: Table 1 and Figs 1, 2, 3, 5, 7.
+
+use crate::carbon::{regions, synthetic};
+use crate::expt::harness::{ExpContext, Experiment};
+use crate::scaling::MarginalCapacityCurve;
+use crate::sched::baselines::OracleStaticScale;
+use crate::sched::greedy;
+use crate::util::stats;
+use crate::util::table::{f, Table};
+use crate::workload::catalog;
+use crate::workload::job::JobBuilder;
+use anyhow::Result;
+
+/// Table 1: the elastic workload catalog.
+pub struct Table1;
+
+impl Experiment for Table1 {
+    fn id(&self) -> &'static str {
+        "table1"
+    }
+    fn title(&self) -> &'static str {
+        "Elastic workloads used in the evaluation (paper Table 1)"
+    }
+    fn run(&self, _ctx: &ExpContext) -> Result<Vec<Table>> {
+        let mut t = Table::new("Table 1").headers(&[
+            "name",
+            "implementation",
+            "epochs(24h)",
+            "batch",
+            "power(W)",
+            "speedup@8",
+        ]);
+        for w in catalog::WORKLOADS {
+            t.row(vec![
+                w.name.to_string(),
+                format!("{:?}", w.framework),
+                w.epochs_24h.to_string(),
+                w.batch_size.map(|b| b.to_string()).unwrap_or("NA".into()),
+                f(w.power_watts, 0),
+                f(w.scaling.curve(8).speedup(8), 2),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 1: diurnal carbon intensity for four contrasting regions.
+pub struct Fig1;
+
+impl Experiment for Fig1 {
+    fn id(&self) -> &'static str {
+        "fig1"
+    }
+    fn title(&self) -> &'static str {
+        "Carbon intensity varies by region and hour (paper Fig 1)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let mut t = Table::new("mean intensity by hour-of-day (gCO2eq/kWh)")
+            .headers(&["hour", "ontario", "california", "netherlands", "iceland"]);
+        let traces: Vec<_> = ["ontario", "california", "netherlands", "iceland"]
+            .iter()
+            .map(|r| synthetic::generate(regions::by_name(r).unwrap(), 28 * 24, ctx.seed))
+            .collect();
+        for hour in 0..24 {
+            let mut row = vec![format!("{hour:02}:00")];
+            for tr in &traces {
+                let vals: Vec<f64> = tr
+                    .values
+                    .iter()
+                    .enumerate()
+                    .filter(|(h, _)| h % 24 == hour)
+                    .map(|(_, v)| *v)
+                    .collect();
+                row.push(f(stats::mean(&vals), 0));
+            }
+            t.row(row);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 2: scaling characteristics (throughput vs servers).
+pub struct Fig2;
+
+impl Experiment for Fig2 {
+    fn id(&self) -> &'static str {
+        "fig2"
+    }
+    fn title(&self) -> &'static str {
+        "Scaling characteristics of the workloads (paper Fig 2)"
+    }
+    fn run(&self, _ctx: &ExpContext) -> Result<Vec<Table>> {
+        let mut t = Table::new("relative throughput at k servers")
+            .headers(&["k", "nbody-100k", "nbody-10k", "resnet18", "efficientnet-b1", "vgg16"]);
+        let names = ["nbody-100k", "nbody-10k", "resnet18", "efficientnet-b1", "vgg16"];
+        for k in 1..=8usize {
+            let mut row = vec![k.to_string()];
+            for n in names {
+                let w = catalog::by_name(n).unwrap();
+                row.push(f(w.scaling.curve(8).capacity(k), 2));
+            }
+            t.row(row);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 3: the best static scale factor varies by region, start time, and
+/// during execution.
+pub struct Fig3;
+
+impl Experiment for Fig3 {
+    fn id(&self) -> &'static str {
+        "fig3"
+    }
+    fn title(&self) -> &'static str {
+        "Best static scale varies across regions, start times, execution (paper Fig 3)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let w = catalog::by_name("resnet18").unwrap();
+        let hours = ctx.trace_hours();
+
+        // (a) best static scale per region, job starting at hour 0.
+        let mut ta = Table::new("(a) best static scale factor by region (24h ResNet18, T=l)")
+            .headers(&["region", "best k"]);
+        let sample_regions = [
+            "ontario", "california", "netherlands", "ireland", "virginia",
+            "india", "sweden", "texas",
+        ];
+        for r in sample_regions {
+            let trace = synthetic::generate(regions::by_name(r).unwrap(), hours, ctx.seed);
+            let job = w.job(0, 24.0, 1.0, 8)?;
+            let (k, _) = OracleStaticScale.best_scale(&job, &trace.window(0, 24))?;
+            ta.row(vec![r.to_string(), k.to_string()]);
+        }
+
+        // (b) distribution of best static scale across start times, Ontario.
+        let trace = synthetic::generate(regions::by_name("ontario").unwrap(), hours, ctx.seed);
+        let mut counts = vec![0usize; 9];
+        let starts: Vec<usize> = (0..ctx.n_starts()).map(|i| i * 7 % (hours - 48)).collect();
+        for &s in &starts {
+            let job = w.job(s, 24.0, 1.0, 8)?;
+            let (k, _) = OracleStaticScale.best_scale(&job, &trace.window(s, 24))?;
+            counts[k] += 1;
+        }
+        let mut tb = Table::new("(b) best static scale across start times (Ontario)")
+            .headers(&["k", "fraction of starts"]);
+        for k in 1..=8 {
+            tb.row(vec![
+                k.to_string(),
+                f(counts[k] as f64 / starts.len() as f64, 2),
+            ]);
+        }
+
+        // (c) the CS schedule uses multiple scale factors within one run.
+        let job = w.job(0, 24.0, 1.0, 8)?;
+        let plan = greedy::plan_polished(&job, &trace.window(0, 24))?;
+        let mut distinct: Vec<usize> = plan.alloc.iter().copied().filter(|&a| a > 0).collect();
+        distinct.sort();
+        distinct.dedup();
+        let mut tc = Table::new("(c) scale factors used within a single CarbonScaler run")
+            .headers(&["distinct scales", "schedule"]);
+        tc.row(vec![
+            distinct.len().to_string(),
+            format!("{:?}", plan.alloc),
+        ]);
+        Ok(vec![ta, tb, tc])
+    }
+}
+
+/// Fig 5: the worked example of Algorithm 1.
+pub struct Fig5;
+
+impl Experiment for Fig5 {
+    fn id(&self) -> &'static str {
+        "fig5"
+    }
+    fn title(&self) -> &'static str {
+        "Illustrative example of the carbon scaling algorithm (paper Fig 5)"
+    }
+    fn run(&self, _ctx: &ExpContext) -> Result<Vec<Table>> {
+        let carbon = vec![10.0, 100.0, 20.0];
+        let trace = crate::carbon::CarbonTrace::new("example", carbon.clone());
+
+        let mut t = Table::new("l=2, T=3, m=1, M=2, c=[10,100,20]").headers(&[
+            "case",
+            "schedule",
+            "emissions",
+            "completion(h)",
+        ]);
+
+        // (a) carbon-agnostic.
+        let flat = JobBuilder::new("flat", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(1.5)
+            .power(1000.0)
+            .build()?;
+        let agnostic = crate::sched::Schedule::new(0, vec![1, 1, 0]);
+        t.row(vec![
+            "carbon-agnostic".into(),
+            format!("{:?}", agnostic.alloc),
+            f(agnostic.emissions_g(&flat, &trace), 0),
+            f(agnostic.completion_hours(&flat).unwrap(), 2),
+        ]);
+
+        // (b) flat MC curve.
+        let s = greedy::plan(&flat, &carbon)?;
+        t.row(vec![
+            "flat MC [1,1]".into(),
+            format!("{:?}", s.alloc),
+            f(s.emissions_g(&flat, &trace), 0),
+            f(s.completion_hours(&flat).unwrap(), 2),
+        ]);
+
+        // (c) diminishing MC curve — the paper's 2-server/0/1-server plan.
+        let dim = JobBuilder::new("dim", MarginalCapacityCurve::from_marginals(vec![1.0, 0.7])?)
+            .length(2.0)
+            .slack_factor(1.5)
+            .power(1000.0)
+            .build()?;
+        let s = greedy::plan(&dim, &carbon)?;
+        t.row(vec![
+            "diminishing MC [1,0.7]".into(),
+            format!("{:?}", s.alloc),
+            f(s.emissions_g(&dim, &trace), 0),
+            f(s.completion_hours(&dim).unwrap(), 2),
+        ]);
+        Ok(vec![t])
+    }
+}
+
+/// Fig 7: mean carbon intensity vs daily variability across all regions.
+pub struct Fig7;
+
+impl Experiment for Fig7 {
+    fn id(&self) -> &'static str {
+        "fig7"
+    }
+    fn title(&self) -> &'static str {
+        "Mean vs daily variation of carbon cost across 37 regions (paper Fig 7)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let mut t = Table::new("region statistics").headers(&[
+            "region",
+            "mean (g/kWh)",
+            "daily CoV",
+        ]);
+        for tr in synthetic::generate_all(28 * 24, ctx.seed) {
+            t.row(vec![
+                tr.region.clone(),
+                f(tr.mean(), 0),
+                f(tr.daily_coeff_of_variation(), 3),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpContext {
+        ExpContext {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn table1_has_five_rows() {
+        let t = Table1.run(&quick()).unwrap();
+        assert_eq!(t[0].n_rows(), 5);
+    }
+
+    #[test]
+    fn fig1_24_hours() {
+        let t = Fig1.run(&quick()).unwrap();
+        assert_eq!(t[0].n_rows(), 24);
+    }
+
+    #[test]
+    fn fig3_produces_three_panels() {
+        let t = Fig3.run(&quick()).unwrap();
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn fig5_matches_paper_worked_example() {
+        let tables = Fig5.run(&quick()).unwrap();
+        let text = tables[0].render();
+        // Paper: agnostic 110 units; flat-curve optimal 20 (2 servers @10);
+        // diminishing curve 26 with schedule [2, 0, 1].
+        assert!(text.contains("110"), "{text}");
+        assert!(text.contains("[2, 0, 0]"), "{text}");
+        assert!(text.contains("[2, 0, 1]"), "{text}");
+    }
+
+    #[test]
+    fn fig7_covers_all_regions() {
+        let t = Fig7.run(&quick()).unwrap();
+        assert_eq!(t[0].n_rows(), 37);
+    }
+}

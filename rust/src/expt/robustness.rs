@@ -1,0 +1,215 @@
+//! Robustness experiments: Figs 19–22 (forecast error, profiling error,
+//! procurement denials).
+
+use crate::advisor::{self, SimConfig};
+use crate::carbon::{forecast::ForecastProvider, regions, synthetic, CarbonTrace};
+use crate::expt::harness::{ExpContext, Experiment};
+use crate::sched::CarbonScalerPolicy;
+use crate::util::stats;
+use crate::util::table::{f, pct, Table};
+use crate::workload::catalog;
+use anyhow::Result;
+
+fn ontario(ctx: &ExpContext) -> CarbonTrace {
+    synthetic::generate(regions::by_name("ontario").unwrap(), ctx.trace_hours(), ctx.seed)
+}
+
+/// Carbon overhead of CS under an error knob vs CS with perfect info,
+/// across start times and error realizations.
+fn overhead_sweep(
+    ctx: &ExpContext,
+    trace: &CarbonTrace,
+    job: &crate::workload::job::JobSpec,
+    make_cfg: impl Fn(u64) -> SimConfig,
+) -> Result<Vec<f64>> {
+    let starts = advisor::even_starts(trace.len(), 96, ctx.n_starts().min(10));
+    let mut overheads = Vec::new();
+    for &s in &starts {
+        let j = crate::workload::job::JobSpec {
+            arrival: s,
+            ..job.clone()
+        };
+        let base = advisor::simulate(&CarbonScalerPolicy, &j, trace, &SimConfig::default())?;
+        for rep in 0..ctx.n_repeats().min(6) as u64 {
+            let cfg = make_cfg(rep * 7919 + s as u64);
+            let r = advisor::simulate(&CarbonScalerPolicy, &j, trace, &cfg)?;
+            overheads.push((r.carbon_g / base.carbon_g - 1.0).max(-1.0));
+        }
+    }
+    Ok(overheads)
+}
+
+/// Fig 19: forecast error keeps hills and valleys.
+pub struct Fig19;
+
+impl Experiment for Fig19 {
+    fn id(&self) -> &'static str {
+        "fig19"
+    }
+    fn title(&self) -> &'static str {
+        "30% forecast error retains the trace's hills and valleys (paper Fig 19)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let truth = ontario(ctx);
+        let p = ForecastProvider::with_error(truth.clone(), 0.3, ctx.seed);
+        let fc: Vec<f64> = (0..48).map(|h| p.forecast_at(0, h)).collect();
+        let tr: Vec<f64> = (0..48).map(|h| p.actual(h)).collect();
+
+        let mut t = Table::new("ground truth vs 30%-error forecast (first 48h)")
+            .headers(&["hour", "truth", "forecast"]);
+        for h in 0..48 {
+            t.row(vec![h.to_string(), f(tr[h], 0), f(fc[h], 0)]);
+        }
+        let mut s = Table::new("structure retention").headers(&["pearson(truth, forecast)"]);
+        s.row(vec![f(stats::pearson(&tr, &fc), 3)]);
+        Ok(vec![s, t])
+    }
+}
+
+/// Fig 20: carbon overhead vs forecast error magnitude.
+pub struct Fig20;
+
+impl Experiment for Fig20 {
+    fn id(&self) -> &'static str {
+        "fig20"
+    }
+    fn title(&self) -> &'static str {
+        "Effect of forecast error with recomputation (paper Fig 20)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let w = catalog::by_name("nbody-100k").unwrap();
+        let job = w.job(0, 24.0, 1.5, 8)?;
+
+        let mut t = Table::new("carbon overhead vs perfect forecast (N-body 100k)")
+            .headers(&["error", "mean", "p95"]);
+        for err in [0.1, 0.2, 0.3] {
+            let ov = overhead_sweep(ctx, &trace, &job, |seed| SimConfig {
+                forecast_error: err,
+                seed,
+                ..Default::default()
+            })?;
+            t.row(vec![
+                pct(err),
+                pct(stats::mean(&ov)),
+                pct(stats::percentile(&ov, 95.0)),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 21: carbon overhead from profiling errors.
+pub struct Fig21;
+
+impl Experiment for Fig21 {
+    fn id(&self) -> &'static str {
+        "fig21"
+    }
+    fn title(&self) -> &'static str {
+        "Effect of marginal-capacity profiling error (paper Fig 21)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let mut t = Table::new("carbon overhead vs exact profile (30% error)")
+            .headers(&["workload", "mean", "p95"]);
+        let names = if ctx.quick {
+            vec!["nbody-100k", "vgg16"]
+        } else {
+            catalog::names()
+        };
+        for name in names {
+            let w = catalog::by_name(name).unwrap();
+            let job = w.job(0, 24.0, 1.5, 8)?;
+            let ov = overhead_sweep(ctx, &trace, &job, |seed| SimConfig {
+                profile_error: 0.3,
+                seed,
+                ..Default::default()
+            })?;
+            t.row(vec![
+                name.to_string(),
+                pct(stats::mean(&ov)),
+                pct(stats::percentile(&ov, 95.0)),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 22: carbon overhead from server procurement denials.
+pub struct Fig22;
+
+impl Experiment for Fig22 {
+    fn id(&self) -> &'static str {
+        "fig22"
+    }
+    fn title(&self) -> &'static str {
+        "Effect of server procurement denial (paper Fig 22)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let mut t = Table::new("carbon overhead vs no-denial (T=2l)").headers(&[
+            "denial prob",
+            "nbody-100k",
+            "vgg16",
+        ]);
+        let probs: &[f64] = if ctx.quick {
+            &[0.2, 0.5]
+        } else {
+            &[0.1, 0.2, 0.3, 0.4, 0.5]
+        };
+        for &p in probs {
+            let mut row = vec![pct(p)];
+            for name in ["nbody-100k", "vgg16"] {
+                let w = catalog::by_name(name).unwrap();
+                let job = w.job(0, 24.0, 2.0, 8)?;
+                let ov = overhead_sweep(ctx, &trace, &job, |seed| SimConfig {
+                    denial_prob: p,
+                    seed,
+                    ..Default::default()
+                })?;
+                row.push(pct(stats::mean(&ov)));
+            }
+            t.row(row);
+        }
+        Ok(vec![t])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpContext {
+        ExpContext {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig19_structure_retained() {
+        let tables = Fig19.run(&quick()).unwrap();
+        let corr: f64 = tables[0]
+            .render()
+            .lines()
+            .last()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(corr > 0.7, "corr {corr}");
+    }
+
+    #[test]
+    fn fig20_overhead_small() {
+        let tables = Fig20.run(&quick()).unwrap();
+        assert_eq!(tables[0].n_rows(), 3);
+    }
+
+    #[test]
+    fn fig22_overhead_nonnegative_and_ordered() {
+        let tables = Fig22.run(&quick()).unwrap();
+        assert_eq!(tables[0].n_rows(), 2);
+    }
+}

@@ -1,0 +1,447 @@
+//! Sensitivity experiments: Figs 13–18 (completion time, job length,
+//! cluster size, monetary cost, regions, variability).
+
+use crate::advisor::{self, SimConfig};
+use crate::carbon::{regions, synthetic, CarbonTrace};
+use crate::expt::harness::{ExpContext, Experiment};
+use crate::scaling::PhasedCurve;
+use crate::sched::{CarbonAgnostic, CarbonScalerPolicy, SuspendResumeDeadline};
+use crate::util::stats;
+use crate::util::table::{f, pct, Table};
+use crate::workload::catalog;
+use crate::workload::job::JobSpec;
+use anyhow::Result;
+
+fn ontario(ctx: &ExpContext) -> CarbonTrace {
+    synthetic::generate(regions::by_name("ontario").unwrap(), ctx.trace_hours(), ctx.seed)
+}
+
+/// Fig 13: effect of completion time T = l .. 3l (ResNet18, 12 h).
+pub struct Fig13;
+
+impl Experiment for Fig13 {
+    fn id(&self) -> &'static str {
+        "fig13"
+    }
+    fn title(&self) -> &'static str {
+        "Savings and cost vs completion time (paper Fig 13)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let cfg = SimConfig::default();
+        let w = catalog::by_name("resnet18").unwrap();
+        let starts = advisor::even_starts(trace.len(), 96, ctx.n_starts());
+
+        let mut t = Table::new("12h ResNet18, Ontario").headers(&[
+            "T/l",
+            "cs savings",
+            "sr savings",
+            "cs cost overhead",
+        ]);
+        for factor in [1.0, 1.5, 2.0, 2.5, 3.0] {
+            let job = w.job(0, 12.0, factor, 8)?;
+            let ag = advisor::sweep_start_times(&CarbonAgnostic, &job, &trace, &starts, &cfg)?;
+            let cs =
+                advisor::sweep_start_times(&CarbonScalerPolicy, &job, &trace, &starts, &cfg)?;
+            let sr =
+                advisor::sweep_start_times(&SuspendResumeDeadline, &job, &trace, &starts, &cfg)?;
+            let ag_s = advisor::summarize(&ag);
+            let cs_s = advisor::summarize(&cs);
+            let sr_s = advisor::summarize(&sr);
+            t.row(vec![
+                f(factor, 1),
+                pct(advisor::savings_pct(ag_s.mean_carbon_g, cs_s.mean_carbon_g)),
+                pct(advisor::savings_pct(ag_s.mean_carbon_g, sr_s.mean_carbon_g)),
+                pct(cs_s.mean_server_hours / ag_s.mean_server_hours - 1.0),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 14: effect of job length 6–96 h (N-body 100k, T = 1.5 l).
+pub struct Fig14;
+
+impl Experiment for Fig14 {
+    fn id(&self) -> &'static str {
+        "fig14"
+    }
+    fn title(&self) -> &'static str {
+        "Savings vs job length (paper Fig 14)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let cfg = SimConfig::default();
+        let w = catalog::by_name("nbody-100k").unwrap();
+
+        let mut t = Table::new("N-body(100k), T=1.5l, Ontario").headers(&[
+            "length (h)",
+            "cs savings",
+            "sr savings",
+        ]);
+        let lengths: &[f64] = if ctx.quick {
+            &[6.0, 24.0, 96.0]
+        } else {
+            &[6.0, 12.0, 24.0, 48.0, 96.0]
+        };
+        for &len in lengths {
+            let window = (1.5 * len).ceil() as usize + 1;
+            let starts = advisor::even_starts(trace.len(), window, ctx.n_starts().min(12));
+            let job = w.job(0, len, 1.5, 8)?;
+            let ag = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonAgnostic,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let cs = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonScalerPolicy,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let sr = advisor::summarize(&advisor::sweep_start_times(
+                &SuspendResumeDeadline,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            t.row(vec![
+                f(len, 0),
+                pct(advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g)),
+                pct(advisor::savings_pct(ag.mean_carbon_g, sr.mean_carbon_g)),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 15: effect of cluster size with extrapolated capacity curves.
+pub struct Fig15;
+
+impl Experiment for Fig15 {
+    fn id(&self) -> &'static str {
+        "fig15"
+    }
+    fn title(&self) -> &'static str {
+        "Savings vs cluster size (extrapolated MC curve, paper Fig 15)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let cfg = SimConfig::default();
+        let w = catalog::by_name("nbody-100k").unwrap();
+        let base_curve = w.scaling.curve(8);
+
+        let mut t = Table::new("24h job, T=1.5l; m scales with cluster").headers(&[
+            "cluster (m..M)",
+            "cs savings",
+            "sr savings",
+            "abs cs saving (g)",
+        ]);
+        let sizes: &[(usize, usize)] = if ctx.quick {
+            &[(1, 8), (4, 32)]
+        } else {
+            &[(1, 8), (2, 16), (4, 32), (8, 64)]
+        };
+        for &(m, mm) in sizes {
+            let curve = base_curve.extrapolate(mm);
+            let job = JobSpec {
+                name: format!("nbody-{m}x{mm}"),
+                arrival: 0,
+                min_servers: m,
+                max_servers: mm,
+                length_hours: 24.0,
+                completion_hours: 36.0,
+                curve: PhasedCurve::single(curve),
+                power_watts: w.power_watts,
+            };
+            job.validate()?;
+            let starts = advisor::even_starts(trace.len(), 48, ctx.n_starts().min(10));
+            let ag = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonAgnostic,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let cs = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonScalerPolicy,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let sr = advisor::summarize(&advisor::sweep_start_times(
+                &SuspendResumeDeadline,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            t.row(vec![
+                format!("{m}..{mm}"),
+                pct(advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g)),
+                pct(advisor::savings_pct(ag.mean_carbon_g, sr.mean_carbon_g)),
+                f(ag.mean_carbon_g - cs.mean_carbon_g, 0),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}
+
+/// Fig 16: monetary cost overhead of CarbonScaler.
+pub struct Fig16;
+
+impl Experiment for Fig16 {
+    fn id(&self) -> &'static str {
+        "fig16"
+    }
+    fn title(&self) -> &'static str {
+        "Monetary (compute-hour) cost overhead (paper Fig 16)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let cfg = SimConfig::default();
+        let starts = advisor::even_starts(trace.len(), 72, ctx.n_starts());
+
+        // (a) per-workload cost overhead at T = 1.5l.
+        let mut ta = Table::new("(a) cost overhead by workload (T=1.5l)")
+            .headers(&["workload", "cs savings", "cost overhead"]);
+        for w in catalog::WORKLOADS {
+            let job = w.job(0, 24.0, 1.5, 8)?;
+            let ag = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonAgnostic,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let cs = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonScalerPolicy,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            ta.row(vec![
+                w.name.to_string(),
+                pct(advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g)),
+                pct(cs.mean_server_hours / ag.mean_server_hours - 1.0),
+            ]);
+        }
+
+        // (c) savings per unit added cost across slack factors (ResNet18).
+        let w = catalog::by_name("resnet18").unwrap();
+        let mut tc = Table::new("(c) savings per % added cost vs flexibility (ResNet18)")
+            .headers(&["T/l", "savings", "cost overhead", "savings per % cost"]);
+        for factor in [1.0, 1.25, 1.5, 2.0, 3.0] {
+            let job = w.job(0, 24.0, factor, 8)?;
+            let ag = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonAgnostic,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let cs = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonScalerPolicy,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let sav = advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g);
+            let cost = cs.mean_server_hours / ag.mean_server_hours - 1.0;
+            let ratio = if cost > 1e-6 { sav / cost } else { f64::INFINITY };
+            tc.row(vec![
+                f(factor, 2),
+                pct(sav),
+                pct(cost),
+                if ratio.is_finite() {
+                    f(ratio, 1)
+                } else {
+                    "inf".into()
+                },
+            ]);
+        }
+        Ok(vec![ta, tc])
+    }
+}
+
+/// Fig 17: savings across 16 AWS regions (ResNet18, T = l).
+pub struct Fig17;
+
+impl Experiment for Fig17 {
+    fn id(&self) -> &'static str {
+        "fig17"
+    }
+    fn title(&self) -> &'static str {
+        "Savings across 16 cloud regions (paper Fig 17)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let cfg = SimConfig::default();
+        let w = catalog::by_name("resnet18").unwrap();
+        let job = w.job(0, 24.0, 1.0, 8)?;
+
+        let mut t = Table::new("24h ResNet18, T=l").headers(&[
+            "region",
+            "agnostic (g)",
+            "carbonscaler (g)",
+            "savings",
+        ]);
+        let mut rel = Vec::new();
+        let regions_list = if ctx.quick {
+            &crate::carbon::regions::FIG17_REGIONS[..6]
+        } else {
+            crate::carbon::regions::FIG17_REGIONS
+        };
+        for r in regions_list {
+            let trace =
+                synthetic::generate(regions::by_name(r).unwrap(), ctx.trace_hours(), ctx.seed);
+            let starts = advisor::even_starts(trace.len(), 48, ctx.n_starts().min(12));
+            let ag = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonAgnostic,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let cs = advisor::summarize(&advisor::sweep_start_times(
+                &CarbonScalerPolicy,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?);
+            let sav = advisor::savings_pct(ag.mean_carbon_g, cs.mean_carbon_g);
+            rel.push(sav);
+            t.row(vec![
+                r.to_string(),
+                f(ag.mean_carbon_g, 0),
+                f(cs.mean_carbon_g, 0),
+                pct(sav),
+            ]);
+        }
+        let mut sum = Table::new("summary").headers(&["median savings", "mean savings"]);
+        sum.row(vec![pct(stats::median(&rel)), pct(stats::mean(&rel))]);
+        Ok(vec![t, sum])
+    }
+}
+
+/// Fig 18: savings correlate with the coefficient of variation.
+pub struct Fig18;
+
+impl Experiment for Fig18 {
+    fn id(&self) -> &'static str {
+        "fig18"
+    }
+    fn title(&self) -> &'static str {
+        "Savings vs carbon-cost variability (paper Fig 18)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let cfg = SimConfig::default();
+        let w = catalog::by_name("resnet18").unwrap();
+        let job = w.job(0, 24.0, 1.0, 8)?;
+
+        // (a) per-start savings vs the start-day CoV, Ontario.
+        let trace = ontario(ctx);
+        let starts = advisor::even_starts(trace.len(), 48, ctx.n_starts());
+        let mut covs = Vec::new();
+        let mut savs = Vec::new();
+        for &s in &starts {
+            let day: Vec<f64> = trace.window(s, 24);
+            covs.push(stats::coeff_of_variation(&day));
+            let j = JobSpec {
+                arrival: s,
+                ..job.clone()
+            };
+            let ag = advisor::simulate(&CarbonAgnostic, &j, &trace, &cfg)?;
+            let cs = advisor::simulate(&CarbonScalerPolicy, &j, &trace, &cfg)?;
+            savs.push(advisor::savings_pct(ag.carbon_g, cs.carbon_g));
+        }
+        let mut ta = Table::new("(a) savings vs window CoV, Ontario")
+            .headers(&["pearson(CoV, savings)", "mean savings"]);
+        ta.row(vec![f(stats::pearson(&covs, &savs), 2), pct(stats::mean(&savs))]);
+
+        // (b) savings distribution for regions ordered by CoV.
+        let mut tb = Table::new("(b) savings percentiles by region").headers(&[
+            "region",
+            "CoV",
+            "p10",
+            "p50",
+            "p90",
+        ]);
+        for r in ["india", "virginia", "netherlands", "ontario"] {
+            let trace =
+                synthetic::generate(regions::by_name(r).unwrap(), ctx.trace_hours(), ctx.seed);
+            let starts = advisor::even_starts(trace.len(), 48, ctx.n_starts().min(12));
+            let sav = advisor::savings_vs_baseline(
+                &CarbonScalerPolicy,
+                &CarbonAgnostic,
+                &job,
+                &trace,
+                &starts,
+                &cfg,
+            )?;
+            tb.row(vec![
+                r.to_string(),
+                f(trace.daily_coeff_of_variation(), 2),
+                pct(stats::percentile(&sav, 10.0)),
+                pct(stats::percentile(&sav, 50.0)),
+                pct(stats::percentile(&sav, 90.0)),
+            ]);
+        }
+        Ok(vec![ta, tb])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpContext {
+        ExpContext {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig13_savings_grow_with_slack() {
+        let tables = Fig13.run(&quick()).unwrap();
+        assert_eq!(tables[0].n_rows(), 5);
+    }
+
+    #[test]
+    fn fig15_runs() {
+        let tables = Fig15.run(&quick()).unwrap();
+        assert_eq!(tables[0].n_rows(), 2);
+    }
+
+    #[test]
+    fn fig17_summary_present() {
+        let tables = Fig17.run(&quick()).unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), 6);
+    }
+
+    #[test]
+    fn fig18_positive_correlation() {
+        let tables = Fig18.run(&quick()).unwrap();
+        let text = tables[0].render();
+        // Pearson should be clearly positive (paper reports 0.82).
+        let val: f64 = text
+            .lines()
+            .last()
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(val > 0.3, "pearson {val}");
+    }
+}

@@ -1,0 +1,19 @@
+//! CarbonScaler: carbon-aware autoscaling for elastic cloud batch jobs.
+//!
+//! A production-quality reproduction of *CarbonScaler: Leveraging Cloud
+//! Workload Elasticity for Optimizing Carbon-Efficiency* (Hanafy et al.,
+//! SIGMETRICS/POMACS 2023, DOI 10.1145/3626788). See DESIGN.md for the
+//! architecture and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod advisor;
+pub mod carbon;
+pub mod cluster;
+pub mod coordinator;
+pub mod energy;
+pub mod expt;
+pub mod profiler;
+pub mod runtime;
+pub mod scaling;
+pub mod sched;
+pub mod util;
+pub mod workload;

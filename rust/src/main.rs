@@ -1,0 +1,406 @@
+//! CarbonScaler CLI.
+//!
+//! Subcommands:
+//!   expt <id|all>      regenerate a paper table/figure (see DESIGN.md §5)
+//!   advisor            simulate a job spec under all policies
+//!   trace              generate / inspect synthetic carbon traces
+//!   regions            list the region catalog
+//!   profile            profile the real elastic training pool
+//!   train              run the end-to-end PJRT training under CarbonScaler
+//!   submit             plan a job spec and print its schedule
+
+use anyhow::{anyhow, bail, Result};
+use carbonscaler::advisor::{self, SimConfig};
+use carbonscaler::carbon::{regions, synthetic};
+use carbonscaler::cluster::api;
+use carbonscaler::coordinator::{CarbonAutoscaler, RunConfig};
+use carbonscaler::expt::{self, ExpContext};
+use carbonscaler::profiler;
+use carbonscaler::runtime::{Manifest, WorkerPool};
+use carbonscaler::sched::{
+    CarbonAgnostic, CarbonScalerPolicy, OracleStaticScale, Policy, StaticScale,
+    SuspendResumeDeadline,
+};
+use carbonscaler::util::cli::{Args, ArgSpec};
+use carbonscaler::util::table::{f, pct, Table};
+use std::path::PathBuf;
+
+const USAGE: &str = "carbonscaler <expt|advisor|trace|regions|profile|train|submit> [options]
+Reproduction of CarbonScaler (SIGMETRICS/POMACS 2023). See README.md.";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "expt" => cmd_expt(rest),
+        "advisor" => cmd_advisor(rest),
+        "trace" => cmd_trace(rest),
+        "regions" => cmd_regions(),
+        "profile" => cmd_profile(rest),
+        "train" => cmd_train(rest),
+        "submit" => cmd_submit(rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn parse(rest: &[String], specs: &[ArgSpec], head: &str) -> Result<Args> {
+    Args::parse(rest, specs, head).map_err(|e| anyhow!("{e}"))
+}
+
+fn cmd_expt(rest: &[String]) -> Result<()> {
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::opt("seed", "trace/error seed", "2023"),
+        ArgSpec::flag("quick", "reduced sweep sizes"),
+    ];
+    let args = parse(rest, SPECS, "carbonscaler expt <id|all> [--quick]")?;
+    let ctx = ExpContext {
+        seed: args.u64("seed")?,
+        quick: args.flag("quick"),
+    };
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    if id == "all" {
+        for e in expt::all() {
+            expt::run_and_print(e.id(), &ctx)?;
+        }
+    } else if id == "list" {
+        for e in expt::all() {
+            println!("{:8} {}", e.id(), e.title());
+        }
+    } else {
+        expt::run_and_print(id, &ctx)?;
+    }
+    Ok(())
+}
+
+fn cmd_advisor(rest: &[String]) -> Result<()> {
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::req("job", "path to a job spec JSON (see examples/jobspec.json)"),
+        ArgSpec::opt("seed", "trace seed", "2023"),
+        ArgSpec::opt("weeks", "trace length in weeks", "6"),
+        ArgSpec::opt("forecast-error", "forecast error fraction", "0.0"),
+        ArgSpec::opt("denial-prob", "procurement denial probability", "0.0"),
+    ];
+    let args = parse(rest, SPECS, "carbonscaler advisor --job <spec.json>")?;
+    let req = api::load_job_request(&PathBuf::from(args.str("job")?))?;
+    let trace = synthetic::generate(
+        regions::by_name(&req.region).unwrap(),
+        args.usize("weeks")? * 7 * 24,
+        args.u64("seed")?,
+    );
+    let cfg = SimConfig {
+        forecast_error: args.f64("forecast-error")?,
+        denial_prob: args.f64("denial-prob")?,
+        ..Default::default()
+    };
+
+    let policies: Vec<Box<dyn Policy>> = vec![
+        Box::new(CarbonAgnostic),
+        Box::new(SuspendResumeDeadline),
+        Box::new(StaticScale::new(2.min(req.spec.max_servers))),
+        Box::new(OracleStaticScale),
+        Box::new(CarbonScalerPolicy),
+    ];
+    let mut t = Table::new(&format!(
+        "advisor: {} in {} (l={}h, T={}h, m={}, M={})",
+        req.spec.name,
+        req.region,
+        req.spec.length_hours,
+        req.spec.completion_hours,
+        req.spec.min_servers,
+        req.spec.max_servers
+    ))
+    .headers(&["policy", "carbon (g)", "completion (h)", "server-hours", "switches"]);
+    let mut base = None;
+    for p in &policies {
+        match advisor::simulate(p.as_ref(), &req.spec, &trace, &cfg) {
+            Ok(r) => {
+                if p.name() == "carbon-agnostic" {
+                    base = Some(r.carbon_g);
+                }
+                t.row(vec![
+                    p.name(),
+                    f(r.carbon_g, 1),
+                    r.completion_hours.map(|c| f(c, 1)).unwrap_or("-".into()),
+                    f(r.server_hours, 1),
+                    r.n_switches.to_string(),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![
+                    p.name(),
+                    format!("infeasible: {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    if let Some(b) = base {
+        let cs = advisor::simulate(&CarbonScalerPolicy, &req.spec, &trace, &cfg)?;
+        println!(
+            "\ncarbonscaler saves {} vs carbon-agnostic",
+            pct(advisor::savings_pct(b, cs.carbon_g))
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(rest: &[String]) -> Result<()> {
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::opt("region", "region name", "ontario"),
+        ArgSpec::opt("hours", "trace length", "168"),
+        ArgSpec::opt("seed", "generator seed", "2023"),
+        ArgSpec::opt("out", "CSV output path (- for summary only)", "-"),
+    ];
+    let args = parse(rest, SPECS, "carbonscaler trace [--region r] [--out f.csv]")?;
+    let region = args.str("region")?;
+    let r = regions::by_name(&region).ok_or_else(|| anyhow!("unknown region {region:?}"))?;
+    let trace = synthetic::generate(r, args.usize("hours")?, args.u64("seed")?);
+    println!(
+        "{}: {} hours, mean {:.0} gCO2/kWh, daily CoV {:.3}, p25 {:.0}, p75 {:.0}",
+        trace.region,
+        trace.len(),
+        trace.mean(),
+        trace.daily_coeff_of_variation(),
+        trace.percentile(25.0),
+        trace.percentile(75.0)
+    );
+    let out = args.str("out")?;
+    if out != "-" {
+        trace.save_csv(&PathBuf::from(&out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_regions() -> Result<()> {
+    let mut t = Table::new("region catalog (synthetic parameters, DESIGN.md §3)")
+        .headers(&["region", "mean g/kWh", "CoV", "solar share"]);
+    for r in regions::REGIONS {
+        t.row(vec![
+            r.name.to_string(),
+            f(r.mean, 0),
+            f(r.cov, 2),
+            f(r.solar, 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn cmd_profile(rest: &[String]) -> Result<()> {
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::opt("preset", "artifact preset (tiny|small)", "tiny"),
+        ArgSpec::opt("workers", "max workers to profile", "4"),
+        ArgSpec::opt("alpha-secs", "seconds per allocation level", "2"),
+        ArgSpec::opt("beta", "allocation granularity", "1"),
+    ];
+    let args = parse(rest, SPECS, "carbonscaler profile [--preset tiny]")?;
+    let m = Manifest::load(&artifacts_dir())?;
+    let preset = args.str("preset")?;
+    let art = m
+        .transformer(&preset)
+        .ok_or_else(|| anyhow!("no artifact for preset {preset:?} — run `make artifacts`"))?;
+    let pool = WorkerPool::spawn(art, args.usize("workers")?, 42)?;
+    let report = profiler::profile_pool(
+        &pool,
+        &profiler::ProfilerConfig {
+            alpha: std::time::Duration::from_secs_f64(args.f64("alpha-secs")?),
+            beta: args.usize("beta")?,
+            ..Default::default()
+        },
+    )?;
+    let mut t = Table::new("measured scaling profile (real PJRT pool)")
+        .headers(&["workers", "samples/sec", "relative capacity"]);
+    for (i, &k) in report.levels.iter().enumerate() {
+        t.row(vec![
+            k.to_string(),
+            f(report.throughputs[i], 1),
+            f(report.throughputs[i] / report.throughputs[0], 2),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmarginal capacity curve: {:?}\nprofiling took {:.1}s",
+        report
+            .curve
+            .marginals()
+            .iter()
+            .map(|v| (v * 100.0).round() / 100.0)
+            .collect::<Vec<_>>(),
+        report.elapsed.as_secs_f64()
+    );
+    pool.shutdown();
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::opt("preset", "artifact preset (tiny|small)", "small"),
+        ArgSpec::opt("workers", "max workers (M)", "4"),
+        ArgSpec::opt("length", "job length in trace hours", "8"),
+        ArgSpec::opt("slack", "completion factor T/l", "1.5"),
+        ArgSpec::opt("slot-secs", "wall seconds per trace hour", "3"),
+        ArgSpec::opt("region", "carbon region", "ontario"),
+        ArgSpec::opt("seed", "seed", "42"),
+    ];
+    let args = parse(rest, SPECS, "carbonscaler train [--preset small]")?;
+    let m = Manifest::load(&artifacts_dir())?;
+    let preset = args.str("preset")?;
+    let art = m
+        .transformer(&preset)
+        .ok_or_else(|| anyhow!("no artifact for preset {preset:?}"))?;
+    let workers = args.usize("workers")?;
+    println!(
+        "spawning {workers} PJRT workers (P={} params)...",
+        art.n_params
+    );
+    let pool = WorkerPool::spawn(art, workers, args.u64("seed")?)?;
+
+    // Measure the real scaling profile, then schedule with it.
+    let report = profiler::profile_pool(
+        &pool,
+        &profiler::ProfilerConfig {
+            alpha: std::time::Duration::from_millis(800),
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "measured capacity curve: {:?}",
+        report
+            .curve
+            .marginals()
+            .iter()
+            .map(|v| (v * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+
+    let region = args.str("region")?;
+    let trace = synthetic::generate(
+        regions::by_name(&region).ok_or_else(|| anyhow!("unknown region"))?,
+        14 * 24,
+        args.u64("seed")?,
+    );
+    let job = carbonscaler::workload::JobBuilder::new("train-e2e", report.curve.clone())
+        .servers(1, workers)
+        .length(args.f64("length")?)
+        .slack_factor(args.f64("slack")?)
+        .power(210.0)
+        .build()?;
+    let auto = CarbonAutoscaler::new(
+        &pool,
+        job.clone(),
+        trace.clone(),
+        RunConfig {
+            slot_seconds: args.f64("slot-secs")?,
+            seed: args.u64("seed")?,
+            ..Default::default()
+        },
+    )?;
+    println!("running CarbonScaler schedule ({} slots)...", job.n_slots());
+    let r = auto.run(&CarbonScalerPolicy)?;
+
+    let mut t = Table::new("per-slot execution").headers(&[
+        "slot",
+        "workers",
+        "steps",
+        "mean loss",
+        "carbon (g)",
+    ]);
+    for s in &r.slots {
+        t.row(vec![
+            s.slot.to_string(),
+            s.workers.to_string(),
+            s.steps.to_string(),
+            if s.mean_loss.is_nan() {
+                "-".into()
+            } else {
+                f(s.mean_loss as f64, 3)
+            },
+            f(s.carbon_g, 2),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ntotal: {} steps, {} samples, {:.1} g CO2, {:.3} kWh, completion {:?}h, final loss {:.3} (wall {:.1}s)",
+        r.total_steps,
+        r.total_samples,
+        r.carbon_g,
+        r.energy_kwh,
+        r.completion_hours,
+        r.final_loss,
+        r.wall_seconds
+    );
+    pool.shutdown();
+    Ok(())
+}
+
+fn cmd_submit(rest: &[String]) -> Result<()> {
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::req("job", "path to a job spec JSON"),
+        ArgSpec::opt("seed", "trace seed", "2023"),
+    ];
+    let args = parse(rest, SPECS, "carbonscaler submit --job <spec.json>")?;
+    let req = api::load_job_request(&PathBuf::from(args.str("job")?))?;
+    let trace = synthetic::generate(
+        regions::by_name(&req.region).unwrap(),
+        6 * 7 * 24,
+        args.u64("seed")?,
+    );
+    let window = trace.window(req.spec.arrival, req.spec.n_slots());
+    let plan = carbonscaler::sched::greedy::plan_polished(&req.spec, &window)?;
+    println!(
+        "schedule for {} (arrival h{}, deadline h{}):",
+        req.spec.name,
+        req.spec.arrival,
+        req.spec.deadline()
+    );
+    let mut t = Table::new("").headers(&["slot", "carbon", "servers"]);
+    for (i, &a) in plan.alloc.iter().enumerate() {
+        t.row(vec![
+            carbonscaler::util::timefmt::fmt_slot(req.spec.arrival + i),
+            f(window[i], 0),
+            a.to_string(),
+        ]);
+    }
+    t.print();
+    let rel = carbonscaler::carbon::CarbonTrace::new("w", window);
+    let mut eval = plan.clone();
+    eval.arrival = 0;
+    println!(
+        "planned emissions {:.1} g, completion {:.1} h, {} switches",
+        eval.emissions_g(&req.spec, &rel),
+        eval.completion_hours(&req.spec).unwrap_or(f64::NAN),
+        plan.n_switches()
+    );
+    Ok(())
+}

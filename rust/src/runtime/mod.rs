@@ -1,0 +1,13 @@
+//! PJRT runtime: artifact loading, elastic worker pool, parameter server.
+//!
+//! Python never runs here — artifacts are AOT-compiled HLO text produced
+//! once by `make artifacts`.
+
+pub mod nbody;
+pub mod params;
+pub mod pjrt;
+pub mod worker;
+
+pub use params::ParamServer;
+pub use pjrt::{Engine, Manifest};
+pub use worker::WorkerPool;

@@ -1,0 +1,238 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! This is the only bridge between the rust coordinator and the L2/L1
+//! compute graphs. Artifacts are HLO **text** (see python/compile/aot.py
+//! for why not serialized protos); `HloModuleProto::from_text_file`
+//! reassigns instruction ids and compiles cleanly on the CPU PJRT client.
+//!
+//! The xla crate's `PjRtClient` is `Rc`-backed (not `Send`), so each
+//! worker thread constructs its own [`Engine`] — exactly the process
+//! model of a real distributed worker owning its accelerator runtime.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Manifest entry describing a transformer train-step artifact.
+#[derive(Debug, Clone)]
+pub struct TransformerArtifact {
+    pub file: PathBuf,
+    pub eval_file: PathBuf,
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    /// Flat-parameter layout: (name, offset, shape) — the ABI contract
+    /// with python/compile/model.py, used for layout-aware init.
+    pub param_layout: Vec<(String, usize, Vec<usize>)>,
+}
+
+/// Manifest entry describing an N-body step artifact.
+#[derive(Debug, Clone)]
+pub struct NBodyArtifact {
+    pub file: PathBuf,
+    pub n_bodies: usize,
+    pub softening: f64,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub transformers: Vec<(String, TransformerArtifact)>,
+    pub nbodies: Vec<(String, NBodyArtifact)>,
+}
+
+impl Manifest {
+    /// Load from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut m = Manifest::default();
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts object"))?;
+        for (name, entry) in arts {
+            let kind = entry.get("kind").and_then(Json::as_str).unwrap_or("");
+            let file = |key: &str| -> Result<PathBuf> {
+                Ok(dir.join(
+                    entry
+                        .get(key)
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing {key}"))?,
+                ))
+            };
+            let num = |key: &str| -> Result<usize> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))
+            };
+            match kind {
+                "transformer_train_step" => {
+                    let mut layout = Vec::new();
+                    if let Some(obj) = entry.get("param_layout").and_then(Json::as_obj) {
+                        for (pname, meta) in obj {
+                            let off = meta
+                                .get("offset")
+                                .and_then(Json::as_usize)
+                                .ok_or_else(|| anyhow!("{pname}: missing offset"))?;
+                            let shape: Vec<usize> = meta
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                                .unwrap_or_default();
+                            layout.push((pname.clone(), off, shape));
+                        }
+                        layout.sort_by_key(|(_, off, _)| *off);
+                    }
+                    m.transformers.push((
+                        name.clone(),
+                        TransformerArtifact {
+                            file: file("file")?,
+                            eval_file: file("eval_file")?,
+                            n_params: num("n_params")?,
+                            batch: num("batch")?,
+                            seq_len: num("seq_len")?,
+                            vocab: num("vocab")?,
+                            d_model: num("d_model")?,
+                            n_layers: num("n_layers")?,
+                            param_layout: layout,
+                        },
+                    ));
+                }
+                "nbody_step" => {
+                    m.nbodies.push((
+                        name.clone(),
+                        NBodyArtifact {
+                            file: file("file")?,
+                            n_bodies: num("n_bodies")?,
+                            softening: entry
+                                .get("softening")
+                                .and_then(Json::as_f64)
+                                .unwrap_or(0.05),
+                        },
+                    ));
+                }
+                other => bail!("unknown artifact kind {other:?}"),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn transformer(&self, preset: &str) -> Option<&TransformerArtifact> {
+        self.transformers
+            .iter()
+            .find(|(n, _)| n == &format!("transformer_{preset}"))
+            .map(|(_, a)| a)
+    }
+
+    pub fn nbody(&self, preset: &str) -> Option<&NBodyArtifact> {
+        self.nbodies
+            .iter()
+            .find(|(n, _)| n == &format!("nbody_{preset}"))
+            .map(|(_, a)| a)
+    }
+}
+
+/// A compiled executable bound to a thread-local PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load + compile an HLO text artifact on a fresh CPU client.
+    pub fn load(hlo_path: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", hlo_path.display()))?;
+        Ok(Engine { client, exe })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with literal inputs; returns the flattened tuple outputs
+    /// (aot.py lowers with return_tuple=True, so there is exactly one
+    /// tuple result whose elements we unpack).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+}
+
+/// f32 vector -> literal of the given dimensions.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// i32 vector -> literal of the given dimensions.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.transformer("tiny").is_some());
+        assert!(m.nbody("tiny").is_some());
+        let t = m.transformer("tiny").unwrap();
+        assert!(t.n_params > 0 && t.file.exists());
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

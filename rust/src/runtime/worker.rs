@@ -1,0 +1,243 @@
+//! Elastic worker pool: the data-parallel training substrate.
+//!
+//! Each worker is an OS thread owning its *own* PJRT CPU client and
+//! compiled train-step executable (the xla crate's client is `Rc`-backed,
+//! and one-runtime-per-worker mirrors real distributed replicas). The
+//! leader broadcasts parameters, each active worker computes gradients on
+//! its own deterministic microbatch shard, and the leader averages and
+//! applies SGD ([`crate::runtime::params::ParamServer`]).
+//!
+//! Elasticity: the pool spawns `max_workers` threads once; CarbonScaler's
+//! per-slot allocation selects how many are *active* for each step, so
+//! scaling up/down is O(1) — the measured analogue of Kubernetes replica
+//! scaling, and the substrate the Carbon Profiler measures real marginal
+//! capacity curves on.
+
+use crate::runtime::pjrt::{self, Engine, TransformerArtifact};
+use crate::runtime::params::{mean_loss, synth_batch, ParamServer};
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+enum Cmd {
+    /// Compute gradients at `step` with the given parameters.
+    Step { params: Arc<Vec<f32>>, step: u64 },
+    Stop,
+}
+
+struct Reply {
+    #[allow(dead_code)]
+    worker: usize,
+    loss: f32,
+    grads: Vec<f32>,
+}
+
+/// Leader handle to the elastic pool.
+pub struct WorkerPool {
+    art: TransformerArtifact,
+    txs: Vec<Sender<Cmd>>,
+    rx: Receiver<Result<Reply>>,
+    handles: Vec<JoinHandle<()>>,
+    seed: u64,
+}
+
+impl WorkerPool {
+    /// Spawn `max_workers` threads, each compiling the artifact on its own
+    /// PJRT client. Returns once every worker is ready (first failure
+    /// aborts).
+    pub fn spawn(art: &TransformerArtifact, max_workers: usize, seed: u64) -> Result<WorkerPool> {
+        if max_workers == 0 {
+            bail!("need at least one worker");
+        }
+        let (reply_tx, reply_rx) = channel::<Result<Reply>>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let mut txs = Vec::with_capacity(max_workers);
+        let mut handles = Vec::with_capacity(max_workers);
+
+        for w in 0..max_workers {
+            let (tx, rx) = channel::<Cmd>();
+            txs.push(tx);
+            let art = art.clone();
+            let reply_tx = reply_tx.clone();
+            let ready_tx = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_main(w, art, rx, reply_tx, ready_tx, seed);
+            }));
+        }
+        for _ in 0..max_workers {
+            ready_rx
+                .recv()
+                .context("worker startup channel closed")??;
+        }
+        Ok(WorkerPool {
+            art: art.clone(),
+            txs,
+            rx: reply_rx,
+            handles,
+            seed,
+        })
+    }
+
+    pub fn max_workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn artifact(&self) -> &TransformerArtifact {
+        &self.art
+    }
+
+    /// Run one data-parallel step on workers `0..active`: broadcast
+    /// params, gather `active` gradient shards, average + apply SGD.
+    /// Returns the mean loss.
+    pub fn step(&self, ps: &mut ParamServer, active: usize) -> Result<f32> {
+        if active == 0 || active > self.txs.len() {
+            bail!("active {} outside [1, {}]", active, self.txs.len());
+        }
+        let params = Arc::new(ps.params().to_vec());
+        let step = ps.steps();
+        for tx in &self.txs[..active] {
+            tx.send(Cmd::Step {
+                params: Arc::clone(&params),
+                step,
+            })
+            .map_err(|_| anyhow!("worker channel closed"))?;
+        }
+        let mut losses = Vec::with_capacity(active);
+        let mut grads = Vec::with_capacity(active);
+        for _ in 0..active {
+            let r = self.rx.recv().context("reply channel closed")??;
+            losses.push(r.loss);
+            grads.push(r.grads);
+        }
+        ps.apply(&grads);
+        Ok(mean_loss(&losses))
+    }
+
+    /// Samples processed per step at `active` workers.
+    pub fn samples_per_step(&self, active: usize) -> usize {
+        active * self.art.batch
+    }
+
+    /// The seed used for shard generation (for reproducing batches).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Graceful shutdown.
+    pub fn shutdown(mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(
+    id: usize,
+    art: TransformerArtifact,
+    rx: Receiver<Cmd>,
+    reply_tx: Sender<Result<Reply>>,
+    ready_tx: Sender<Result<()>>,
+    seed: u64,
+) {
+    let engine = match Engine::load(&art.file) {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let b = art.batch as i64;
+    let s = art.seq_len as i64;
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Stop => break,
+            Cmd::Step { params, step } => {
+                let result = (|| -> Result<Reply> {
+                    let (x, y) =
+                        synth_batch(art.vocab, art.batch, art.seq_len, id as u64, step, seed);
+                    let inputs = vec![
+                        pjrt::literal_f32(&params, &[params.len() as i64])?,
+                        pjrt::literal_i32(&x, &[b, s])?,
+                        pjrt::literal_i32(&y, &[b, s])?,
+                    ];
+                    let outs = engine.execute(&inputs)?;
+                    if outs.len() != 2 {
+                        bail!("expected (loss, grads), got {} outputs", outs.len());
+                    }
+                    let loss = pjrt::to_vec_f32(&outs[0])?[0];
+                    let grads = pjrt::to_vec_f32(&outs[1])?;
+                    Ok(Reply {
+                        worker: id,
+                        loss,
+                        grads,
+                    })
+                })();
+                if reply_tx.send(result).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::pjrt::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn pool_trains_tiny_model() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let art = m.transformer("tiny").unwrap();
+        let pool = WorkerPool::spawn(art, 2, 42).unwrap();
+        let mut ps = ParamServer::init_from_layout(art, 7);
+        ps.lr = 0.5;
+
+        let first = pool.step(&mut ps, 2).unwrap();
+        let mut last = first;
+        for _ in 0..15 {
+            last = pool.step(&mut ps, 2).unwrap();
+        }
+        assert!(first.is_finite() && last.is_finite());
+        assert!(
+            last < first,
+            "loss should decrease: first {first} last {last}"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn elastic_rescale_between_steps() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let art = m.transformer("tiny").unwrap();
+        let pool = WorkerPool::spawn(art, 3, 1).unwrap();
+        let mut ps = ParamServer::init_from_layout(art, 7);
+        for k in [1usize, 3, 2, 1] {
+            let loss = pool.step(&mut ps, k).unwrap();
+            assert!(loss.is_finite(), "k={k}");
+        }
+        assert!(pool.step(&mut ps, 0).is_err());
+        assert!(pool.step(&mut ps, 4).is_err());
+        pool.shutdown();
+    }
+}

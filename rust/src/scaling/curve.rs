@@ -1,0 +1,349 @@
+//! Marginal capacity curves (paper §3.3, Fig 4).
+//!
+//! A [`MarginalCapacityCurve`] captures the incremental throughput gained
+//! by each additional server: `mc[j]` is the extra (normalized) capacity
+//! from the j-th server, j ∈ [1, M]. Linear scaling is a flat curve;
+//! Amdahl-limited workloads have monotonically decreasing curves. The
+//! curve is the sole scaling input to Algorithm 1.
+
+use anyhow::{bail, Result};
+
+/// Incremental capacity per added server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarginalCapacityCurve {
+    /// mc[0] is the marginal capacity of server 1 (normalized to 1.0 by
+    /// convention), mc[j-1] of server j.
+    mc: Vec<f64>,
+    /// Prefix sums: cum[k] = capacity at k servers (cum[0] = 0). Kept so
+    /// the schedule-accounting hot path gets O(1) capacity lookups.
+    cum: Vec<f64>,
+}
+
+/// Internal constructor maintaining the prefix-sum invariant.
+fn build(mc: Vec<f64>) -> MarginalCapacityCurve {
+    let mut cum = Vec::with_capacity(mc.len() + 1);
+    cum.push(0.0);
+    let mut acc = 0.0;
+    for &v in &mc {
+        acc += v;
+        cum.push(acc);
+    }
+    MarginalCapacityCurve { mc, cum }
+}
+
+impl MarginalCapacityCurve {
+    /// Build from marginal increments directly.
+    pub fn from_marginals(mc: Vec<f64>) -> Result<Self> {
+        if mc.is_empty() {
+            bail!("marginal capacity curve must cover at least one server");
+        }
+        if mc.iter().any(|&v| v < 0.0) {
+            bail!("marginal capacity cannot be negative");
+        }
+        Ok(build(mc))
+    }
+
+    /// Build from cumulative throughput measurements `thr[j-1]` = jobs/hr
+    /// at j servers (what the Carbon Profiler records). Normalizes so one
+    /// server has capacity 1.0.
+    pub fn from_throughputs(thr: &[f64]) -> Result<Self> {
+        if thr.is_empty() {
+            bail!("need at least one throughput sample");
+        }
+        if thr[0] <= 0.0 {
+            bail!("single-server throughput must be positive");
+        }
+        let mut mc = Vec::with_capacity(thr.len());
+        let mut prev = 0.0;
+        for (j, &t) in thr.iter().enumerate() {
+            if t < prev {
+                bail!("throughput decreased at {} servers — curve must be non-decreasing", j + 1);
+            }
+            mc.push((t - prev) / thr[0]);
+            prev = t;
+        }
+        Ok(build(mc))
+    }
+
+    /// Ideal linear scaling: flat curve of 1.0 (Fig 4a).
+    pub fn linear(max_servers: usize) -> Self {
+        build(vec![1.0; max_servers])
+    }
+
+    /// Maximum server count covered.
+    pub fn max_servers(&self) -> usize {
+        self.mc.len()
+    }
+
+    /// Marginal capacity of the j-th server (1-indexed).
+    pub fn marginal(&self, j: usize) -> f64 {
+        assert!(j >= 1 && j <= self.mc.len(), "server index {j} out of range");
+        self.mc[j - 1]
+    }
+
+    /// Total capacity (relative throughput) at `k` servers: Σ_{j<=k} mc_j.
+    /// k == 0 is a suspended job: zero capacity. O(1) via prefix sums.
+    pub fn capacity(&self, k: usize) -> f64 {
+        assert!(k <= self.mc.len(), "allocation {k} beyond curve");
+        self.cum[k]
+    }
+
+    /// Speedup over one server at `k` servers.
+    pub fn speedup(&self, k: usize) -> f64 {
+        let base = self.capacity(1);
+        if base <= 0.0 {
+            return 0.0;
+        }
+        self.capacity(k) / base
+    }
+
+    /// True if strictly/weakly decreasing (the optimality precondition of
+    /// Theorem 1; we accept ties).
+    pub fn is_monotone_decreasing(&self) -> bool {
+        self.mc.windows(2).all(|w| w[1] <= w[0] + 1e-12)
+    }
+
+    /// Enforce monotonicity by isotonic clipping (each marginal capped at
+    /// the previous one). Profiling noise can produce small inversions;
+    /// the paper's greedy requires a decreasing curve.
+    pub fn monotonized(&self) -> Self {
+        let mut mc = self.mc.clone();
+        for j in 1..mc.len() {
+            if mc[j] > mc[j - 1] {
+                mc[j] = mc[j - 1];
+            }
+        }
+        build(mc)
+    }
+
+    /// Interpolate a curve profiled at granularity β > 1 (paper §4.1): we
+    /// have samples at server counts `ks` (ascending, first must be 1) and
+    /// linearly interpolate cumulative capacity between them.
+    pub fn interpolate(ks: &[usize], thr: &[f64], max_servers: usize) -> Result<Self> {
+        if ks.len() != thr.len() || ks.is_empty() {
+            bail!("ks/thr length mismatch or empty");
+        }
+        if ks[0] != 1 {
+            bail!("profiling must include the 1-server point");
+        }
+        if !ks.windows(2).all(|w| w[0] < w[1]) {
+            bail!("ks must be strictly ascending");
+        }
+        if *ks.last().unwrap() < max_servers {
+            bail!("profiling must cover max_servers (or extrapolate explicitly)");
+        }
+        let mut cumulative = Vec::with_capacity(max_servers);
+        for k in 1..=max_servers {
+            // Find bracketing samples.
+            let pos = ks.iter().position(|&s| s >= k).unwrap();
+            let c = if ks[pos] == k || pos == 0 {
+                thr[pos]
+            } else {
+                let (k0, k1) = (ks[pos - 1] as f64, ks[pos] as f64);
+                let (t0, t1) = (thr[pos - 1], thr[pos]);
+                t0 + (t1 - t0) * (k as f64 - k0) / (k1 - k0)
+            };
+            cumulative.push(c);
+        }
+        Self::from_throughputs(&cumulative)
+    }
+
+    /// Extrapolate the curve to a larger cluster (paper Fig 15: "we
+    /// extrapolated the marginal capacity curve"): fit the tail decay rate
+    /// and extend geometrically, clamped non-negative.
+    pub fn extrapolate(&self, new_max: usize) -> Self {
+        if new_max <= self.mc.len() {
+            return build(self.mc[..new_max].to_vec());
+        }
+        let mut mc = self.mc.clone();
+        // Geometric decay ratio estimated from the last few marginals.
+        let n = mc.len();
+        let tail = &mc[n.saturating_sub(4)..];
+        let mut ratio = 1.0;
+        let mut count = 0;
+        for w in tail.windows(2) {
+            if w[0] > 1e-9 {
+                ratio += w[1] / w[0] - 1.0;
+                count += 1;
+            }
+        }
+        let r = if count > 0 {
+            (1.0 + (ratio - 1.0) / count as f64).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        let mut last = *mc.last().unwrap();
+        while mc.len() < new_max {
+            last *= r;
+            mc.push(last.max(0.0));
+        }
+        build(mc)
+    }
+
+    /// Apply multiplicative noise to each marginal (profiling-error model
+    /// of §5.7 / Fig 21), re-monotonized.
+    pub fn with_error(&self, error_frac: f64, rng: &mut crate::util::rng::Rng) -> Self {
+        let mc = self
+            .mc
+            .iter()
+            .map(|&v| (v * (1.0 + rng.range(-error_frac, error_frac))).max(0.0))
+            .collect();
+        build(mc).monotonized()
+    }
+
+    /// Raw marginals.
+    pub fn marginals(&self) -> &[f64] {
+        &self.mc
+    }
+}
+
+/// A phase-dependent set of curves (paper §3.3: e.g. map vs reduce phases).
+/// Phase boundaries are expressed as fractions of total work completed.
+#[derive(Debug, Clone)]
+pub struct PhasedCurve {
+    /// (work-fraction upper bound, curve) pairs, ascending; last bound
+    /// must be 1.0.
+    phases: Vec<(f64, MarginalCapacityCurve)>,
+}
+
+impl PhasedCurve {
+    pub fn single(curve: MarginalCapacityCurve) -> Self {
+        PhasedCurve {
+            phases: vec![(1.0, curve)],
+        }
+    }
+
+    pub fn new(phases: Vec<(f64, MarginalCapacityCurve)>) -> Result<Self> {
+        if phases.is_empty() {
+            bail!("need at least one phase");
+        }
+        if (phases.last().unwrap().0 - 1.0).abs() > 1e-9 {
+            bail!("last phase bound must be 1.0");
+        }
+        if !phases.windows(2).all(|w| w[0].0 < w[1].0) {
+            bail!("phase bounds must be ascending");
+        }
+        Ok(PhasedCurve { phases })
+    }
+
+    /// Curve active when `done_frac` of the work is complete.
+    pub fn at_progress(&self, done_frac: f64) -> &MarginalCapacityCurve {
+        for (bound, curve) in &self.phases {
+            if done_frac < *bound {
+                return curve;
+            }
+        }
+        &self.phases.last().unwrap().1
+    }
+
+    pub fn n_phases(&self) -> usize {
+        self.phases.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_curve_flat() {
+        let c = MarginalCapacityCurve::linear(4);
+        assert_eq!(c.capacity(4), 4.0);
+        assert_eq!(c.marginal(3), 1.0);
+        assert!(c.is_monotone_decreasing());
+    }
+
+    #[test]
+    fn from_throughputs_normalizes() {
+        // 10, 18, 24 jobs/hr at 1..3 servers.
+        let c = MarginalCapacityCurve::from_throughputs(&[10.0, 18.0, 24.0]).unwrap();
+        assert!((c.marginal(1) - 1.0).abs() < 1e-12);
+        assert!((c.marginal(2) - 0.8).abs() < 1e-12);
+        assert!((c.marginal(3) - 0.6).abs() < 1e-12);
+        assert!((c.speedup(3) - 2.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_throughputs_rejects_decreasing() {
+        assert!(MarginalCapacityCurve::from_throughputs(&[10.0, 8.0]).is_err());
+        assert!(MarginalCapacityCurve::from_throughputs(&[0.0]).is_err());
+    }
+
+    #[test]
+    fn capacity_zero_when_suspended() {
+        let c = MarginalCapacityCurve::linear(4);
+        assert_eq!(c.capacity(0), 0.0);
+    }
+
+    #[test]
+    fn monotonize_fixes_inversions() {
+        let c = MarginalCapacityCurve::from_marginals(vec![1.0, 0.5, 0.7]).unwrap();
+        assert!(!c.is_monotone_decreasing());
+        let m = c.monotonized();
+        assert!(m.is_monotone_decreasing());
+        assert_eq!(m.marginals(), &[1.0, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn interpolation_beta2() {
+        // Samples at 1, 3, 5 servers; interpolate 2 and 4.
+        let c =
+            MarginalCapacityCurve::interpolate(&[1, 3, 5], &[10.0, 26.0, 34.0], 5).unwrap();
+        // capacity at 2 = 18/10, at 4 = 30/10
+        assert!((c.capacity(2) - 1.8).abs() < 1e-12);
+        assert!((c.capacity(4) - 3.0).abs() < 1e-12);
+        assert_eq!(c.max_servers(), 5);
+    }
+
+    #[test]
+    fn interpolation_requires_coverage() {
+        assert!(MarginalCapacityCurve::interpolate(&[1, 2], &[1.0, 1.8], 4).is_err());
+        assert!(MarginalCapacityCurve::interpolate(&[2, 4], &[1.0, 1.8], 4).is_err());
+    }
+
+    #[test]
+    fn extrapolate_decays() {
+        let c = MarginalCapacityCurve::from_marginals(vec![1.0, 0.8, 0.64]).unwrap();
+        let e = c.extrapolate(6);
+        assert_eq!(e.max_servers(), 6);
+        assert!(e.is_monotone_decreasing());
+        // Ratio ~0.8 -> next marginal ~0.512.
+        assert!((e.marginal(4) - 0.512).abs() < 0.02);
+    }
+
+    #[test]
+    fn extrapolate_truncates() {
+        let c = MarginalCapacityCurve::linear(8);
+        assert_eq!(c.extrapolate(3).max_servers(), 3);
+    }
+
+    #[test]
+    fn error_injection_stays_monotone() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let c = MarginalCapacityCurve::from_marginals(vec![1.0, 0.8, 0.6, 0.4]).unwrap();
+        for _ in 0..50 {
+            let e = c.with_error(0.3, &mut rng);
+            assert!(e.is_monotone_decreasing());
+            assert!(e.marginals().iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn phased_curve_selects_by_progress() {
+        let map = MarginalCapacityCurve::linear(4);
+        let reduce = MarginalCapacityCurve::from_marginals(vec![1.0, 0.2, 0.1, 0.05]).unwrap();
+        let p = PhasedCurve::new(vec![(0.7, map.clone()), (1.0, reduce.clone())]).unwrap();
+        assert_eq!(p.at_progress(0.0), &map);
+        assert_eq!(p.at_progress(0.69), &map);
+        assert_eq!(p.at_progress(0.7), &reduce);
+        assert_eq!(p.at_progress(1.0), &reduce);
+    }
+
+    #[test]
+    fn phased_curve_validation() {
+        let c = MarginalCapacityCurve::linear(2);
+        assert!(PhasedCurve::new(vec![]).is_err());
+        assert!(PhasedCurve::new(vec![(0.5, c.clone())]).is_err());
+        assert!(PhasedCurve::new(vec![(0.8, c.clone()), (0.4, c.clone()), (1.0, c)]).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Application scalability: marginal capacity curves and scaling models.
+
+pub mod curve;
+pub mod models;
+
+pub use curve::{MarginalCapacityCurve, PhasedCurve};
+pub use models::{amdahl_curve, amdahl_throughput, ScalingModel};

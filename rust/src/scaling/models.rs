@@ -1,0 +1,135 @@
+//! Parametric scaling models and Fig-2 workload presets.
+//!
+//! The paper's Fig 2 profiles six jobs (four DNN training jobs under
+//! Horovod/PyTorch elastic, two MPI N-body sizes) with scaling behaviours
+//! from near-linear to strongly bottlenecked. We model throughput-vs-
+//! servers with Amdahl's law plus a per-server communication overhead
+//! term, which reproduces all the observed shapes:
+//!
+//! `speedup(k) = 1 / (serial + (1-serial)/k + comm*(k-1))`... inverted to
+//! throughput `T(k) = k_eff` — see [`amdahl_throughput`].
+
+use crate::scaling::curve::MarginalCapacityCurve;
+
+/// Throughput (relative to 1 server) of a job with serial fraction
+/// `serial` and per-extra-server communication overhead `comm`, at `k`
+/// servers. `serial = comm = 0` is perfectly linear.
+pub fn amdahl_throughput(serial: f64, comm: f64, k: usize) -> f64 {
+    assert!(k >= 1);
+    let kf = k as f64;
+    // Time per unit work relative to 1 server.
+    let t = serial + (1.0 - serial) / kf + comm * (kf - 1.0);
+    1.0 / t.max(1e-9)
+}
+
+/// Build a marginal capacity curve from the Amdahl+comm model, clamped to
+/// be monotone non-increasing (at high k the comm term can make
+/// throughput *decrease*; capacity is then flat — adding servers yields
+/// nothing, which the greedy will simply never choose).
+pub fn amdahl_curve(serial: f64, comm: f64, max_servers: usize) -> MarginalCapacityCurve {
+    let mut thr = Vec::with_capacity(max_servers);
+    let mut best: f64 = 0.0;
+    for k in 1..=max_servers {
+        best = best.max(amdahl_throughput(serial, comm, k));
+        thr.push(best);
+    }
+    MarginalCapacityCurve::from_throughputs(&thr).expect("model curve is valid")
+}
+
+/// Scaling model parameters for one workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScalingModel {
+    pub serial: f64,
+    pub comm: f64,
+}
+
+impl ScalingModel {
+    pub const fn new(serial: f64, comm: f64) -> Self {
+        ScalingModel { serial, comm }
+    }
+
+    pub fn curve(&self, max_servers: usize) -> MarginalCapacityCurve {
+        amdahl_curve(self.serial, self.comm, max_servers)
+    }
+
+    pub fn throughput(&self, k: usize) -> f64 {
+        amdahl_throughput(self.serial, self.comm, k)
+    }
+}
+
+/// Fig-2 presets (shape-matched to the paper's measurements):
+/// * N-body 100k and ResNet18: near-linear up to 8 servers;
+/// * N-body 10k: diminishing returns (communication-bound at small N);
+/// * EfficientNetB1: moderate bottleneck;
+/// * VGG16 / ResNet50: strong bottleneck (large parameter broadcasts).
+pub mod presets {
+    use super::ScalingModel;
+
+    pub const NBODY_100K: ScalingModel = ScalingModel::new(0.003, 0.001);
+    pub const NBODY_10K: ScalingModel = ScalingModel::new(0.06, 0.025);
+    pub const RESNET18: ScalingModel = ScalingModel::new(0.008, 0.002);
+    pub const EFFICIENTNET_B1: ScalingModel = ScalingModel::new(0.03, 0.012);
+    pub const VGG16: ScalingModel = ScalingModel::new(0.08, 0.04);
+    pub const RESNET50: ScalingModel = ScalingModel::new(0.06, 0.03);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_model_is_linear() {
+        for k in 1..=8 {
+            assert!((amdahl_throughput(0.0, 0.0, k) - k as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn serial_fraction_caps_speedup() {
+        // Amdahl: speedup <= 1/serial.
+        let s = amdahl_throughput(0.25, 0.0, 1000);
+        assert!(s < 4.0);
+        assert!(s > 3.9);
+    }
+
+    #[test]
+    fn comm_overhead_can_cause_slowdown() {
+        let t4 = amdahl_throughput(0.0, 0.2, 4);
+        let t16 = amdahl_throughput(0.0, 0.2, 16);
+        assert!(t16 < t4, "heavy comm should degrade at scale");
+    }
+
+    #[test]
+    fn curves_monotone() {
+        for m in [
+            presets::NBODY_100K,
+            presets::NBODY_10K,
+            presets::RESNET18,
+            presets::EFFICIENTNET_B1,
+            presets::VGG16,
+            presets::RESNET50,
+        ] {
+            let c = m.curve(64);
+            assert!(c.is_monotone_decreasing());
+            assert!((c.marginal(1) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fig2_shape_ordering() {
+        // At 8 servers: N-body(100k) ≈ ResNet18 > EfficientNet > VGG16;
+        // N-body(10k) shows diminishing growth.
+        let s8 = |m: ScalingModel| m.curve(8).speedup(8);
+        assert!(s8(presets::NBODY_100K) > 7.0);
+        assert!(s8(presets::RESNET18) > 6.5);
+        assert!(s8(presets::EFFICIENTNET_B1) > 4.0 && s8(presets::EFFICIENTNET_B1) < 6.5);
+        assert!(s8(presets::VGG16) < 4.5);
+        assert!(s8(presets::NBODY_10K) < s8(presets::NBODY_100K));
+    }
+
+    #[test]
+    fn preset_curves_are_normalized() {
+        let c = presets::VGG16.curve(8);
+        assert!((c.capacity(1) - 1.0).abs() < 1e-9);
+    }
+}

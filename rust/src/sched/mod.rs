@@ -1,0 +1,14 @@
+//! Scheduling policies: CarbonScaler's greedy Algorithm 1 and the paper's
+//! baselines, plus the schedule type and accounting.
+
+pub mod baselines;
+pub mod greedy;
+pub mod policy;
+pub mod schedule;
+
+pub use baselines::{
+    CarbonAgnostic, OracleStaticScale, StaticScale, SuspendResumeDeadline,
+    SuspendResumeThreshold,
+};
+pub use policy::{CarbonScalerPolicy, Policy};
+pub use schedule::{Schedule, ScheduleAccounting};

@@ -1,0 +1,54 @@
+//! The policy abstraction: every scheduling strategy (CarbonScaler's
+//! greedy and all baselines) maps a job + carbon forecast to a
+//! [`Schedule`], so the advisor, coordinator, and experiments treat them
+//! uniformly.
+
+use crate::sched::schedule::Schedule;
+use crate::workload::job::JobSpec;
+use anyhow::Result;
+
+/// A scheduling policy.
+pub trait Policy {
+    /// Short identifier used in experiment tables.
+    fn name(&self) -> String;
+
+    /// Compute a schedule for `job` given per-slot carbon forecasts for
+    /// `[job.arrival, job.deadline())` (relative indexing: `carbon[0]` is
+    /// the arrival slot).
+    fn plan(&self, job: &JobSpec, carbon: &[f64]) -> Result<Schedule>;
+}
+
+/// CarbonScaler's greedy policy (Algorithm 1).
+#[derive(Debug, Clone, Default)]
+pub struct CarbonScalerPolicy;
+
+impl Policy for CarbonScalerPolicy {
+    fn name(&self) -> String {
+        "carbonscaler".into()
+    }
+
+    fn plan(&self, job: &JobSpec, carbon: &[f64]) -> Result<Schedule> {
+        // Algorithm 1 + the chronological-execution polish (greedy.rs docs).
+        crate::sched::greedy::plan_polished(job, carbon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::workload::job::JobBuilder;
+
+    #[test]
+    fn trait_object_usable() {
+        let p: Box<dyn Policy> = Box::new(CarbonScalerPolicy);
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(1.5)
+            .build()
+            .unwrap();
+        let s = p.plan(&job, &[10.0, 100.0, 20.0]).unwrap();
+        assert_eq!(p.name(), "carbonscaler");
+        assert!(s.completion_hours(&job).is_some());
+    }
+}

@@ -1,0 +1,338 @@
+//! Execution schedules: per-slot server allocations and their accounting.
+//!
+//! A [`Schedule`] maps each hourly slot in `[arrival, arrival + n)` to a
+//! server count (0 = suspended). Accounting methods compute completed
+//! work, completion time (fractional within the final slot, as in the
+//! paper's Fig 5 example where the job "only runs for one-third of slot
+//! 3"), emissions, and server-hours (the monetary-cost proxy).
+
+use crate::carbon::trace::CarbonTrace;
+use crate::workload::job::JobSpec;
+
+/// A per-slot allocation plan for one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// Absolute slot of the first entry.
+    pub arrival: usize,
+    /// Server allocation per slot (0 = suspended).
+    pub alloc: Vec<usize>,
+}
+
+impl Schedule {
+    pub fn new(arrival: usize, alloc: Vec<usize>) -> Self {
+        Schedule { arrival, alloc }
+    }
+
+    /// All-zero schedule of `n` slots.
+    pub fn empty(arrival: usize, n: usize) -> Self {
+        Schedule {
+            arrival,
+            alloc: vec![0; n],
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.alloc.len()
+    }
+
+    /// Allocation in absolute slot `h` (0 outside the window).
+    pub fn at(&self, h: usize) -> usize {
+        if h < self.arrival || h >= self.arrival + self.alloc.len() {
+            0
+        } else {
+            self.alloc[h - self.arrival]
+        }
+    }
+
+    /// Number of scale-change events (for switching-overhead accounting).
+    pub fn n_switches(&self) -> usize {
+        let mut prev = 0usize;
+        let mut n = 0;
+        for &a in &self.alloc {
+            if a != prev {
+                n += 1;
+                prev = a;
+            }
+        }
+        n
+    }
+
+    /// Validates allocations respect job bounds: every non-zero allocation
+    /// must lie in `[m, M]`.
+    pub fn respects_bounds(&self, job: &JobSpec) -> bool {
+        self.alloc
+            .iter()
+            .all(|&a| a == 0 || (a >= job.min_servers && a <= job.max_servers))
+    }
+
+    /// Work completed by the end of each slot, using the job's capacity
+    /// curve (phase-aware: the curve active at the current progress is
+    /// used within each slot).
+    pub fn cumulative_work(&self, job: &JobSpec) -> Vec<f64> {
+        let total = job.total_work();
+        let mut done = 0.0;
+        let mut out = Vec::with_capacity(self.alloc.len());
+        for &a in &self.alloc {
+            if done < total && a > 0 {
+                let curve = job.curve.at_progress(done / total);
+                done += curve.capacity(a.min(curve.max_servers()));
+            }
+            out.push(done.min(total));
+        }
+        out
+    }
+
+    /// Hours from arrival until the job's work completes, with fractional
+    /// final slot. `None` if the schedule does not finish the job.
+    pub fn completion_hours(&self, job: &JobSpec) -> Option<f64> {
+        let total = job.total_work();
+        if total <= 0.0 {
+            return Some(0.0);
+        }
+        let mut done = 0.0;
+        for (i, &a) in self.alloc.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let curve = job.curve.at_progress(done / total);
+            let rate = curve.capacity(a.min(curve.max_servers()));
+            if rate <= 0.0 {
+                continue;
+            }
+            if done + rate >= total - 1e-9 {
+                let frac = ((total - done) / rate).clamp(0.0, 1.0);
+                return Some(i as f64 + frac);
+            }
+            done += rate;
+        }
+        None
+    }
+
+    /// Emissions in gCO₂eq over ground truth `trace`, charging the final
+    /// slot only for the fraction actually used.
+    pub fn emissions_g(&self, job: &JobSpec, trace: &CarbonTrace) -> f64 {
+        self.accounting(job, trace).carbon_g
+    }
+
+    /// Allocation-free fast path returning (emissions, finished) — the
+    /// inner-loop evaluator of the polish pass (EXPERIMENTS.md §Perf:
+    /// removing `accounting()`'s per-slot Vec from the local search cut
+    /// plan_polished by ~2x). Matches `accounting()` exactly.
+    pub fn emissions_fast(&self, job: &JobSpec, trace: &CarbonTrace) -> (f64, bool) {
+        let total = job.total_work();
+        let mut done = 0.0;
+        let mut carbon = 0.0;
+        let per_server_kwh = job.power_watts / 1000.0;
+        for (i, &a) in self.alloc.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let curve = job.curve.at_progress((done / total).min(1.0));
+            let rate = curve.capacity(a.min(curve.max_servers()));
+            if rate > 0.0 && done + rate >= total - 1e-9 {
+                let frac = ((total - done) / rate).clamp(0.0, 1.0);
+                carbon += a as f64 * per_server_kwh * frac * trace.at(self.arrival + i);
+                return (carbon, true);
+            }
+            done += rate;
+            carbon += a as f64 * per_server_kwh * trace.at(self.arrival + i);
+        }
+        (carbon, total <= 1e-9)
+    }
+
+    /// Server-hours consumed (monetary cost proxy), fractional final slot.
+    pub fn server_hours(&self, job: &JobSpec) -> f64 {
+        // Cost does not depend on the trace; use a dummy uniform trace.
+        let dummy = CarbonTrace::new("uniform", vec![1.0]);
+        self.accounting(job, &dummy).server_hours
+    }
+
+    /// Full accounting pass.
+    pub fn accounting(&self, job: &JobSpec, trace: &CarbonTrace) -> ScheduleAccounting {
+        let total = job.total_work();
+        let mut done = 0.0;
+        let mut carbon = 0.0;
+        let mut kwh = 0.0;
+        let mut server_hours = 0.0;
+        let mut completion = None;
+        let mut per_slot = Vec::with_capacity(self.alloc.len());
+
+        for (i, &a) in self.alloc.iter().enumerate() {
+            let slot = self.arrival + i;
+            if a == 0 || completion.is_some() {
+                per_slot.push(SlotAccount {
+                    slot,
+                    servers: 0,
+                    hours: 0.0,
+                    carbon_g: 0.0,
+                    work_done: done,
+                });
+                continue;
+            }
+            let curve = job.curve.at_progress((done / total).min(1.0));
+            let rate = curve.capacity(a.min(curve.max_servers()));
+            let hours = if rate > 0.0 && done + rate >= total - 1e-9 {
+                let frac = ((total - done) / rate).clamp(0.0, 1.0);
+                completion = Some(i as f64 + frac);
+                frac
+            } else {
+                1.0
+            };
+            done = (done + rate * hours).min(total);
+            let e = crate::energy::energy_kwh(a, job.power_watts, hours);
+            let g = e * trace.at(slot);
+            kwh += e;
+            carbon += g;
+            server_hours += a as f64 * hours;
+            per_slot.push(SlotAccount {
+                slot,
+                servers: a,
+                hours,
+                carbon_g: g,
+                work_done: done,
+            });
+        }
+
+        ScheduleAccounting {
+            carbon_g: carbon,
+            energy_kwh: kwh,
+            server_hours,
+            completion_hours: completion,
+            work_done: done,
+            total_work: total,
+            per_slot,
+        }
+    }
+}
+
+/// Per-slot accounting record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotAccount {
+    pub slot: usize,
+    pub servers: usize,
+    /// Active fraction of the slot actually used (1.0 except final slot).
+    pub hours: f64,
+    pub carbon_g: f64,
+    /// Cumulative work after this slot.
+    pub work_done: f64,
+}
+
+/// Results of a full accounting pass over a schedule.
+#[derive(Debug, Clone)]
+pub struct ScheduleAccounting {
+    pub carbon_g: f64,
+    pub energy_kwh: f64,
+    pub server_hours: f64,
+    /// Hours from arrival to completion; `None` if unfinished.
+    pub completion_hours: Option<f64>,
+    pub work_done: f64,
+    pub total_work: f64,
+    pub per_slot: Vec<SlotAccount>,
+}
+
+impl ScheduleAccounting {
+    pub fn finished(&self) -> bool {
+        self.completion_hours.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::workload::job::JobBuilder;
+
+    fn job_linear(len: f64, slack: f64, max: usize) -> JobSpec {
+        JobBuilder::new("j", MarginalCapacityCurve::linear(max))
+            .length(len)
+            .slack_factor(slack)
+            .power(1000.0) // 1 kWh per server-hour for easy math
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn fig5_flat_curve_example() {
+        // Paper Fig 5(b): l=2, T=3, m=1, M=2, flat MC, c=[10,100,20].
+        // Optimal: 2 servers in slot 1 only.
+        let job = job_linear(2.0, 1.5, 2);
+        let s = Schedule::new(0, vec![2, 0, 0]);
+        let trace = CarbonTrace::new("t", vec![10.0, 100.0, 20.0]);
+        assert_eq!(s.completion_hours(&job), Some(1.0));
+        // 2 servers * 1 kWh * 10 g = 20 g.
+        assert!((s.emissions_g(&job, &trace) - 20.0).abs() < 1e-9);
+        assert!((s.server_hours(&job) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig5_diminishing_curve_example() {
+        // Paper Fig 5(c): MC = [1.0, 0.7]; schedule 2 servers slot 1,
+        // 0 slot 2, 1 server slot 3; job of W=2 finishes 1/3 into slot 3
+        // (remaining work 0.3 at rate 1.0 -> 0.3h... paper says 1/3,
+        // approximating 0.3).
+        let curve = MarginalCapacityCurve::from_marginals(vec![1.0, 0.7]).unwrap();
+        let job = JobBuilder::new("j", curve)
+            .length(2.0)
+            .slack_factor(1.5)
+            .power(1000.0)
+            .build()
+            .unwrap();
+        let s = Schedule::new(0, vec![2, 0, 1]);
+        let trace = CarbonTrace::new("t", vec![10.0, 100.0, 20.0]);
+        let acc = s.accounting(&job, &trace);
+        assert!(acc.finished());
+        let done_in_slot3 = (2.0 - 1.7) / 1.0;
+        assert!((acc.completion_hours.unwrap() - (2.0 + done_in_slot3)).abs() < 1e-9);
+        // Emissions: slot1 2 servers @10 = 20, slot3 1 server * 0.3h @ 20 = 6.
+        assert!((acc.carbon_g - 26.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unfinished_schedule_reports_none() {
+        let job = job_linear(10.0, 1.0, 2);
+        let s = Schedule::new(0, vec![1; 5]);
+        assert_eq!(s.completion_hours(&job), None);
+        assert!(!s.accounting(&job, &CarbonTrace::new("t", vec![1.0])).finished());
+    }
+
+    #[test]
+    fn at_out_of_window_is_zero() {
+        let s = Schedule::new(5, vec![2, 3]);
+        assert_eq!(s.at(4), 0);
+        assert_eq!(s.at(5), 2);
+        assert_eq!(s.at(6), 3);
+        assert_eq!(s.at(7), 0);
+    }
+
+    #[test]
+    fn switch_counting() {
+        let s = Schedule::new(0, vec![0, 2, 2, 3, 0, 1]);
+        // 0->2, 2->3, 3->0, 0->1 = 4 switches.
+        assert_eq!(s.n_switches(), 4);
+    }
+
+    #[test]
+    fn respects_bounds_checks_range() {
+        let job = job_linear(4.0, 1.0, 4);
+        assert!(Schedule::new(0, vec![0, 1, 4]).respects_bounds(&job));
+        assert!(!Schedule::new(0, vec![5]).respects_bounds(&job));
+    }
+
+    #[test]
+    fn cumulative_work_monotone_capped() {
+        let job = job_linear(3.0, 2.0, 2);
+        let s = Schedule::new(0, vec![2, 2, 2]);
+        let w = s.cumulative_work(&job);
+        assert_eq!(w, vec![2.0, 3.0, 3.0]); // capped at total work 3
+    }
+
+    #[test]
+    fn no_emissions_after_completion() {
+        let job = job_linear(1.0, 3.0, 2);
+        let s = Schedule::new(0, vec![1, 1, 1]); // finishes in slot 0
+        let trace = CarbonTrace::new("t", vec![100.0, 100.0, 100.0]);
+        let acc = s.accounting(&job, &trace);
+        assert_eq!(acc.completion_hours, Some(1.0));
+        assert!((acc.carbon_g - 100.0).abs() < 1e-9); // only slot 0 charged
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs harness=false binaries in benches/ which call
+//! [`bench`]: warmup, then timed iterations, reporting mean/p50/p99 per
+//! iteration. Deterministic workloads + enough iterations keep run-to-run
+//! noise low; EXPERIMENTS.md §Perf records the numbers.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters  mean {:>12?}  p50 {:>12?}  p99 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p99
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
+/// until `budget` elapses (at least `min_iters`). Prints and returns the
+/// stats. The closure should return something observable to prevent DCE —
+/// its result is black-boxed here.
+pub fn bench<T>(name: &str, warmup: usize, min_iters: usize, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 1_000_000) {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+        if start.elapsed() >= budget && samples.len() >= min_iters {
+            break;
+        }
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p99: samples[(samples.len() * 99 / 100).min(samples.len() - 1)],
+    };
+    println!("{}", res.report());
+    res
+}
+
+/// Opaque value sink (stable black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 2, 10, Duration::from_millis(20), || 1 + 1);
+        assert!(r.iters >= 10);
+        assert!(r.p50 <= r.p99);
+        assert!(r.report().contains("noop"));
+    }
+}

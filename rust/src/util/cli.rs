@@ -1,0 +1,224 @@
+//! Small command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string. Each
+//! subcommand of the `carbonscaler` binary declares its options through
+//! [`ArgSpec`] and parses with [`Args::parse`].
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Declarative option specification, used for validation + usage text.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl ArgSpec {
+    pub const fn flag(name: &'static str, help: &'static str) -> Self {
+        ArgSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        }
+    }
+
+    pub const fn opt(name: &'static str, help: &'static str, default: &'static str) -> Self {
+        ArgSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        }
+    }
+
+    pub const fn req(name: &'static str, help: &'static str) -> Self {
+        ArgSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        }
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (not including the program/subcommand name) against a
+    /// spec. Unknown `--options` are an error; `--help` yields the usage
+    /// text as an Err so callers can print and exit.
+    pub fn parse(argv: &[String], specs: &[ArgSpec], usage_head: &str) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(usage(specs, usage_head));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n{}", usage(specs, usage_head)))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                    };
+                    args.values.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        // Fill defaults.
+        for spec in specs {
+            if spec.takes_value && !args.values.contains_key(spec.name) {
+                if let Some(d) = spec.default {
+                    args.values.insert(spec.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<String> {
+        self.get(name)
+            .map(String::from)
+            .ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)?
+            .parse()
+            .map_err(|_| anyhow!("--{name} must be a number"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)?
+            .parse()
+            .map_err(|_| anyhow!("--{name} must be a non-negative integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)?
+            .parse()
+            .map_err(|_| anyhow!("--{name} must be a non-negative integer"))
+    }
+}
+
+/// Render usage text from specs.
+pub fn usage(specs: &[ArgSpec], head: &str) -> String {
+    let mut s = format!("{head}\n\noptions:\n");
+    for spec in specs {
+        let arg = if spec.takes_value {
+            format!("--{} <v>", spec.name)
+        } else {
+            format!("--{}", spec.name)
+        };
+        let default = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  {arg:<24} {}{default}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::opt("region", "cloud region", "ontario"),
+        ArgSpec::req("job", "job name"),
+        ArgSpec::flag("verbose", "chatty output"),
+    ];
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&sv(&["--job", "nbody", "--region=iceland"]), SPECS, "t").unwrap();
+        assert_eq!(a.str("job").unwrap(), "nbody");
+        assert_eq!(a.str("region").unwrap(), "iceland");
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = Args::parse(&sv(&["--job", "x"]), SPECS, "t").unwrap();
+        assert_eq!(a.str("region").unwrap(), "ontario");
+    }
+
+    #[test]
+    fn missing_required_is_error_at_access() {
+        let a = Args::parse(&sv(&[]), SPECS, "t").unwrap();
+        assert!(a.str("job").is_err());
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(&sv(&["pos1", "--verbose", "pos2"]), SPECS, "t").unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope"]), SPECS, "t").is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = Args::parse(&sv(&["--help"]), SPECS, "mytool").unwrap_err();
+        assert!(err.contains("mytool"));
+        assert!(err.contains("--region"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let specs = &[ArgSpec::opt("n", "count", "5"), ArgSpec::opt("x", "ratio", "1.5")];
+        let a = Args::parse(&sv(&[]), specs, "t").unwrap();
+        assert_eq!(a.usize("n").unwrap(), 5);
+        assert_eq!(a.f64("x").unwrap(), 1.5);
+    }
+
+    #[test]
+    fn value_with_equals_in_value() {
+        let specs = &[ArgSpec::req("expr", "expression")];
+        let a = Args::parse(&sv(&["--expr=a=b"]), specs, "t").unwrap();
+        assert_eq!(a.str("expr").unwrap(), "a=b");
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundational utilities built from scratch for the offline environment:
+//! deterministic RNG, statistics, JSON, CLI parsing, tables, and time types.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timefmt;

@@ -1,0 +1,157 @@
+//! Aligned plain-text table rendering for experiment output.
+//!
+//! Every `carbonscaler expt figN` command prints its rows through this so
+//! the regenerated tables/figures are readable in a terminal and easy to
+//! diff against EXPERIMENTS.md.
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn headers(mut self, hs: &[&str]) -> Self {
+        self.headers = hs.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Append a row; panics if the width disagrees with the headers.
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        if !self.headers.is_empty() {
+            assert_eq!(
+                cells.len(),
+                self.headers.len(),
+                "row width != header width"
+            );
+        }
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self
+            .headers
+            .len()
+            .max(self.rows.iter().map(Vec::len).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+                .trim_end()
+                .to_string()
+        };
+        if !self.headers.is_empty() {
+            out.push_str(&fmt_row(&self.headers, &widths));
+            out.push('\n');
+            let total: usize = widths.iter().sum::<usize>() + 2 * (ncols.saturating_sub(1));
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helper: fixed-decimals float.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Format helper: percentage with sign.
+pub fn pct(x: f64) -> String {
+    format!("{:+.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").headers(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "22".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].contains("demo"));
+        assert!(lines[1].starts_with("name"));
+        // column alignment: "value" column starts at same offset in all rows
+        let off = lines[1].find("value").unwrap();
+        assert_eq!(&lines[3][off..off + 1], "1");
+        assert_eq!(&lines[4][off..off + 2], "22");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("x").headers(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.123), "+12.3%");
+        assert_eq!(pct(-0.05), "-5.0%");
+    }
+
+    #[test]
+    fn f_formats() {
+        assert_eq!(f(3.14159, 2), "3.14");
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = Table::new("empty").headers(&["a"]);
+        assert!(t.is_empty());
+        assert!(t.render().contains("empty"));
+    }
+}

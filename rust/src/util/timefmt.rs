@@ -1,0 +1,81 @@
+//! Simulation time types.
+//!
+//! All scheduling happens on a discretized hourly grid (the paper uses
+//! hourly carbon intensity and hour-granularity slots; §3.4 notes 15-minute
+//! slots work identically). `SlotIndex` counts slots since trace start;
+//! `Hours` is a duration. Keeping these as newtypes prevents the classic
+//! slot-vs-hour unit bugs in schedule arithmetic.
+
+use std::fmt;
+use std::ops::{Add, Sub};
+
+/// Duration in (fractional) hours.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Hours(pub f64);
+
+impl Hours {
+    pub fn as_secs(self) -> f64 {
+        self.0 * 3600.0
+    }
+
+    pub fn from_secs(s: f64) -> Self {
+        Hours(s / 3600.0)
+    }
+}
+
+impl Add for Hours {
+    type Output = Hours;
+    fn add(self, rhs: Hours) -> Hours {
+        Hours(self.0 + rhs.0)
+    }
+}
+
+impl Sub for Hours {
+    type Output = Hours;
+    fn sub(self, rhs: Hours) -> Hours {
+        Hours(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for Hours {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 48.0 {
+            write!(f, "{:.1}d", self.0 / 24.0)
+        } else {
+            write!(f, "{:.1}h", self.0)
+        }
+    }
+}
+
+/// Index of a schedule slot (one slot = one hour by default).
+pub type SlotIndex = usize;
+
+/// Human formatting of an hour-of-trace as "d{day} {hh}:00".
+pub fn fmt_slot(slot: SlotIndex) -> String {
+    format!("d{} {:02}:00", slot / 24, slot % 24)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hours_arithmetic() {
+        assert_eq!(Hours(1.5) + Hours(2.5), Hours(4.0));
+        assert_eq!(Hours(5.0) - Hours(2.0), Hours(3.0));
+        assert_eq!(Hours(2.0).as_secs(), 7200.0);
+        assert_eq!(Hours::from_secs(1800.0), Hours(0.5));
+    }
+
+    #[test]
+    fn display_switches_units() {
+        assert_eq!(format!("{}", Hours(3.0)), "3.0h");
+        assert_eq!(format!("{}", Hours(96.0)), "4.0d");
+    }
+
+    #[test]
+    fn slot_formatting() {
+        assert_eq!(fmt_slot(0), "d0 00:00");
+        assert_eq!(fmt_slot(25), "d1 01:00");
+    }
+}

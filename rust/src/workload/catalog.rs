@@ -1,0 +1,145 @@
+//! Table 1 workload catalog.
+//!
+//! The paper evaluates five elastic workloads; each entry records the
+//! implementation class, the epochs needed for a 24 h job at one server,
+//! the per-server power draw, and the Fig-2 scaling model. These drive
+//! the advisor-mode experiments; the `real` execution mode instead runs
+//! PJRT-backed analogs (transformer training / N-body) via
+//! [`crate::runtime`].
+
+use crate::scaling::models::{presets, ScalingModel};
+use crate::workload::job::{JobBuilder, JobSpec};
+use anyhow::Result;
+
+/// Implementation framework (informational, mirrors Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    Mpi,
+    Pytorch,
+}
+
+/// One Table-1 row.
+#[derive(Debug, Clone)]
+pub struct WorkloadInfo {
+    pub name: &'static str,
+    pub framework: Framework,
+    /// Epochs for a 24 h single-server job (Table 1).
+    pub epochs_24h: u64,
+    /// Batch size (None for MPI jobs).
+    pub batch_size: Option<u32>,
+    /// Per-server power in watts (Table 1: CPU 60 W, CPU+GPU 210 W).
+    pub power_watts: f64,
+    /// Fig-2 scaling model.
+    pub scaling: ScalingModel,
+}
+
+/// The five Table-1 workloads.
+pub const WORKLOADS: &[WorkloadInfo] = &[
+    WorkloadInfo {
+        name: "nbody-10k",
+        framework: Framework::Mpi,
+        epochs_24h: 138_000,
+        batch_size: None,
+        power_watts: 60.0,
+        scaling: presets::NBODY_10K,
+    },
+    WorkloadInfo {
+        name: "nbody-100k",
+        framework: Framework::Mpi,
+        epochs_24h: 1_500,
+        batch_size: None,
+        power_watts: 60.0,
+        scaling: presets::NBODY_100K,
+    },
+    WorkloadInfo {
+        name: "resnet18",
+        framework: Framework::Pytorch,
+        epochs_24h: 173,
+        batch_size: Some(256),
+        power_watts: 210.0,
+        scaling: presets::RESNET18,
+    },
+    WorkloadInfo {
+        name: "efficientnet-b1",
+        framework: Framework::Pytorch,
+        epochs_24h: 45,
+        batch_size: Some(96),
+        power_watts: 210.0,
+        scaling: presets::EFFICIENTNET_B1,
+    },
+    WorkloadInfo {
+        name: "vgg16",
+        framework: Framework::Pytorch,
+        epochs_24h: 31,
+        batch_size: Some(96),
+        power_watts: 210.0,
+        scaling: presets::VGG16,
+    },
+];
+
+/// Look up a workload by name.
+pub fn by_name(name: &str) -> Option<&'static WorkloadInfo> {
+    WORKLOADS.iter().find(|w| w.name == name)
+}
+
+/// Names of all Table-1 workloads.
+pub fn names() -> Vec<&'static str> {
+    WORKLOADS.iter().map(|w| w.name).collect()
+}
+
+impl WorkloadInfo {
+    /// Build a JobSpec for this workload with the standard evaluation
+    /// setup (m=1, M=`max_servers`, given length and slack factor).
+    pub fn job(
+        &self,
+        arrival: usize,
+        length_hours: f64,
+        slack_factor: f64,
+        max_servers: usize,
+    ) -> Result<JobSpec> {
+        JobBuilder::new(self.name, self.scaling.curve(max_servers))
+            .arrival(arrival)
+            .servers(1, max_servers)
+            .length(length_hours)
+            .slack_factor(slack_factor)
+            .power(self.power_watts)
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_workloads_as_table1() {
+        assert_eq!(WORKLOADS.len(), 5);
+    }
+
+    #[test]
+    fn table1_values() {
+        let r18 = by_name("resnet18").unwrap();
+        assert_eq!(r18.epochs_24h, 173);
+        assert_eq!(r18.batch_size, Some(256));
+        assert_eq!(r18.power_watts, 210.0);
+        let nb = by_name("nbody-100k").unwrap();
+        assert_eq!(nb.epochs_24h, 1_500);
+        assert_eq!(nb.power_watts, 60.0);
+        assert_eq!(nb.batch_size, None);
+    }
+
+    #[test]
+    fn job_construction_all_workloads() {
+        for w in WORKLOADS {
+            let j = w.job(0, 24.0, 1.5, 8).unwrap();
+            assert_eq!(j.max_servers, 8);
+            assert_eq!(j.total_work(), 24.0);
+            assert_eq!(j.power_watts, w.power_watts);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("nope").is_none());
+    }
+}

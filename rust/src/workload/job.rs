@@ -1,0 +1,234 @@
+//! Job specification (the paper's §3.2 problem parameters).
+//!
+//! A job arrives at time `t` with minimum servers `m`, maximum `M`,
+//! estimated length `l` (hours on `m` servers), and a desired completion
+//! time `T >= t + l`. `T - (t + l)` is the slack; `T = t + l` means
+//! on-time completion with zero temporal flexibility.
+
+use crate::scaling::curve::PhasedCurve;
+use anyhow::{bail, Result};
+
+/// Parameters of one elastic batch job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Human-readable name.
+    pub name: String,
+    /// Arrival hour (slot index into the carbon trace).
+    pub arrival: usize,
+    /// Minimum servers m >= 1.
+    pub min_servers: usize,
+    /// Maximum servers M >= m.
+    pub max_servers: usize,
+    /// Estimated length in hours when running on `min_servers`.
+    pub length_hours: f64,
+    /// Desired completion time as hours after arrival; must be >= length.
+    pub completion_hours: f64,
+    /// Scalability profile (possibly phase-dependent).
+    pub curve: PhasedCurve,
+    /// Per-server power draw in watts (Table 1).
+    pub power_watts: f64,
+}
+
+impl JobSpec {
+    /// Validate invariant relationships; call after construction.
+    pub fn validate(&self) -> Result<()> {
+        if self.min_servers < 1 {
+            bail!("m must be >= 1");
+        }
+        if self.max_servers < self.min_servers {
+            bail!("M must be >= m");
+        }
+        if self.length_hours <= 0.0 {
+            bail!("job length must be positive");
+        }
+        if self.completion_hours < self.length_hours {
+            bail!(
+                "completion time {} < job length {} — infeasible",
+                self.completion_hours,
+                self.length_hours
+            );
+        }
+        let c = self.curve.at_progress(0.0);
+        if c.max_servers() < self.max_servers {
+            bail!(
+                "capacity curve covers {} servers < M = {}",
+                c.max_servers(),
+                self.max_servers
+            );
+        }
+        if self.power_watts <= 0.0 {
+            bail!("power must be positive");
+        }
+        Ok(())
+    }
+
+    /// Total work in capacity-hours: W = l * capacity(m)  (§3.4).
+    pub fn total_work(&self) -> f64 {
+        self.length_hours * self.curve.at_progress(0.0).capacity(self.min_servers)
+    }
+
+    /// Number of slots in the scheduling window [arrival, arrival + T).
+    pub fn n_slots(&self) -> usize {
+        self.completion_hours.ceil() as usize
+    }
+
+    /// Slack hours: T - l.
+    pub fn slack(&self) -> f64 {
+        self.completion_hours - self.length_hours
+    }
+
+    /// Deadline as an absolute hour.
+    pub fn deadline(&self) -> usize {
+        self.arrival + self.n_slots()
+    }
+}
+
+/// How the builder resolves the completion time `T` at build().
+#[derive(Debug, Clone, Copy)]
+enum Completion {
+    /// T = l (on-time, zero slack) — the paper's default.
+    OnTime,
+    /// T = factor × l (the paper's "T = 1.5 × l" notation).
+    Factor(f64),
+    /// Absolute hours after arrival.
+    Hours(f64),
+}
+
+/// Convenience builder for the common single-phase case. Option order is
+/// irrelevant: completion is resolved against the final length at build().
+pub struct JobBuilder {
+    spec: JobSpec,
+    completion: Completion,
+}
+
+impl JobBuilder {
+    pub fn new(name: &str, curve: crate::scaling::MarginalCapacityCurve) -> Self {
+        let max = curve.max_servers();
+        JobBuilder {
+            spec: JobSpec {
+                name: name.to_string(),
+                arrival: 0,
+                min_servers: 1,
+                max_servers: max,
+                length_hours: 24.0,
+                completion_hours: 24.0,
+                curve: PhasedCurve::single(curve),
+                power_watts: 210.0,
+            },
+            completion: Completion::OnTime,
+        }
+    }
+
+    pub fn arrival(mut self, h: usize) -> Self {
+        self.spec.arrival = h;
+        self
+    }
+
+    pub fn servers(mut self, m: usize, max: usize) -> Self {
+        self.spec.min_servers = m;
+        self.spec.max_servers = max;
+        self
+    }
+
+    pub fn length(mut self, hours: f64) -> Self {
+        self.spec.length_hours = hours;
+        self
+    }
+
+    /// Set completion time as a multiple of job length (the paper's
+    /// "T = 1.5 × l" notation).
+    pub fn slack_factor(mut self, factor: f64) -> Self {
+        self.completion = Completion::Factor(factor);
+        self
+    }
+
+    pub fn completion(mut self, hours: f64) -> Self {
+        self.completion = Completion::Hours(hours);
+        self
+    }
+
+    pub fn power(mut self, watts: f64) -> Self {
+        self.spec.power_watts = watts;
+        self
+    }
+
+    pub fn phased(mut self, curve: PhasedCurve) -> Self {
+        self.spec.curve = curve;
+        self
+    }
+
+    pub fn build(mut self) -> Result<JobSpec> {
+        self.spec.completion_hours = match self.completion {
+            Completion::OnTime => self.spec.length_hours,
+            Completion::Factor(f) => self.spec.length_hours * f,
+            Completion::Hours(h) => h,
+        };
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::MarginalCapacityCurve;
+
+    fn linear_job() -> JobSpec {
+        JobBuilder::new("j", MarginalCapacityCurve::linear(4))
+            .length(10.0)
+            .slack_factor(1.5)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_defaults_valid() {
+        let j = JobBuilder::new("x", MarginalCapacityCurve::linear(8))
+            .build()
+            .unwrap();
+        assert_eq!(j.min_servers, 1);
+        assert_eq!(j.max_servers, 8);
+        assert_eq!(j.slack(), 0.0);
+    }
+
+    #[test]
+    fn total_work_scales_with_min_servers() {
+        let j = linear_job();
+        assert_eq!(j.total_work(), 10.0); // m=1, capacity 1
+        let j2 = JobBuilder::new("j", MarginalCapacityCurve::linear(8))
+            .servers(2, 8)
+            .length(10.0)
+            .build()
+            .unwrap();
+        assert_eq!(j2.total_work(), 20.0); // m=2, capacity 2
+    }
+
+    #[test]
+    fn slots_and_deadline() {
+        let j = linear_job();
+        assert_eq!(j.n_slots(), 15);
+        assert_eq!(j.deadline(), 15);
+        assert_eq!(j.slack(), 5.0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(JobBuilder::new("x", MarginalCapacityCurve::linear(4))
+            .servers(0, 4)
+            .build()
+            .is_err());
+        assert!(JobBuilder::new("x", MarginalCapacityCurve::linear(4))
+            .servers(5, 4)
+            .build()
+            .is_err());
+        assert!(JobBuilder::new("x", MarginalCapacityCurve::linear(4))
+            .servers(1, 8) // curve only covers 4
+            .build()
+            .is_err());
+        assert!(JobBuilder::new("x", MarginalCapacityCurve::linear(4))
+            .length(10.0)
+            .completion(5.0)
+            .build()
+            .is_err());
+    }
+}

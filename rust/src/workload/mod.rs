@@ -1,0 +1,7 @@
+//! Workload definitions: job specifications and the Table-1 catalog.
+
+pub mod catalog;
+pub mod job;
+
+pub use catalog::{WorkloadInfo, WORKLOADS};
+pub use job::{JobBuilder, JobSpec};

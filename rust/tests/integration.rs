@@ -1,0 +1,223 @@
+//! Cross-module integration tests: paper-claim shapes, policy ordering,
+//! and full-stack composition (advisor + scheduler + cluster + runtime).
+
+use carbonscaler::advisor::{self, SimConfig};
+use carbonscaler::carbon::{regions, synthetic, CarbonTrace};
+use carbonscaler::cluster::{Cluster, ClusterController};
+use carbonscaler::sched::{
+    CarbonAgnostic, CarbonScalerPolicy, OracleStaticScale, Policy, SuspendResumeDeadline,
+};
+use carbonscaler::util::stats;
+use carbonscaler::workload::catalog;
+
+fn ontario() -> CarbonTrace {
+    synthetic::generate(regions::by_name("ontario").unwrap(), 35 * 24, 2023)
+}
+
+/// The paper's headline ordering: CS <= oracle-static <= agnostic and
+/// CS <= suspend-resume, on average across start times.
+#[test]
+fn policy_ordering_matches_paper() {
+    let trace = ontario();
+    let cfg = SimConfig::default();
+    let starts = advisor::even_starts(trace.len(), 72, 12);
+    let w = catalog::by_name("resnet18").unwrap();
+    let job = w.job(0, 24.0, 1.5, 8).unwrap();
+
+    let mean = |p: &dyn Policy| {
+        advisor::summarize(
+            &advisor::sweep_start_times(p, &job, &trace, &starts, &cfg).unwrap(),
+        )
+        .mean_carbon_g
+    };
+    let ag = mean(&CarbonAgnostic);
+    let sr = mean(&SuspendResumeDeadline);
+    let oracle = mean(&OracleStaticScale);
+    let cs = mean(&CarbonScalerPolicy);
+
+    assert!(cs < ag, "cs {cs} vs agnostic {ag}");
+    assert!(cs < sr, "cs {cs} vs suspend-resume {sr}");
+    assert!(cs <= oracle * 1.01, "cs {cs} vs oracle-static {oracle}");
+    assert!(sr < ag, "sr {sr} vs agnostic {ag}");
+}
+
+/// Fig 9 shape: elasticity alone (T = l) still yields double-digit savings
+/// for scalable workloads, and little for VGG16.
+#[test]
+fn elasticity_only_savings_shape() {
+    let trace = ontario();
+    let cfg = SimConfig::default();
+    let starts = advisor::even_starts(trace.len(), 48, 10);
+
+    let savings = |name: &str| {
+        let w = catalog::by_name(name).unwrap();
+        let job = w.job(0, 24.0, 1.0, 8).unwrap();
+        let s = advisor::savings_vs_baseline(
+            &CarbonScalerPolicy,
+            &CarbonAgnostic,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )
+        .unwrap();
+        stats::mean(&s)
+    };
+    let scalable = savings("resnet18");
+    let bottlenecked = savings("vgg16");
+    assert!(scalable > 0.15, "resnet18 savings {scalable}");
+    assert!(
+        scalable > bottlenecked,
+        "scalable {scalable} <= bottlenecked {bottlenecked}"
+    );
+    assert!(bottlenecked >= -0.02, "vgg16 must not regress: {bottlenecked}");
+}
+
+/// Fig 13 shape: more slack, more savings (monotone up to noise).
+#[test]
+fn slack_increases_savings() {
+    let trace = ontario();
+    let cfg = SimConfig::default();
+    let starts = advisor::even_starts(trace.len(), 96, 8);
+    let w = catalog::by_name("resnet18").unwrap();
+    let mut last = -1.0;
+    for factor in [1.0, 2.0, 3.0] {
+        let job = w.job(0, 12.0, factor, 8).unwrap();
+        let s = advisor::savings_vs_baseline(
+            &CarbonScalerPolicy,
+            &CarbonAgnostic,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )
+        .unwrap();
+        let m = stats::mean(&s);
+        assert!(m > last - 0.03, "savings dropped at T={factor}l: {m} < {last}");
+        last = m;
+    }
+}
+
+/// Fig 18 shape: savings correlate positively with trace variability.
+#[test]
+fn variability_drives_savings() {
+    let cfg = SimConfig::default();
+    let w = catalog::by_name("resnet18").unwrap();
+    let job = w.job(0, 24.0, 1.0, 8).unwrap();
+    let mut covs = Vec::new();
+    let mut savs = Vec::new();
+    for r in ["india", "virginia", "netherlands", "ontario", "california"] {
+        let trace = synthetic::generate(regions::by_name(r).unwrap(), 28 * 24, 5);
+        let starts = advisor::even_starts(trace.len(), 48, 8);
+        let s = advisor::savings_vs_baseline(
+            &CarbonScalerPolicy,
+            &CarbonAgnostic,
+            &job,
+            &trace,
+            &starts,
+            &cfg,
+        )
+        .unwrap();
+        covs.push(trace.daily_coeff_of_variation());
+        savs.push(stats::mean(&s));
+    }
+    let corr = stats::pearson(&covs, &savs);
+    assert!(corr > 0.6, "pearson {corr} (paper reports 0.82)");
+}
+
+/// Forecast-error robustness (Fig 20 shape): 30% error costs little.
+#[test]
+fn forecast_error_robustness() {
+    let trace = ontario();
+    let w = catalog::by_name("nbody-100k").unwrap();
+    let job = w.job(0, 24.0, 1.5, 8).unwrap();
+    let base = advisor::simulate(&CarbonScalerPolicy, &job, &trace, &SimConfig::default())
+        .unwrap()
+        .carbon_g;
+    let mut overheads = Vec::new();
+    for seed in 0..8 {
+        let r = advisor::simulate(
+            &CarbonScalerPolicy,
+            &job,
+            &trace,
+            &SimConfig {
+                forecast_error: 0.3,
+                seed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(r.finished());
+        overheads.push(r.carbon_g / base - 1.0);
+    }
+    assert!(
+        stats::mean(&overheads) < 0.15,
+        "mean overhead {}",
+        stats::mean(&overheads)
+    );
+}
+
+/// Full-stack: cluster contention + carbon scaling still meets deadlines.
+#[test]
+fn contended_cluster_meets_deadlines() {
+    let mut ctl = ClusterController::new(Cluster::homogeneous(10), ontario());
+    for (i, w) in catalog::WORKLOADS.iter().enumerate() {
+        let mut job = w.job(0, 12.0, 1.8, 6).unwrap();
+        job.arrival = i;
+        job.name = format!("{}-{i}", w.name);
+        ctl.submit(job).unwrap();
+    }
+    ctl.run(72).unwrap();
+    assert!(ctl.all_done());
+    for j in ctl.jobs() {
+        let done = j.completion.unwrap();
+        if done > j.spec.completion_hours + 1e-9 {
+            // Deadline misses are only acceptable as a contention outcome:
+            // the job must actually have been denied capacity, and the
+            // overrun must stay bounded (paper §6: denials degrade, not
+            // explode, outcomes).
+            assert!(j.denials > 0, "{} late without any denial", j.spec.name);
+            assert!(
+                done <= j.spec.completion_hours * 1.5,
+                "{} unboundedly late: {done} vs T={}",
+                j.spec.name,
+                j.spec.completion_hours
+            );
+        }
+    }
+}
+
+/// Property sweep: across random jobs/regions the production policy never
+/// emits more carbon than carbon-agnostic (linear and sublinear curves).
+#[test]
+fn cs_never_worse_than_agnostic_property() {
+    let mut rng = carbonscaler::util::rng::Rng::new(99);
+    let cfg = SimConfig::default();
+    for case in 0..15 {
+        let region = *rng.choose(&["ontario", "netherlands", "california", "virginia"]);
+        let trace = synthetic::generate(regions::by_name(region).unwrap(), 21 * 24, case);
+        let mut mc = vec![1.0];
+        for _ in 0..(rng.below(7) as usize) {
+            let last = *mc.last().unwrap();
+            mc.push(last * rng.range(0.4, 1.0));
+        }
+        let curve =
+            carbonscaler::scaling::MarginalCapacityCurve::from_marginals(mc).unwrap();
+        let job = carbonscaler::workload::JobBuilder::new("prop", curve)
+            .length(rng.range(6.0, 30.0))
+            .slack_factor(rng.range(1.0, 2.0))
+            .power(210.0)
+            .arrival(rng.below(200) as usize)
+            .build()
+            .unwrap();
+        let cs = advisor::simulate(&CarbonScalerPolicy, &job, &trace, &cfg).unwrap();
+        let ag = advisor::simulate(&CarbonAgnostic, &job, &trace, &cfg).unwrap();
+        assert!(cs.finished(), "case {case} unfinished");
+        assert!(
+            cs.carbon_g <= ag.carbon_g * 1.02 + 1e-6,
+            "case {case} ({region}): cs {} vs agnostic {}",
+            cs.carbon_g,
+            ag.carbon_g
+        );
+    }
+}
