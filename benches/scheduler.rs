@@ -1,17 +1,23 @@
 //! Scheduler benchmarks: Algorithm 1 (and the polish pass) across the
-//! paper-relevant (n slots, M servers) space. Target (DESIGN.md §7):
-//! paper scale n=96, M=64 well under 1 ms for the raw greedy.
+//! paper-relevant (n slots, M servers) space, plus the fleet engine at
+//! multi-tenant scale. Targets (DESIGN.md §7): paper scale n=96, M=64
+//! well under 1 ms for the raw greedy; 100 jobs x 96 slots under 50 ms
+//! for a full fleet plan. Results are also written to
+//! `BENCH_scheduler.json` so future changes have a perf trajectory.
 
 use carbonscaler::carbon::{regions, synthetic};
 use carbonscaler::scaling::models::presets;
+use carbonscaler::sched::fleet::{self, PlanContext};
 use carbonscaler::sched::greedy;
-use carbonscaler::util::bench::bench;
-use carbonscaler::workload::JobBuilder;
+use carbonscaler::util::bench::{bench, BenchResult};
+use carbonscaler::util::json::Json;
+use carbonscaler::workload::{JobBuilder, JobSpec};
 use std::time::Duration;
 
 fn main() {
     let trace = synthetic::generate(regions::by_name("ontario").unwrap(), 120 * 24, 1);
     let budget = Duration::from_millis(400);
+    let mut results: Vec<BenchResult> = Vec::new();
 
     println!("== Algorithm 1 (raw greedy) ==");
     for (n_hours, m_servers) in [(24usize, 8usize), (96, 8), (96, 64), (336, 64), (96, 256)] {
@@ -23,13 +29,13 @@ fn main() {
             .build()
             .unwrap();
         let carbon = trace.window(0, job.n_slots());
-        bench(
+        results.push(bench(
             &format!("greedy n={n_hours} M={m_servers}"),
             3,
             20,
             budget,
             || greedy::plan(&job, &carbon).unwrap(),
-        );
+        ));
     }
 
     println!("\n== Algorithm 1 + polish (production policy) ==");
@@ -42,13 +48,13 @@ fn main() {
             .build()
             .unwrap();
         let carbon = trace.window(0, job.n_slots());
-        bench(
+        results.push(bench(
             &format!("polished n={n_hours} M={m_servers}"),
             2,
             10,
             budget,
             || greedy::plan_polished(&job, &carbon).unwrap(),
-        );
+        ));
     }
 
     println!("\n== recomputation (plan_remaining, mid-execution) ==");
@@ -59,7 +65,61 @@ fn main() {
         .build()
         .unwrap();
     let carbon = trace.window(48, 48);
-    bench("plan_remaining n=48 M=8", 3, 20, budget, || {
+    results.push(bench("plan_remaining n=48 M=8", 3, 20, budget, || {
         greedy::plan_remaining(&job, &carbon, 48, 32.0, 0.5).unwrap()
-    });
+    }));
+
+    println!("\n== fleet engine (multi-job, capacity-capped, 96-slot windows) ==");
+    for (n_jobs, cap) in [(50usize, 96usize), (100, 128), (200, 256)] {
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| {
+                JobBuilder::new(&format!("j{i}"), presets::RESNET18.curve(8))
+                    .servers(1, 8)
+                    .arrival(i % 24)
+                    .length(64.0)
+                    .slack_factor(1.5)
+                    .build()
+                    .unwrap()
+            })
+            .collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+        let ctx = PlanContext::uniform(0, cap, trace.window(0, end)).unwrap();
+        results.push(bench(
+            &format!("fleet greedy jobs={n_jobs} n=96 cap={cap}"),
+            2,
+            10,
+            budget,
+            || fleet::plan_fleet_greedy(&jobs, &ctx).expect("bench fleet feasible"),
+        ));
+        if n_jobs == 100 {
+            // The acceptance bar: a full production plan (greedy +
+            // sequential portfolio) for 100 jobs x 96 slots.
+            results.push(bench(
+                &format!("fleet plan jobs={n_jobs} n=96 cap={cap}"),
+                2,
+                10,
+                budget,
+                || fleet::plan_fleet(&jobs, &ctx).expect("bench fleet feasible"),
+            ));
+        }
+    }
+
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("name", r.name.as_str())
+                .set("iters", r.iters)
+                .set("mean_ns", r.mean.as_nanos() as f64)
+                .set("p50_ns", r.p50.as_nanos() as f64)
+                .set("p99_ns", r.p99.as_nanos() as f64)
+        })
+        .collect();
+    let doc = Json::obj()
+        .set("bench", "scheduler")
+        .set("results", Json::Arr(rows));
+    match std::fs::write("BENCH_scheduler.json", doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_scheduler.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_scheduler.json: {e}"),
+    }
 }

@@ -1,10 +1,13 @@
 //! What-if analysis sweeps built on the simulator — the Carbon Advisor's
 //! user-facing layer (paper §4.3): savings distributions across start
-//! times, regions, slack factors, job lengths, and cluster sizes.
+//! times, regions, slack factors, job lengths, and — via the fleet
+//! engine — cluster sizes and job mixes under shared capacity.
 
-use crate::advisor::sim::{simulate, SimConfig, SimResult};
+use crate::advisor::sim::{simulate, simulate_fleet, FleetSimResult, SimConfig, SimResult};
 use crate::carbon::trace::CarbonTrace;
+use crate::sched::fleet::IndependentFleet;
 use crate::sched::policy::Policy;
+use crate::sched::CarbonScalerPolicy;
 use crate::workload::job::JobSpec;
 use anyhow::Result;
 
@@ -86,12 +89,77 @@ pub fn summarize(results: &[SimResult]) -> SweepSummary {
     }
 }
 
+/// Fleet what-if: the same job mix and cluster size under (a) joint fleet
+/// planning and (b) naive per-job-independent planning truncated to
+/// capacity — the §6 capacity-constraints question made quantitative.
+#[derive(Debug, Clone)]
+pub struct FleetComparison {
+    pub fleet: FleetSimResult,
+    pub independent: FleetSimResult,
+}
+
+impl FleetComparison {
+    /// Fractional carbon saving of fleet planning over the independent
+    /// baseline (only meaningful when both complete comparable work;
+    /// check `independent.all_finished()` first).
+    pub fn savings(&self) -> f64 {
+        savings_pct(self.independent.carbon_g, self.fleet.carbon_g)
+    }
+}
+
+/// Run one job mix on a uniform cluster both ways.
+pub fn fleet_vs_independent(
+    jobs: &[JobSpec],
+    truth: &CarbonTrace,
+    cluster_size: usize,
+    cfg: &SimConfig,
+) -> Result<FleetComparison> {
+    Ok(FleetComparison {
+        fleet: simulate_fleet(&CarbonScalerPolicy, jobs, truth, cluster_size, cfg)?,
+        independent: simulate_fleet(
+            &IndependentFleet(CarbonScalerPolicy),
+            jobs,
+            truth,
+            cluster_size,
+            cfg,
+        )?,
+    })
+}
+
+/// Sweep cluster sizes for a fixed job mix — the advisor's capacity-
+/// planning question: how small can the cluster get before carbon or
+/// completion degrade? Structural problems with the mix itself
+/// (malformed jobs, degenerate curves) are reported as `Err` up front;
+/// `None` entries then genuinely mean "infeasible at this size".
+pub fn sweep_cluster_sizes(
+    jobs: &[JobSpec],
+    truth: &CarbonTrace,
+    sizes: &[usize],
+    cfg: &SimConfig,
+) -> Result<Vec<(usize, Option<FleetComparison>)>> {
+    if jobs.is_empty() {
+        anyhow::bail!("empty fleet");
+    }
+    let start = jobs.iter().map(|j| j.arrival).min().unwrap();
+    let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+    let probe = crate::sched::fleet::PlanContext::uniform(
+        start,
+        1,
+        truth.window(start, end - start),
+    )?;
+    probe.check_jobs(jobs)?;
+    Ok(sizes
+        .iter()
+        .map(|&s| (s, fleet_vs_independent(jobs, truth, s, cfg).ok()))
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::carbon::{regions, synthetic};
     use crate::scaling::MarginalCapacityCurve;
-    use crate::sched::{CarbonAgnostic, CarbonScalerPolicy};
+    use crate::sched::CarbonAgnostic;
     use crate::workload::job::JobBuilder;
 
     fn template() -> JobSpec {
@@ -133,6 +201,60 @@ mod tests {
         .unwrap();
         let mean = crate::util::stats::mean(&sav);
         assert!(mean > 0.05, "mean savings {mean}");
+    }
+
+    #[test]
+    fn fleet_completes_where_independent_planning_cannot() {
+        let truth = synthetic::generate(regions::by_name("ontario").unwrap(), 21 * 24, 7);
+        // Four identical scalable jobs on a tight cluster: independently
+        // planned, they pile into the same low-carbon slots and the later
+        // tenants get truncated; planned jointly, everything completes.
+        let jobs: Vec<JobSpec> = (0..4)
+            .map(|i| {
+                let mut j = JobBuilder::new("c", MarginalCapacityCurve::linear(6))
+                    .length(12.0)
+                    .slack_factor(1.8)
+                    .power(1000.0)
+                    .build()
+                    .unwrap();
+                j.name = format!("c{i}");
+                j.arrival = i;
+                j
+            })
+            .collect();
+        let cmp = fleet_vs_independent(&jobs, &truth, 6, &SimConfig::default()).unwrap();
+        assert!(cmp.fleet.all_finished(), "fleet must complete all jobs");
+        // Joint planning never completes fewer jobs than naive truncation
+        // (the fleet engine refuses to emit incomplete plans at all).
+        assert!(
+            cmp.fleet.n_finished >= cmp.independent.n_finished,
+            "fleet finished {} < independent {}",
+            cmp.fleet.n_finished,
+            cmp.independent.n_finished
+        );
+    }
+
+    #[test]
+    fn cluster_size_sweep_reports_each_size() {
+        let truth = synthetic::generate(regions::by_name("ontario").unwrap(), 14 * 24, 9);
+        let jobs: Vec<JobSpec> = (0..3)
+            .map(|i| {
+                let mut j = JobBuilder::new("s", MarginalCapacityCurve::linear(4))
+                    .length(6.0)
+                    .slack_factor(2.0)
+                    .power(1000.0)
+                    .build()
+                    .unwrap();
+                j.name = format!("s{i}");
+                j
+            })
+            .collect();
+        let rows =
+            sweep_cluster_sizes(&jobs, &truth, &[2, 4, 8], &SimConfig::default()).unwrap();
+        assert_eq!(rows.len(), 3);
+        // The roomiest cluster must be feasible and complete everything.
+        let (_, biggest) = rows.last().unwrap();
+        assert!(biggest.as_ref().unwrap().fleet.all_finished());
     }
 
     #[test]

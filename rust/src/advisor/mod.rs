@@ -4,5 +4,10 @@
 pub mod analysis;
 pub mod sim;
 
-pub use analysis::{even_starts, savings_pct, savings_vs_baseline, summarize, sweep_start_times};
-pub use sim::{simulate, SimConfig, SimResult};
+pub use analysis::{
+    even_starts, fleet_vs_independent, savings_pct, savings_vs_baseline, summarize,
+    sweep_cluster_sizes, sweep_start_times, FleetComparison,
+};
+pub use sim::{
+    simulate, simulate_fleet, FleetJobResult, FleetSimResult, SimConfig, SimResult,
+};

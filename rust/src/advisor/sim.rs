@@ -20,11 +20,12 @@
 use crate::carbon::forecast::ForecastProvider;
 use crate::carbon::trace::CarbonTrace;
 use crate::scaling::PhasedCurve;
+use crate::sched::fleet::{FleetSchedule, PlanContext};
 use crate::sched::policy::Policy;
 use crate::sched::schedule::Schedule;
 use crate::util::rng::Rng;
 use crate::workload::job::JobSpec;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Simulator configuration; `Default` reproduces the paper's baseline
 /// assumptions (perfect forecast, exact profile, no denials, 30 s switch).
@@ -251,6 +252,107 @@ pub fn simulate(
     })
 }
 
+/// Per-job outcome of a fleet simulation.
+#[derive(Debug, Clone)]
+pub struct FleetJobResult {
+    pub name: String,
+    pub carbon_g: f64,
+    pub energy_kwh: f64,
+    pub server_hours: f64,
+    /// Hours from arrival to completion; `None` if the committed schedule
+    /// does not finish the job (possible under naive independent
+    /// planning; the fleet engine errors instead of emitting such plans).
+    pub completion_hours: Option<f64>,
+}
+
+/// Outcome of simulating a jointly planned fleet.
+#[derive(Debug, Clone)]
+pub struct FleetSimResult {
+    pub jobs: Vec<FleetJobResult>,
+    /// Fleet totals (ground-truth charged).
+    pub carbon_g: f64,
+    pub energy_kwh: f64,
+    pub server_hours: f64,
+    /// Jobs whose schedule completes their work.
+    pub n_finished: usize,
+    /// The committed fleet plan (for timelines and capacity audits).
+    pub planned: FleetSchedule,
+}
+
+impl FleetSimResult {
+    pub fn all_finished(&self) -> bool {
+        self.n_finished == self.jobs.len()
+    }
+}
+
+/// Simulate a fleet of jobs contending for a uniform cluster of
+/// `cluster_size` servers: the policy plans all jobs *jointly* on the
+/// (possibly erroneous, per `cfg.forecast_error`) forecast via
+/// [`Policy::plan_fleet`], then each committed schedule executes
+/// chronologically, charged at ground-truth intensity.
+///
+/// What-if over job mixes (paper §4.3 extended to §6's capacity
+/// question) builds on this: see [`crate::advisor::analysis`].
+///
+/// Fidelity note: of the [`SimConfig`] knobs, only `forecast_error` and
+/// `seed` are honored here. `profile_error`, `denial_prob`,
+/// `switch_overhead_hours`, and mid-flight recomputation are not yet
+/// modeled at fleet granularity (DESIGN.md §8 future work) — do not
+/// compare a perturbed [`simulate`] run against a fleet run on those
+/// axes.
+pub fn simulate_fleet(
+    policy: &dyn Policy,
+    jobs: &[JobSpec],
+    truth: &CarbonTrace,
+    cluster_size: usize,
+    cfg: &SimConfig,
+) -> Result<FleetSimResult> {
+    if jobs.is_empty() {
+        bail!("empty fleet");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let forecast = if cfg.forecast_error > 0.0 {
+        ForecastProvider::with_error(truth.clone(), cfg.forecast_error, rng.fork(1).next_u64())
+    } else {
+        ForecastProvider::perfect(truth.clone())
+    };
+    let start = jobs.iter().map(|j| j.arrival).min().unwrap();
+    let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+    let carbon: Vec<f64> = (0..end - start)
+        .map(|i| forecast.forecast_at(start, start + i))
+        .collect();
+    let ctx = PlanContext::uniform(start, cluster_size, carbon)?;
+    let planned = policy.plan_fleet(jobs, &ctx)?;
+
+    let mut out = Vec::with_capacity(jobs.len());
+    let (mut carbon_g, mut energy_kwh, mut server_hours) = (0.0, 0.0, 0.0);
+    let mut n_finished = 0usize;
+    for (job, sched) in jobs.iter().zip(&planned.schedules) {
+        let acc = sched.accounting(job, truth);
+        carbon_g += acc.carbon_g;
+        energy_kwh += acc.energy_kwh;
+        server_hours += acc.server_hours;
+        if acc.finished() {
+            n_finished += 1;
+        }
+        out.push(FleetJobResult {
+            name: job.name.clone(),
+            carbon_g: acc.carbon_g,
+            energy_kwh: acc.energy_kwh,
+            server_hours: acc.server_hours,
+            completion_hours: acc.completion_hours,
+        });
+    }
+    Ok(FleetSimResult {
+        jobs: out,
+        carbon_g,
+        energy_kwh,
+        server_hours,
+        n_finished,
+        planned,
+    })
+}
+
 /// Work the *plan* expects to have completed by the end of relative slot
 /// `rel` (using the planner's own curve estimate).
 fn expected_progress(plan: &Schedule, planning_job: &JobSpec, arrival: usize, rel: usize) -> f64 {
@@ -419,6 +521,58 @@ mod tests {
         )
         .unwrap();
         assert!(r.finished(), "profile error must not prevent completion");
+    }
+
+    #[test]
+    fn fleet_sim_completes_on_roomy_cluster() {
+        let t = truth();
+        let jobs: Vec<crate::workload::job::JobSpec> = (0..3)
+            .map(|i| {
+                let mut j = job(12.0, 1.5, 4);
+                j.name = format!("j{i}");
+                j.arrival = i;
+                j
+            })
+            .collect();
+        let r = simulate_fleet(&CarbonScalerPolicy, &jobs, &t, 12, &SimConfig::default())
+            .unwrap();
+        assert!(r.all_finished());
+        assert!(r.carbon_g > 0.0);
+        // The committed plan respects the cluster in every slot.
+        let start = jobs.iter().map(|j| j.arrival).min().unwrap();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+        let ctx =
+            PlanContext::uniform(start, 12, t.window(start, end - start)).unwrap();
+        assert!(r.planned.respects_capacity(&ctx));
+        for j in &r.jobs {
+            assert!(j.completion_hours.is_some(), "{} unfinished", j.name);
+        }
+    }
+
+    #[test]
+    fn fleet_sim_survives_forecast_error() {
+        let t = truth();
+        let jobs: Vec<crate::workload::job::JobSpec> = (0..2)
+            .map(|i| {
+                let mut j = job(8.0, 2.0, 4);
+                j.name = format!("e{i}");
+                j
+            })
+            .collect();
+        let r = simulate_fleet(
+            &CarbonScalerPolicy,
+            &jobs,
+            &t,
+            8,
+            &SimConfig {
+                forecast_error: 0.3,
+                seed: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Plans made on a noisy forecast still complete (charged at truth).
+        assert!(r.all_finished());
     }
 
     #[test]

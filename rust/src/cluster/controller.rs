@@ -4,16 +4,23 @@
 //! This extends the paper's per-job evaluation to the §6 "Capacity
 //! Constraints" discussion: when many tenants carbon-scale independently
 //! they all chase the same low-carbon slots, and denials emerge from real
-//! contention. Each job runs its own CarbonScaler plan; on a denial the
-//! job keeps what it was granted and recomputes its remaining schedule
-//! (the paper's retry-and-recompute behaviour).
+//! contention. Two submission modes coexist:
+//!
+//! * [`ClusterController::submit`] — each job runs its own CarbonScaler
+//!   plan; on a denial the job keeps what it was granted and recomputes
+//!   its remaining schedule (the paper's retry-and-recompute behaviour);
+//! * [`ClusterController::submit_fleet`] — the batch is planned jointly
+//!   by the fleet engine (DESIGN.md §8) against the cluster's residual
+//!   per-slot capacity, so committed plans never collide and execution is
+//!   denial-free by construction.
 
 use crate::carbon::trace::CarbonTrace;
 use crate::cluster::state::Cluster;
+use crate::sched::fleet::{self, PlanContext};
 use crate::sched::greedy;
 use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Per-job execution record.
 #[derive(Debug, Clone)]
@@ -75,6 +82,74 @@ impl ClusterController {
         Ok(())
     }
 
+    /// Submit a batch of jobs planned *jointly* by the fleet engine
+    /// against the residual per-slot capacity that already-submitted,
+    /// unfinished jobs leave behind (tracked via [`CapacityLedger`]).
+    /// The committed plans' totals — batch plus pre-existing demand —
+    /// respect cluster capacity in every slot, so when *all* tenants are
+    /// fleet-planned, execution (with the controller's scale-down-first
+    /// reconciliation) is denial-free. Mixing with [`Self::submit`] is
+    /// supported but weaker: an independently planned job that later
+    /// recomputes can wander into reserved slots, and whoever sits later
+    /// in submission order takes the denial. Errors when the engine finds
+    /// no completing assignment — every genuinely infeasible batch, plus
+    /// (rarely) a feasible but adversarially deadline-tight mix the
+    /// greedy heuristic cannot order (see `sched::fleet::plan_fleet`).
+    pub fn submit_fleet(&mut self, specs: Vec<JobSpec>) -> Result<()> {
+        if specs.is_empty() {
+            return Ok(());
+        }
+        let start = self.hour;
+        let mut end = start + 1;
+        {
+            // Cluster allocations are keyed by job name: a duplicate would
+            // silently alias two tenants onto one allocation entry and
+            // corrupt capacity accounting.
+            let mut names: std::collections::BTreeSet<&str> =
+                self.jobs.iter().map(|j| j.spec.name.as_str()).collect();
+            for spec in &specs {
+                if spec.arrival < start {
+                    bail!("job {:?} arrives at h{} in the past", spec.name, spec.arrival);
+                }
+                if !names.insert(&spec.name) {
+                    bail!("duplicate job name {:?}", spec.name);
+                }
+                end = end.max(spec.deadline());
+            }
+        }
+        // The ledger must also cover existing plans' tails so their demand
+        // is visible in the residual.
+        for job in self.jobs.iter().filter(|j| !j.finished()) {
+            end = end.max(job.plan.arrival + job.plan.n_slots());
+        }
+        let horizon = end - start;
+        let mut ledger = self.cluster.ledger(start, horizon);
+        for job in self.jobs.iter().filter(|j| !j.finished()) {
+            // reserve_upto, not commit: independently submitted plans were
+            // never admission-checked and may jointly exceed capacity.
+            for h in start..end {
+                ledger.reserve_upto(h, job.plan.at(h));
+            }
+        }
+        let carbon = self.trace.window(start, horizon);
+        let ctx = PlanContext::new(start, ledger.residual(), carbon)?;
+        let planned = fleet::plan_fleet(&specs, &ctx)?;
+        for (spec, plan) in specs.into_iter().zip(planned.schedules) {
+            self.jobs.push(JobRun {
+                spec,
+                plan,
+                done_work: 0.0,
+                carbon_g: 0.0,
+                server_hours: 0.0,
+                denials: 0,
+                recomputes: 0,
+                completion: None,
+                realized: Vec::new(),
+            });
+        }
+        Ok(())
+    }
+
     pub fn jobs(&self) -> &[JobRun] {
         &self.jobs
     }
@@ -95,6 +170,21 @@ impl ClusterController {
     pub fn step_hour(&mut self) -> Result<()> {
         let h = self.hour;
         let intensity = self.trace.at(h);
+
+        // Apply planned scale-downs first so freed capacity is visible to
+        // same-hour scale-ups regardless of submission order. Fleet plans
+        // (whose per-slot totals fit capacity) rely on this to execute
+        // denial-free; independent plans simply see fewer spurious
+        // denials.
+        for job in &self.jobs {
+            if job.finished() || job.spec.arrival > h {
+                continue;
+            }
+            let desired = job.plan.at(h).min(job.spec.max_servers);
+            if desired < self.cluster.allocation(&job.spec.name) {
+                self.cluster.request_scale(&job.spec.name, desired);
+            }
+        }
 
         for job in self.jobs.iter_mut() {
             if job.finished() || job.spec.arrival > h {
@@ -154,19 +244,10 @@ impl ClusterController {
             }
         }
 
-        // Release slots from jobs that planned zero next hour so other
-        // tenants can take them (the controller re-requests each hour).
+        // Scale-downs for the next hour (including to zero) are applied by
+        // the pre-pass at the top of the next step_hour call, before any
+        // scale-ups — no proactive release is needed here.
         self.hour += 1;
-        let next = self.hour;
-        let mut to_zero = Vec::new();
-        for job in &self.jobs {
-            if !job.finished() && job.plan.at(next) == 0 {
-                to_zero.push(job.spec.name.clone());
-            }
-        }
-        for name in to_zero {
-            self.cluster.request_scale(&name, 0);
-        }
         self.cluster.check()?;
         Ok(())
     }
@@ -248,6 +329,78 @@ mod tests {
             c.step_hour().unwrap();
             assert!(c.cluster.used() <= c.cluster.capacity());
         }
+    }
+
+    #[test]
+    fn fleet_submission_denial_free_under_contention() {
+        // The same contended setup as contention_causes_denials_but_all_finish,
+        // but planned jointly: per-slot totals fit capacity, so execution
+        // sees zero denials and every deadline holds.
+        let mut c = ClusterController::new(Cluster::homogeneous(6), trace());
+        let specs: Vec<JobSpec> = (0..4)
+            .map(|i| job(&format!("j{i}"), 12.0, 1.5, 4))
+            .collect();
+        c.submit_fleet(specs).unwrap();
+        c.run(100).unwrap();
+        assert!(c.all_done());
+        for j in c.jobs() {
+            assert_eq!(j.denials, 0, "{} was denied", j.spec.name);
+            assert!(
+                j.completion.unwrap() <= j.spec.completion_hours + 1e-9,
+                "{} finished at {:?}",
+                j.spec.name,
+                j.completion
+            );
+        }
+        // Capacity was never overcommitted at any point in the run.
+        let horizon = c.jobs().iter().map(|j| j.realized.len()).max().unwrap();
+        for h in 0..horizon {
+            let used: usize = c
+                .jobs()
+                .iter()
+                .map(|j| j.realized.get(h).copied().unwrap_or(0))
+                .sum();
+            assert!(used <= 6, "hour {h}: {used} servers on a 6-node cluster");
+        }
+    }
+
+    #[test]
+    fn fleet_submission_respects_existing_plans() {
+        let mut c = ClusterController::new(Cluster::homogeneous(4), trace());
+        c.submit(job("solo", 8.0, 1.5, 4)).unwrap();
+        // A second batch planned around the first job's committed demand.
+        c.submit_fleet(vec![job("f0", 6.0, 2.0, 4), job("f1", 6.0, 2.0, 4)])
+            .unwrap();
+        c.run(60).unwrap();
+        assert!(c.all_done());
+        // The fleet-planned jobs never collide with each other or the solo
+        // job's plan badly enough to miss deadlines.
+        for j in &c.jobs()[1..] {
+            assert!(j.completion.unwrap() <= j.spec.completion_hours + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fleet_submission_rejects_duplicate_names() {
+        let mut c = ClusterController::new(Cluster::homogeneous(8), trace());
+        c.submit(job("dup", 4.0, 1.5, 2)).unwrap();
+        // Duplicate against an existing tenant...
+        assert!(c.submit_fleet(vec![job("dup", 4.0, 1.5, 2)]).is_err());
+        // ...and within the batch itself.
+        assert!(c
+            .submit_fleet(vec![job("x", 4.0, 1.5, 2), job("x", 4.0, 1.5, 2)])
+            .is_err());
+        assert_eq!(c.jobs().len(), 1);
+    }
+
+    #[test]
+    fn fleet_submission_rejects_past_arrivals() {
+        let mut c = ClusterController::new(Cluster::homogeneous(4), trace());
+        c.step_hour().unwrap();
+        c.step_hour().unwrap();
+        let mut j = job("late", 4.0, 1.5, 2);
+        j.arrival = 1; // before the current hour (2)
+        assert!(c.submit_fleet(vec![j]).is_err());
     }
 
     #[test]

@@ -7,4 +7,4 @@ pub mod state;
 
 pub use api::{load_job_request, parse_job_request, JobRequest};
 pub use controller::{ClusterController, JobRun};
-pub use state::{Cluster, Grant, Node};
+pub use state::{CapacityLedger, Cluster, Grant, Node};

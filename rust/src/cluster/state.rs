@@ -6,6 +6,7 @@
 //! denials* (§5.7, Fig 22) an emergent property of contention rather than
 //! only a probabilistic model.
 
+use crate::sched::schedule::Schedule;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -113,6 +114,140 @@ impl Cluster {
         }
         Ok(())
     }
+
+    /// Admission ledger for fleet planning over `[start, start + horizon)`
+    /// against this cluster's total capacity.
+    pub fn ledger(&self, start: usize, horizon: usize) -> CapacityLedger {
+        CapacityLedger::new(start, horizon, self.capacity())
+    }
+}
+
+/// Per-slot capacity commitments over a planning horizon — the admission
+/// ledger backing the fleet engine (DESIGN.md §8): committed fleet
+/// schedules reserve capacity ahead of time, and the residual feeds the
+/// next [`crate::sched::PlanContext`]. Unlike [`Cluster`]'s instantaneous
+/// allocation map, the ledger tracks the *future*.
+#[derive(Debug, Clone)]
+pub struct CapacityLedger {
+    /// Absolute hour of `committed[0]`.
+    start: usize,
+    /// Total cluster capacity (uniform across the horizon).
+    capacity: usize,
+    /// Servers already promised per slot.
+    committed: Vec<usize>,
+}
+
+impl CapacityLedger {
+    pub fn new(start: usize, horizon: usize, capacity: usize) -> Self {
+        CapacityLedger {
+            start,
+            capacity,
+            committed: vec![0; horizon],
+        }
+    }
+
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.committed.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Servers committed in absolute hour `abs` (0 outside the window).
+    pub fn committed_at(&self, abs: usize) -> usize {
+        if abs < self.start || abs >= self.start + self.committed.len() {
+            0
+        } else {
+            self.committed[abs - self.start]
+        }
+    }
+
+    /// Free servers in absolute hour `abs` (full capacity outside the
+    /// planned window — nothing is promised there yet).
+    pub fn free_at(&self, abs: usize) -> usize {
+        self.capacity - self.committed_at(abs)
+    }
+
+    /// Residual capacity per slot, ready to seed a `PlanContext`.
+    pub fn residual(&self) -> Vec<usize> {
+        self.committed
+            .iter()
+            .map(|&c| self.capacity - c)
+            .collect()
+    }
+
+    /// Reserve a schedule's allocations. Checks the whole schedule first
+    /// and commits atomically: on error nothing is reserved.
+    pub fn commit(&mut self, s: &Schedule) -> Result<()> {
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let abs = s.arrival + rel;
+            if abs < self.start || abs >= self.start + self.committed.len() {
+                bail!(
+                    "schedule slot h{abs} outside ledger window [{}, {})",
+                    self.start,
+                    self.start + self.committed.len()
+                );
+            }
+            if a > self.free_at(abs) {
+                bail!(
+                    "overcommit at h{abs}: {} requested, {} free of {}",
+                    a,
+                    self.free_at(abs),
+                    self.capacity
+                );
+            }
+        }
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            let abs = s.arrival + rel;
+            if a > 0 {
+                self.committed[abs - self.start] += a;
+            }
+        }
+        Ok(())
+    }
+
+    /// Reserve up to `servers` in absolute hour `abs`, saturating at the
+    /// free capacity; returns what was actually reserved (0 outside the
+    /// window). Used to pre-load the ledger with demand from plans that
+    /// were *not* admission-checked (independently planned tenants may
+    /// jointly exceed capacity). Plans that must fit exactly should use
+    /// [`Self::commit`], which rejects instead of clamping.
+    pub fn reserve_upto(&mut self, abs: usize, servers: usize) -> usize {
+        if abs < self.start || abs >= self.start + self.committed.len() {
+            return 0;
+        }
+        let take = servers.min(self.free_at(abs));
+        self.committed[abs - self.start] += take;
+        take
+    }
+
+    /// Release everything a schedule reserved (saturating, so a partial
+    /// or repeated release cannot underflow).
+    pub fn uncommit(&mut self, s: &Schedule) {
+        self.release_from(s, self.start);
+    }
+
+    /// Release a schedule's reservations from absolute hour `from` on —
+    /// used when a job finishes early and its planned tail frees up.
+    pub fn release_from(&mut self, s: &Schedule, from: usize) {
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            let abs = s.arrival + rel;
+            if a == 0 || abs < from || abs < self.start {
+                continue;
+            }
+            if let Some(c) = self.committed.get_mut(abs - self.start) {
+                *c = c.saturating_sub(a);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +308,58 @@ mod tests {
         ]);
         assert_eq!(c.capacity(), 6);
         assert_eq!(c.utilization(), 0.0);
+    }
+
+    #[test]
+    fn ledger_commit_and_residual() {
+        let mut l = Cluster::homogeneous(4).ledger(10, 3);
+        l.commit(&Schedule::new(10, vec![2, 0, 3])).unwrap();
+        assert_eq!(l.committed_at(10), 2);
+        assert_eq!(l.committed_at(11), 0);
+        assert_eq!(l.free_at(12), 1);
+        assert_eq!(l.residual(), vec![2, 4, 1]);
+        // Outside the window: nothing committed, full capacity free.
+        assert_eq!(l.committed_at(9), 0);
+        assert_eq!(l.free_at(13), 4);
+    }
+
+    #[test]
+    fn ledger_commit_is_atomic_on_overcommit() {
+        let mut l = Cluster::homogeneous(4).ledger(0, 2);
+        l.commit(&Schedule::new(0, vec![3, 1])).unwrap();
+        // Slot 0 has room for 1 but slot 1 would overcommit: nothing
+        // from this schedule may land.
+        assert!(l.commit(&Schedule::new(0, vec![1, 4])).is_err());
+        assert_eq!(l.residual(), vec![1, 3]);
+    }
+
+    #[test]
+    fn ledger_rejects_out_of_window_schedules() {
+        let mut l = Cluster::homogeneous(4).ledger(0, 2);
+        assert!(l.commit(&Schedule::new(1, vec![1, 1])).is_err());
+        // Zero allocations outside the window are harmless.
+        l.commit(&Schedule::new(1, vec![1, 0])).unwrap();
+        assert_eq!(l.residual(), vec![4, 3]);
+    }
+
+    #[test]
+    fn ledger_reserve_upto_saturates() {
+        let mut l = Cluster::homogeneous(4).ledger(0, 2);
+        assert_eq!(l.reserve_upto(0, 3), 3);
+        assert_eq!(l.reserve_upto(0, 3), 1); // only 1 left
+        assert_eq!(l.reserve_upto(1, 9), 4); // clamped to capacity
+        assert_eq!(l.reserve_upto(5, 2), 0); // outside the window
+        assert_eq!(l.residual(), vec![0, 0]);
+    }
+
+    #[test]
+    fn ledger_release_from_frees_tail() {
+        let mut l = Cluster::homogeneous(4).ledger(0, 4);
+        let s = Schedule::new(0, vec![2, 2, 2, 2]);
+        l.commit(&s).unwrap();
+        l.release_from(&s, 2);
+        assert_eq!(l.residual(), vec![2, 2, 4, 4]);
+        l.uncommit(&s); // saturating: already-released slots stay at 0
+        assert_eq!(l.residual(), vec![4, 4, 4, 4]);
     }
 }

@@ -18,6 +18,7 @@
 use crate::carbon::trace::CarbonTrace;
 use crate::runtime::params::ParamServer;
 use crate::runtime::worker::WorkerPool;
+use crate::sched::fleet::PlanContext;
 use crate::sched::greedy;
 use crate::sched::policy::Policy;
 use crate::workload::job::JobSpec;
@@ -82,6 +83,10 @@ pub struct CarbonAutoscaler<'a> {
     job: JobSpec,
     trace: CarbonTrace,
     cfg: RunConfig,
+    /// Optional per-slot worker budget (relative to arrival): the share of
+    /// the cluster a fleet-level scheduler reserved for this job. `None`
+    /// means the whole pool is available every slot.
+    capacity: Option<Vec<usize>>,
 }
 
 impl<'a> CarbonAutoscaler<'a> {
@@ -104,7 +109,34 @@ impl<'a> CarbonAutoscaler<'a> {
             job,
             trace,
             cfg,
+            capacity: None,
         })
+    }
+
+    /// Constrain this run to a per-slot worker budget (`capacity[rel]`
+    /// workers in slot `arrival + rel`) — the coordinator's side of fleet
+    /// planning: when a cluster-level scheduler has reserved capacity for
+    /// other tenants, plans and recomputations here stay inside the
+    /// envelope instead of re-discovering contention via denials. Slots
+    /// past the envelope fall back to the full pool.
+    pub fn with_capacity(mut self, capacity: Vec<usize>) -> Result<Self> {
+        if capacity.len() < self.job.n_slots() {
+            bail!(
+                "capacity envelope covers {} slots, job window needs {}",
+                capacity.len(),
+                self.job.n_slots()
+            );
+        }
+        self.capacity = Some(capacity);
+        Ok(self)
+    }
+
+    /// Worker budget in relative slot `rel`.
+    fn capacity_at(&self, rel: usize) -> usize {
+        match &self.capacity {
+            Some(c) => c.get(rel).copied().unwrap_or_else(|| self.pool.max_workers()),
+            None => self.pool.max_workers(),
+        }
     }
 
     /// Execute the job to completion (or deadline) under `policy`.
@@ -113,7 +145,16 @@ impl<'a> CarbonAutoscaler<'a> {
         let job = &self.job;
         let n = job.n_slots();
         let window: Vec<f64> = self.trace.window(job.arrival, n);
-        let mut plan = policy.plan(job, &window)?;
+        let mut plan = if self.capacity.is_some() {
+            // Fleet-aware path: plan inside the reserved envelope (the
+            // one-job case of the fleet engine).
+            let caps: Vec<usize> = (0..n).map(|i| self.capacity_at(i)).collect();
+            let ctx = PlanContext::new(job.arrival, caps, window.clone())?;
+            let mut fs = policy.plan_fleet(std::slice::from_ref(job), &ctx)?;
+            fs.schedules.remove(0)
+        } else {
+            policy.plan(job, &window)?
+        };
 
         let art = self.pool.artifact();
         let mut ps = ParamServer::init_from_layout(art, self.cfg.seed);
@@ -148,12 +189,20 @@ impl<'a> CarbonAutoscaler<'a> {
                               // shortfalls both need it)
         'slots: for rel in 0..horizon {
             let abs = job.arrival + rel;
-            let mut k = plan.at(abs).min(job.max_servers);
+            let mut k = plan
+                .at(abs)
+                .min(job.max_servers)
+                .min(self.capacity_at(rel));
             // Plan exhausted but work remains: extend at the base
-            // allocation (mirrors advisor::sim's fallback).
+            // allocation (mirrors advisor::sim's fallback), budget
+            // permitting.
             let plan_exhausted = !(abs..plan.arrival + plan.n_slots()).any(|h| plan.at(h) > 0);
             if plan_exhausted && done_units < total_work {
-                k = job.min_servers;
+                k = if self.capacity_at(rel) >= job.min_servers {
+                    job.min_servers
+                } else {
+                    0
+                };
             }
 
             let slot_t0 = Instant::now();
@@ -248,7 +297,25 @@ impl<'a> CarbonAutoscaler<'a> {
                             (done_units / total_work).min(1.0),
                         );
                         if let Ok(sub) = sub {
-                            if let Ok(p) = policy.plan(&sub, &fc) {
+                            // Recompute inside the capacity envelope when
+                            // one is set (same fleet path as the initial
+                            // plan), else with the bare policy.
+                            let replanned = if self.capacity.is_some() {
+                                let caps: Vec<usize> = (0..fc.len())
+                                    .map(|i| self.capacity_at(rel + 1 + i))
+                                    .collect();
+                                PlanContext::new(now, caps, fc.clone())
+                                    .ok()
+                                    .and_then(|ctx| {
+                                        policy
+                                            .plan_fleet(std::slice::from_ref(&sub), &ctx)
+                                            .ok()
+                                    })
+                                    .map(|mut fs| fs.schedules.remove(0))
+                            } else {
+                                policy.plan(&sub, &fc).ok()
+                            };
+                            if let Some(p) = replanned {
                                 plan = p;
                                 recomputed = true;
                             }
@@ -372,6 +439,42 @@ mod tests {
         );
         // Allocation obeyed bounds.
         assert!(report.slots.iter().all(|s| s.workers <= 2));
+    }
+
+    #[test]
+    fn capacity_envelope_validated_and_respected() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(m) = Manifest::load(&dir) else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let art = m.transformer("tiny").unwrap();
+        let pool = WorkerPool::spawn(art, 2, 11).unwrap();
+        let job = JobBuilder::new("cap", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(2.0)
+            .power(210.0)
+            .build()
+            .unwrap();
+        let trace = synthetic::generate(regions::by_name("ontario").unwrap(), 48, 5);
+        let cfg = RunConfig {
+            slot_seconds: 0.2,
+            ..Default::default()
+        };
+        // Envelope shorter than the job window is rejected.
+        assert!(CarbonAutoscaler::new(&pool, job.clone(), trace.clone(), cfg.clone())
+            .unwrap()
+            .with_capacity(vec![1; 2])
+            .is_err());
+        // A 1-worker budget per slot caps every scaling decision at 1.
+        let auto = CarbonAutoscaler::new(&pool, job, trace, cfg)
+            .unwrap()
+            .with_capacity(vec![1; 4])
+            .unwrap();
+        let report = auto.run(&CarbonScalerPolicy).unwrap();
+        pool.shutdown();
+        assert!(report.slots.iter().all(|s| s.workers <= 1));
+        assert!(report.completion_hours.is_some());
     }
 
     #[test]

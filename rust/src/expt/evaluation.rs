@@ -1,5 +1,6 @@
 //! Core evaluation experiments: Figs 8–12 (CarbonScaler in action,
-//! elasticity, static-scale comparisons, temporal flexibility).
+//! elasticity, static-scale comparisons, temporal flexibility) plus the
+//! beyond-paper multi-job fleet contention study.
 
 use crate::advisor::{self, SimConfig};
 use crate::carbon::{regions, synthetic, CarbonTrace};
@@ -361,6 +362,82 @@ impl Experiment for Fig12 {
     }
 }
 
+/// Fleet contention (beyond-paper, after the §6 "Capacity Constraints"
+/// discussion): a 10-job Table-1 mix on progressively tighter clusters,
+/// planned jointly by the fleet engine vs per-job-independently with
+/// capacity truncation. Reports total carbon, completion counts, and the
+/// fleet's savings — the cluster-level arbitration CarbonFlex/CASPER
+/// argue matters at scale.
+pub struct FleetContention;
+
+impl FleetContention {
+    fn job_mix() -> Result<Vec<crate::workload::job::JobSpec>> {
+        let mut jobs = Vec::new();
+        for (i, w) in catalog::WORKLOADS.iter().enumerate() {
+            for k in 0..2usize {
+                let mut j = w.job((i * 2 + k) % 6, 12.0, 1.8, 6)?;
+                j.name = format!("{}-{k}", w.name);
+                jobs.push(j);
+            }
+        }
+        Ok(jobs)
+    }
+}
+
+impl Experiment for FleetContention {
+    fn id(&self) -> &'static str {
+        "fleet"
+    }
+    fn title(&self) -> &'static str {
+        "Multi-job contention: fleet engine vs independent planning (beyond paper, §6)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let trace = ontario(ctx);
+        let jobs = Self::job_mix()?;
+        let cfg = SimConfig::default();
+        let mut t = Table::new("fleet vs per-job-independent planning, 10-job Table-1 mix")
+            .headers(&[
+                "cluster",
+                "fleet carbon (g)",
+                "indep carbon (g)",
+                "fleet done",
+                "indep done",
+                "fleet savings",
+            ]);
+        for &cap in &[10usize, 12, 16, 24] {
+            match advisor::fleet_vs_independent(&jobs, &trace, cap, &cfg) {
+                Ok(cmp) => {
+                    // A carbon comparison is only honest when both modes
+                    // complete the same work; an incomplete independent
+                    // baseline "saves" carbon by abandoning jobs.
+                    let savings = if cmp.independent.all_finished() {
+                        pct(cmp.savings())
+                    } else {
+                        "n/a (indep incomplete)".into()
+                    };
+                    t.row(vec![
+                        cap.to_string(),
+                        f(cmp.fleet.carbon_g, 0),
+                        f(cmp.independent.carbon_g, 0),
+                        format!("{}/{}", cmp.fleet.n_finished, jobs.len()),
+                        format!("{}/{}", cmp.independent.n_finished, jobs.len()),
+                        savings,
+                    ])
+                }
+                Err(e) => t.row(vec![
+                    cap.to_string(),
+                    format!("infeasible: {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            };
+        }
+        Ok(vec![t])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -409,5 +486,15 @@ mod tests {
     fn fig12_two_regions() {
         let tables = Fig12.run(&quick()).unwrap();
         assert_eq!(tables.len(), 2);
+    }
+
+    #[test]
+    fn fleet_contention_reports_all_cluster_sizes() {
+        let tables = FleetContention.run(&quick()).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].n_rows(), 4);
+        // On the roomiest cluster both modes must complete the whole mix.
+        let text = tables[0].render();
+        assert!(text.contains("10/10"), "no fully-completed row:\n{text}");
     }
 }

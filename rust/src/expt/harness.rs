@@ -81,6 +81,7 @@ pub fn all() -> Vec<Box<dyn Experiment>> {
         Box::new(evaluation::Fig10),
         Box::new(evaluation::Fig11),
         Box::new(evaluation::Fig12),
+        Box::new(evaluation::FleetContention),
         Box::new(sensitivity::Fig13),
         Box::new(sensitivity::Fig14),
         Box::new(sensitivity::Fig15),
@@ -120,8 +121,9 @@ mod tests {
         let mut dedup = ids.clone();
         dedup.dedup();
         assert_eq!(ids, dedup);
-        assert_eq!(ids.len(), 21);
+        assert_eq!(ids.len(), 22);
         assert!(by_id("fig9").is_some());
+        assert!(by_id("fleet").is_some());
         assert!(by_id("nope").is_none());
     }
 }

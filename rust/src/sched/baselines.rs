@@ -20,12 +20,7 @@ use anyhow::{bail, Result};
 /// deterministically (ties -> earlier slot).
 fn k_lowest_slots(carbon: &[f64], n: usize, k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..n.min(carbon.len())).collect();
-    idx.sort_by(|&a, &b| {
-        carbon[a]
-            .partial_cmp(&carbon[b])
-            .expect("NaN carbon")
-            .then(a.cmp(&b))
-    });
+    idx.sort_by(|&a, &b| carbon[a].total_cmp(&carbon[b]).then(a.cmp(&b)));
     let mut chosen: Vec<usize> = idx.into_iter().take(k).collect();
     chosen.sort();
     chosen

@@ -1,0 +1,907 @@
+//! Fleet planning engine: capacity-constrained multi-job scheduling
+//! (DESIGN.md §8).
+//!
+//! CarbonScaler's Algorithm 1 plans one job against an unbounded cluster.
+//! At fleet scale that assumption breaks: many elastic tenants chase the
+//! same low-carbon slots (paper §6 "Capacity Constraints"; CarbonFlex and
+//! CASPER make the same observation at cluster level). This module lifts
+//! the greedy to the fleet: a [`PlanContext`] carries per-slot cluster
+//! capacity and the shared carbon forecast, and the engine interleaves
+//! candidate (job, slot, server-step) allocations across *all* jobs in a
+//! single binary heap, preserving the marginal-capacity-per-unit-carbon
+//! priority and the per-job minimum-bundle rule while enforcing per-slot
+//! capacity caps at pop time.
+//!
+//! Complexity stays `O(N · n · M · log(N n M))` for `N` jobs: every
+//! (job, slot, server) candidate enters the heap at most once, and a
+//! candidate blocked by a full slot is dropped permanently (committed
+//! capacity never shrinks during a plan, so the rest of its chain is dead
+//! too). There is no per-job replanning loop.
+//!
+//! Three planners share the machinery:
+//! * [`plan_fleet_greedy`] — the interleaved heap described above;
+//! * [`plan_fleet_sequential`] — admission-order baseline: each job runs
+//!   the capacity-capped greedy against the residual the previous jobs
+//!   left (what independent tenants + an admission controller achieve);
+//! * [`plan_fleet`] — the production path: both of the above, a
+//!   capacity-aware polish pass on small instances, and the lowest
+//!   forecast-carbon feasible result wins. By construction it is never
+//!   worse than sequential admission.
+
+use crate::carbon::trace::CarbonTrace;
+use crate::sched::policy::Policy;
+use crate::sched::schedule::Schedule;
+use crate::workload::job::JobSpec;
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Floor applied to carbon intensities when forming priorities, so
+/// zero-carbon slots sort first without dividing by zero.
+const MIN_CARBON: f64 = 1e-9;
+
+/// Above this many job-slot cells the polish pass is skipped: local
+/// search is O(cells · horizon) per pass and the greedy is already
+/// near-optimal at scale (DESIGN.md §7 perf budget: 100 jobs × 96 slots
+/// must plan in < 50 ms).
+const POLISH_CELL_BUDGET: usize = 2048;
+
+/// Shared planning context for a fleet of jobs.
+///
+/// Invariants (checked by [`PlanContext::new`]):
+/// * `capacity.len() == carbon.len()` (one entry per slot, non-empty);
+/// * every carbon value is finite and non-negative;
+/// * slot `i` is absolute hour `start + i`.
+///
+/// Jobs planned against a context must satisfy
+/// `start <= job.arrival && job.deadline() <= start + horizon`
+/// (checked by [`PlanContext::check_jobs`]).
+#[derive(Debug, Clone)]
+pub struct PlanContext {
+    /// Absolute hour of `capacity[0]` / `carbon[0]`.
+    pub start: usize,
+    /// Cluster capacity (server slots) available in each hour.
+    pub capacity: Vec<usize>,
+    /// Shared carbon forecast, gCO₂eq/kWh per hour.
+    pub carbon: Vec<f64>,
+}
+
+impl PlanContext {
+    pub fn new(start: usize, capacity: Vec<usize>, carbon: Vec<f64>) -> Result<Self> {
+        if capacity.is_empty() {
+            bail!("plan context must cover at least one slot");
+        }
+        if capacity.len() != carbon.len() {
+            bail!(
+                "capacity covers {} slots but carbon forecast covers {}",
+                capacity.len(),
+                carbon.len()
+            );
+        }
+        if let Some(i) = carbon.iter().position(|c| !c.is_finite() || *c < 0.0) {
+            bail!("carbon forecast slot {i} is invalid: {}", carbon[i]);
+        }
+        Ok(PlanContext {
+            start,
+            capacity,
+            carbon,
+        })
+    }
+
+    /// Uniform-capacity context: a homogeneous cluster of `cluster_size`
+    /// servers over the forecast window.
+    pub fn uniform(start: usize, cluster_size: usize, carbon: Vec<f64>) -> Result<Self> {
+        let n = carbon.len();
+        Self::new(start, vec![cluster_size; n], carbon)
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.capacity.len()
+    }
+
+    /// One-past-the-last absolute hour covered.
+    pub fn end(&self) -> usize {
+        self.start + self.horizon()
+    }
+
+    /// Relative slot index for absolute hour `abs`, if covered.
+    pub fn rel(&self, abs: usize) -> Option<usize> {
+        if abs < self.start || abs >= self.end() {
+            None
+        } else {
+            Some(abs - self.start)
+        }
+    }
+
+    /// Every job must satisfy the engine's structural invariants and fit
+    /// entirely inside the context window.
+    ///
+    /// Deliberately weaker than [`JobSpec::validate`]: remainder jobs of
+    /// behind-schedule work (see `greedy::remainder_job`) can have
+    /// `length_hours > completion_hours` — impossible at the minimum
+    /// allocation but perfectly plannable at higher scale — and the
+    /// planner must accept them, so only the invariants the engine
+    /// actually relies on (server bounds, curve coverage, positive
+    /// length) are enforced here.
+    pub fn check_jobs(&self, jobs: &[JobSpec]) -> Result<()> {
+        for job in jobs {
+            if job.min_servers < 1 {
+                bail!("job {:?}: m must be >= 1", job.name);
+            }
+            if job.max_servers < job.min_servers {
+                bail!("job {:?}: M must be >= m", job.name);
+            }
+            let curve = job.curve.at_progress(0.0);
+            if curve.max_servers() < job.max_servers {
+                bail!(
+                    "job {:?}: capacity curve covers {} servers < M = {}",
+                    job.name,
+                    curve.max_servers(),
+                    job.max_servers
+                );
+            }
+            if job.length_hours <= 0.0 {
+                bail!("job {:?}: length must be positive", job.name);
+            }
+            if job.arrival < self.start {
+                bail!(
+                    "job {:?} arrives at h{} before context start h{}",
+                    job.name,
+                    job.arrival,
+                    self.start
+                );
+            }
+            if job.deadline() > self.end() {
+                bail!(
+                    "job {:?} deadline h{} exceeds context end h{}",
+                    job.name,
+                    job.deadline(),
+                    self.end()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The forecast as a [`CarbonTrace`] indexed by *relative* slot.
+    fn forecast_trace(&self) -> CarbonTrace {
+        CarbonTrace::new("fleet-forecast", self.carbon.clone())
+    }
+}
+
+/// One schedule per job, aligned with the planning job order. Schedules
+/// use absolute arrivals, like [`Schedule`] everywhere else.
+#[derive(Debug, Clone)]
+pub struct FleetSchedule {
+    pub schedules: Vec<Schedule>,
+}
+
+impl FleetSchedule {
+    pub fn n_jobs(&self) -> usize {
+        self.schedules.len()
+    }
+
+    /// Total servers committed in each context slot.
+    pub fn slot_usage(&self, ctx: &PlanContext) -> Vec<usize> {
+        let mut usage = vec![0usize; ctx.horizon()];
+        for s in &self.schedules {
+            for (i, u) in usage.iter_mut().enumerate() {
+                *u += s.at(ctx.start + i);
+            }
+        }
+        usage
+    }
+
+    /// True when every slot's total stays within the context capacity and
+    /// no allocation falls outside the context window.
+    pub fn respects_capacity(&self, ctx: &PlanContext) -> bool {
+        for s in &self.schedules {
+            for (rel, &a) in s.alloc.iter().enumerate() {
+                let abs = s.arrival + rel;
+                if a > 0 && ctx.rel(abs).is_none() {
+                    return false;
+                }
+            }
+        }
+        self.slot_usage(ctx)
+            .iter()
+            .zip(&ctx.capacity)
+            .all(|(u, c)| u <= c)
+    }
+
+    /// True when every job's schedule completes its work (chronological
+    /// accounting, fractional final slot).
+    pub fn all_complete(&self, jobs: &[JobSpec]) -> bool {
+        self.completed_count(jobs) == jobs.len()
+    }
+
+    /// How many jobs complete under their schedule.
+    pub fn completed_count(&self, jobs: &[JobSpec]) -> usize {
+        jobs.iter()
+            .zip(&self.schedules)
+            .filter(|(job, s)| s.completion_hours(job).is_some())
+            .count()
+    }
+
+    /// Zero out allocations strictly after each job's chronological
+    /// completion slot. Such slots contribute no work and no emissions
+    /// (accounting stops at completion) but would otherwise hold per-slot
+    /// capacity — e.g. when a committed fleet plan seeds the residual for
+    /// the next batch. Schedules that do not complete are left untouched.
+    pub fn trim_completed_tails(&mut self, jobs: &[JobSpec]) {
+        for (job, s) in jobs.iter().zip(self.schedules.iter_mut()) {
+            if let Some(done) = s.completion_hours(job) {
+                let last = done.ceil() as usize;
+                for a in s.alloc.iter_mut().skip(last) {
+                    *a = 0;
+                }
+            }
+        }
+    }
+
+    /// Total forecast emissions of the fleet against the context's carbon
+    /// signal (chronological per-job accounting).
+    pub fn forecast_carbon_g(&self, jobs: &[JobSpec], ctx: &PlanContext) -> f64 {
+        let trace = ctx.forecast_trace();
+        jobs.iter()
+            .zip(&self.schedules)
+            .map(|(job, s)| {
+                let mut rel = s.clone();
+                rel.arrival = s.arrival.saturating_sub(ctx.start);
+                rel.emissions_fast(job, &trace).0
+            })
+            .sum()
+    }
+}
+
+/// Heap entry: one candidate allocation step for one job.
+#[derive(Debug, Clone, Copy)]
+struct Cand {
+    /// Work added per unit carbon if this step is taken.
+    priority: f64,
+    /// Index into the planning job slice.
+    job: usize,
+    /// Absolute slot.
+    slot: usize,
+    /// Target server count after this step.
+    servers: usize,
+    /// Work added by this step.
+    work: f64,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap on priority; ties -> earlier slot, fewer servers, lower
+        // job index, so fleet plans are deterministic. Priorities are
+        // validated finite at insertion; total_cmp keeps even a slipped
+        // NaN ordered instead of panicking mid-plan.
+        self.priority
+            .total_cmp(&other.priority)
+            .then_with(|| other.slot.cmp(&self.slot))
+            .then_with(|| other.servers.cmp(&self.servers))
+            .then_with(|| other.job.cmp(&self.job))
+    }
+}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Validate a candidate at insertion: degenerate capacity curves or
+/// pathological forecasts must surface as an `Err`, never as a NaN that
+/// panics inside the heap comparator.
+fn checked(
+    priority: f64,
+    work: f64,
+    name: &str,
+    slot: usize,
+    servers: usize,
+    job: usize,
+) -> Result<Cand> {
+    if !priority.is_finite() || !work.is_finite() || work < 0.0 {
+        bail!(
+            "job {name:?}: invalid candidate at slot {slot} ({servers} servers): \
+             work {work}, priority {priority}"
+        );
+    }
+    Ok(Cand {
+        priority,
+        job,
+        slot,
+        servers,
+        work,
+    })
+}
+
+/// Interleaved fleet greedy: Algorithm 1 generalized to `N` jobs sharing
+/// per-slot capacity. Candidates from all jobs compete in one heap in
+/// decreasing marginal-work-per-unit-carbon order; a popped step commits
+/// only if its slot still has room, and each job stops generating steps
+/// once its work fits. Errors if a job cannot be completed by this
+/// heuristic — which includes every genuinely infeasible fleet but may
+/// also reject some feasible deadline-tight mixes (the chain-drop rule is
+/// greedy, not exhaustive; [`plan_fleet`]'s EDF pass rescues most such
+/// cases).
+pub fn plan_fleet_greedy(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+    ctx.check_jobs(jobs)?;
+    let mut free = ctx.capacity.clone();
+    let totals: Vec<f64> = jobs.iter().map(|j| j.total_work()).collect();
+    let mut done = vec![0.0f64; jobs.len()];
+    let mut alloc: Vec<Vec<usize>> = jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect();
+    let mut open = 0usize;
+    let mut heap: BinaryHeap<Cand> = BinaryHeap::new();
+
+    for (ji, job) in jobs.iter().enumerate() {
+        if totals[ji] <= 1e-9 {
+            continue;
+        }
+        open += 1;
+        let curve = job.curve.at_progress(0.0);
+        let m = job.min_servers;
+        let bundle = curve.capacity(m);
+        if bundle <= 0.0 {
+            bail!("job {:?}: zero capacity at minimum allocation", job.name);
+        }
+        for rel in 0..job.n_slots() {
+            let abs = job.arrival + rel;
+            let c = ctx.carbon[abs - ctx.start].max(MIN_CARBON);
+            heap.push(checked(
+                bundle / (m as f64 * c),
+                bundle,
+                &job.name,
+                abs,
+                m,
+                ji,
+            )?);
+        }
+    }
+
+    while open > 0 {
+        let Some(cand) = heap.pop() else {
+            bail!(
+                "infeasible fleet: {open} job(s) cannot complete within \
+                 capacity and deadlines"
+            );
+        };
+        let ji = cand.job;
+        if done[ji] >= totals[ji] - 1e-9 {
+            continue; // stale entry for an already-complete job
+        }
+        let job = &jobs[ji];
+        let rel = cand.slot - job.arrival;
+        let fi = cand.slot - ctx.start;
+        let need = cand.servers - alloc[ji][rel];
+        if free[fi] < need {
+            // The slot cannot host this step, and committed capacity only
+            // grows during a plan — the rest of this (job, slot) chain is
+            // dead, so dropping the candidate is permanent and safe.
+            continue;
+        }
+        free[fi] -= need;
+        alloc[ji][rel] = cand.servers;
+        done[ji] += cand.work;
+        if done[ji] >= totals[ji] - 1e-9 {
+            open -= 1;
+        } else if cand.servers < job.max_servers {
+            let next = cand.servers + 1;
+            let w = job.curve.at_progress(0.0).marginal(next);
+            if !w.is_finite() {
+                bail!(
+                    "job {:?}: non-finite marginal capacity at {next} servers",
+                    job.name
+                );
+            }
+            if w > 0.0 {
+                let c = ctx.carbon[fi].max(MIN_CARBON);
+                heap.push(checked(w / c, w, &job.name, cand.slot, next, ji)?);
+            }
+        }
+    }
+
+    Ok(FleetSchedule {
+        schedules: jobs
+            .iter()
+            .zip(alloc)
+            .map(|(j, a)| Schedule::new(j.arrival, a))
+            .collect(),
+    })
+}
+
+/// Sequential admission in an explicit order: each job plans the
+/// capacity-capped greedy against the residual its predecessors left.
+/// Output schedules stay aligned with the input job order.
+fn plan_sequential_order(
+    jobs: &[JobSpec],
+    ctx: &PlanContext,
+    order: &[usize],
+) -> Result<FleetSchedule> {
+    let mut residual = ctx.clone();
+    let mut schedules: Vec<Option<Schedule>> = vec![None; jobs.len()];
+    for &ji in order {
+        let job = &jobs[ji];
+        let one = plan_fleet_greedy(std::slice::from_ref(job), &residual)?;
+        let s = one
+            .schedules
+            .into_iter()
+            .next()
+            .expect("one job in, one schedule out");
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            residual.capacity[job.arrival + rel - ctx.start] -= a;
+        }
+        schedules[ji] = Some(s);
+    }
+    Ok(FleetSchedule {
+        schedules: schedules
+            .into_iter()
+            .map(|s| s.expect("every job planned"))
+            .collect(),
+    })
+}
+
+/// Sequential-admission baseline: jobs are admitted in slice order, each
+/// planning the capacity-capped greedy against the residual capacity the
+/// previously admitted jobs left behind. This is what independent
+/// CarbonScaler tenants behind an admission controller achieve, and the
+/// yardstick [`plan_fleet`] is guaranteed to match or beat.
+pub fn plan_fleet_sequential(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+    ctx.check_jobs(jobs)?;
+    let order: Vec<usize> = (0..jobs.len()).collect();
+    plan_sequential_order(jobs, ctx, &order)
+}
+
+/// Earliest-deadline-first admission order: jobs with tight windows plan
+/// first. Rescues mixes where pure priority order (or arrival order)
+/// hands a contended cheap slot to a flexible job and strands an
+/// inflexible one — the classic greedy blind spot on deadline-scarce
+/// instances.
+fn edf_order(jobs: &[JobSpec]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| (jobs[i].deadline(), i));
+    order
+}
+
+/// Naive independent-then-truncate baseline: plan every job with
+/// `plan_one` as if the cluster were unbounded, then walk the jobs in
+/// order clamping each slot to the remaining capacity (grants below the
+/// job's minimum become 0, and allocations past the context horizon are
+/// dropped). Under contention jobs may end up incomplete — that is the
+/// point: it is the failure mode the fleet engine exists to avoid, and
+/// the default [`Policy::plan_fleet`] so existing single-job baselines
+/// participate in fleet experiments unchanged.
+pub fn independent_truncate<F>(
+    mut plan_one: F,
+    jobs: &[JobSpec],
+    ctx: &PlanContext,
+) -> Result<FleetSchedule>
+where
+    F: FnMut(&JobSpec, &[f64]) -> Result<Schedule>,
+{
+    ctx.check_jobs(jobs)?;
+    let mut free = ctx.capacity.clone();
+    let mut schedules = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let arel = job.arrival - ctx.start;
+        let s = plan_one(job, &ctx.carbon[arel..])?;
+        let mut alloc = Vec::with_capacity(s.alloc.len());
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            let fi = arel + rel;
+            if fi >= free.len() {
+                break; // deadline-unaware tail past the planning horizon
+            }
+            let granted = if a == 0 {
+                0
+            } else {
+                let g = a.min(free[fi]);
+                if g < job.min_servers {
+                    0
+                } else {
+                    g
+                }
+            };
+            free[fi] -= granted;
+            alloc.push(granted);
+        }
+        schedules.push(Schedule::new(job.arrival, alloc));
+    }
+    Ok(FleetSchedule { schedules })
+}
+
+/// Capacity-aware polish: hill-climb single-slot ±1 moves per job (the
+/// DESIGN.md §6 chronological-execution refinement, fleet edition). An
+/// up-move must fit the slot's residual capacity; every accepted move
+/// keeps the job finishing inside its window and strictly reduces
+/// forecast emissions, so the pass never regresses and never violates
+/// capacity.
+pub fn polish_fleet(
+    jobs: &[JobSpec],
+    ctx: &PlanContext,
+    fleet: &mut FleetSchedule,
+    max_passes: usize,
+) {
+    let trace = ctx.forecast_trace();
+    let usage = fleet.slot_usage(ctx);
+    let mut free: Vec<usize> = ctx
+        .capacity
+        .iter()
+        .zip(&usage)
+        .map(|(c, u)| c.saturating_sub(*u))
+        .collect();
+
+    for _ in 0..max_passes {
+        let mut improved = false;
+        for (ji, job) in jobs.iter().enumerate() {
+            let s = &mut fleet.schedules[ji];
+            let arrival = s.arrival;
+            let arel = arrival - ctx.start;
+            // Rebase to relative indexing for the duration of the search so
+            // emissions_fast lines up with the forecast trace.
+            s.arrival = arel;
+            let (mut best_g, finished) = s.emissions_fast(job, &trace);
+            if !finished {
+                s.arrival = arrival;
+                continue;
+            }
+            let m = job.min_servers;
+            let mm = job.max_servers;
+            for i in 0..s.alloc.len() {
+                loop {
+                    let orig = s.alloc[i];
+                    let fi = arel + i;
+                    let down = match orig {
+                        0 => None,
+                        a if a == m => Some(0),
+                        a => Some(a - 1),
+                    };
+                    let up = match orig {
+                        0 if free[fi] >= m => Some(m),
+                        a if a > 0 && a < mm && free[fi] >= 1 => Some(a + 1),
+                        _ => None,
+                    };
+                    let mut moved = false;
+                    for cand in [down, up].into_iter().flatten() {
+                        s.alloc[i] = cand;
+                        let (g, fin) = s.emissions_fast(job, &trace);
+                        if fin && g < best_g - 1e-9 {
+                            best_g = g;
+                            if cand > orig {
+                                free[fi] -= cand - orig;
+                            } else {
+                                free[fi] += orig - cand;
+                            }
+                            moved = true;
+                            break;
+                        }
+                        s.alloc[i] = orig;
+                    }
+                    if moved {
+                        improved = true;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            s.arrival = arrival;
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// Production fleet planner: run the interleaved greedy plus two
+/// sequential-admission passes (slice order and earliest-deadline-first),
+/// polish each (small instances only, see [`POLISH_CELL_BUDGET`]), and
+/// return whichever result has the lowest forecast carbon among those
+/// that complete every job under phase-aware accounting. Guarantees:
+/// per-slot capacity respected, every returned job completes (else
+/// `Err`), and total forecast carbon never exceeds the
+/// sequential-admission baseline's (when that baseline succeeds).
+///
+/// Like Algorithm 1, candidate generation credits work with the phase-0
+/// capacity curve; the completion gate here is what makes multi-phase
+/// jobs safe — a plan that phase-aware accounting says falls short is
+/// discarded rather than returned. The engine is a heuristic: on rare
+/// deadline-scarce mixes every pass can strand a tight-window job and a
+/// feasible assignment is reported infeasible (the EDF pass exists to
+/// make this rare).
+pub fn plan_fleet(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+    ctx.check_jobs(jobs)?;
+    let greedy = plan_fleet_greedy(jobs, ctx);
+    let sequential = plan_fleet_sequential(jobs, ctx);
+    let edf = plan_sequential_order(jobs, ctx, &edf_order(jobs));
+    if greedy.is_err() && sequential.is_err() && edf.is_err() {
+        return greedy; // carries the engine's diagnostic
+    }
+    let cells: usize = jobs.iter().map(|j| j.n_slots()).sum();
+    let mut best: Option<(f64, FleetSchedule)> = None;
+    for fs in [greedy.ok(), sequential.ok(), edf.ok()].into_iter().flatten() {
+        let mut fs = fs;
+        if cells <= POLISH_CELL_BUDGET {
+            polish_fleet(jobs, ctx, &mut fs, 8);
+        }
+        if !fs.all_complete(jobs) {
+            continue; // phase-0 credit overestimated a multi-phase job
+        }
+        let g = fs.forecast_carbon_g(jobs, ctx);
+        if best.as_ref().map_or(true, |(bg, _)| g < *bg) {
+            best = Some((g, fs));
+        }
+    }
+    match best {
+        Some((_, mut fs)) => {
+            // Post-completion allocations (possible after polish moves a
+            // job's completion earlier) would hold capacity for nothing;
+            // emissions are unaffected by removing them.
+            fs.trim_completed_tails(jobs);
+            Ok(fs)
+        }
+        None => bail!(
+            "fleet plan found but no candidate completes all jobs under \
+             phase-aware accounting (multi-phase curves are planned with \
+             the phase-0 curve, like Algorithm 1)"
+        ),
+    }
+}
+
+/// Wrapper exposing a policy's *single-job* planner with the default
+/// independent-then-truncate fleet behaviour, even when the wrapped
+/// policy overrides [`Policy::plan_fleet`]. This is the baseline the
+/// fleet engine is evaluated against in experiments.
+#[derive(Debug, Clone)]
+pub struct IndependentFleet<P: Policy>(pub P);
+
+impl<P: Policy> Policy for IndependentFleet<P> {
+    fn name(&self) -> String {
+        format!("independent({})", self.0.name())
+    }
+
+    fn plan(&self, job: &JobSpec, carbon: &[f64]) -> Result<Schedule> {
+        self.0.plan(job, carbon)
+    }
+
+    fn plan_fleet(&self, jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+        independent_truncate(|j, c| self.0.plan(j, c), jobs, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::sched::greedy;
+    use crate::workload::job::JobBuilder;
+
+    fn job(name: &str, len: f64, slack: f64, max: usize) -> JobSpec {
+        JobBuilder::new(name, MarginalCapacityCurve::linear(max))
+            .length(len)
+            .slack_factor(slack)
+            .power(1000.0)
+            .build()
+            .unwrap()
+    }
+
+    fn ample(carbon: Vec<f64>) -> PlanContext {
+        PlanContext::uniform(0, 1000, carbon).unwrap()
+    }
+
+    #[test]
+    fn context_validation() {
+        assert!(PlanContext::new(0, vec![], vec![]).is_err());
+        assert!(PlanContext::new(0, vec![4], vec![1.0, 2.0]).is_err());
+        assert!(PlanContext::new(0, vec![4, 4], vec![1.0, f64::NAN]).is_err());
+        assert!(PlanContext::new(0, vec![4], vec![-1.0]).is_err());
+        let ctx = PlanContext::uniform(5, 8, vec![1.0; 3]).unwrap();
+        assert_eq!(ctx.end(), 8);
+        assert_eq!(ctx.rel(5), Some(0));
+        assert_eq!(ctx.rel(8), None);
+        assert_eq!(ctx.rel(4), None);
+    }
+
+    #[test]
+    fn check_jobs_rejects_out_of_window() {
+        let ctx = PlanContext::uniform(0, 8, vec![1.0; 4]).unwrap();
+        let j = job("long", 6.0, 1.0, 2); // deadline 6 > horizon 4
+        assert!(ctx.check_jobs(std::slice::from_ref(&j)).is_err());
+        let mut early = job("early", 2.0, 1.0, 2);
+        early.arrival = 0;
+        let ctx2 = PlanContext::uniform(1, 8, vec![1.0; 4]).unwrap();
+        assert!(ctx2.check_jobs(std::slice::from_ref(&early)).is_err());
+    }
+
+    #[test]
+    fn single_job_uncapped_matches_algorithm1() {
+        let carbon = vec![40.0, 10.0, 25.0, 70.0, 15.0, 90.0];
+        let curve = MarginalCapacityCurve::from_marginals(vec![1.0, 0.6, 0.3]).unwrap();
+        let j = JobBuilder::new("j", curve)
+            .servers(1, 3)
+            .length(4.0)
+            .slack_factor(1.5)
+            .power(1000.0)
+            .build()
+            .unwrap();
+        let ctx = ample(carbon.clone());
+        let fleet = plan_fleet_greedy(std::slice::from_ref(&j), &ctx).unwrap();
+        let single = greedy::plan(&j, &carbon).unwrap();
+        assert_eq!(fleet.schedules[0].alloc, single.alloc);
+    }
+
+    #[test]
+    fn contention_spills_to_next_cheapest_slot() {
+        // Two 1h jobs, capacity 1: the second job cannot share slot 0
+        // (c=10) and must take slot 2 (c=20), not slot 1 (c=100).
+        let jobs = vec![job("a", 1.0, 3.0, 1), job("b", 1.0, 3.0, 1)];
+        let ctx = PlanContext::uniform(0, 1, vec![10.0, 100.0, 20.0]).unwrap();
+        let fs = plan_fleet_greedy(&jobs, &ctx).unwrap();
+        assert_eq!(fs.schedules[0].alloc, vec![1, 0, 0]);
+        assert_eq!(fs.schedules[1].alloc, vec![0, 0, 1]);
+        assert!(fs.respects_capacity(&ctx));
+        assert!(fs.all_complete(&jobs));
+    }
+
+    #[test]
+    fn capacity_caps_respected_under_heavy_contention() {
+        let jobs: Vec<JobSpec> = (0..5)
+            .map(|i| job(&format!("j{i}"), 4.0, 2.0, 4))
+            .collect();
+        let carbon: Vec<f64> = (0..8).map(|i| 20.0 + 30.0 * ((i * 5) % 7) as f64).collect();
+        let ctx = PlanContext::uniform(0, 6, carbon).unwrap();
+        let fs = plan_fleet(&jobs, &ctx).unwrap();
+        assert!(fs.respects_capacity(&ctx));
+        assert!(fs.all_complete(&jobs));
+        for (j, s) in jobs.iter().zip(&fs.schedules) {
+            assert!(s.respects_bounds(j));
+        }
+    }
+
+    #[test]
+    fn edf_pass_rescues_deadline_tight_mix() {
+        // A has a 2-slot window, B only slot 0; capacity 1, slot 0 cheap.
+        // Priority and arrival order both hand slot 0 to A and strand B;
+        // the EDF pass plans B first, so the portfolio completes both.
+        let a = job("a", 1.0, 2.0, 1); // window [0, 2)
+        let b = job("b", 1.0, 1.0, 1); // window [0, 1)
+        let jobs = vec![a, b];
+        let ctx = PlanContext::uniform(0, 1, vec![1.0, 100.0]).unwrap();
+        assert!(plan_fleet_greedy(&jobs, &ctx).is_err());
+        assert!(plan_fleet_sequential(&jobs, &ctx).is_err());
+        let fs = plan_fleet(&jobs, &ctx).unwrap();
+        assert_eq!(fs.schedules[0].alloc, vec![0, 1]);
+        assert_eq!(fs.schedules[1].alloc, vec![1]);
+        assert!(fs.all_complete(&jobs));
+        assert!(fs.respects_capacity(&ctx));
+    }
+
+    #[test]
+    fn infeasible_fleet_detected() {
+        // Two jobs each needing both slots at 1 server, capacity 1.
+        let jobs = vec![job("a", 2.0, 1.0, 1), job("b", 2.0, 1.0, 1)];
+        let ctx = PlanContext::uniform(0, 1, vec![5.0, 5.0]).unwrap();
+        assert!(plan_fleet_greedy(&jobs, &ctx).is_err());
+        assert!(plan_fleet(&jobs, &ctx).is_err());
+    }
+
+    #[test]
+    fn nan_curve_errors_instead_of_panicking() {
+        // A NaN marginal slips past MarginalCapacityCurve::from_marginals
+        // (NaN < 0.0 is false); the fleet engine must reject the candidate
+        // at insertion rather than panic inside the heap comparator.
+        let curve = MarginalCapacityCurve::from_marginals(vec![1.0, f64::NAN]).unwrap();
+        let j = JobBuilder::new("nan", curve)
+            .servers(1, 2)
+            .length(3.0)
+            .slack_factor(1.2)
+            .power(100.0)
+            .build()
+            .unwrap();
+        let ctx = ample(vec![10.0; 4]);
+        assert!(plan_fleet_greedy(std::slice::from_ref(&j), &ctx).is_err());
+    }
+
+    #[test]
+    fn portfolio_never_worse_than_sequential() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for case in 0..20 {
+            let n_jobs = 2 + (case % 3);
+            let jobs: Vec<JobSpec> = (0..n_jobs)
+                .map(|i| {
+                    let mut j = job(
+                        &format!("j{i}"),
+                        rng.range(1.0, 4.0),
+                        rng.range(1.2, 2.5),
+                        2,
+                    );
+                    j.arrival = (rng.below(3)) as usize;
+                    j
+                })
+                .collect();
+            let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+            let carbon: Vec<f64> = (0..end).map(|_| rng.range(5.0, 100.0)).collect();
+            let ctx = PlanContext::uniform(0, 4, carbon).unwrap();
+            let seq = plan_fleet_sequential(&jobs, &ctx);
+            let Ok(seq) = seq else { continue };
+            let fleet = plan_fleet(&jobs, &ctx).unwrap();
+            let fg = fleet.forecast_carbon_g(&jobs, &ctx);
+            let sg = seq.forecast_carbon_g(&jobs, &ctx);
+            assert!(
+                fg <= sg + 1e-9,
+                "case {case}: fleet {fg} worse than sequential {sg}"
+            );
+            assert!(fleet.respects_capacity(&ctx), "case {case}");
+            assert!(fleet.all_complete(&jobs), "case {case}");
+        }
+    }
+
+    #[test]
+    fn independent_truncate_leaves_contended_jobs_incomplete() {
+        // Both jobs independently want slot 1 (c=1) at full scale; the
+        // second gets clipped to zero there and cannot finish.
+        let jobs = vec![job("a", 2.0, 3.0, 2), job("b", 2.0, 3.0, 2)];
+        let ctx = PlanContext::uniform(0, 2, vec![100.0, 1.0, 100.0, 100.0, 100.0, 100.0])
+            .unwrap();
+        let fs = independent_truncate(|j, c| greedy::plan(j, c), &jobs, &ctx).unwrap();
+        assert!(fs.respects_capacity(&ctx));
+        assert!(!fs.all_complete(&jobs));
+        // The fleet engine completes both on the same instance.
+        let fleet = plan_fleet(&jobs, &ctx).unwrap();
+        assert!(fleet.all_complete(&jobs));
+        assert!(fleet.respects_capacity(&ctx));
+    }
+
+    #[test]
+    fn staggered_arrivals_stay_in_their_windows() {
+        let mut a = job("a", 3.0, 1.5, 2);
+        a.arrival = 2;
+        let b = job("b", 2.0, 2.0, 2);
+        let jobs = vec![b, a];
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+        let carbon: Vec<f64> = (0..end).map(|i| 10.0 + (i as f64)).collect();
+        let ctx = PlanContext::uniform(0, 3, carbon).unwrap();
+        let fs = plan_fleet(&jobs, &ctx).unwrap();
+        assert!(fs.all_complete(&jobs));
+        for (j, s) in jobs.iter().zip(&fs.schedules) {
+            assert_eq!(s.arrival, j.arrival);
+            assert!(s.n_slots() <= j.n_slots());
+        }
+    }
+
+    #[test]
+    fn trim_removes_post_completion_allocations() {
+        let j = job("t", 1.0, 3.0, 2); // W=1, 3-slot window
+        let mut fs = FleetSchedule {
+            schedules: vec![Schedule::new(0, vec![2, 2, 1])],
+        };
+        // Rate 2 in slot 0 finishes W=1 mid-slot: slots 1-2 are dead
+        // weight that would hold capacity without contributing anything.
+        fs.trim_completed_tails(std::slice::from_ref(&j));
+        assert_eq!(fs.schedules[0].alloc, vec![2, 0, 0]);
+        // Unfinished schedules are left untouched.
+        let long = job("l", 3.0, 1.0, 1);
+        let mut fs2 = FleetSchedule {
+            schedules: vec![Schedule::new(0, vec![1, 0, 1])],
+        };
+        fs2.trim_completed_tails(std::slice::from_ref(&long));
+        assert_eq!(fs2.schedules[0].alloc, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn zero_work_job_gets_empty_schedule() {
+        let mut jobs = vec![job("a", 2.0, 1.5, 2)];
+        jobs.push(JobSpec {
+            length_hours: 1e-12,
+            ..jobs[0].clone()
+        });
+        // length must stay positive for validate(); 1e-12 is below the
+        // engine's work epsilon so the job is trivially complete.
+        let ctx = ample(vec![10.0, 20.0, 30.0]);
+        let fs = plan_fleet_greedy(&jobs, &ctx).unwrap();
+        assert!(fs.schedules[1].alloc.iter().all(|&a| a == 0));
+    }
+}

@@ -18,63 +18,34 @@
 //!   schedules are deterministic and finish as early as possible among
 //!   equal-carbon optima.
 
+use crate::sched::fleet::{self, PlanContext};
 use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
 use anyhow::{bail, Result};
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
-/// Heap entry: candidate allocation step.
-#[derive(Debug, Clone, Copy)]
-struct Cand {
-    /// Work added per unit carbon if this step is taken.
-    priority: f64,
-    /// Slot index (relative to arrival).
-    slot: usize,
-    /// Target server count after this step.
-    servers: usize,
-    /// Work added by this step.
-    work: f64,
-}
-
-impl PartialEq for Cand {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-impl Eq for Cand {}
-
-impl Ord for Cand {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Max-heap on priority; ties -> earlier slot, then fewer servers.
-        self.priority
-            .partial_cmp(&other.priority)
-            .expect("NaN priority")
-            .then_with(|| other.slot.cmp(&self.slot))
-            .then_with(|| other.servers.cmp(&self.servers))
-    }
-}
-impl PartialOrd for Cand {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
 
 /// Compute the carbon-optimal schedule for `job` given per-slot carbon
 /// forecasts `carbon` (length >= job.n_slots(); only the first n are
 /// used). Returns an error if even the all-`M` schedule cannot finish the
-/// work (infeasible deadline).
+/// work (infeasible deadline), or if the forecast/curve contain
+/// non-finite values.
+///
+/// Since the fleet refactor this is literally the degenerate one-job,
+/// ample-capacity case of [`fleet::plan_fleet_greedy`] — one heap loop
+/// serves both granularities, so priority/tie-break/validation rules
+/// cannot diverge between the single-job and fleet planners.
 pub fn plan(job: &JobSpec, carbon: &[f64]) -> Result<Schedule> {
     let n = job.n_slots();
     if carbon.len() < n {
         bail!("forecast covers {} slots, need {}", carbon.len(), n);
     }
+    if let Some(i) = carbon[..n].iter().position(|c| !c.is_finite() || *c < 0.0) {
+        bail!("forecast slot {i} is invalid: {}", carbon[i]);
+    }
     let curve = job.curve.at_progress(0.0);
-    let m = job.min_servers;
     let mm = job.max_servers;
     let total = job.total_work();
 
-    // Feasibility bound.
+    // Feasibility bound (kept here for the clearer single-job message).
     let max_per_slot = curve.capacity(mm);
     if max_per_slot * (n as f64) < total - 1e-9 {
         bail!(
@@ -86,41 +57,15 @@ pub fn plan(job: &JobSpec, carbon: &[f64]) -> Result<Schedule> {
         );
     }
 
-    let mut heap: BinaryHeap<Cand> = BinaryHeap::with_capacity(n);
-    let bundle_work = curve.capacity(m);
-    for i in 0..n {
-        let c = carbon[i].max(1e-9);
-        heap.push(Cand {
-            priority: bundle_work / (m as f64 * c),
-            slot: i,
-            servers: m,
-            work: bundle_work,
-        });
-    }
-
-    let mut alloc = vec![0usize; n];
-    let mut done = 0.0;
-    while done < total - 1e-9 {
-        let cand = heap.pop().expect("feasibility guaranteed above");
-        alloc[cand.slot] = cand.servers;
-        done += cand.work;
-        if cand.servers < mm {
-            let j = cand.servers + 1;
-            let w = curve.marginal(j);
-            if w > 0.0 {
-                let c = carbon[cand.slot].max(1e-9);
-                heap.push(Cand {
-                    priority: w / c,
-                    slot: cand.slot,
-                    servers: j,
-                    work: w,
-                });
-            }
-        }
-    }
-
-    let _ = done;
-    Ok(Schedule::new(job.arrival, alloc))
+    // Relative indexing: the fleet context spans exactly the job's own
+    // window, with per-slot capacity `M` so caps never bind.
+    let ctx = PlanContext::new(job.arrival, vec![mm; n], carbon[..n].to_vec())?;
+    let fs = fleet::plan_fleet_greedy(std::slice::from_ref(job), &ctx)?;
+    Ok(fs
+        .schedules
+        .into_iter()
+        .next()
+        .expect("one job in, one schedule out"))
 }
 
 /// Algorithm 1 followed by a local-search polish (our implementation
@@ -198,7 +143,7 @@ pub fn plan_polished(job: &JobSpec, carbon: &[f64]) -> Result<Schedule> {
         let n = s.alloc.len();
         let sources: Vec<usize> = (0..n).filter(|&i| s.alloc[i] > 0).collect();
         let mut targets: Vec<usize> = (0..n).collect();
-        targets.sort_by(|&a, &b| carbon[a].partial_cmp(&carbon[b]).expect("NaN carbon"));
+        targets.sort_by(|&a, &b| carbon[a].total_cmp(&carbon[b]));
         targets.truncate(32);
         for &i in &sources {
             for &j in &targets {
@@ -340,6 +285,28 @@ mod tests {
         let s = plan(&job, &[5.0, 50.0]).unwrap();
         assert_eq!(s.alloc, vec![2, 0]);
         assert!(s.respects_bounds(&job));
+    }
+
+    #[test]
+    fn degenerate_inputs_err_instead_of_panic() {
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(1.5)
+            .build()
+            .unwrap();
+        assert!(plan(&job, &[10.0, f64::NAN, 20.0]).is_err());
+        assert!(plan(&job, &[10.0, f64::INFINITY, 20.0]).is_err());
+        assert!(plan(&job, &[10.0, -5.0, 20.0]).is_err());
+        // A NaN marginal slips past curve validation (NaN < 0.0 is false);
+        // the planner must reject the candidate, not panic in the heap.
+        let nan_curve = MarginalCapacityCurve::from_marginals(vec![1.0, f64::NAN]).unwrap();
+        let j2 = JobBuilder::new("j2", nan_curve)
+            .servers(1, 2)
+            .length(3.0)
+            .slack_factor(1.2)
+            .build()
+            .unwrap();
+        assert!(plan(&j2, &[10.0; 4]).is_err());
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Scheduling policies: CarbonScaler's greedy Algorithm 1 and the paper's
-//! baselines, plus the schedule type and accounting.
+//! baselines, the capacity-constrained fleet planning engine, plus the
+//! schedule type and accounting.
 
 pub mod baselines;
+pub mod fleet;
 pub mod greedy;
 pub mod policy;
 pub mod schedule;
@@ -10,5 +12,6 @@ pub use baselines::{
     CarbonAgnostic, OracleStaticScale, StaticScale, SuspendResumeDeadline,
     SuspendResumeThreshold,
 };
+pub use fleet::{FleetSchedule, IndependentFleet, PlanContext};
 pub use policy::{CarbonScalerPolicy, Policy};
 pub use schedule::{Schedule, ScheduleAccounting};

@@ -1,8 +1,21 @@
 //! The policy abstraction: every scheduling strategy (CarbonScaler's
-//! greedy and all baselines) maps a job + carbon forecast to a
-//! [`Schedule`], so the advisor, coordinator, and experiments treat them
-//! uniformly.
+//! greedy and all baselines) maps jobs + carbon forecasts to schedules,
+//! so the advisor, coordinator, cluster controller, and experiments treat
+//! them uniformly.
+//!
+//! Two planning granularities share one trait:
+//! * [`Policy::plan`] — the original single-job path: one job, an
+//!   unbounded cluster, a forecast window relative to arrival;
+//! * [`Policy::plan_fleet`] — the fleet path (DESIGN.md §8): a job set
+//!   with arrivals and deadlines, per-slot cluster capacity, and a shared
+//!   forecast, all carried by a [`PlanContext`]. The default
+//!   implementation plans each job independently with `plan` and
+//!   truncates per-slot totals to capacity, so every baseline
+//!   participates in fleet experiments unchanged; capacity-aware
+//!   policies override it. The single-job path is exactly the
+//!   degenerate one-job, ample-capacity case of the fleet path.
 
+use crate::sched::fleet::{self, FleetSchedule, PlanContext};
 use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
 use anyhow::Result;
@@ -16,9 +29,19 @@ pub trait Policy {
     /// `[job.arrival, job.deadline())` (relative indexing: `carbon[0]` is
     /// the arrival slot).
     fn plan(&self, job: &JobSpec, carbon: &[f64]) -> Result<Schedule>;
+
+    /// Plan a fleet of jobs against shared per-slot capacity. The default
+    /// plans each job independently with [`Policy::plan`] and truncates
+    /// totals to capacity in job order — the naive admission the paper's
+    /// §6 capacity discussion warns about, under which contended jobs can
+    /// end up incomplete. Capacity-aware policies override this.
+    fn plan_fleet(&self, jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+        fleet::independent_truncate(|j, c| self.plan(j, c), jobs, ctx)
+    }
 }
 
-/// CarbonScaler's greedy policy (Algorithm 1).
+/// CarbonScaler's greedy policy (Algorithm 1; fleet-level Algorithm 1
+/// generalization for `plan_fleet`).
 #[derive(Debug, Clone, Default)]
 pub struct CarbonScalerPolicy;
 
@@ -30,6 +53,12 @@ impl Policy for CarbonScalerPolicy {
     fn plan(&self, job: &JobSpec, carbon: &[f64]) -> Result<Schedule> {
         // Algorithm 1 + the chronological-execution polish (greedy.rs docs).
         crate::sched::greedy::plan_polished(job, carbon)
+    }
+
+    fn plan_fleet(&self, jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+        // Interleaved capacity-capped greedy + sequential-admission
+        // portfolio with capacity-aware polish (fleet.rs docs).
+        fleet::plan_fleet(jobs, ctx)
     }
 }
 
@@ -50,5 +79,41 @@ mod tests {
         let s = p.plan(&job, &[10.0, 100.0, 20.0]).unwrap();
         assert_eq!(p.name(), "carbonscaler");
         assert!(s.completion_hours(&job).is_some());
+    }
+
+    #[test]
+    fn fleet_api_usable_through_trait_object() {
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(1.5)
+            .build()
+            .unwrap();
+        let ctx = PlanContext::uniform(0, 8, vec![10.0, 100.0, 20.0]).unwrap();
+        for p in [
+            Box::new(CarbonScalerPolicy) as Box<dyn Policy>,
+            Box::new(crate::sched::CarbonAgnostic) as Box<dyn Policy>,
+        ] {
+            let fs = p.plan_fleet(std::slice::from_ref(&job), &ctx).unwrap();
+            assert_eq!(fs.n_jobs(), 1);
+            assert!(fs.respects_capacity(&ctx));
+            assert!(fs.all_complete(std::slice::from_ref(&job)));
+        }
+    }
+
+    #[test]
+    fn default_fleet_path_matches_single_job_plan_when_uncontended() {
+        // With ample capacity the default plan_fleet is exactly the
+        // single-job plan — the degenerate one-job case.
+        let job = JobBuilder::new("j", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(1.5)
+            .build()
+            .unwrap();
+        let carbon = vec![10.0, 100.0, 20.0];
+        let p = crate::sched::SuspendResumeDeadline;
+        let single = p.plan(&job, &carbon).unwrap();
+        let ctx = PlanContext::uniform(0, 64, carbon).unwrap();
+        let fleet = p.plan_fleet(std::slice::from_ref(&job), &ctx).unwrap();
+        assert_eq!(fleet.schedules[0].alloc, single.alloc);
     }
 }
