@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate for the CI bench job.
+
+Compares BENCH_scheduler.json (fresh run) against BENCH_baseline.json
+(committed). Cases whose name is listed in the baseline's "gated" array
+fail the build when mean_ns regresses more than TOLERANCE over the
+baseline; every other shared case is reported informationally (CI runners
+are too noisy to gate sub-millisecond cases hard).
+
+Refresh the baseline from a quiet machine by copying the measured
+mean_ns values from BENCH_scheduler.json into BENCH_baseline.json.
+"""
+
+import json
+import sys
+
+TOLERANCE = 1.25  # >25% regression fails
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(baseline_path, measured_path):
+    baseline = load(baseline_path)
+    measured = load(measured_path)
+    base = {r["name"]: r["mean_ns"] for r in baseline["results"]}
+    meas = {r["name"]: r["mean_ns"] for r in measured["results"]}
+    gated = set(baseline.get("gated", []))
+
+    failures = []
+    # A gated name with no baseline entry would silently disable the gate
+    # (e.g. a bench case was renamed but only 'results' was updated).
+    for name in sorted(gated - set(base)):
+        failures.append(f"gated case {name!r} has no baseline entry — gate misconfigured")
+    print(f"{'case':<48} {'baseline':>12} {'measured':>12} {'ratio':>7}")
+    for name, base_ns in base.items():
+        if name not in meas:
+            if name in gated:
+                failures.append(f"gated case {name!r} missing from bench output")
+            else:
+                print(f"{name:<48} {base_ns:>12.0f} {'missing':>12} {'-':>7}")
+            continue
+        ratio = meas[name] / base_ns if base_ns > 0 else float("inf")
+        marker = " <-- GATED" if name in gated else ""
+        print(f"{name:<48} {base_ns:>12.0f} {meas[name]:>12.0f} {ratio:>6.2f}x{marker}")
+        if name in gated and ratio > TOLERANCE:
+            failures.append(
+                f"{name}: {meas[name]:.0f} ns vs baseline {base_ns:.0f} ns "
+                f"({ratio:.2f}x > {TOLERANCE}x)"
+            )
+
+    for name in sorted(set(meas) - set(base)):
+        print(f"{name:<48} {'(new case — add to baseline)':>33}")
+
+    if failures:
+        print("\nFAIL: fleet-scale benchmark regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nOK: no gated regressions.")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(f"usage: {sys.argv[0]} <baseline.json> <measured.json>", file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -8,6 +8,7 @@
 use carbonscaler::carbon::{regions, synthetic};
 use carbonscaler::scaling::models::presets;
 use carbonscaler::sched::fleet::{self, PlanContext};
+use carbonscaler::sched::geo::{self, GeoPlanContext, MigrationPolicy};
 use carbonscaler::sched::greedy;
 use carbonscaler::util::bench::{bench, BenchResult};
 use carbonscaler::util::json::Json;
@@ -104,6 +105,39 @@ fn main() {
         }
     }
 
+    println!("\n== geo engine (multi-region placement, 96-slot windows) ==");
+    {
+        let (n_jobs, n_regions, cap) = (40usize, 8usize, 16usize);
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| {
+                JobBuilder::new(&format!("g{i}"), presets::RESNET18.curve(8))
+                    .servers(1, 8)
+                    .arrival(i % 24)
+                    .length(64.0)
+                    .slack_factor(1.5)
+                    .build()
+                    .unwrap()
+            })
+            .collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+        let geo_ctx = GeoPlanContext::synthetic(
+            &regions::REGIONS[..n_regions],
+            0,
+            end,
+            cap,
+            1,
+            MigrationPolicy::none(),
+        )
+        .unwrap();
+        results.push(bench(
+            &format!("geo plan jobs={n_jobs} regions={n_regions} cap={cap}"),
+            1,
+            5,
+            budget,
+            || geo::plan_geo(&jobs, &geo_ctx).expect("bench geo feasible"),
+        ));
+    }
+
     let rows: Vec<Json> = results
         .iter()
         .map(|r| {
@@ -118,8 +152,12 @@ fn main() {
     let doc = Json::obj()
         .set("bench", "scheduler")
         .set("results", Json::Arr(rows));
-    match std::fs::write("BENCH_scheduler.json", doc.to_string_pretty()) {
-        Ok(()) => println!("\nwrote BENCH_scheduler.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_scheduler.json: {e}"),
+    // Cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the output at the workspace root so local runs and the CI
+    // bench gate agree on the location.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scheduler.json");
+    match std::fs::write(&out, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
     }
 }

@@ -3,11 +3,16 @@
 //! times, regions, slack factors, job lengths, and — via the fleet
 //! engine — cluster sizes and job mixes under shared capacity.
 
-use crate::advisor::sim::{simulate, simulate_fleet, FleetSimResult, SimConfig, SimResult};
+use crate::advisor::sim::{
+    simulate, simulate_fleet, simulate_geo, simulate_geo_agnostic, FleetSimResult, GeoSimResult,
+    SimConfig, SimResult,
+};
 use crate::carbon::trace::CarbonTrace;
+use crate::carbon::{regions, synthetic};
 use crate::sched::fleet::IndependentFleet;
+use crate::sched::geo::MigrationPolicy;
 use crate::sched::policy::Policy;
-use crate::sched::CarbonScalerPolicy;
+use crate::sched::{CarbonAgnostic, CarbonScalerPolicy};
 use crate::workload::job::JobSpec;
 use anyhow::Result;
 
@@ -154,12 +159,103 @@ pub fn sweep_cluster_sizes(
         .collect())
 }
 
+/// Geo what-if: the same job mix and per-region capacity under (a) joint
+/// geo placement, (b) the carbon-agnostic round-robin baseline, and (c)
+/// the best single region able to host the whole fleet — the headline
+/// comparison of the `geo` experiment (DESIGN.md §9). This supersedes the
+/// single-trace cluster-size sweep as the advisor's capacity-planning
+/// question: instead of "how small can one cluster get", it answers
+/// "what does placement freedom across the catalog buy".
+#[derive(Debug, Clone)]
+pub struct GeoWhatIf {
+    pub geo: GeoSimResult,
+    pub agnostic: GeoSimResult,
+    /// Lowest-carbon single region that completes the whole fleet, if any.
+    pub best_single: Option<(String, FleetSimResult)>,
+}
+
+impl GeoWhatIf {
+    /// Fractional saving of geo placement over the carbon-agnostic
+    /// baseline (only meaningful when the baseline completes comparable
+    /// work; check `agnostic.all_finished()` first).
+    pub fn savings_vs_agnostic(&self) -> f64 {
+        savings_pct(self.agnostic.carbon_g, self.geo.carbon_g)
+    }
+
+    /// Fractional saving of geo placement over the best single region.
+    pub fn savings_vs_single(&self) -> Option<f64> {
+        self.best_single
+            .as_ref()
+            .map(|(_, r)| savings_pct(r.carbon_g, self.geo.carbon_g))
+    }
+}
+
+/// Run one job mix across a set of regional traces three ways (geo,
+/// agnostic round-robin, best single region), each region a uniform
+/// cluster of `capacity` servers.
+pub fn geo_vs_baselines(
+    jobs: &[JobSpec],
+    truths: &[CarbonTrace],
+    capacity: usize,
+    migration: MigrationPolicy,
+    cfg: &SimConfig,
+) -> Result<GeoWhatIf> {
+    let geo = simulate_geo(jobs, truths, capacity, migration, cfg)?;
+    let agnostic = simulate_geo_agnostic(jobs, truths, capacity, cfg)?;
+    let mut best_single: Option<(String, FleetSimResult)> = None;
+    for truth in truths {
+        let Ok(r) = simulate_fleet(&CarbonScalerPolicy, jobs, truth, capacity, cfg) else {
+            continue; // fleet does not fit this region alone
+        };
+        if !r.all_finished() {
+            continue;
+        }
+        if best_single
+            .as_ref()
+            .map_or(true, |(_, b)| r.carbon_g < b.carbon_g)
+        {
+            best_single = Some((truth.region.clone(), r));
+        }
+    }
+    Ok(GeoWhatIf {
+        geo,
+        agnostic,
+        best_single,
+    })
+}
+
+/// Fig 7-style 37-region sweep: for each region in the catalog, the mean
+/// carbon saving of CarbonScaler over carbon-agnostic execution for the
+/// given job template across `n_starts` start times on a synthetic trace
+/// of `hours` hours. Returns `(region, mean saving)` in catalog order.
+pub fn sweep_regions(
+    template: &JobSpec,
+    hours: usize,
+    seed: u64,
+    n_starts: usize,
+    cfg: &SimConfig,
+) -> Result<Vec<(&'static str, f64)>> {
+    let mut out = Vec::with_capacity(regions::REGIONS.len());
+    for r in regions::REGIONS {
+        let truth = synthetic::generate(r, hours, seed);
+        let starts = even_starts(hours, template.n_slots(), n_starts);
+        let sav = savings_vs_baseline(
+            &CarbonScalerPolicy,
+            &CarbonAgnostic,
+            template,
+            &truth,
+            &starts,
+            cfg,
+        )?;
+        out.push((r.name, crate::util::stats::mean(&sav)));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::carbon::{regions, synthetic};
     use crate::scaling::MarginalCapacityCurve;
-    use crate::sched::CarbonAgnostic;
     use crate::workload::job::JobBuilder;
 
     fn template() -> JobSpec {
@@ -255,6 +351,59 @@ mod tests {
         // The roomiest cluster must be feasible and complete everything.
         let (_, biggest) = rows.last().unwrap();
         assert!(biggest.as_ref().unwrap().fleet.all_finished());
+    }
+
+    #[test]
+    fn geo_beats_or_matches_best_single_region() {
+        let truths: Vec<CarbonTrace> = ["ontario", "netherlands", "california"]
+            .iter()
+            .map(|n| synthetic::generate(regions::by_name(n).unwrap(), 14 * 24, 11))
+            .collect();
+        let jobs: Vec<JobSpec> = (0..4)
+            .map(|i| {
+                let mut j = JobBuilder::new("g", MarginalCapacityCurve::linear(4))
+                    .length(8.0)
+                    .slack_factor(1.8)
+                    .power(1000.0)
+                    .build()
+                    .unwrap();
+                j.name = format!("g{i}");
+                j.arrival = i;
+                j
+            })
+            .collect();
+        let cmp = geo_vs_baselines(
+            &jobs,
+            &truths,
+            4,
+            MigrationPolicy::none(),
+            &SimConfig::default(),
+        )
+        .unwrap();
+        assert!(cmp.geo.all_finished());
+        // With a perfect forecast the geo portfolio contains every
+        // single-region plan, so it can never lose to the best of them.
+        let (name, single) = cmp.best_single.as_ref().expect("some region fits");
+        assert!(
+            cmp.geo.carbon_g <= single.carbon_g + 1e-6,
+            "geo {} worse than single {} ({name})",
+            cmp.geo.carbon_g,
+            single.carbon_g
+        );
+        assert!(cmp.savings_vs_single().unwrap() >= -1e-9);
+    }
+
+    #[test]
+    fn region_sweep_covers_the_catalog() {
+        let template = template();
+        let rows = sweep_regions(&template, 7 * 24, 5, 2, &SimConfig::default()).unwrap();
+        assert_eq!(rows.len(), regions::REGIONS.len());
+        for (name, sav) in &rows {
+            assert!(sav.is_finite(), "{name}: non-finite saving");
+        }
+        // Variable regions (Ontario) must show clearly positive savings.
+        let ontario = rows.iter().find(|(n, _)| *n == "ontario").unwrap().1;
+        assert!(ontario > 0.0, "ontario saving {ontario}");
     }
 
     #[test]

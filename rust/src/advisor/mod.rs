@@ -5,9 +5,10 @@ pub mod analysis;
 pub mod sim;
 
 pub use analysis::{
-    even_starts, fleet_vs_independent, savings_pct, savings_vs_baseline, summarize,
-    sweep_cluster_sizes, sweep_start_times, FleetComparison,
+    even_starts, fleet_vs_independent, geo_vs_baselines, savings_pct, savings_vs_baseline,
+    summarize, sweep_cluster_sizes, sweep_regions, sweep_start_times, FleetComparison, GeoWhatIf,
 };
 pub use sim::{
-    simulate, simulate_fleet, FleetJobResult, FleetSimResult, SimConfig, SimResult,
+    simulate, simulate_fleet, simulate_geo, simulate_geo_agnostic, FleetJobResult,
+    FleetSimResult, GeoJobResult, GeoSimResult, SimConfig, SimResult,
 };

@@ -21,6 +21,7 @@ use crate::carbon::forecast::ForecastProvider;
 use crate::carbon::trace::CarbonTrace;
 use crate::scaling::PhasedCurve;
 use crate::sched::fleet::{FleetSchedule, PlanContext};
+use crate::sched::geo::{self, GeoFleetSchedule, GeoPlanContext, GeoRegion, MigrationPolicy};
 use crate::sched::policy::Policy;
 use crate::sched::schedule::Schedule;
 use crate::util::rng::Rng;
@@ -353,6 +354,179 @@ pub fn simulate_fleet(
     })
 }
 
+/// Per-job outcome of a geo-distributed fleet simulation.
+#[derive(Debug, Clone)]
+pub struct GeoJobResult {
+    pub name: String,
+    /// Region of the job's first active slot ("-" if it never runs).
+    pub region: String,
+    pub carbon_g: f64,
+    pub energy_kwh: f64,
+    pub server_hours: f64,
+    pub completion_hours: Option<f64>,
+}
+
+/// Outcome of simulating a geo-placed fleet (DESIGN.md §9).
+#[derive(Debug, Clone)]
+pub struct GeoSimResult {
+    pub jobs: Vec<GeoJobResult>,
+    /// Fleet totals, charged at each slot's *assigned region's* ground
+    /// truth.
+    pub carbon_g: f64,
+    pub energy_kwh: f64,
+    pub server_hours: f64,
+    pub n_finished: usize,
+    /// Chronological region hand-offs across the committed plan.
+    pub migrations: usize,
+    /// The committed geo plan (for placement tables and capacity audits).
+    pub planned: GeoFleetSchedule,
+}
+
+impl GeoSimResult {
+    pub fn all_finished(&self) -> bool {
+        self.n_finished == self.jobs.len()
+    }
+}
+
+/// Build the geo planning context the scheduler sees: one region per
+/// ground-truth trace, uniform per-region capacity, forecasts optionally
+/// perturbed per `cfg.forecast_error` (independent error stream per
+/// region).
+fn geo_forecast_context(
+    jobs: &[JobSpec],
+    truths: &[CarbonTrace],
+    capacity: usize,
+    migration: MigrationPolicy,
+    cfg: &SimConfig,
+) -> Result<GeoPlanContext> {
+    if jobs.is_empty() {
+        bail!("empty fleet");
+    }
+    if truths.is_empty() {
+        bail!("no region traces");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let start = jobs.iter().map(|j| j.arrival).min().unwrap();
+    let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+    let regions = truths
+        .iter()
+        .enumerate()
+        .map(|(i, truth)| {
+            let forecast = if cfg.forecast_error > 0.0 {
+                ForecastProvider::with_error(
+                    truth.clone(),
+                    cfg.forecast_error,
+                    rng.fork(i as u64 + 1).next_u64(),
+                )
+            } else {
+                ForecastProvider::perfect(truth.clone())
+            };
+            let carbon: Vec<f64> = (0..end - start)
+                .map(|k| forecast.forecast_at(start, start + k))
+                .collect();
+            Ok(GeoRegion {
+                name: truth.region.clone(),
+                ctx: PlanContext::uniform(start, capacity, carbon)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    GeoPlanContext::new(regions, migration)
+}
+
+/// Charge a committed geo plan at ground truth: each active slot pays its
+/// assigned region's true intensity.
+fn account_geo(
+    jobs: &[JobSpec],
+    truths: &[CarbonTrace],
+    planned: GeoFleetSchedule,
+) -> GeoSimResult {
+    let mut out = Vec::with_capacity(jobs.len());
+    let (mut carbon_g, mut energy_kwh, mut server_hours) = (0.0, 0.0, 0.0);
+    let mut n_finished = 0usize;
+    for (job, gs) in jobs.iter().zip(&planned.schedules) {
+        let values: Vec<f64> = gs
+            .alloc
+            .iter()
+            .zip(&gs.region)
+            .enumerate()
+            .map(|(rel, (a, r))| {
+                if *a > 0 && *r < truths.len() {
+                    truths[*r].at(gs.arrival + rel)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let truth = CarbonTrace::new("geo-truth", values);
+        let mut s = gs.as_schedule();
+        s.arrival = 0;
+        let acc = s.accounting(job, &truth);
+        carbon_g += acc.carbon_g;
+        energy_kwh += acc.energy_kwh;
+        server_hours += acc.server_hours;
+        if acc.finished() {
+            n_finished += 1;
+        }
+        let region = gs
+            .alloc
+            .iter()
+            .zip(&gs.region)
+            .find(|(a, _)| **a > 0)
+            .map(|(_, &r)| truths[r].region.clone())
+            .unwrap_or_else(|| "-".into());
+        out.push(GeoJobResult {
+            name: job.name.clone(),
+            region,
+            carbon_g: acc.carbon_g,
+            energy_kwh: acc.energy_kwh,
+            server_hours: acc.server_hours,
+            completion_hours: acc.completion_hours,
+        });
+    }
+    let migrations = planned.total_transitions();
+    GeoSimResult {
+        jobs: out,
+        carbon_g,
+        energy_kwh,
+        server_hours,
+        n_finished,
+        migrations,
+        planned,
+    }
+}
+
+/// Simulate a geo-distributed fleet: jobs are placed and scheduled
+/// jointly by the geo engine across one uniform cluster of `capacity`
+/// servers per region (one region per trace in `truths`), planning on the
+/// (possibly erroneous) forecast and charged at each region's ground
+/// truth. Same fidelity envelope as [`simulate_fleet`]: only
+/// `forecast_error` and `seed` of [`SimConfig`] are honored.
+pub fn simulate_geo(
+    jobs: &[JobSpec],
+    truths: &[CarbonTrace],
+    capacity: usize,
+    migration: MigrationPolicy,
+    cfg: &SimConfig,
+) -> Result<GeoSimResult> {
+    let ctx = geo_forecast_context(jobs, truths, capacity, migration, cfg)?;
+    let planned = geo::plan_geo(jobs, &ctx)?;
+    Ok(account_geo(jobs, truths, planned))
+}
+
+/// The carbon-agnostic placement baseline under the same contexts:
+/// round-robin regions, base allocation from arrival, truncation to
+/// capacity (jobs may end up incomplete — report, don't error).
+pub fn simulate_geo_agnostic(
+    jobs: &[JobSpec],
+    truths: &[CarbonTrace],
+    capacity: usize,
+    cfg: &SimConfig,
+) -> Result<GeoSimResult> {
+    let ctx = geo_forecast_context(jobs, truths, capacity, MigrationPolicy::none(), cfg)?;
+    let planned = geo::plan_geo_agnostic(jobs, &ctx)?;
+    Ok(account_geo(jobs, truths, planned))
+}
+
 /// Work the *plan* expects to have completed by the end of relative slot
 /// `rel` (using the planner's own curve estimate).
 fn expected_progress(plan: &Schedule, planning_job: &JobSpec, arrival: usize, rel: usize) -> f64 {
@@ -573,6 +747,83 @@ mod tests {
         .unwrap();
         // Plans made on a noisy forecast still complete (charged at truth).
         assert!(r.all_finished());
+    }
+
+    #[test]
+    fn geo_sim_places_fleet_in_cheapest_region_when_roomy() {
+        let truths = vec![
+            synthetic::generate(regions::by_name("india").unwrap(), 14 * 24, 3),
+            synthetic::generate(regions::by_name("iceland").unwrap(), 14 * 24, 3),
+        ];
+        let jobs: Vec<crate::workload::job::JobSpec> = (0..3)
+            .map(|i| {
+                let mut j = job(8.0, 1.5, 4);
+                j.name = format!("g{i}");
+                j
+            })
+            .collect();
+        let r = simulate_geo(
+            &jobs,
+            &truths,
+            12,
+            crate::sched::MigrationPolicy::none(),
+            &SimConfig::default(),
+        )
+        .unwrap();
+        assert!(r.all_finished());
+        assert!(r.carbon_g > 0.0);
+        assert_eq!(r.migrations, 0);
+        // India's mean is ~22x Iceland's: everything must land in Iceland.
+        for j in &r.jobs {
+            assert_eq!(j.region, "iceland", "{} placed in {}", j.name, j.region);
+        }
+    }
+
+    #[test]
+    fn geo_sim_survives_forecast_error() {
+        let truths = vec![
+            synthetic::generate(regions::by_name("ontario").unwrap(), 14 * 24, 5),
+            synthetic::generate(regions::by_name("california").unwrap(), 14 * 24, 5),
+        ];
+        let jobs: Vec<crate::workload::job::JobSpec> = (0..2)
+            .map(|i| {
+                let mut j = job(8.0, 2.0, 4);
+                j.name = format!("e{i}");
+                j
+            })
+            .collect();
+        let r = simulate_geo(
+            &jobs,
+            &truths,
+            8,
+            crate::sched::MigrationPolicy::none(),
+            &SimConfig {
+                forecast_error: 0.3,
+                seed: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(r.all_finished());
+    }
+
+    #[test]
+    fn geo_agnostic_round_robins_regions() {
+        let truths = vec![
+            synthetic::generate(regions::by_name("ontario").unwrap(), 14 * 24, 7),
+            synthetic::generate(regions::by_name("netherlands").unwrap(), 14 * 24, 7),
+        ];
+        let jobs: Vec<crate::workload::job::JobSpec> = (0..2)
+            .map(|i| {
+                let mut j = job(6.0, 1.5, 2);
+                j.name = format!("a{i}");
+                j
+            })
+            .collect();
+        let r = simulate_geo_agnostic(&jobs, &truths, 8, &SimConfig::default()).unwrap();
+        assert!(r.all_finished());
+        assert_eq!(r.jobs[0].region, "ontario");
+        assert_eq!(r.jobs[1].region, "netherlands");
     }
 
     #[test]

@@ -15,8 +15,9 @@
 //!   denial-free by construction.
 
 use crate::carbon::trace::CarbonTrace;
-use crate::cluster::state::Cluster;
+use crate::cluster::state::{Cluster, GeoCapacityLedger};
 use crate::sched::fleet::{self, PlanContext};
+use crate::sched::geo::{self, GeoPlanContext, GeoRegion, MigrationPolicy};
 use crate::sched::greedy;
 use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
@@ -100,28 +101,15 @@ impl ClusterController {
             return Ok(());
         }
         let start = self.hour;
-        let mut end = start + 1;
-        {
-            // Cluster allocations are keyed by job name: a duplicate would
-            // silently alias two tenants onto one allocation entry and
-            // corrupt capacity accounting.
-            let mut names: std::collections::BTreeSet<&str> =
-                self.jobs.iter().map(|j| j.spec.name.as_str()).collect();
-            for spec in &specs {
-                if spec.arrival < start {
-                    bail!("job {:?} arrives at h{} in the past", spec.name, spec.arrival);
-                }
-                if !names.insert(&spec.name) {
-                    bail!("duplicate job name {:?}", spec.name);
-                }
-                end = end.max(spec.deadline());
-            }
-        }
-        // The ledger must also cover existing plans' tails so their demand
-        // is visible in the residual.
-        for job in self.jobs.iter().filter(|j| !j.finished()) {
-            end = end.max(job.plan.arrival + job.plan.n_slots());
-        }
+        let end = admission_horizon_end(
+            start,
+            self.jobs.iter().map(|j| j.spec.name.as_str()).collect(),
+            &specs,
+            self.jobs
+                .iter()
+                .filter(|j| !j.finished())
+                .map(|j| j.plan.arrival + j.plan.n_slots()),
+        )?;
         let horizon = end - start;
         let mut ledger = self.cluster.ledger(start, horizon);
         for job in self.jobs.iter().filter(|j| !j.finished()) {
@@ -147,6 +135,33 @@ impl ClusterController {
                 realized: Vec::new(),
             });
         }
+        Ok(())
+    }
+
+    /// Submit a job with an externally computed plan (used by the geo
+    /// controller, which plans placement across several clusters and
+    /// dispatches each job's schedule to its assigned site). The caller is
+    /// responsible for the plan fitting this cluster — execution still
+    /// grants subject to capacity, so a bad plan degrades to denials, not
+    /// overcommitment.
+    pub fn submit_planned(&mut self, spec: JobSpec, plan: Schedule) -> Result<()> {
+        if spec.arrival < self.hour {
+            bail!("job {:?} arrives at h{} in the past", spec.name, spec.arrival);
+        }
+        if self.jobs.iter().any(|j| j.spec.name == spec.name) {
+            bail!("duplicate job name {:?}", spec.name);
+        }
+        self.jobs.push(JobRun {
+            spec,
+            plan,
+            done_work: 0.0,
+            carbon_g: 0.0,
+            server_hours: 0.0,
+            denials: 0,
+            recomputes: 0,
+            completion: None,
+            realized: Vec::new(),
+        });
         Ok(())
     }
 
@@ -253,6 +268,192 @@ impl ClusterController {
     }
 
     /// Run until all jobs finish or `max_hours` elapse.
+    pub fn run(&mut self, max_hours: usize) -> Result<()> {
+        for _ in 0..max_hours {
+            if self.all_done() {
+                break;
+            }
+            self.step_hour()?;
+        }
+        Ok(())
+    }
+}
+
+/// Shared batch-admission checks for [`ClusterController::submit_fleet`]
+/// and [`GeoClusterController::submit_geo`]: every spec must arrive at or
+/// after `start`, and no name may collide with `taken` (the already
+/// submitted tenants — allocations are keyed by job name, so a duplicate
+/// would silently alias two tenants onto one allocation entry) or within
+/// the batch. Returns one-past-the-last hour the planning ledger must
+/// cover: the max of `start + 1`, every spec's deadline, and every
+/// unfinished existing plan's tail (so pre-existing demand stays visible
+/// in the residual).
+fn admission_horizon_end<'a>(
+    start: usize,
+    mut taken: std::collections::BTreeSet<&'a str>,
+    specs: &'a [JobSpec],
+    plan_tails: impl Iterator<Item = usize>,
+) -> Result<usize> {
+    let mut end = start + 1;
+    for spec in specs {
+        if spec.arrival < start {
+            bail!("job {:?} arrives at h{} in the past", spec.name, spec.arrival);
+        }
+        if !taken.insert(&spec.name) {
+            bail!("duplicate job name {:?}", spec.name);
+        }
+        end = end.max(spec.deadline());
+    }
+    for tail in plan_tails {
+        end = end.max(tail);
+    }
+    Ok(end)
+}
+
+/// One regional site of a geo-distributed deployment: a named cluster
+/// with its own carbon trace and hour-stepped controller.
+pub struct GeoSite {
+    pub name: String,
+    pub controller: ClusterController,
+}
+
+/// Geo-distributed co-scheduler (DESIGN.md §9): several regional
+/// clusters, each with its own carbon signal, stepped in lockstep. Batches
+/// submitted through [`GeoClusterController::submit_geo`] are placed and
+/// scheduled jointly by the geo engine against every site's residual
+/// per-slot capacity; each job then executes entirely at its assigned
+/// site (execution-time migration is future work — the *planner* supports
+/// bounded migration, the controller dispatches single-region plans).
+pub struct GeoClusterController {
+    sites: Vec<GeoSite>,
+}
+
+impl GeoClusterController {
+    /// Build from `(region name, cluster, trace)` triples; names must be
+    /// unique.
+    pub fn new(sites: Vec<(String, Cluster, CarbonTrace)>) -> Result<Self> {
+        if sites.is_empty() {
+            bail!("geo controller needs at least one site");
+        }
+        let mut names = std::collections::BTreeSet::new();
+        for (name, _, _) in &sites {
+            if !names.insert(name.clone()) {
+                bail!("duplicate site name {name:?}");
+            }
+        }
+        Ok(GeoClusterController {
+            sites: sites
+                .into_iter()
+                .map(|(name, cluster, trace)| GeoSite {
+                    name,
+                    controller: ClusterController::new(cluster, trace),
+                })
+                .collect(),
+        })
+    }
+
+    pub fn sites(&self) -> &[GeoSite] {
+        &self.sites
+    }
+
+    pub fn hour(&self) -> usize {
+        self.sites[0].controller.hour()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.sites.iter().all(|s| s.controller.all_done())
+    }
+
+    /// All jobs across all sites, tagged with their site name.
+    pub fn jobs(&self) -> impl Iterator<Item = (&str, &JobRun)> {
+        self.sites
+            .iter()
+            .flat_map(|s| s.controller.jobs().iter().map(move |j| (s.name.as_str(), j)))
+    }
+
+    /// Submit a batch placed and scheduled jointly across all sites by the
+    /// geo engine, against the residual per-slot capacity that each site's
+    /// already-submitted, unfinished jobs leave behind. Every job lands at
+    /// exactly one site; committed totals respect each site's capacity, so
+    /// all-geo-submitted workloads execute denial-free. Errors when the
+    /// engine finds no placement completing every job.
+    pub fn submit_geo(&mut self, specs: Vec<JobSpec>) -> Result<()> {
+        if specs.is_empty() {
+            return Ok(());
+        }
+        let start = self.hour();
+        let end = admission_horizon_end(
+            start,
+            self.sites
+                .iter()
+                .flat_map(|s| s.controller.jobs().iter().map(|j| j.spec.name.as_str()))
+                .collect(),
+            &specs,
+            self.sites.iter().flat_map(|s| {
+                s.controller
+                    .jobs()
+                    .iter()
+                    .filter(|j| !j.finished())
+                    .map(|j| j.plan.arrival + j.plan.n_slots())
+            }),
+        )?;
+        let horizon = end - start;
+
+        // Region-tagged residual capacity (existing plans were not
+        // necessarily admission-checked: reserve_upto, not commit).
+        let caps: Vec<(&str, usize)> = self
+            .sites
+            .iter()
+            .map(|s| (s.name.as_str(), s.controller.cluster.capacity()))
+            .collect();
+        let mut ledger = GeoCapacityLedger::new(start, horizon, &caps)?;
+        for site in &self.sites {
+            for job in site.controller.jobs().iter().filter(|j| !j.finished()) {
+                for h in start..end {
+                    ledger.reserve_upto(&site.name, h, job.plan.at(h))?;
+                }
+            }
+        }
+        let regions = self
+            .sites
+            .iter()
+            .map(|site| {
+                let residual = ledger
+                    .region(&site.name)
+                    .expect("ledger built from these sites")
+                    .residual();
+                Ok(GeoRegion {
+                    name: site.name.clone(),
+                    ctx: PlanContext::new(
+                        start,
+                        residual,
+                        site.controller.trace.window(start, horizon),
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let geo_ctx = GeoPlanContext::new(regions, MigrationPolicy::none())?;
+        let planned = geo::plan_geo(&specs, &geo_ctx)?;
+        for (spec, gs) in specs.into_iter().zip(planned.schedules) {
+            // Single-region by construction (MigrationPolicy::none);
+            // zero-work jobs have no active slot and go to site 0.
+            let site_idx = gs.active_regions().first().copied().unwrap_or(0);
+            self.sites[site_idx]
+                .controller
+                .submit_planned(spec, gs.as_schedule())?;
+        }
+        Ok(())
+    }
+
+    /// Advance every site by one hour.
+    pub fn step_hour(&mut self) -> Result<()> {
+        for site in &mut self.sites {
+            site.controller.step_hour()?;
+        }
+        Ok(())
+    }
+
+    /// Run until all jobs at all sites finish or `max_hours` elapse.
     pub fn run(&mut self, max_hours: usize) -> Result<()> {
         for _ in 0..max_hours {
             if self.all_done() {
@@ -401,6 +602,88 @@ mod tests {
         let mut j = job("late", 4.0, 1.5, 2);
         j.arrival = 1; // before the current hour (2)
         assert!(c.submit_fleet(vec![j]).is_err());
+    }
+
+    #[test]
+    fn geo_submission_places_and_finishes_denial_free() {
+        // Two tight sites (3 servers each): 4 jobs x M=4 cannot all sit in
+        // one site's cheap hours, but placed jointly they spread across
+        // sites and execute without a single denial.
+        let t0 = synthetic::generate(regions::by_name("ontario").unwrap(), 14 * 24, 3);
+        let t1 = synthetic::generate(regions::by_name("california").unwrap(), 14 * 24, 3);
+        let mut g = GeoClusterController::new(vec![
+            ("ontario".into(), Cluster::homogeneous(3), t0),
+            ("california".into(), Cluster::homogeneous(3), t1),
+        ])
+        .unwrap();
+        let specs: Vec<JobSpec> = (0..4)
+            .map(|i| job(&format!("j{i}"), 8.0, 1.8, 4))
+            .collect();
+        g.submit_geo(specs).unwrap();
+        g.run(100).unwrap();
+        assert!(g.all_done());
+        for (site, j) in g.jobs() {
+            assert_eq!(j.denials, 0, "{} denied at {site}", j.spec.name);
+            assert!(
+                j.completion.unwrap() <= j.spec.completion_hours + 1e-9,
+                "{} late at {site}",
+                j.spec.name
+            );
+        }
+        // Per-site capacity held at every hour.
+        for site in g.sites() {
+            let horizon = site
+                .controller
+                .jobs()
+                .iter()
+                .map(|j| j.realized.len())
+                .max()
+                .unwrap_or(0);
+            for h in 0..horizon {
+                let used: usize = site
+                    .controller
+                    .jobs()
+                    .iter()
+                    .map(|j| j.realized.get(h).copied().unwrap_or(0))
+                    .sum();
+                assert!(used <= 3, "{}: hour {h} used {used}", site.name);
+            }
+        }
+    }
+
+    #[test]
+    fn geo_submission_prefers_cheap_site() {
+        let cheap = CarbonTrace::new("cheap", vec![10.0; 48]);
+        let dear = CarbonTrace::new("dear", vec![500.0; 48]);
+        let mut g = GeoClusterController::new(vec![
+            ("dear".into(), Cluster::homogeneous(8), dear),
+            ("cheap".into(), Cluster::homogeneous(8), cheap),
+        ])
+        .unwrap();
+        g.submit_geo(vec![job("a", 4.0, 1.5, 2), job("b", 4.0, 1.5, 2)])
+            .unwrap();
+        assert_eq!(g.sites()[0].controller.jobs().len(), 0, "dear site used");
+        assert_eq!(g.sites()[1].controller.jobs().len(), 2);
+        g.run(40).unwrap();
+        assert!(g.all_done());
+    }
+
+    #[test]
+    fn geo_submission_rejects_duplicates_across_sites() {
+        let t = trace();
+        let mut g = GeoClusterController::new(vec![
+            ("a".into(), Cluster::homogeneous(4), t.clone()),
+            ("b".into(), Cluster::homogeneous(4), t),
+        ])
+        .unwrap();
+        g.submit_geo(vec![job("dup", 4.0, 1.5, 2)]).unwrap();
+        assert!(g.submit_geo(vec![job("dup", 4.0, 1.5, 2)]).is_err());
+        // Duplicate site names rejected at construction.
+        assert!(GeoClusterController::new(vec![
+            ("x".into(), Cluster::homogeneous(1), trace()),
+            ("x".into(), Cluster::homogeneous(1), trace()),
+        ])
+        .is_err());
     }
 
     #[test]

@@ -6,5 +6,5 @@ pub mod controller;
 pub mod state;
 
 pub use api::{load_job_request, parse_job_request, JobRequest};
-pub use controller::{ClusterController, JobRun};
-pub use state::{CapacityLedger, Cluster, Grant, Node};
+pub use controller::{ClusterController, GeoClusterController, GeoSite, JobRun};
+pub use state::{CapacityLedger, Cluster, GeoCapacityLedger, Grant, Node};

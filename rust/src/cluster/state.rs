@@ -250,6 +250,98 @@ impl CapacityLedger {
     }
 }
 
+/// Region-tagged capacity ledgers: one [`CapacityLedger`] per grid
+/// region, sharing a planning window — the admission substrate of
+/// geo-distributed fleet planning (DESIGN.md §9). Residuals feed a
+/// [`crate::sched::GeoPlanContext`]; committed geo plans reserve capacity
+/// in whichever region each slot was placed.
+#[derive(Debug, Clone)]
+pub struct GeoCapacityLedger {
+    regions: Vec<(String, CapacityLedger)>,
+}
+
+impl GeoCapacityLedger {
+    /// One ledger per `(region name, capacity)` over `[start,
+    /// start + horizon)`. Region names must be unique.
+    pub fn new(start: usize, horizon: usize, regions: &[(&str, usize)]) -> Result<Self> {
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, _) in regions {
+            if !seen.insert(*name) {
+                bail!("duplicate region {name:?} in geo ledger");
+            }
+        }
+        if regions.is_empty() {
+            bail!("geo ledger needs at least one region");
+        }
+        Ok(GeoCapacityLedger {
+            regions: regions
+                .iter()
+                .map(|(name, cap)| (name.to_string(), CapacityLedger::new(start, horizon, *cap)))
+                .collect(),
+        })
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn start(&self) -> usize {
+        self.regions[0].1.start()
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.regions[0].1.horizon()
+    }
+
+    pub fn region_names(&self) -> Vec<&str> {
+        self.regions.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// The ledger for one region, by name.
+    pub fn region(&self, name: &str) -> Option<&CapacityLedger> {
+        self.regions
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, l)| l)
+    }
+
+    fn region_mut(&mut self, name: &str) -> Result<&mut CapacityLedger> {
+        self.regions
+            .iter_mut()
+            .find(|(n, _)| n == name)
+            .map(|(_, l)| l)
+            .ok_or_else(|| anyhow::anyhow!("unknown region {name:?} in geo ledger"))
+    }
+
+    /// Reserve a schedule's allocations in one region (atomic, like
+    /// [`CapacityLedger::commit`]).
+    pub fn commit(&mut self, region: &str, s: &Schedule) -> Result<()> {
+        self.region_mut(region)?.commit(s)
+    }
+
+    /// Release a schedule's reservations in one region.
+    pub fn uncommit(&mut self, region: &str, s: &Schedule) -> Result<()> {
+        self.region_mut(region)?.uncommit(s);
+        Ok(())
+    }
+
+    /// Reserve up to `servers` in one region at absolute hour `abs`,
+    /// saturating at the free capacity (see
+    /// [`CapacityLedger::reserve_upto`]); returns what was reserved.
+    pub fn reserve_upto(&mut self, region: &str, abs: usize, servers: usize) -> Result<usize> {
+        Ok(self.region_mut(region)?.reserve_upto(abs, servers))
+    }
+
+    /// Per-region residual capacity, ready to seed a
+    /// [`crate::sched::GeoPlanContext`] (aligned with `region_names()`).
+    pub fn residuals(&self) -> Vec<(&str, Vec<usize>)> {
+        self.regions
+            .iter()
+            .map(|(n, l)| (n.as_str(), l.residual()))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,6 +442,35 @@ mod tests {
         assert_eq!(l.reserve_upto(1, 9), 4); // clamped to capacity
         assert_eq!(l.reserve_upto(5, 2), 0); // outside the window
         assert_eq!(l.residual(), vec![0, 0]);
+    }
+
+    #[test]
+    fn geo_ledger_tracks_regions_independently() {
+        let mut l = GeoCapacityLedger::new(0, 3, &[("ontario", 4), ("iceland", 2)]).unwrap();
+        assert_eq!(l.n_regions(), 2);
+        assert_eq!(l.region_names(), vec!["ontario", "iceland"]);
+        l.commit("ontario", &Schedule::new(0, vec![3, 0, 1])).unwrap();
+        l.commit("iceland", &Schedule::new(1, vec![2])).unwrap();
+        let res = l.residuals();
+        assert_eq!(res[0].1, vec![1, 4, 3]);
+        assert_eq!(res[1].1, vec![2, 0, 2]);
+        // Overcommit in one region does not touch the other.
+        assert!(l.commit("iceland", &Schedule::new(1, vec![1])).is_err());
+        assert_eq!(l.residuals()[1].1, vec![2, 0, 2]);
+        l.uncommit("iceland", &Schedule::new(1, vec![2])).unwrap();
+        assert_eq!(l.residuals()[1].1, vec![2, 2, 2]);
+        assert!(l.commit("nowhere", &Schedule::new(0, vec![1])).is_err());
+    }
+
+    #[test]
+    fn geo_ledger_validates_regions() {
+        assert!(GeoCapacityLedger::new(0, 2, &[]).is_err());
+        assert!(GeoCapacityLedger::new(0, 2, &[("a", 1), ("a", 2)]).is_err());
+        let l = GeoCapacityLedger::new(5, 2, &[("a", 1)]).unwrap();
+        assert_eq!(l.start(), 5);
+        assert_eq!(l.horizon(), 2);
+        assert!(l.region("a").is_some());
+        assert!(l.region("b").is_none());
     }
 
     #[test]

@@ -21,8 +21,9 @@ use crate::runtime::worker::WorkerPool;
 use crate::sched::fleet::PlanContext;
 use crate::sched::greedy;
 use crate::sched::policy::Policy;
+use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::time::Instant;
 
 /// Configuration for a real-execution run.
@@ -75,6 +76,21 @@ pub struct RunReport {
     pub final_loss: f32,
     pub loss_curve: Vec<(u64, f32)>,
     pub wall_seconds: f64,
+    /// Region hand-offs executed (0 without a region menu, DESIGN.md §9).
+    pub migrations: usize,
+    /// Total migration penalty incurred (gCO₂eq, *not* included in
+    /// `carbon_g`, which stays pure measured emissions).
+    pub migration_penalty_g: f64,
+    /// Regions in activation order, starting with the initial placement.
+    pub region_path: Vec<String>,
+}
+
+/// A menu of candidate regions for one run: the coordinator's side of
+/// geo-distributed planning (DESIGN.md §9).
+#[derive(Debug, Clone)]
+struct RegionChoices {
+    options: Vec<(String, CarbonTrace)>,
+    penalty_g: f64,
 }
 
 /// The coordinator itself.
@@ -87,6 +103,11 @@ pub struct CarbonAutoscaler<'a> {
     /// the cluster a fleet-level scheduler reserved for this job. `None`
     /// means the whole pool is available every slot.
     capacity: Option<Vec<usize>>,
+    /// Optional region menu: initial placement picks the cheapest
+    /// forecast, and every deviation-triggered recompute re-evaluates the
+    /// menu (migrating costs `penalty_g` in the comparison). `None` means
+    /// the run is pinned to the constructor's trace.
+    regions: Option<RegionChoices>,
 }
 
 impl<'a> CarbonAutoscaler<'a> {
@@ -110,7 +131,35 @@ impl<'a> CarbonAutoscaler<'a> {
             trace,
             cfg,
             capacity: None,
+            regions: None,
         })
+    }
+
+    /// Offer the run a menu of `(region, trace)` placements. The initial
+    /// plan picks the region whose forecast is cheapest for the whole job;
+    /// each deviation-triggered recompute replans the remainder on every
+    /// region's forecast and migrates when another region wins by more
+    /// than `penalty_g` gCO₂eq (the checkpoint hand-off cost). Measured
+    /// emissions are charged at whichever region is active each slot.
+    pub fn with_regions(
+        mut self,
+        options: Vec<(String, CarbonTrace)>,
+        penalty_g: f64,
+    ) -> Result<Self> {
+        if options.is_empty() {
+            bail!("region menu must contain at least one region");
+        }
+        let mut names: Vec<&str> = options.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != options.len() {
+            bail!("duplicate region names in the menu");
+        }
+        if !penalty_g.is_finite() || penalty_g < 0.0 {
+            bail!("migration penalty must be finite and non-negative");
+        }
+        self.regions = Some(RegionChoices { options, penalty_g });
+        Ok(self)
     }
 
     /// Constrain this run to a per-slot worker budget (`capacity[rel]`
@@ -139,22 +188,80 @@ impl<'a> CarbonAutoscaler<'a> {
         }
     }
 
+    /// Plan `job` against `window` (`window[0]` is `job.arrival`), inside
+    /// the capacity envelope when one is set. `cap_offset` is the envelope
+    /// slot of `window[0]` relative to the original job's arrival.
+    fn plan_in_window(
+        &self,
+        policy: &dyn Policy,
+        job: &JobSpec,
+        window: &[f64],
+        cap_offset: usize,
+    ) -> Result<Schedule> {
+        if self.capacity.is_some() {
+            // Fleet-aware path: plan inside the reserved envelope (the
+            // one-job case of the fleet engine).
+            let caps: Vec<usize> = (0..window.len())
+                .map(|i| self.capacity_at(cap_offset + i))
+                .collect();
+            let ctx = PlanContext::new(job.arrival, caps, window.to_vec())?;
+            let mut fs = policy.plan_fleet(std::slice::from_ref(job), &ctx)?;
+            Ok(fs.schedules.remove(0))
+        } else {
+            policy.plan(job, window)
+        }
+    }
+
     /// Execute the job to completion (or deadline) under `policy`.
     pub fn run(&self, policy: &dyn Policy) -> Result<RunReport> {
         let wall0 = Instant::now();
         let job = &self.job;
         let n = job.n_slots();
-        let window: Vec<f64> = self.trace.window(job.arrival, n);
-        let mut plan = if self.capacity.is_some() {
-            // Fleet-aware path: plan inside the reserved envelope (the
-            // one-job case of the fleet engine).
-            let caps: Vec<usize> = (0..n).map(|i| self.capacity_at(i)).collect();
-            let ctx = PlanContext::new(job.arrival, caps, window.clone())?;
-            let mut fs = policy.plan_fleet(std::slice::from_ref(job), &ctx)?;
-            fs.schedules.remove(0)
-        } else {
-            policy.plan(job, &window)?
+
+        // Region menu: the constructor's trace alone, unless with_regions
+        // offered alternatives (DESIGN.md §9).
+        let menu: Vec<(String, CarbonTrace)> = match &self.regions {
+            Some(rc) => rc.options.clone(),
+            None => vec![(self.trace.region.clone(), self.trace.clone())],
         };
+        let penalty_g = self.regions.as_ref().map_or(0.0, |rc| rc.penalty_g);
+        let mut migrations = 0usize;
+        let mut region_path: Vec<String> = Vec::new();
+
+        // Initial placement: plan in every region, keep the cheapest
+        // forecast among plans that complete (incomplete plans only win
+        // when no region's plan finishes — see plan_score).
+        let mut active = 0usize;
+        let mut plan: Option<Schedule> = None;
+        let mut best_score = (true, f64::INFINITY);
+        let mut first_err: Option<anyhow::Error> = None;
+        for (ri, (_, tr)) in menu.iter().enumerate() {
+            let window: Vec<f64> = tr.window(job.arrival, n);
+            match self.plan_in_window(policy, job, &window, 0) {
+                Ok(p) => {
+                    let score = plan_score(job, &p, &window);
+                    if score.0 < best_score.0
+                        || (score.0 == best_score.0 && score.1 < best_score.1)
+                        || plan.is_none()
+                    {
+                        best_score = score;
+                        active = ri;
+                        plan = Some(p);
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        let Some(mut plan) = plan else {
+            return Err(
+                first_err.unwrap_or_else(|| anyhow!("no region in the menu is plannable")),
+            );
+        };
+        region_path.push(menu[active].0.clone());
 
         let art = self.pool.artifact();
         let mut ps = ParamServer::init_from_layout(art, self.cfg.seed);
@@ -229,7 +336,7 @@ impl<'a> CarbonAutoscaler<'a> {
                         let e =
                             crate::energy::energy_kwh(k, job.power_watts, frac.min(1.0));
                         kwh += e;
-                        carbon += e * self.trace.at(abs);
+                        carbon += e * menu[active].1.at(abs);
                         server_hours += k as f64 * frac.min(1.0);
                         total_samples += slot_samples;
                         completion = Some(rel as f64 + frac.min(1.0));
@@ -239,7 +346,7 @@ impl<'a> CarbonAutoscaler<'a> {
                             steps: slot_steps,
                             samples: slot_samples,
                             mean_loss: (slot_loss_sum / slot_steps as f64) as f32,
-                            carbon_g: e * self.trace.at(abs),
+                            carbon_g: e * menu[active].1.at(abs),
                             recomputed: false,
                         });
                         break 'slots;
@@ -247,7 +354,7 @@ impl<'a> CarbonAutoscaler<'a> {
                 }
                 let e = crate::energy::energy_kwh(k, job.power_watts, 1.0);
                 kwh += e;
-                carbon += e * self.trace.at(abs);
+                carbon += e * menu[active].1.at(abs);
                 server_hours += k as f64;
                 carbon_record(
                     &mut slots,
@@ -256,7 +363,7 @@ impl<'a> CarbonAutoscaler<'a> {
                     slot_steps,
                     slot_samples,
                     slot_loss_sum,
-                    e * self.trace.at(abs),
+                    e * menu[active].1.at(abs),
                 );
             } else {
                 // Suspended slot.
@@ -288,8 +395,6 @@ impl<'a> CarbonAutoscaler<'a> {
                     let now = abs + 1;
                     let remaining = (total_work - done_units).max(0.0);
                     if remaining > 0.0 && now < job.deadline() {
-                        let fc: Vec<f64> =
-                            self.trace.window(now, job.deadline() - now);
                         let sub = greedy::remainder_job(
                             job,
                             now,
@@ -297,25 +402,34 @@ impl<'a> CarbonAutoscaler<'a> {
                             (done_units / total_work).min(1.0),
                         );
                         if let Ok(sub) = sub {
-                            // Recompute inside the capacity envelope when
-                            // one is set (same fleet path as the initial
-                            // plan), else with the bare policy.
-                            let replanned = if self.capacity.is_some() {
-                                let caps: Vec<usize> = (0..fc.len())
-                                    .map(|i| self.capacity_at(rel + 1 + i))
-                                    .collect();
-                                PlanContext::new(now, caps, fc.clone())
-                                    .ok()
-                                    .and_then(|ctx| {
-                                        policy
-                                            .plan_fleet(std::slice::from_ref(&sub), &ctx)
-                                            .ok()
-                                    })
-                                    .map(|mut fs| fs.schedules.remove(0))
-                            } else {
-                                policy.plan(&sub, &fc).ok()
-                            };
-                            if let Some(p) = replanned {
+                            // Region-aware recompute: replan the remainder
+                            // on every region's fresh forecast (inside the
+                            // capacity envelope when one is set, with the
+                            // *same* policy so baselines stay baseline) and
+                            // migrate only when another region beats the
+                            // active one by more than the hand-off penalty.
+                            let mut best: Option<(bool, f64, usize, Schedule)> = None;
+                            for (ri, (_, tr)) in menu.iter().enumerate() {
+                                let fc: Vec<f64> = tr.window(now, job.deadline() - now);
+                                let Ok(p) = self.plan_in_window(policy, &sub, &fc, rel + 1)
+                                else {
+                                    continue;
+                                };
+                                let (unfin, g) = plan_score(&sub, &p, &fc);
+                                let g = g + if ri == active { 0.0 } else { penalty_g };
+                                let better = best.as_ref().map_or(true, |(bu, bg, _, _)| {
+                                    unfin < *bu || (unfin == *bu && g < *bg)
+                                });
+                                if better {
+                                    best = Some((unfin, g, ri, p));
+                                }
+                            }
+                            if let Some((_, _, ri, p)) = best {
+                                if ri != active {
+                                    migrations += 1;
+                                    region_path.push(menu[ri].0.clone());
+                                    active = ri;
+                                }
                                 plan = p;
                                 recomputed = true;
                             }
@@ -339,8 +453,26 @@ impl<'a> CarbonAutoscaler<'a> {
             final_loss,
             loss_curve,
             wall_seconds: wall0.elapsed().as_secs_f64(),
+            migrations,
+            migration_penalty_g: penalty_g * migrations as f64,
+            region_path,
         })
     }
+}
+
+/// Score of a plan for region-placement comparison, against its own
+/// planning window (`window[0]` is the plan's arrival slot): plans that
+/// complete the job (phase-aware) always beat plans that do not, and
+/// ties break on forecast emissions. The incomplete fallback matters for
+/// deadline-unaware policies (e.g. threshold suspend-resume), whose
+/// plans legitimately run past the window — the run loop extends them at
+/// the base allocation.
+fn plan_score(job: &JobSpec, plan: &Schedule, window: &[f64]) -> (bool, f64) {
+    let trace = CarbonTrace::new("menu", window.to_vec());
+    let mut s = plan.clone();
+    s.arrival = 0;
+    let (g, finished) = s.emissions_fast(job, &trace);
+    (!finished, g)
 }
 
 fn carbon_record(
@@ -475,6 +607,61 @@ mod tests {
         pool.shutdown();
         assert!(report.slots.iter().all(|s| s.workers <= 1));
         assert!(report.completion_hours.is_some());
+    }
+
+    #[test]
+    fn region_menu_picks_cheapest_and_reports_path() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(m) = Manifest::load(&dir) else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let art = m.transformer("tiny").unwrap();
+        let pool = WorkerPool::spawn(art, 2, 13).unwrap();
+        let job = JobBuilder::new("geo", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(1.5)
+            .power(210.0)
+            .build()
+            .unwrap();
+        let dear = CarbonTrace::new("dear", vec![500.0; 48]);
+        let cheap = CarbonTrace::new("cheap", vec![10.0; 48]);
+        let auto = CarbonAutoscaler::new(
+            &pool,
+            job,
+            dear.clone(),
+            RunConfig {
+                slot_seconds: 0.2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Empty menus and negative penalties are rejected.
+        assert!(auto.with_regions(vec![], 0.0).is_err());
+        let auto = CarbonAutoscaler::new(
+            &pool,
+            JobBuilder::new("geo", MarginalCapacityCurve::linear(2))
+                .length(2.0)
+                .slack_factor(1.5)
+                .power(210.0)
+                .build()
+                .unwrap(),
+            dear.clone(),
+            RunConfig {
+                slot_seconds: 0.2,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .with_regions(vec![("dear".into(), dear), ("cheap".into(), cheap)], 50.0)
+        .unwrap();
+        let report = auto.run(&CarbonScalerPolicy).unwrap();
+        pool.shutdown();
+        assert!(report.completion_hours.is_some());
+        assert_eq!(report.region_path.first().map(String::as_str), Some("cheap"));
+        // Flat traces give no reason to migrate away.
+        assert_eq!(report.migrations, 0);
+        assert_eq!(report.migration_penalty_g, 0.0);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Geo-distributed placement experiment (beyond paper, after Fig 7's
+//! 37-region analysis): the same elastic job mix planned across a growing
+//! slice of the region catalog, reporting geo placement vs. the best
+//! single region and the carbon-agnostic round-robin baseline
+//! (DESIGN.md §9).
+
+use crate::advisor::{self, SimConfig};
+use crate::carbon::{regions, synthetic, CarbonTrace};
+use crate::expt::harness::{ExpContext, Experiment};
+use crate::sched::MigrationPolicy;
+use crate::util::table::{f, pct, Table};
+use crate::workload::catalog;
+use anyhow::Result;
+
+/// Per-region cluster size: tight enough that one region alone is
+/// congested (forced into dirty hours) while the mix still fits, so
+/// placement freedom has something to buy.
+const REGION_CAPACITY: usize = 6;
+
+/// The `geo` experiment: Fig 7-style multi-region savings table.
+pub struct GeoPlacement;
+
+impl GeoPlacement {
+    /// Ten-job Table-1 mix (two of each workload, staggered arrivals,
+    /// T = 1.8 l, M = 6) — the same family as the `fleet` experiment so
+    /// the two tables compose.
+    fn job_mix() -> Result<Vec<crate::workload::job::JobSpec>> {
+        let mut jobs = Vec::new();
+        for (i, w) in catalog::WORKLOADS.iter().enumerate() {
+            for k in 0..2usize {
+                let mut j = w.job((i * 2 + k) % 6, 12.0, 1.8, 6)?;
+                j.name = format!("{}-{k}", w.name);
+                jobs.push(j);
+            }
+        }
+        Ok(jobs)
+    }
+
+    fn truths(ctx: &ExpContext, count: usize) -> Vec<CarbonTrace> {
+        regions::REGIONS[..count]
+            .iter()
+            .map(|r| synthetic::generate(r, 14 * 24, ctx.seed))
+            .collect()
+    }
+}
+
+impl Experiment for GeoPlacement {
+    fn id(&self) -> &'static str {
+        "geo"
+    }
+    fn title(&self) -> &'static str {
+        "Geo-distributed placement across the region catalog (Fig 7-style, beyond paper)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let jobs = Self::job_mix()?;
+        let cfg = SimConfig::default();
+        let ks: Vec<usize> = if ctx.quick {
+            vec![3, 8]
+        } else {
+            vec![4, 8, 16, regions::REGIONS.len()]
+        };
+
+        let mut t = Table::new(&format!(
+            "geo fleet vs baselines, 10-job Table-1 mix, {REGION_CAPACITY} servers/region"
+        ))
+        .headers(&[
+            "regions",
+            "geo carbon (g)",
+            "best single (g)",
+            "agnostic (g)",
+            "geo done",
+            "agn done",
+            "vs single",
+            "vs agnostic",
+        ]);
+        let mut widest: Option<(usize, advisor::GeoWhatIf)> = None;
+        for &k in &ks {
+            let truths = Self::truths(ctx, k);
+            match advisor::geo_vs_baselines(
+                &jobs,
+                &truths,
+                REGION_CAPACITY,
+                MigrationPolicy::none(),
+                &cfg,
+            ) {
+                Ok(cmp) => {
+                    let single = match &cmp.best_single {
+                        Some((name, r)) => format!("{} ({name})", f(r.carbon_g, 0)),
+                        None => "infeasible".into(),
+                    };
+                    // A savings number is only honest when the baseline
+                    // completes the same work.
+                    let vs_agn = if cmp.agnostic.all_finished() {
+                        pct(cmp.savings_vs_agnostic())
+                    } else {
+                        "n/a (agn incomplete)".into()
+                    };
+                    t.row(vec![
+                        k.to_string(),
+                        f(cmp.geo.carbon_g, 0),
+                        single,
+                        f(cmp.agnostic.carbon_g, 0),
+                        format!("{}/{}", cmp.geo.n_finished, jobs.len()),
+                        format!("{}/{}", cmp.agnostic.n_finished, jobs.len()),
+                        cmp.savings_vs_single().map(pct).unwrap_or_else(|| "-".into()),
+                        vs_agn,
+                    ]);
+                    widest = Some((k, cmp));
+                }
+                Err(e) => t.row(vec![
+                    k.to_string(),
+                    format!("infeasible: {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            };
+        }
+
+        // Placement distribution at the widest region set that planned
+        // successfully: where did the geo planner actually put the fleet?
+        let title = match &widest {
+            Some((k, _)) => format!("placement at {k} regions (simulated server-hours)"),
+            None => "placement (no region set planned successfully)".to_string(),
+        };
+        let mut tp = Table::new(&title).headers(&["region", "server-hours", "share"]);
+        if let Some((_, cmp)) = &widest {
+            let mut rows: Vec<(String, usize)> = Vec::new();
+            for j in &cmp.geo.jobs {
+                if j.region == "-" {
+                    continue;
+                }
+                let slots = (j.server_hours).round() as usize;
+                match rows.iter_mut().find(|(n, _)| *n == j.region) {
+                    Some((_, s)) => *s += slots,
+                    None => rows.push((j.region.clone(), slots)),
+                }
+            }
+            let total: usize = rows.iter().map(|(_, s)| s).sum();
+            rows.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+            for (name, slots) in rows.into_iter().take(10) {
+                tp.row(vec![
+                    name,
+                    slots.to_string(),
+                    pct(slots as f64 / total.max(1) as f64),
+                ]);
+            }
+        }
+        Ok(vec![t, tp])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpContext {
+        ExpContext {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn geo_experiment_reports_each_region_set() {
+        let tables = GeoPlacement.run(&quick()).unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), 2);
+        let text = tables[0].render();
+        // The geo plan must complete the whole mix at every region count.
+        assert!(text.contains("10/10"), "no fully-completed geo row:\n{text}");
+        // The placement table must attribute the fleet somewhere.
+        assert!(!tables[1].is_empty());
+    }
+
+    #[test]
+    fn geo_never_loses_to_best_single_region_here() {
+        let ctx = quick();
+        let jobs = GeoPlacement::job_mix().unwrap();
+        let truths = GeoPlacement::truths(&ctx, 3);
+        let cmp = advisor::geo_vs_baselines(
+            &jobs,
+            &truths,
+            REGION_CAPACITY,
+            MigrationPolicy::none(),
+            &SimConfig::default(),
+        )
+        .unwrap();
+        assert!(cmp.geo.all_finished());
+        if let Some((name, single)) = &cmp.best_single {
+            assert!(
+                cmp.geo.carbon_g <= single.carbon_g + 1e-6,
+                "geo {} worse than {name} {}",
+                cmp.geo.carbon_g,
+                single.carbon_g
+            );
+        }
+    }
+}

@@ -82,6 +82,7 @@ pub fn all() -> Vec<Box<dyn Experiment>> {
         Box::new(evaluation::Fig11),
         Box::new(evaluation::Fig12),
         Box::new(evaluation::FleetContention),
+        Box::new(geo::GeoPlacement),
         Box::new(sensitivity::Fig13),
         Box::new(sensitivity::Fig14),
         Box::new(sensitivity::Fig15),
@@ -121,9 +122,10 @@ mod tests {
         let mut dedup = ids.clone();
         dedup.dedup();
         assert_eq!(ids, dedup);
-        assert_eq!(ids.len(), 22);
+        assert_eq!(ids.len(), 23);
         assert!(by_id("fig9").is_some());
         assert!(by_id("fleet").is_some());
+        assert!(by_id("geo").is_some());
         assert!(by_id("nope").is_none());
     }
 }

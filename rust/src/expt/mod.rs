@@ -2,6 +2,7 @@
 //! evaluation (see DESIGN.md §5 for the index).
 
 pub mod evaluation;
+pub mod geo;
 pub mod harness;
 pub mod motivation;
 pub mod robustness;

@@ -1,0 +1,1179 @@
+//! Geo-distributed fleet planning (DESIGN.md §9).
+//!
+//! The paper's Fig 7/17 analyses span 37 grid regions, but each job runs
+//! in one fixed region. CASPER (arXiv 2403.14792) and CarbonFlex (arXiv
+//! 2505.18357) show that carbon-aware *placement* compounds the savings of
+//! temporal scaling: the same elastic fleet, free to choose *where* as
+//! well as *when*, follows cheap hours across grids. This module lifts the
+//! fleet engine (DESIGN.md §8) to many regions: a [`GeoPlanContext`] holds
+//! one capacity envelope and carbon forecast per region, and candidates
+//! gain a placement dimension — (job, region, slot, server-step) — while
+//! keeping the marginal-capacity-per-unit-carbon priority and per-region
+//! per-slot caps.
+//!
+//! **Migration model.** A job may hold state (checkpoints) in at most
+//! `1 + max_migrations` distinct regions; each chronological hand-off
+//! between regions costs `penalty_g` gCO₂eq (checkpoint transfer +
+//! restart), charged in the planning objective. `max_migrations = 0` is
+//! the single-region constraint. The distinct-region budget is what the
+//! engine enforces combinatorially; the per-hand-off penalty is what the
+//! objective charges, so a plan that bounces A→B→A pays two hand-offs
+//! against one extra region of state.
+//!
+//! Planners mirror the fleet engine:
+//! * [`plan_geo_greedy`] — one heap interleaving (job, region, slot,
+//!   server-step) candidates across all jobs and regions;
+//! * [`plan_geo_sequential`] — admission-order baseline: each job picks
+//!   its cheapest feasible region against the residual capacity its
+//!   predecessors left;
+//! * [`plan_geo`] — the production portfolio: both of the above, an
+//!   earliest-deadline-first admission pass, one all-jobs-in-one-region
+//!   pass *per region* (so the result is never worse than the best single
+//!   region), a per-region capacity-aware polish on small instances, and
+//!   the lowest-objective feasible result wins.
+
+use crate::carbon::regions::RegionParams;
+use crate::carbon::trace::CarbonTrace;
+use crate::sched::fleet::{self, FleetSchedule, PlanContext};
+use crate::sched::policy::Policy;
+use crate::sched::schedule::Schedule;
+use crate::workload::job::JobSpec;
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Floor applied to carbon intensities when forming priorities, so
+/// zero-carbon slots sort first without dividing by zero.
+const MIN_CARBON: f64 = 1e-9;
+
+/// Above this many job-slot cells the per-region polish pass is skipped
+/// (same rationale as the fleet engine's budget, DESIGN.md §7).
+const GEO_POLISH_CELL_BUDGET: usize = 2048;
+
+/// Sentinel for "slot never assigned to any region".
+const NO_REGION: usize = usize::MAX;
+
+/// Migration constraint and cost model (DESIGN.md §9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationPolicy {
+    /// A job may use at most `1 + max_migrations` distinct regions.
+    pub max_migrations: usize,
+    /// gCO₂eq charged per chronological region hand-off in the objective.
+    pub penalty_g: f64,
+}
+
+impl MigrationPolicy {
+    /// Single-region placement: every job runs entirely in one region.
+    pub fn none() -> Self {
+        MigrationPolicy {
+            max_migrations: 0,
+            penalty_g: 0.0,
+        }
+    }
+
+    /// Up to `max_migrations` hand-offs, each costing `penalty_g` gCO₂eq.
+    pub fn bounded(max_migrations: usize, penalty_g: f64) -> Self {
+        MigrationPolicy {
+            max_migrations,
+            penalty_g,
+        }
+    }
+}
+
+/// One region's planning inputs: a name and a capacity/forecast envelope.
+#[derive(Debug, Clone)]
+pub struct GeoRegion {
+    pub name: String,
+    pub ctx: PlanContext,
+}
+
+/// Shared planning context for a geo-distributed fleet.
+///
+/// Invariants (checked by [`GeoPlanContext::new`]): at least one region;
+/// all regions share the same `start` and horizon; region names unique.
+/// Jobs planned against the context must fit inside the shared window
+/// (checked by [`GeoPlanContext::check_jobs`], delegating to the per-
+/// region [`PlanContext`] rules).
+#[derive(Debug, Clone)]
+pub struct GeoPlanContext {
+    pub regions: Vec<GeoRegion>,
+    pub migration: MigrationPolicy,
+}
+
+impl GeoPlanContext {
+    pub fn new(regions: Vec<GeoRegion>, migration: MigrationPolicy) -> Result<Self> {
+        if !migration.penalty_g.is_finite() || migration.penalty_g < 0.0 {
+            bail!(
+                "migration penalty must be finite and non-negative, got {}",
+                migration.penalty_g
+            );
+        }
+        let Some(first) = regions.first() else {
+            bail!("geo context needs at least one region");
+        };
+        let (start, horizon) = (first.ctx.start, first.ctx.horizon());
+        for r in &regions {
+            if r.ctx.start != start || r.ctx.horizon() != horizon {
+                bail!(
+                    "region {:?} window [{}, {}) disagrees with [{}, {})",
+                    r.name,
+                    r.ctx.start,
+                    r.ctx.end(),
+                    start,
+                    start + horizon
+                );
+            }
+        }
+        let mut names: Vec<&str> = regions.iter().map(|r| r.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != regions.len() {
+            bail!("duplicate region names in geo context");
+        }
+        Ok(GeoPlanContext { regions, migration })
+    }
+
+    /// Build a context from the region catalog with uniform per-region
+    /// capacity and synthetic traces over `[start, start + horizon)`
+    /// (deterministic in `seed`; independent stream per region).
+    pub fn synthetic(
+        regions: &[RegionParams],
+        start: usize,
+        horizon: usize,
+        capacity: usize,
+        seed: u64,
+        migration: MigrationPolicy,
+    ) -> Result<Self> {
+        if horizon == 0 {
+            bail!("geo context must cover at least one slot");
+        }
+        let regions = regions
+            .iter()
+            .map(|r| {
+                let trace = crate::carbon::synthetic::generate(r, start + horizon, seed);
+                Ok(GeoRegion {
+                    name: r.name.to_string(),
+                    ctx: PlanContext::new(
+                        start,
+                        vec![capacity; horizon],
+                        trace.window(start, horizon),
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::new(regions, migration)
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn start(&self) -> usize {
+        self.regions[0].ctx.start
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.regions[0].ctx.horizon()
+    }
+
+    /// One-past-the-last absolute hour covered.
+    pub fn end(&self) -> usize {
+        self.regions[0].ctx.end()
+    }
+
+    /// Region index by name.
+    pub fn region_index(&self, name: &str) -> Option<usize> {
+        self.regions.iter().position(|r| r.name == name)
+    }
+
+    /// Every job must fit the shared window (all regions agree on it).
+    pub fn check_jobs(&self, jobs: &[JobSpec]) -> Result<()> {
+        self.regions[0].ctx.check_jobs(jobs)
+    }
+}
+
+/// A per-slot allocation *and placement* plan for one job: `alloc[i]`
+/// servers in region `region[i]` during absolute slot `arrival + i`.
+/// `region[i]` is meaningful only where `alloc[i] > 0`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GeoSchedule {
+    pub arrival: usize,
+    pub alloc: Vec<usize>,
+    pub region: Vec<usize>,
+}
+
+impl GeoSchedule {
+    /// A schedule that runs entirely in one region.
+    pub fn single_region(arrival: usize, alloc: Vec<usize>, region: usize) -> Self {
+        let n = alloc.len();
+        GeoSchedule {
+            arrival,
+            alloc,
+            region: vec![region; n],
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.alloc.len()
+    }
+
+    /// The allocation as a plain [`Schedule`] (placement dropped) — the
+    /// work/completion accounting of a geo schedule is placement-blind.
+    pub fn as_schedule(&self) -> Schedule {
+        Schedule::new(self.arrival, self.alloc.clone())
+    }
+
+    /// Distinct regions with at least one active slot, ascending.
+    pub fn active_regions(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .alloc
+            .iter()
+            .zip(&self.region)
+            .filter(|(a, _)| **a > 0)
+            .map(|(_, r)| *r)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Chronological region hand-offs across active slots.
+    pub fn transitions(&self) -> usize {
+        let mut prev: Option<usize> = None;
+        let mut n = 0;
+        for (a, r) in self.alloc.iter().zip(&self.region) {
+            if *a == 0 {
+                continue;
+            }
+            if let Some(p) = prev {
+                if p != *r {
+                    n += 1;
+                }
+            }
+            prev = Some(*r);
+        }
+        n
+    }
+
+    /// Per-slot carbon the job actually sees: each active slot charges its
+    /// assigned region's forecast; inactive slots are zero (never charged).
+    fn effective_carbon(&self, geo: &GeoPlanContext) -> Vec<f64> {
+        let start = geo.start();
+        self.alloc
+            .iter()
+            .zip(&self.region)
+            .enumerate()
+            .map(|(rel, (a, r))| {
+                let abs = self.arrival + rel;
+                if *a > 0 && *r < geo.n_regions() {
+                    geo.regions[*r].ctx.carbon[abs - start]
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+}
+
+/// One geo schedule per job, aligned with the planning job order.
+#[derive(Debug, Clone)]
+pub struct GeoFleetSchedule {
+    pub schedules: Vec<GeoSchedule>,
+}
+
+impl GeoFleetSchedule {
+    pub fn n_jobs(&self) -> usize {
+        self.schedules.len()
+    }
+
+    /// Servers committed per region per context slot.
+    pub fn slot_usage(&self, geo: &GeoPlanContext) -> Vec<Vec<usize>> {
+        let mut usage = vec![vec![0usize; geo.horizon()]; geo.n_regions()];
+        let start = geo.start();
+        for s in &self.schedules {
+            for (rel, (a, r)) in s.alloc.iter().zip(&s.region).enumerate() {
+                if *a == 0 {
+                    continue;
+                }
+                let abs = s.arrival + rel;
+                if *r < geo.n_regions() && abs >= start && abs < geo.end() {
+                    usage[*r][abs - start] += a;
+                }
+            }
+        }
+        usage
+    }
+
+    /// True when every region's per-slot total stays within its capacity
+    /// and every active slot has a valid region inside the window.
+    pub fn respects_capacity(&self, geo: &GeoPlanContext) -> bool {
+        for s in &self.schedules {
+            for (rel, (a, r)) in s.alloc.iter().zip(&s.region).enumerate() {
+                if *a == 0 {
+                    continue;
+                }
+                let abs = s.arrival + rel;
+                if *r >= geo.n_regions() || geo.regions[*r].ctx.rel(abs).is_none() {
+                    return false;
+                }
+            }
+        }
+        self.slot_usage(geo)
+            .iter()
+            .zip(&geo.regions)
+            .all(|(usage, r)| usage.iter().zip(&r.ctx.capacity).all(|(u, c)| u <= c))
+    }
+
+    /// True when every job's distinct-region count fits the migration
+    /// budget `1 + max_migrations`.
+    pub fn respects_migration_budget(&self, geo: &GeoPlanContext) -> bool {
+        self.schedules
+            .iter()
+            .all(|s| s.active_regions().len() <= 1 + geo.migration.max_migrations)
+    }
+
+    /// Total chronological hand-offs across the fleet.
+    pub fn total_transitions(&self) -> usize {
+        self.schedules.iter().map(GeoSchedule::transitions).sum()
+    }
+
+    /// How many jobs complete under their schedule (phase-aware).
+    pub fn completed_count(&self, jobs: &[JobSpec]) -> usize {
+        jobs.iter()
+            .zip(&self.schedules)
+            .filter(|(job, s)| s.as_schedule().completion_hours(job).is_some())
+            .count()
+    }
+
+    pub fn all_complete(&self, jobs: &[JobSpec]) -> bool {
+        self.completed_count(jobs) == jobs.len()
+    }
+
+    /// Forecast emissions of job `ji` against its assigned regions'
+    /// forecasts (chronological accounting, fractional final slot).
+    pub fn job_carbon_g(&self, ji: usize, job: &JobSpec, geo: &GeoPlanContext) -> f64 {
+        let s = &self.schedules[ji];
+        let trace = CarbonTrace::new("geo-forecast", s.effective_carbon(geo));
+        let mut rel = s.as_schedule();
+        rel.arrival = 0;
+        rel.emissions_fast(job, &trace).0
+    }
+
+    /// Total forecast emissions of the fleet (no migration penalty).
+    pub fn forecast_carbon_g(&self, jobs: &[JobSpec], geo: &GeoPlanContext) -> f64 {
+        jobs.iter()
+            .enumerate()
+            .map(|(ji, job)| self.job_carbon_g(ji, job, geo))
+            .sum()
+    }
+
+    /// Planning objective: forecast emissions plus the migration penalty
+    /// for every chronological hand-off.
+    pub fn objective_g(&self, jobs: &[JobSpec], geo: &GeoPlanContext) -> f64 {
+        self.forecast_carbon_g(jobs, geo)
+            + geo.migration.penalty_g * self.total_transitions() as f64
+    }
+
+    /// Planned server-slots per region (placement-share accounting for
+    /// experiment tables; final-slot fractions are ignored).
+    pub fn region_server_slots(&self, geo: &GeoPlanContext) -> Vec<usize> {
+        let usage = self.slot_usage(geo);
+        usage.iter().map(|u| u.iter().sum()).collect()
+    }
+
+    /// Zero out allocations strictly after each job's completion slot
+    /// (mirrors [`FleetSchedule::trim_completed_tails`]).
+    pub fn trim_completed_tails(&mut self, jobs: &[JobSpec]) {
+        for (job, s) in jobs.iter().zip(self.schedules.iter_mut()) {
+            if let Some(done) = s.as_schedule().completion_hours(job) {
+                let last = done.ceil() as usize;
+                for a in s.alloc.iter_mut().skip(last) {
+                    *a = 0;
+                }
+            }
+        }
+    }
+
+    /// Give single-region jobs a uniform region vector (polish may turn
+    /// previously idle slots active; those slots must inherit the job's
+    /// region).
+    fn normalize_regions(&mut self) {
+        for s in &mut self.schedules {
+            let active = s.active_regions();
+            if active.len() == 1 {
+                let only = active[0];
+                s.region.iter_mut().for_each(|r| *r = only);
+            }
+        }
+    }
+
+    /// Lift a single-region [`FleetSchedule`] into a geo schedule.
+    fn from_fleet(fs: FleetSchedule, region: usize) -> Self {
+        GeoFleetSchedule {
+            schedules: fs
+                .schedules
+                .into_iter()
+                .map(|s| GeoSchedule::single_region(s.arrival, s.alloc, region))
+                .collect(),
+        }
+    }
+}
+
+/// Heap entry: one candidate allocation step for one job in one region.
+#[derive(Debug, Clone, Copy)]
+struct GeoCand {
+    /// Work added per unit carbon if this step is taken.
+    priority: f64,
+    job: usize,
+    region: usize,
+    /// Absolute slot.
+    slot: usize,
+    /// Target server count after this step.
+    servers: usize,
+    /// Work added by this step.
+    work: f64,
+}
+
+impl PartialEq for GeoCand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for GeoCand {}
+
+impl Ord for GeoCand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap on priority; ties -> earlier slot, fewer servers, lower
+        // region, lower job, so geo plans are deterministic. Priorities
+        // are validated finite at insertion; total_cmp keeps even a
+        // slipped NaN ordered instead of panicking mid-plan.
+        self.priority
+            .total_cmp(&other.priority)
+            .then_with(|| other.slot.cmp(&self.slot))
+            .then_with(|| other.servers.cmp(&self.servers))
+            .then_with(|| other.region.cmp(&self.region))
+            .then_with(|| other.job.cmp(&self.job))
+    }
+}
+impl PartialOrd for GeoCand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Validate a candidate at insertion (same contract as the fleet engine's
+/// `checked`): degenerate curves or pathological forecasts surface as an
+/// `Err`, never as a NaN inside the heap comparator.
+fn checked(
+    priority: f64,
+    work: f64,
+    name: &str,
+    region: usize,
+    slot: usize,
+    servers: usize,
+    job: usize,
+) -> Result<GeoCand> {
+    if !priority.is_finite() || !work.is_finite() || work < 0.0 {
+        bail!(
+            "job {name:?}: invalid candidate in region {region} at slot {slot} \
+             ({servers} servers): work {work}, priority {priority}"
+        );
+    }
+    Ok(GeoCand {
+        priority,
+        job,
+        region,
+        slot,
+        servers,
+        work,
+    })
+}
+
+/// Interleaved geo greedy: the fleet engine's heap loop with a placement
+/// dimension. Candidates from all (job, region) pairs compete in one heap
+/// in decreasing marginal-work-per-unit-carbon order; a popped step
+/// commits only if (a) its region-slot still has room, (b) the job's slot
+/// is not already owned by a different region, and (c) the job's
+/// distinct-region budget (`1 + max_migrations`) allows the region.
+/// Errors if a job cannot be completed by this heuristic — including
+/// every genuinely infeasible fleet, plus some feasible deadline-tight
+/// mixes ([`plan_geo`]'s admission passes rescue most of those).
+pub fn plan_geo_greedy(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedule> {
+    geo.check_jobs(jobs)?;
+    let start = geo.start();
+    let allowed = 1 + geo.migration.max_migrations;
+    let mut free: Vec<Vec<usize>> = geo
+        .regions
+        .iter()
+        .map(|r| r.ctx.capacity.clone())
+        .collect();
+    let totals: Vec<f64> = jobs.iter().map(|j| j.total_work()).collect();
+    let mut done = vec![0.0f64; jobs.len()];
+    let mut alloc: Vec<Vec<usize>> = jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect();
+    let mut region: Vec<Vec<usize>> = jobs
+        .iter()
+        .map(|j| vec![NO_REGION; j.n_slots()])
+        .collect();
+    let mut used: Vec<Vec<usize>> = vec![Vec::new(); jobs.len()];
+    let mut open = 0usize;
+    let mut heap: BinaryHeap<GeoCand> = BinaryHeap::new();
+
+    for (ji, job) in jobs.iter().enumerate() {
+        if totals[ji] <= 1e-9 {
+            continue;
+        }
+        open += 1;
+        let curve = job.curve.at_progress(0.0);
+        let m = job.min_servers;
+        let bundle = curve.capacity(m);
+        if bundle <= 0.0 {
+            bail!("job {:?}: zero capacity at minimum allocation", job.name);
+        }
+        for rel in 0..job.n_slots() {
+            let abs = job.arrival + rel;
+            for (ri, r) in geo.regions.iter().enumerate() {
+                let c = r.ctx.carbon[abs - start].max(MIN_CARBON);
+                heap.push(checked(
+                    bundle / (m as f64 * c),
+                    bundle,
+                    &job.name,
+                    ri,
+                    abs,
+                    m,
+                    ji,
+                )?);
+            }
+        }
+    }
+
+    while open > 0 {
+        let Some(cand) = heap.pop() else {
+            bail!(
+                "infeasible geo fleet: {open} job(s) cannot complete within \
+                 per-region capacity, deadlines, and the migration budget"
+            );
+        };
+        let ji = cand.job;
+        if done[ji] >= totals[ji] - 1e-9 {
+            continue; // stale entry for an already-complete job
+        }
+        let job = &jobs[ji];
+        let rel = cand.slot - job.arrival;
+        let fi = cand.slot - start;
+        // A slot belongs to at most one region per job: a candidate for a
+        // slot another region already owns is dead (ownership never moves
+        // during a plan).
+        if alloc[ji][rel] > 0 && region[ji][rel] != cand.region {
+            continue;
+        }
+        if cand.servers <= alloc[ji][rel] {
+            continue; // stale duplicate (defensive; chains are monotone)
+        }
+        // Distinct-region budget: entering a new region is permanent, so
+        // once the budget is spent all other-region candidates are dead.
+        if used[ji].len() >= allowed && !used[ji].contains(&cand.region) {
+            continue;
+        }
+        let need = cand.servers - alloc[ji][rel];
+        if free[cand.region][fi] < need {
+            // Committed capacity only grows, so the rest of this
+            // (job, region, slot) chain is dead — dropping is permanent
+            // and safe, exactly like the fleet engine.
+            continue;
+        }
+        free[cand.region][fi] -= need;
+        alloc[ji][rel] = cand.servers;
+        region[ji][rel] = cand.region;
+        if !used[ji].contains(&cand.region) {
+            used[ji].push(cand.region);
+        }
+        done[ji] += cand.work;
+        if done[ji] >= totals[ji] - 1e-9 {
+            open -= 1;
+        } else if cand.servers < job.max_servers {
+            let next = cand.servers + 1;
+            let w = job.curve.at_progress(0.0).marginal(next);
+            if !w.is_finite() {
+                bail!(
+                    "job {:?}: non-finite marginal capacity at {next} servers",
+                    job.name
+                );
+            }
+            if w > 0.0 {
+                let c = geo.regions[cand.region].ctx.carbon[fi].max(MIN_CARBON);
+                heap.push(checked(
+                    w / c,
+                    w,
+                    &job.name,
+                    cand.region,
+                    cand.slot,
+                    next,
+                    ji,
+                )?);
+            }
+        }
+    }
+
+    let mut out = GeoFleetSchedule {
+        schedules: jobs
+            .iter()
+            .zip(alloc)
+            .zip(region)
+            .map(|((j, a), r)| GeoSchedule {
+                arrival: j.arrival,
+                alloc: a,
+                region: r,
+            })
+            .collect(),
+    };
+    out.normalize_regions();
+    Ok(out)
+}
+
+/// Sequential admission in an explicit order: each job plans the
+/// single-job capacity-capped greedy against every region's residual and
+/// commits to the region with the lowest forecast emissions. Jobs are
+/// single-region by construction. Output stays aligned with input order.
+fn plan_geo_sequential_order(
+    jobs: &[JobSpec],
+    geo: &GeoPlanContext,
+    order: &[usize],
+) -> Result<GeoFleetSchedule> {
+    let start = geo.start();
+    let mut residual: Vec<PlanContext> = geo.regions.iter().map(|r| r.ctx.clone()).collect();
+    let mut out: Vec<Option<GeoSchedule>> = vec![None; jobs.len()];
+    for &ji in order {
+        let job = &jobs[ji];
+        let mut best: Option<(f64, usize, Schedule)> = None;
+        for (ri, ctx) in residual.iter().enumerate() {
+            let Ok(fs) = fleet::plan_fleet_greedy(std::slice::from_ref(job), ctx) else {
+                continue;
+            };
+            let s = fs
+                .schedules
+                .into_iter()
+                .next()
+                .expect("one job in, one schedule out");
+            let trace = CarbonTrace::new(&geo.regions[ri].name, ctx.carbon.clone());
+            let mut rel = s.clone();
+            rel.arrival = s.arrival - start;
+            let (g, finished) = rel.emissions_fast(job, &trace);
+            if !finished && job.total_work() > 1e-9 {
+                continue; // phase-0 credit overestimated a multi-phase job
+            }
+            if best.as_ref().map_or(true, |(bg, _, _)| g < *bg) {
+                best = Some((g, ri, s));
+            }
+        }
+        let Some((_, ri, s)) = best else {
+            bail!(
+                "job {:?} fits no region's residual capacity within its window",
+                job.name
+            );
+        };
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            residual[ri].capacity[job.arrival + rel - start] -= a;
+        }
+        out[ji] = Some(GeoSchedule::single_region(job.arrival, s.alloc, ri));
+    }
+    Ok(GeoFleetSchedule {
+        schedules: out
+            .into_iter()
+            .map(|s| s.expect("every job planned"))
+            .collect(),
+    })
+}
+
+/// Sequential-admission baseline in slice order — what independent
+/// tenants behind a placement-aware admission controller achieve, and the
+/// yardstick [`plan_geo`] is guaranteed to match or beat.
+pub fn plan_geo_sequential(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedule> {
+    geo.check_jobs(jobs)?;
+    let order: Vec<usize> = (0..jobs.len()).collect();
+    plan_geo_sequential_order(jobs, geo, &order)
+}
+
+/// Earliest-deadline-first admission order (same rescue role as in the
+/// fleet engine: tight-window jobs place first).
+fn edf_order(jobs: &[JobSpec]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| (jobs[i].deadline(), i));
+    order
+}
+
+/// Plan the whole fleet inside each region separately and return every
+/// feasible (region, plan) pair — the "no placement freedom" family of
+/// candidates. The best of these is the best-single-region baseline.
+pub fn plan_all_single_region(
+    jobs: &[JobSpec],
+    geo: &GeoPlanContext,
+) -> Vec<(usize, GeoFleetSchedule)> {
+    geo.regions
+        .iter()
+        .enumerate()
+        .filter_map(|(ri, r)| {
+            fleet::plan_fleet(jobs, &r.ctx)
+                .ok()
+                .map(|fs| (ri, GeoFleetSchedule::from_fleet(fs, ri)))
+        })
+        .collect()
+}
+
+/// The best single region for this fleet: lowest forecast carbon among
+/// regions where the whole fleet fits. `None` when no single region can
+/// host everything.
+pub fn plan_best_single_region(
+    jobs: &[JobSpec],
+    geo: &GeoPlanContext,
+) -> Option<(usize, GeoFleetSchedule)> {
+    plan_all_single_region(jobs, geo)
+        .into_iter()
+        .map(|(ri, g)| {
+            let score = g.forecast_carbon_g(jobs, geo);
+            (ri, g, score)
+        })
+        .min_by(|a, b| a.2.total_cmp(&b.2))
+        .map(|(ri, g, _)| (ri, g))
+}
+
+/// Carbon-agnostic geo baseline: jobs are spread round-robin across
+/// regions (load balancing without carbon awareness) and each runs at its
+/// base allocation from arrival, truncated to the region's residual
+/// capacity in job order — the placement analog of the fleet engine's
+/// independent-truncate baseline. Under contention jobs may end up
+/// incomplete; that is the failure mode geo planning exists to avoid.
+pub fn plan_geo_agnostic(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedule> {
+    geo.check_jobs(jobs)?;
+    let start = geo.start();
+    let mut free: Vec<Vec<usize>> = geo
+        .regions
+        .iter()
+        .map(|r| r.ctx.capacity.clone())
+        .collect();
+    let agnostic = crate::sched::baselines::CarbonAgnostic;
+    let mut schedules = Vec::with_capacity(jobs.len());
+    for (i, job) in jobs.iter().enumerate() {
+        let ri = i % geo.n_regions();
+        let arel = job.arrival - start;
+        let s = agnostic.plan(job, &geo.regions[ri].ctx.carbon[arel..])?;
+        let mut alloc = Vec::with_capacity(s.alloc.len());
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            let fi = arel + rel;
+            if fi >= free[ri].len() {
+                break;
+            }
+            let granted = if a == 0 {
+                0
+            } else {
+                let g = a.min(free[ri][fi]);
+                if g < job.min_servers {
+                    0
+                } else {
+                    g
+                }
+            };
+            free[ri][fi] -= granted;
+            alloc.push(granted);
+        }
+        schedules.push(GeoSchedule::single_region(job.arrival, alloc, ri));
+    }
+    Ok(GeoFleetSchedule { schedules })
+}
+
+/// Per-region capacity-aware polish: for each region, hill-climb the jobs
+/// placed entirely in that region with the fleet engine's polish pass,
+/// against the region's capacity minus whatever the *other* jobs (e.g.
+/// migrated slots) hold there. Accepted moves strictly reduce forecast
+/// emissions and never violate capacity; placement is never changed.
+pub fn polish_geo(jobs: &[JobSpec], geo: &GeoPlanContext, gfs: &mut GeoFleetSchedule) {
+    gfs.normalize_regions();
+    let usage = gfs.slot_usage(geo);
+    for ri in 0..geo.n_regions() {
+        let members: Vec<usize> = (0..jobs.len())
+            .filter(|&ji| gfs.schedules[ji].active_regions() == [ri])
+            .collect();
+        if members.is_empty() {
+            continue;
+        }
+        // Residual context: region capacity minus non-member usage there.
+        let mut capacity = geo.regions[ri].ctx.capacity.clone();
+        let mut member_usage = vec![0usize; capacity.len()];
+        for &ji in &members {
+            let s = &gfs.schedules[ji];
+            for (rel, &a) in s.alloc.iter().enumerate() {
+                member_usage[s.arrival + rel - geo.start()] += a;
+            }
+        }
+        for ((cap, total), own) in capacity.iter_mut().zip(&usage[ri]).zip(&member_usage) {
+            *cap = cap.saturating_sub(total - own);
+        }
+        let Ok(ctx) = PlanContext::new(
+            geo.start(),
+            capacity,
+            geo.regions[ri].ctx.carbon.clone(),
+        ) else {
+            continue;
+        };
+        let sub_jobs: Vec<JobSpec> = members.iter().map(|&ji| jobs[ji].clone()).collect();
+        let mut sub = FleetSchedule {
+            schedules: members
+                .iter()
+                .map(|&ji| gfs.schedules[ji].as_schedule())
+                .collect(),
+        };
+        fleet::polish_fleet(&sub_jobs, &ctx, &mut sub, 8);
+        for (k, &ji) in members.iter().enumerate() {
+            gfs.schedules[ji].alloc = sub.schedules[k].alloc.clone();
+            gfs.schedules[ji].region = vec![ri; gfs.schedules[ji].alloc.len()];
+        }
+    }
+}
+
+/// Production geo planner: run the interleaved placement greedy, two
+/// sequential-admission passes (slice order and EDF), and one
+/// all-jobs-in-one-region pass per region; polish each candidate inside
+/// its regions (small instances only); and return the lowest-objective
+/// result among those that complete every job (phase-aware), respect
+/// every region's per-slot capacity, and fit the migration budget.
+///
+/// Guarantees: per-region caps respected, every returned job completes
+/// (else `Err`), distinct regions per job ≤ `1 + max_migrations`, and the
+/// objective never exceeds that of sequential admission *or* of the best
+/// single region that fits the whole fleet. Like the fleet engine it is a
+/// heuristic: a feasible but adversarially deadline-scarce mix can still
+/// be reported infeasible.
+pub fn plan_geo(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedule> {
+    geo.check_jobs(jobs)?;
+    let greedy = plan_geo_greedy(jobs, geo);
+    let sequential = plan_geo_sequential(jobs, geo);
+    let edf = plan_geo_sequential_order(jobs, geo, &edf_order(jobs));
+    let mut candidates: Vec<GeoFleetSchedule> = [greedy.as_ref(), sequential.as_ref(), edf.as_ref()]
+        .into_iter()
+        .filter_map(|r| r.ok().cloned())
+        .collect();
+    candidates.extend(plan_all_single_region(jobs, geo).into_iter().map(|(_, g)| g));
+    if candidates.is_empty() {
+        return greedy; // carries the engine's diagnostic
+    }
+    let cells: usize = jobs.iter().map(|j| j.n_slots()).sum();
+    let mut best: Option<(f64, GeoFleetSchedule)> = None;
+    for mut gfs in candidates {
+        if cells <= GEO_POLISH_CELL_BUDGET {
+            polish_geo(jobs, geo, &mut gfs);
+        }
+        if !gfs.all_complete(jobs)
+            || !gfs.respects_capacity(geo)
+            || !gfs.respects_migration_budget(geo)
+        {
+            continue;
+        }
+        let g = gfs.objective_g(jobs, geo);
+        if best.as_ref().map_or(true, |(bg, _)| g < *bg) {
+            best = Some((g, gfs));
+        }
+    }
+    match best {
+        Some((_, mut gfs)) => {
+            gfs.trim_completed_tails(jobs);
+            Ok(gfs)
+        }
+        None => bail!(
+            "geo plan found but no candidate completes all jobs within \
+             per-region capacity and the migration budget"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::workload::job::JobBuilder;
+
+    fn job(name: &str, len: f64, slack: f64, max: usize) -> JobSpec {
+        JobBuilder::new(name, MarginalCapacityCurve::linear(max))
+            .length(len)
+            .slack_factor(slack)
+            .power(1000.0)
+            .build()
+            .unwrap()
+    }
+
+    fn two_regions(cap: usize, a: Vec<f64>, b: Vec<f64>) -> GeoPlanContext {
+        GeoPlanContext::new(
+            vec![
+                GeoRegion {
+                    name: "alpha".into(),
+                    ctx: PlanContext::uniform(0, cap, a).unwrap(),
+                },
+                GeoRegion {
+                    name: "beta".into(),
+                    ctx: PlanContext::uniform(0, cap, b).unwrap(),
+                },
+            ],
+            MigrationPolicy::none(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn context_validation() {
+        assert!(GeoPlanContext::new(vec![], MigrationPolicy::none()).is_err());
+        // Mismatched windows rejected.
+        let r1 = GeoRegion {
+            name: "a".into(),
+            ctx: PlanContext::uniform(0, 2, vec![1.0; 3]).unwrap(),
+        };
+        let r2 = GeoRegion {
+            name: "b".into(),
+            ctx: PlanContext::uniform(0, 2, vec![1.0; 4]).unwrap(),
+        };
+        assert!(GeoPlanContext::new(vec![r1.clone(), r2], MigrationPolicy::none()).is_err());
+        // Duplicate names rejected.
+        let dup = GeoRegion {
+            name: "a".into(),
+            ctx: PlanContext::uniform(0, 2, vec![1.0; 3]).unwrap(),
+        };
+        assert!(GeoPlanContext::new(vec![r1.clone(), dup], MigrationPolicy::none()).is_err());
+        // Degenerate migration penalties rejected (NaN would otherwise
+        // poison the portfolio's objective comparison).
+        assert!(
+            GeoPlanContext::new(vec![r1.clone()], MigrationPolicy::bounded(1, f64::NAN)).is_err()
+        );
+        assert!(GeoPlanContext::new(vec![r1], MigrationPolicy::bounded(1, -5.0)).is_err());
+    }
+
+    #[test]
+    fn synthetic_context_covers_catalog() {
+        let geo = GeoPlanContext::synthetic(
+            &crate::carbon::regions::REGIONS[..5],
+            3,
+            48,
+            4,
+            7,
+            MigrationPolicy::none(),
+        )
+        .unwrap();
+        assert_eq!(geo.n_regions(), 5);
+        assert_eq!(geo.start(), 3);
+        assert_eq!(geo.horizon(), 48);
+        assert_eq!(geo.region_index("ontario"), Some(0));
+        assert!(geo.region_index("nowhere").is_none());
+    }
+
+    #[test]
+    fn single_region_geo_matches_fleet_engine() {
+        // One region: the geo greedy degenerates to the fleet greedy.
+        let jobs = vec![job("a", 2.0, 1.5, 2), job("b", 1.0, 3.0, 1)];
+        let carbon = vec![40.0, 10.0, 25.0, 70.0, 15.0, 90.0];
+        let ctx = PlanContext::uniform(0, 3, carbon).unwrap();
+        let geo = GeoPlanContext::new(
+            vec![GeoRegion {
+                name: "solo".into(),
+                ctx: ctx.clone(),
+            }],
+            MigrationPolicy::none(),
+        )
+        .unwrap();
+        let gfs = plan_geo_greedy(&jobs, &geo).unwrap();
+        let fs = fleet::plan_fleet_greedy(&jobs, &ctx).unwrap();
+        for (g, f) in gfs.schedules.iter().zip(&fs.schedules) {
+            assert_eq!(g.alloc, f.alloc);
+        }
+    }
+
+    #[test]
+    fn placement_follows_cheap_region() {
+        // Region beta is uniformly cheaper: both jobs must land there.
+        let geo = two_regions(4, vec![100.0; 4], vec![10.0; 4]);
+        let jobs = vec![job("a", 2.0, 2.0, 2), job("b", 2.0, 2.0, 2)];
+        let gfs = plan_geo(&jobs, &geo).unwrap();
+        for s in &gfs.schedules {
+            assert_eq!(s.active_regions(), vec![1], "expected beta placement");
+        }
+        assert!(gfs.all_complete(&jobs));
+        assert!(gfs.respects_capacity(&geo));
+        // Placement-share accounting agrees: all planned server-slots sit
+        // in beta, and the per-region totals match the usage matrix.
+        let slots = gfs.region_server_slots(&geo);
+        assert_eq!(slots[0], 0);
+        assert!(slots[1] > 0);
+        let usage = gfs.slot_usage(&geo);
+        for (ri, total) in slots.iter().enumerate() {
+            assert_eq!(*total, usage[ri].iter().sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn contention_spills_to_second_region() {
+        // Capacity 1 per region, 1-slot jobs: the second job cannot share
+        // beta's cheap slot and must take alpha's (20), not beta's 100.
+        let geo = two_regions(1, vec![20.0, 100.0], vec![10.0, 100.0]);
+        let jobs = vec![job("a", 1.0, 2.0, 1), job("b", 1.0, 2.0, 1)];
+        let gfs = plan_geo(&jobs, &geo).unwrap();
+        assert!(gfs.all_complete(&jobs));
+        assert!(gfs.respects_capacity(&geo));
+        let total = gfs.forecast_carbon_g(&jobs, &geo);
+        assert!((total - 30.0).abs() < 1e-6, "carbon {total}");
+    }
+
+    #[test]
+    fn single_region_constraint_enforced() {
+        // Cheapest slots alternate regions; with migrations forbidden a
+        // job must still stay in one region.
+        let geo = two_regions(2, vec![10.0, 100.0, 10.0], vec![100.0, 10.0, 100.0]);
+        let jobs = vec![job("a", 3.0, 1.0, 1)];
+        let gfs = plan_geo(&jobs, &geo).unwrap();
+        assert_eq!(gfs.schedules[0].active_regions().len(), 1);
+        assert!(gfs.respects_migration_budget(&geo));
+    }
+
+    #[test]
+    fn migration_budget_allows_chasing_cheap_slots() {
+        let mut geo = two_regions(2, vec![10.0, 100.0, 10.0], vec![100.0, 10.0, 100.0]);
+        geo.migration = MigrationPolicy::bounded(2, 0.0);
+        let jobs = vec![job("a", 3.0, 1.0, 1)];
+        let gfs = plan_geo(&jobs, &geo).unwrap();
+        // With free migration the job follows the 10s: alpha, beta, alpha.
+        assert_eq!(gfs.forecast_carbon_g(&jobs, &geo), 30.0);
+        assert!(gfs.respects_migration_budget(&geo));
+        assert_eq!(gfs.total_transitions(), 2);
+    }
+
+    #[test]
+    fn migration_penalty_discourages_handoffs() {
+        // Same instance, but each hand-off costs more than it saves
+        // (90 g per switch vs 180 g total switching gain): the planner
+        // must stay single-region.
+        let mut geo = two_regions(2, vec![10.0, 100.0, 10.0], vec![100.0, 10.0, 100.0]);
+        geo.migration = MigrationPolicy::bounded(2, 1000.0);
+        let jobs = vec![job("a", 3.0, 1.0, 1)];
+        let gfs = plan_geo(&jobs, &geo).unwrap();
+        assert_eq!(gfs.total_transitions(), 0);
+        assert_eq!(gfs.schedules[0].active_regions().len(), 1);
+    }
+
+    #[test]
+    fn never_worse_than_best_single_region() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for case in 0..15 {
+            let n_jobs = 2 + (case % 3);
+            let jobs: Vec<JobSpec> = (0..n_jobs)
+                .map(|i| {
+                    let mut j = job(
+                        &format!("j{i}"),
+                        rng.range(1.0, 3.0),
+                        rng.range(1.2, 2.2),
+                        2,
+                    );
+                    j.arrival = rng.below(2) as usize;
+                    j
+                })
+                .collect();
+            let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+            let a: Vec<f64> = (0..end).map(|_| rng.range(5.0, 100.0)).collect();
+            let b: Vec<f64> = (0..end).map(|_| rng.range(5.0, 100.0)).collect();
+            let geo = two_regions(3, a, b);
+            let Some((_, single)) = plan_best_single_region(&jobs, &geo) else {
+                continue;
+            };
+            let gfs = plan_geo(&jobs, &geo).unwrap();
+            let g = gfs.objective_g(&jobs, &geo);
+            let sg = single.objective_g(&jobs, &geo);
+            assert!(
+                g <= sg + 1e-9,
+                "case {case}: geo {g} worse than best single region {sg}"
+            );
+            assert!(gfs.respects_capacity(&geo), "case {case}");
+            assert!(gfs.all_complete(&jobs), "case {case}");
+            assert!(gfs.respects_migration_budget(&geo), "case {case}");
+        }
+    }
+
+    #[test]
+    fn never_worse_than_sequential_admission() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        for case in 0..15 {
+            let jobs: Vec<JobSpec> = (0..3)
+                .map(|i| job(&format!("j{i}"), rng.range(1.0, 2.5), rng.range(1.3, 2.0), 2))
+                .collect();
+            let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+            let a: Vec<f64> = (0..end).map(|_| rng.range(5.0, 100.0)).collect();
+            let b: Vec<f64> = (0..end).map(|_| rng.range(5.0, 100.0)).collect();
+            let geo = two_regions(2, a, b);
+            let Ok(seq) = plan_geo_sequential(&jobs, &geo) else {
+                continue;
+            };
+            let gfs = plan_geo(&jobs, &geo).unwrap();
+            assert!(
+                gfs.objective_g(&jobs, &geo) <= seq.objective_g(&jobs, &geo) + 1e-9,
+                "case {case}"
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_geo_fleet_detected() {
+        // Three jobs that each need both slots at 1 server, on two
+        // regions of capacity 1: total demand 6 server-slots vs 4
+        // available — infeasible no matter the placement.
+        let geo = two_regions(1, vec![5.0, 5.0], vec![6.0, 6.0]);
+        let jobs = vec![
+            job("a", 2.0, 1.0, 1),
+            job("b", 2.0, 1.0, 1),
+            job("c", 2.0, 1.0, 1),
+        ];
+        assert!(plan_geo_greedy(&jobs, &geo).is_err());
+        assert!(plan_geo(&jobs, &geo).is_err());
+        // Two jobs do fit (one per region).
+        let two = vec![job("a", 2.0, 1.0, 1), job("b", 2.0, 1.0, 1)];
+        let gfs = plan_geo(&two, &geo).unwrap();
+        assert!(gfs.all_complete(&two));
+        assert!(gfs.respects_capacity(&geo));
+    }
+
+    #[test]
+    fn agnostic_baseline_round_robins_and_may_strand() {
+        let geo = two_regions(1, vec![50.0; 4], vec![50.0; 4]);
+        let jobs = vec![
+            job("a", 2.0, 2.0, 1),
+            job("b", 2.0, 2.0, 1),
+            job("c", 2.0, 2.0, 1),
+        ];
+        let gfs = plan_geo_agnostic(&jobs, &geo).unwrap();
+        assert!(gfs.respects_capacity(&geo));
+        // Jobs a and b land in different regions; c collides with a in
+        // region 0 and is truncated to nothing in its first slots.
+        assert_eq!(gfs.schedules[0].active_regions(), vec![0]);
+        assert_eq!(gfs.schedules[1].active_regions(), vec![1]);
+        assert!(!gfs.all_complete(&jobs));
+    }
+
+    #[test]
+    fn trim_and_transitions_accounting() {
+        let j = job("t", 1.0, 3.0, 2);
+        let mut gfs = GeoFleetSchedule {
+            schedules: vec![GeoSchedule {
+                arrival: 0,
+                alloc: vec![2, 2, 1],
+                region: vec![0, 1, 0],
+            }],
+        };
+        assert_eq!(gfs.schedules[0].transitions(), 2);
+        gfs.trim_completed_tails(std::slice::from_ref(&j));
+        assert_eq!(gfs.schedules[0].alloc, vec![2, 0, 0]);
+        assert_eq!(gfs.schedules[0].transitions(), 0);
+    }
+
+    #[test]
+    fn zero_work_job_gets_empty_schedule() {
+        let geo = two_regions(4, vec![10.0; 3], vec![20.0; 3]);
+        let mut jobs = vec![job("a", 2.0, 1.5, 2)];
+        jobs.push(JobSpec {
+            length_hours: 1e-12,
+            ..jobs[0].clone()
+        });
+        let gfs = plan_geo_greedy(&jobs, &geo).unwrap();
+        assert!(gfs.schedules[1].alloc.iter().all(|&a| a == 0));
+    }
+}

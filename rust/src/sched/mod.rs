@@ -1,9 +1,11 @@
 //! Scheduling policies: CarbonScaler's greedy Algorithm 1 and the paper's
-//! baselines, the capacity-constrained fleet planning engine, plus the
-//! schedule type and accounting.
+//! baselines, the capacity-constrained fleet planning engine, the
+//! geo-distributed placement engine, plus the schedule type and
+//! accounting.
 
 pub mod baselines;
 pub mod fleet;
+pub mod geo;
 pub mod greedy;
 pub mod policy;
 pub mod schedule;
@@ -13,5 +15,6 @@ pub use baselines::{
     SuspendResumeThreshold,
 };
 pub use fleet::{FleetSchedule, IndependentFleet, PlanContext};
+pub use geo::{GeoFleetSchedule, GeoPlanContext, GeoRegion, GeoSchedule, MigrationPolicy};
 pub use policy::{CarbonScalerPolicy, Policy};
 pub use schedule::{Schedule, ScheduleAccounting};
