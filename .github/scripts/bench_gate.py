@@ -7,6 +7,13 @@ fail the build when mean_ns regresses more than TOLERANCE over the
 baseline; every other shared case is reported informationally (CI runners
 are too noisy to gate sub-millisecond cases hard).
 
+The baseline may also carry "ratio_gates": a list of
+{"slow": <case>, "fast": <case>, "min_ratio": <x>} entries asserting that
+the *measured* slow case takes at least min_ratio times the fast case's
+mean — machine-independent structural guarantees (e.g. ISSUE 4's
+"warm-start repair >= 5x faster than a cold replan"), which absolute
+nanosecond baselines cannot express.
+
 Refresh the baseline from a quiet machine by copying the measured
 mean_ns values from BENCH_scheduler.json into BENCH_baseline.json.
 """
@@ -53,6 +60,24 @@ def main(baseline_path, measured_path):
 
     for name in sorted(set(meas) - set(base)):
         print(f"{name:<48} {'(new case — add to baseline)':>33}")
+
+    for gate in baseline.get("ratio_gates", []):
+        slow, fast = gate["slow"], gate["fast"]
+        need = float(gate["min_ratio"])
+        if slow not in meas or fast not in meas:
+            failures.append(
+                f"ratio gate {slow!r} / {fast!r}: case(s) missing from bench output"
+            )
+            continue
+        ratio = meas[slow] / meas[fast] if meas[fast] > 0 else float("inf")
+        ok = ratio >= need
+        print(f"ratio {slow!r} / {fast!r} = {ratio:.1f}x (need >= {need:.1f}x)"
+              f"{' OK' if ok else ' FAIL'}")
+        if not ok:
+            failures.append(
+                f"ratio gate: {slow} is only {ratio:.2f}x slower than {fast} "
+                f"(need >= {need}x)"
+            )
 
     if failures:
         print("\nFAIL: fleet-scale benchmark regression(s):", file=sys.stderr)

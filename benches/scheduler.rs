@@ -7,6 +7,7 @@
 
 use carbonscaler::carbon::{regions, synthetic};
 use carbonscaler::scaling::models::presets;
+use carbonscaler::sched::engine;
 use carbonscaler::sched::fleet::{self, PlanContext};
 use carbonscaler::sched::geo::{self, GeoPlanContext, MigrationPolicy};
 use carbonscaler::sched::greedy;
@@ -103,6 +104,53 @@ fn main() {
                 || fleet::plan_fleet(&jobs, &ctx).expect("bench fleet feasible"),
             ));
         }
+    }
+
+    println!("\n== online engine (warm-start repair vs cold replan, DESIGN.md §10) ==");
+    {
+        // ISSUE 4 acceptance: warm-start repair after ONE arrival at fleet
+        // scale (100 jobs x 96-slot windows) must be >= 5x faster than a
+        // cold plan_fleet recompute. The ratio is gated in CI
+        // (.github/scripts/bench_gate.py, "ratio_gates").
+        let (n_jobs, cap) = (100usize, 128usize);
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| {
+                JobBuilder::new(&format!("o{i}"), presets::RESNET18.curve(8))
+                    .servers(1, 8)
+                    .arrival(i % 24)
+                    .length(64.0)
+                    .slack_factor(1.5)
+                    .build()
+                    .unwrap()
+            })
+            .collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+        let ctx = PlanContext::uniform(0, cap, trace.window(0, end)).unwrap();
+        let incumbent_jobs = &jobs[..n_jobs - 1];
+        let incumbent =
+            fleet::plan_fleet(incumbent_jobs, &ctx).expect("bench incumbent feasible");
+        let newcomer = &jobs[n_jobs - 1];
+        let cold = bench(
+            &format!("engine cold replan jobs={n_jobs} n=96 cap={cap}"),
+            2,
+            10,
+            budget,
+            || fleet::plan_fleet(&jobs, &ctx).expect("bench cold feasible"),
+        );
+        let warm = bench(
+            &format!("engine warm repair 1 arrival jobs={n_jobs} n=96 cap={cap}"),
+            2,
+            10,
+            budget,
+            || {
+                engine::repair_arrival(incumbent_jobs, &incumbent, newcomer, &ctx, 0)
+                    .expect("bench warm repair feasible")
+            },
+        );
+        let speedup = cold.mean.as_nanos() as f64 / warm.mean.as_nanos().max(1) as f64;
+        println!("warm-start repair speedup vs cold replan: {speedup:.1}x (acceptance: >= 5x)");
+        results.push(cold);
+        results.push(warm);
     }
 
     println!("\n== geo engine (multi-region placement, 96-slot windows) ==");

@@ -1,12 +1,18 @@
 //! Carbon Advisor: pre-deployment simulation and what-if analysis
-//! (paper §4.3).
+//! (paper §4.3), including online arrival-process simulation against the
+//! event-driven scheduling engine (DESIGN.md §10).
 
 pub mod analysis;
+pub mod online;
 pub mod sim;
 
 pub use analysis::{
     even_starts, fleet_vs_independent, geo_vs_baselines, savings_pct, savings_vs_baseline,
     summarize, sweep_cluster_sizes, sweep_regions, sweep_start_times, FleetComparison, GeoWhatIf,
+};
+pub use online::{
+    online_vs_baselines, simulate_online, simulate_online_agnostic, ArrivalProcess,
+    OnlineJobOutcome, OnlineSimResult, OnlineWhatIf,
 };
 pub use sim::{
     simulate, simulate_fleet, simulate_geo, simulate_geo_agnostic, FleetJobResult,

@@ -20,6 +20,7 @@
 use crate::carbon::forecast::ForecastProvider;
 use crate::carbon::trace::CarbonTrace;
 use crate::scaling::PhasedCurve;
+use crate::sched::engine::{DriftMonitor, TickEvent};
 use crate::sched::fleet::{FleetSchedule, PlanContext};
 use crate::sched::geo::{self, GeoFleetSchedule, GeoPlanContext, GeoRegion, MigrationPolicy};
 use crate::sched::policy::Policy;
@@ -144,6 +145,9 @@ pub fn simulate(
     let mut realized = Vec::new();
     let mut completion = None;
 
+    // Recompute decisions flow through the engine's drift monitor
+    // (DESIGN.md §10) — the same component the coordinator uses.
+    let mut monitor = DriftMonitor::new(cfg.deviation_threshold);
     let mut rel = 0usize; // slot index relative to arrival
     while rel < horizon {
         let abs = job.arrival + rel;
@@ -210,14 +214,14 @@ pub fn simulate(
 
         // Slot boundary: deviation detection and recomputation.
         if cfg.recompute && rel + 1 < n {
-            let planned_done = expected_progress(&plan, &planning_job, job.arrival, rel);
-            let progress_dev = if planned_done > 1e-9 {
-                ((done - planned_done) / planned_done).abs()
-            } else {
-                0.0
-            };
-            let carbon_dev = forecast.realized_error(job.arrival, abs);
-            if progress_dev > cfg.deviation_threshold || carbon_dev > cfg.deviation_threshold {
+            monitor.observe(TickEvent::Progress {
+                expected_units: expected_progress(&plan, &planning_job, job.arrival, rel),
+                measured_units: done,
+            });
+            monitor.observe(TickEvent::CarbonDrift {
+                realized_error: forecast.realized_error(job.arrival, abs),
+            });
+            if monitor.take_replan() {
                 let now = abs + 1;
                 let remaining = (total - done).max(0.0);
                 if remaining > 0.0 && now < job.deadline() {

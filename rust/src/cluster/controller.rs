@@ -12,12 +12,22 @@
 //! * [`ClusterController::submit_fleet`] — the batch is planned jointly
 //!   by the fleet engine (DESIGN.md §8) against the cluster's residual
 //!   per-slot capacity, so committed plans never collide and execution is
-//!   denial-free by construction.
+//!   denial-free by construction;
+//! * [`ClusterController::submit_at`] — the *online* path (DESIGN.md
+//!   §10): arrivals are queued as future events and admitted when their
+//!   hour comes via the engine's warm-start repair against whatever the
+//!   incumbent tenants hold, replacing the submit-everything-then-run
+//!   pattern. Arrivals the repair cannot place are recorded in
+//!   [`ClusterController::rejected`], not errors — online admission is
+//!   allowed to say no.
 
 use crate::carbon::trace::CarbonTrace;
 use crate::cluster::state::{Cluster, GeoCapacityLedger};
-use crate::sched::fleet::{self, PlanContext};
-use crate::sched::geo::{self, GeoPlanContext, GeoRegion, MigrationPolicy};
+use crate::sched::engine;
+use crate::sched::fleet::{self, FleetSchedule, PlanContext};
+use crate::sched::geo::{
+    self, GeoFleetSchedule, GeoPlanContext, GeoRegion, GeoSchedule, MigrationPolicy,
+};
 use crate::sched::greedy;
 use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
@@ -50,6 +60,11 @@ pub struct ClusterController {
     pub trace: CarbonTrace,
     jobs: Vec<JobRun>,
     hour: usize,
+    /// Future arrivals queued by [`ClusterController::submit_at`],
+    /// admitted when their hour comes.
+    pending: Vec<(usize, JobSpec)>,
+    /// Arrivals the warm-start repair could not place, with the reason.
+    pub rejected: Vec<(JobSpec, String)>,
 }
 
 impl ClusterController {
@@ -59,6 +74,8 @@ impl ClusterController {
             trace,
             jobs: Vec::new(),
             hour: 0,
+            pending: Vec::new(),
+            rejected: Vec::new(),
         }
     }
 
@@ -78,7 +95,7 @@ impl ClusterController {
             denials: 0,
             recomputes: 0,
             completion: None,
-            realized: Vec::new(),
+            realized: vec![0; self.hour],
         });
         Ok(())
     }
@@ -132,9 +149,102 @@ impl ClusterController {
                 denials: 0,
                 recomputes: 0,
                 completion: None,
-                realized: Vec::new(),
+                realized: vec![0; self.hour],
             });
         }
+        Ok(())
+    }
+
+    /// Queue a job to arrive at `hour` (>= the current hour). When the
+    /// controller's clock reaches that hour the arrival is admitted via
+    /// the online engine's warm-start repair ([`engine::repair_arrival`],
+    /// DESIGN.md §10) against the residual per-slot capacity the
+    /// incumbent tenants' unfinished plans leave behind: the common case
+    /// plans only the newcomer, escalating to re-opening incumbent
+    /// futures (and, on small instances, a cold portfolio replan) only
+    /// when the residual cannot host it. Arrivals that still do not fit
+    /// are recorded in [`ClusterController::rejected`] — online admission
+    /// control, not an error. The spec's `arrival` is set to `hour`.
+    pub fn submit_at(&mut self, hour: usize, mut spec: JobSpec) -> Result<()> {
+        if hour < self.hour {
+            bail!(
+                "cannot queue an arrival at h{hour}: the clock is already at h{}",
+                self.hour
+            );
+        }
+        spec.arrival = hour;
+        let dup = self.jobs.iter().any(|j| j.spec.name == spec.name)
+            || self.pending.iter().any(|(_, s)| s.name == spec.name);
+        if dup {
+            bail!("duplicate job name {:?}", spec.name);
+        }
+        self.pending.push((hour, spec));
+        Ok(())
+    }
+
+    /// Arrivals still waiting for their hour.
+    pub fn pending_arrivals(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Admit every queued arrival whose hour has come (called at the top
+    /// of [`ClusterController::step_hour`], before any allocation moves).
+    fn admit_due(&mut self) {
+        for spec in drain_due(&mut self.pending, self.hour) {
+            if let Err(e) = self.admit_arrival(spec.clone()) {
+                self.rejected.push((spec, format!("{e:#}")));
+            }
+        }
+    }
+
+    /// One arrival, admitted by warm-start repair against the incumbents.
+    fn admit_arrival(&mut self, spec: JobSpec) -> Result<()> {
+        let start = self.hour;
+        let unfinished: Vec<usize> = (0..self.jobs.len())
+            .filter(|&i| !self.jobs[i].finished())
+            .collect();
+        let end = unfinished
+            .iter()
+            .map(|&i| self.jobs[i].plan.arrival + self.jobs[i].plan.n_slots())
+            .chain(unfinished.iter().map(|&i| self.jobs[i].spec.deadline()))
+            .chain([start + 1, spec.deadline()])
+            .max()
+            .unwrap_or(start + 1);
+        let horizon = end - start;
+        let ctx = PlanContext::new(
+            start,
+            vec![self.cluster.capacity(); horizon],
+            self.trace.window(start, horizon),
+        )?;
+        let specs: Vec<JobSpec> = unfinished
+            .iter()
+            .map(|&i| self.jobs[i].spec.clone())
+            .collect();
+        let incumbent = FleetSchedule {
+            schedules: unfinished
+                .iter()
+                .map(|&i| stitched_incumbent(&self.jobs[i], start))
+                .collect(),
+        };
+        let (fs, _stats) = engine::repair_arrival(&specs, &incumbent, &spec, &ctx, start)?;
+        let (head, tail) = fs.schedules.split_at(unfinished.len());
+        for (k, &i) in unfinished.iter().enumerate() {
+            self.jobs[i].plan = head[k].clone();
+        }
+        self.jobs.push(JobRun {
+            spec,
+            plan: tail[0].clone(),
+            done_work: 0.0,
+            carbon_g: 0.0,
+            server_hours: 0.0,
+            denials: 0,
+            recomputes: 0,
+            completion: None,
+            // Pad with the hours that elapsed before admission so
+            // `realized[h]` stays aligned with absolute hour `h` for
+            // every tenant regardless of when it arrived.
+            realized: vec![0; self.hour],
+        });
         Ok(())
     }
 
@@ -160,7 +270,10 @@ impl ClusterController {
             denials: 0,
             recomputes: 0,
             completion: None,
-            realized: Vec::new(),
+            // Pad with the elapsed hours so `realized[h]` stays aligned
+            // with absolute hour `h` for every tenant (matches the
+            // submit_at admission path).
+            realized: vec![0; self.hour],
         });
         Ok(())
     }
@@ -173,16 +286,20 @@ impl ClusterController {
         self.hour
     }
 
-    /// True when every submitted job has finished.
+    /// True when every submitted job has finished and no queued arrival
+    /// is still waiting for its hour.
     pub fn all_done(&self) -> bool {
-        self.jobs.iter().all(JobRun::finished)
+        self.jobs.iter().all(JobRun::finished) && self.pending.is_empty()
     }
 
-    /// Advance one hour: each active job requests its planned allocation
-    /// (submission order = priority; a fair-share policy could reorder),
-    /// the cluster grants subject to capacity, jobs progress and account
-    /// energy/carbon, and denied jobs recompute their remainder.
+    /// Advance one hour: queued arrivals whose hour has come are admitted
+    /// first (event-driven replan-on-arrival, DESIGN.md §10), then each
+    /// active job requests its planned allocation (submission order =
+    /// priority; a fair-share policy could reorder), the cluster grants
+    /// subject to capacity, jobs progress and account energy/carbon, and
+    /// denied jobs recompute their remainder.
     pub fn step_hour(&mut self) -> Result<()> {
+        self.admit_due();
         let h = self.hour;
         let intensity = self.trace.at(h);
 
@@ -279,6 +396,56 @@ impl ClusterController {
     }
 }
 
+/// Remove and return every queued arrival whose hour has come, in
+/// deterministic (name-sorted) admission order — shared by both
+/// controllers' `admit_due` loops so their queue semantics cannot
+/// diverge.
+fn drain_due(pending: &mut Vec<(usize, JobSpec)>, now: usize) -> Vec<JobSpec> {
+    let mut due: Vec<JobSpec> = Vec::new();
+    pending.retain(|(h, spec)| {
+        if *h <= now {
+            due.push(spec.clone());
+            false
+        } else {
+            true
+        }
+    });
+    due.sort_by(|a, b| a.name.cmp(&b.name));
+    due
+}
+
+/// An unfinished tenant's effective schedule for online admission repair:
+/// the hours it actually ran (its `realized` record, absolute-aligned)
+/// before `now`, stitched onto its committed plan from `now` on. This
+/// keeps the repair arena's frozen-past work credit honest even after a
+/// denial-driven recompute replaced the tenant's plan with a remainder
+/// schedule that starts mid-window and no longer mentions the executed
+/// prefix.
+fn stitched_incumbent(job: &JobRun, now: usize) -> Schedule {
+    let arrival = job.spec.arrival;
+    let m = job.spec.min_servers;
+    let n = job.spec.n_slots();
+    let mut alloc = vec![0usize; n];
+    for (rel, a) in alloc.iter_mut().enumerate() {
+        let abs = arrival + rel;
+        *a = if abs < now {
+            // Below-minimum grants made no progress (step_hour accrues
+            // done_work only at k >= m); record them as 0 so the stitched
+            // schedule's completion accounting cannot credit phantom work
+            // and trim a still-running tenant's future.
+            let r = job.realized.get(abs).copied().unwrap_or(0);
+            if r >= m {
+                r
+            } else {
+                0
+            }
+        } else {
+            job.plan.at(abs)
+        };
+    }
+    Schedule::new(arrival, alloc)
+}
+
 /// Shared batch-admission checks for [`ClusterController::submit_fleet`]
 /// and [`GeoClusterController::submit_geo`]: every spec must arrive at or
 /// after `start`, and no name may collide with `taken` (the already
@@ -326,6 +493,10 @@ pub struct GeoSite {
 /// bounded migration, the controller dispatches single-region plans).
 pub struct GeoClusterController {
     sites: Vec<GeoSite>,
+    /// Future arrivals queued by [`GeoClusterController::submit_at`].
+    pending: Vec<(usize, JobSpec)>,
+    /// Arrivals the geo warm-start repair could not place, with reason.
+    pub rejected: Vec<(JobSpec, String)>,
 }
 
 impl GeoClusterController {
@@ -349,6 +520,8 @@ impl GeoClusterController {
                     controller: ClusterController::new(cluster, trace),
                 })
                 .collect(),
+            pending: Vec::new(),
+            rejected: Vec::new(),
         })
     }
 
@@ -361,7 +534,7 @@ impl GeoClusterController {
     }
 
     pub fn all_done(&self) -> bool {
-        self.sites.iter().all(|s| s.controller.all_done())
+        self.sites.iter().all(|s| s.controller.all_done()) && self.pending.is_empty()
     }
 
     /// All jobs across all sites, tagged with their site name.
@@ -445,8 +618,112 @@ impl GeoClusterController {
         Ok(())
     }
 
-    /// Advance every site by one hour.
+    /// Queue a job to arrive at `hour` (>= the current hour). When the
+    /// clock reaches that hour the arrival is placed by the geo engine's
+    /// warm-start repair ([`geo::repair_geo_arrival`], DESIGN.md §10)
+    /// against every site's residual capacity: the newcomer plans into
+    /// whichever region's residual is cheapest, incumbents stay where
+    /// they are (escalation re-opens their futures but pins each to its
+    /// own site, so running state never silently moves). Unplaceable
+    /// arrivals land in [`GeoClusterController::rejected`].
+    pub fn submit_at(&mut self, hour: usize, mut spec: JobSpec) -> Result<()> {
+        if hour < self.hour() {
+            bail!(
+                "cannot queue an arrival at h{hour}: the clock is already at h{}",
+                self.hour()
+            );
+        }
+        spec.arrival = hour;
+        let dup = self
+            .sites
+            .iter()
+            .flat_map(|s| s.controller.jobs().iter())
+            .any(|j| j.spec.name == spec.name)
+            || self.pending.iter().any(|(_, s)| s.name == spec.name);
+        if dup {
+            bail!("duplicate job name {:?}", spec.name);
+        }
+        self.pending.push((hour, spec));
+        Ok(())
+    }
+
+    /// Arrivals still waiting for their hour.
+    pub fn pending_arrivals(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn admit_due(&mut self) {
+        for spec in drain_due(&mut self.pending, self.hour()) {
+            if let Err(e) = self.admit_arrival(spec.clone()) {
+                self.rejected.push((spec, format!("{e:#}")));
+            }
+        }
+    }
+
+    fn admit_arrival(&mut self, spec: JobSpec) -> Result<()> {
+        let start = self.hour();
+        let end = self
+            .sites
+            .iter()
+            .flat_map(|s| {
+                s.controller.jobs().iter().filter(|j| !j.finished()).map(|j| {
+                    (j.plan.arrival + j.plan.n_slots()).max(j.spec.deadline())
+                })
+            })
+            .chain([start + 1, spec.deadline()])
+            .max()
+            .unwrap_or(start + 1);
+        let horizon = end - start;
+        let regions = self
+            .sites
+            .iter()
+            .map(|site| {
+                Ok(GeoRegion {
+                    name: site.name.clone(),
+                    ctx: PlanContext::new(
+                        start,
+                        vec![site.controller.cluster.capacity(); horizon],
+                        site.controller.trace.window(start, horizon),
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let geo_ctx = GeoPlanContext::new(regions, MigrationPolicy::none())?;
+        // Incumbents: every unfinished job at every site, placed where it
+        // runs; (site, job) index pairs aligned with the spec slice.
+        let mut members: Vec<(usize, usize)> = Vec::new();
+        let mut specs: Vec<JobSpec> = Vec::new();
+        let mut schedules: Vec<GeoSchedule> = Vec::new();
+        for (si, site) in self.sites.iter().enumerate() {
+            for (ji, job) in site.controller.jobs().iter().enumerate() {
+                if job.finished() {
+                    continue;
+                }
+                members.push((si, ji));
+                specs.push(job.spec.clone());
+                let st = stitched_incumbent(job, start);
+                schedules.push(GeoSchedule::single_region(st.arrival, st.alloc, si));
+            }
+        }
+        let incumbent = GeoFleetSchedule { schedules };
+        let (gfs, _stats) =
+            geo::repair_geo_arrival(&specs, &incumbent, &spec, &geo_ctx, start)?;
+        // Write incumbents back (escalation may have reshaped them inside
+        // their own sites) and dispatch the newcomer to its site.
+        for (k, &(si, ji)) in members.iter().enumerate() {
+            self.sites[si].controller.jobs[ji].plan = gfs.schedules[k].as_schedule();
+        }
+        let new_gs = gfs.schedules.last().expect("newcomer schedule present");
+        let site_idx = new_gs.active_regions().first().copied().unwrap_or(0);
+        self.sites[site_idx]
+            .controller
+            .submit_planned(spec, new_gs.as_schedule())
+    }
+
+    /// Advance every site by one hour (queued arrivals whose hour has
+    /// come are placed first).
     pub fn step_hour(&mut self) -> Result<()> {
+        self.admit_due();
         for site in &mut self.sites {
             site.controller.step_hour()?;
         }
@@ -684,6 +961,98 @@ mod tests {
             ("x".into(), Cluster::homogeneous(1), trace()),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn submit_at_admits_on_arrival_hour_and_finishes() {
+        let mut c = ClusterController::new(Cluster::homogeneous(8), trace());
+        c.submit_at(0, job("early", 6.0, 1.5, 4)).unwrap();
+        c.submit_at(5, job("late", 6.0, 1.5, 4)).unwrap();
+        assert_eq!(c.pending_arrivals(), 2);
+        assert_eq!(c.jobs().len(), 0, "admission is event-driven, not eager");
+        c.run(60).unwrap();
+        assert!(c.all_done());
+        assert!(c.rejected.is_empty());
+        assert_eq!(c.jobs().len(), 2);
+        let late = c.jobs().iter().find(|j| j.spec.name == "late").unwrap();
+        assert_eq!(late.spec.arrival, 5);
+        assert!(late.realized[..5].iter().all(|&a| a == 0));
+        for j in c.jobs() {
+            assert!(j.completion.unwrap() <= j.spec.completion_hours + 1e-9);
+        }
+    }
+
+    #[test]
+    fn submit_at_streaming_contention_is_denial_free() {
+        // The fleet_submission contention mix, but arriving one job per
+        // hour: every arrival is admitted by warm-start repair against
+        // the incumbents, so committed totals always fit capacity and
+        // execution stays denial-free.
+        let mut c = ClusterController::new(Cluster::homogeneous(6), trace());
+        for i in 0..4 {
+            c.submit_at(i, job(&format!("j{i}"), 12.0, 1.5, 4)).unwrap();
+        }
+        c.run(100).unwrap();
+        assert!(c.all_done());
+        assert!(c.rejected.is_empty(), "rejections: {:?}", c.rejected);
+        for j in c.jobs() {
+            assert_eq!(j.denials, 0, "{} was denied", j.spec.name);
+            assert!(
+                j.completion.unwrap() <= j.spec.completion_hours + 1e-9,
+                "{} finished at {:?}",
+                j.spec.name,
+                j.completion
+            );
+        }
+        // Capacity held at every hour.
+        let horizon = c.jobs().iter().map(|j| j.realized.len()).max().unwrap();
+        for h in 0..horizon {
+            let used: usize = c
+                .jobs()
+                .iter()
+                .map(|j| j.realized.get(h).copied().unwrap_or(0))
+                .sum();
+            assert!(used <= 6, "hour {h}: {used} servers on a 6-node cluster");
+        }
+    }
+
+    #[test]
+    fn submit_at_records_rejections_instead_of_failing() {
+        let mut c = ClusterController::new(Cluster::homogeneous(1), trace());
+        c.submit_at(0, job("a", 2.0, 1.0, 1)).unwrap();
+        c.submit_at(0, job("b", 2.0, 1.0, 1)).unwrap();
+        // Queue-time validation still rejects duplicates and past hours.
+        assert!(c.submit_at(0, job("a", 1.0, 1.5, 1)).is_err());
+        c.run(10).unwrap();
+        assert!(c.all_done());
+        assert_eq!(c.jobs().len(), 1, "only one 2-slot job fits capacity 1");
+        assert_eq!(c.rejected.len(), 1);
+        assert_eq!(c.rejected[0].0.name, "b");
+        assert!(c.submit_at(0, job("x", 1.0, 1.5, 1)).is_err(), "past hour");
+    }
+
+    #[test]
+    fn geo_submit_at_places_arrivals_at_cheap_site() {
+        let cheap = CarbonTrace::new("cheap", vec![10.0; 48]);
+        let dear = CarbonTrace::new("dear", vec![500.0; 48]);
+        let mut g = GeoClusterController::new(vec![
+            ("dear".into(), Cluster::homogeneous(8), dear),
+            ("cheap".into(), Cluster::homogeneous(8), cheap),
+        ])
+        .unwrap();
+        g.submit_at(0, job("a", 4.0, 1.5, 2)).unwrap();
+        g.submit_at(2, job("b", 4.0, 1.5, 2)).unwrap();
+        assert_eq!(g.pending_arrivals(), 2);
+        g.run(40).unwrap();
+        assert!(g.all_done());
+        assert!(g.rejected.is_empty(), "rejections: {:?}", g.rejected);
+        assert_eq!(g.sites()[0].controller.jobs().len(), 0, "dear site used");
+        assert_eq!(g.sites()[1].controller.jobs().len(), 2);
+        for (site, j) in g.jobs() {
+            assert_eq!(j.denials, 0, "{} denied at {site}", j.spec.name);
+        }
+        // Duplicate queue-time validation.
+        assert!(g.submit_at(10, job("a", 1.0, 1.5, 1)).is_err());
     }
 
     #[test]

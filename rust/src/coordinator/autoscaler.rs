@@ -18,6 +18,7 @@
 use crate::carbon::trace::CarbonTrace;
 use crate::runtime::params::ParamServer;
 use crate::runtime::worker::WorkerPool;
+use crate::sched::engine::{DriftMonitor, TickEvent};
 use crate::sched::fleet::PlanContext;
 use crate::sched::greedy;
 use crate::sched::policy::Policy;
@@ -294,6 +295,12 @@ impl<'a> CarbonAutoscaler<'a> {
         let horizon = n * 2; // bounded extension past the window (§5.2's
                               // deadline-unaware baselines and measured
                               // shortfalls both need it)
+
+        // Reconcile loop driven through engine drift events (DESIGN.md
+        // §10): per-slot telemetry feeds the monitor, which decides when
+        // the remainder must be replanned — the same component the
+        // advisor simulator uses, so deviation semantics cannot diverge.
+        let mut monitor = DriftMonitor::new(self.cfg.deviation_threshold);
         'slots: for rel in 0..horizon {
             let abs = job.arrival + rel;
             let mut k = plan
@@ -385,13 +392,11 @@ impl<'a> CarbonAutoscaler<'a> {
             // runs stay baseline (an early version recomputed every policy
             // with the greedy, silently making carbon-agnostic carbon-aware).
             if rel + 1 < n {
-                let expected = expected_units(&plan, job, rel);
-                let dev = if expected > 1e-9 {
-                    ((done_units - expected) / expected).abs()
-                } else {
-                    0.0
-                };
-                if dev > self.cfg.deviation_threshold {
+                monitor.observe(TickEvent::Progress {
+                    expected_units: expected_units(&plan, job, rel),
+                    measured_units: done_units,
+                });
+                if monitor.take_replan() {
                     let now = abs + 1;
                     let remaining = (total_work - done_units).max(0.0);
                     if remaining > 0.0 && now < job.deadline() {

@@ -83,6 +83,7 @@ pub fn all() -> Vec<Box<dyn Experiment>> {
         Box::new(evaluation::Fig12),
         Box::new(evaluation::FleetContention),
         Box::new(geo::GeoPlacement),
+        Box::new(online::OnlineArrivals),
         Box::new(sensitivity::Fig13),
         Box::new(sensitivity::Fig14),
         Box::new(sensitivity::Fig15),
@@ -122,10 +123,11 @@ mod tests {
         let mut dedup = ids.clone();
         dedup.dedup();
         assert_eq!(ids, dedup);
-        assert_eq!(ids.len(), 23);
+        assert_eq!(ids.len(), 24);
         assert!(by_id("fig9").is_some());
         assert!(by_id("fleet").is_some());
         assert!(by_id("geo").is_some());
+        assert!(by_id("online").is_some());
         assert!(by_id("nope").is_none());
     }
 }

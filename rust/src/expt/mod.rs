@@ -5,6 +5,7 @@ pub mod evaluation;
 pub mod geo;
 pub mod harness;
 pub mod motivation;
+pub mod online;
 pub mod robustness;
 pub mod sensitivity;
 

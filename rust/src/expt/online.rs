@@ -1,0 +1,174 @@
+//! Online arrival experiment (beyond paper; DESIGN.md §10): the Table-1
+//! mix arriving as a Poisson stream at rates λ ∈ {0.5, 1, 2, 4}
+//! jobs/hour, admitted by the event-driven engine's warm-start repair,
+//! versus the clairvoyant batch plan (all arrivals known at hour 0) and
+//! the carbon-agnostic online baseline. Reports carbon, completion rate,
+//! and mean replan latency — the cost of being online.
+
+use crate::advisor::{self, ArrivalProcess, SimConfig};
+use crate::carbon::{regions, synthetic, CarbonTrace};
+use crate::expt::harness::{ExpContext, Experiment};
+use crate::util::table::{f, pct, Table};
+use crate::workload::catalog;
+use anyhow::Result;
+
+/// Cluster size: comfortable at λ ≤ 1 (mean offered load ≈ 12–24
+/// capacity-hours/hour for 12 h jobs), saturating around λ = 2–4 so the
+/// completion-rate column has something to say.
+const CLUSTER_SIZE: usize = 32;
+
+/// The `online` experiment.
+pub struct OnlineArrivals;
+
+impl OnlineArrivals {
+    /// Table-1 templates (one per workload, l = 12 h, T = 1.8 l, M = 6 —
+    /// the same family as the `fleet` and `geo` experiments). Arrival
+    /// hours come from the process, so templates carry arrival 0.
+    fn templates() -> Result<Vec<crate::workload::job::JobSpec>> {
+        catalog::WORKLOADS
+            .iter()
+            .map(|w| w.job(0, 12.0, 1.8, 6))
+            .collect()
+    }
+
+    fn truth(ctx: &ExpContext) -> CarbonTrace {
+        synthetic::generate(
+            regions::by_name("ontario").unwrap(),
+            ctx.trace_hours(),
+            ctx.seed,
+        )
+    }
+}
+
+impl Experiment for OnlineArrivals {
+    fn id(&self) -> &'static str {
+        "online"
+    }
+    fn title(&self) -> &'static str {
+        "Online arrivals: event-driven engine vs clairvoyant batch vs carbon-agnostic \
+         (beyond paper, DESIGN.md §10)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let templates = Self::templates()?;
+        let truth = Self::truth(ctx);
+        let cfg = SimConfig::default();
+        let (rates, arrival_hours): (Vec<f64>, usize) = if ctx.quick {
+            (vec![1.0, 4.0], 36)
+        } else {
+            (vec![0.5, 1.0, 2.0, 4.0], 72)
+        };
+
+        let mut t = Table::new(&format!(
+            "online engine vs baselines, Table-1 mix, {CLUSTER_SIZE} servers, \
+             arrivals over {arrival_hours} h"
+        ))
+        .headers(&[
+            "λ (jobs/h)",
+            "arrived",
+            "online carbon (g)",
+            "clairvoyant (g)",
+            "agnostic (g)",
+            "online done",
+            "agn done",
+            "vs agnostic",
+            "replan µs",
+            "warm/esc/cold",
+        ]);
+        for &rate in &rates {
+            let arrivals = ArrivalProcess::Poisson {
+                rate_per_hour: rate,
+                horizon_hours: arrival_hours,
+            };
+            match advisor::online_vs_baselines(&templates, &arrivals, &truth, CLUSTER_SIZE, &cfg)
+            {
+                Ok(cmp) => {
+                    let clair = match &cmp.clairvoyant {
+                        Some(c) => f(c.carbon_g, 0),
+                        None => "infeasible".into(),
+                    };
+                    // Savings are only honest when both modes complete the
+                    // same work.
+                    let vs_agn = if cmp.online.all_finished() && cmp.agnostic.all_finished() {
+                        pct(cmp.savings_vs_agnostic())
+                    } else {
+                        "n/a (incomplete)".into()
+                    };
+                    t.row(vec![
+                        f(rate, 1),
+                        cmp.online.n_arrived.to_string(),
+                        f(cmp.online.carbon_g, 0),
+                        clair,
+                        f(cmp.agnostic.carbon_g, 0),
+                        format!("{}/{}", cmp.online.n_finished, cmp.online.n_arrived),
+                        format!("{}/{}", cmp.agnostic.n_finished, cmp.agnostic.n_arrived),
+                        vs_agn,
+                        f(cmp.online.mean_replan_us, 1),
+                        format!(
+                            "{}/{}/{}",
+                            cmp.online.warm_repairs,
+                            cmp.online.escalated_repairs,
+                            cmp.online.cold_replans
+                        ),
+                    ]);
+                }
+                Err(e) => t.row(vec![
+                    f(rate, 1),
+                    format!("error: {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+        Ok(vec![t])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpContext {
+        ExpContext {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn online_experiment_reports_each_rate() {
+        let tables = OnlineArrivals.run(&quick()).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].n_rows(), 2);
+        let text = tables[0].render();
+        assert!(!text.contains("error:"), "no rate may error:\n{text}");
+    }
+
+    #[test]
+    fn low_rate_online_admits_everything() {
+        let templates = OnlineArrivals::templates().unwrap();
+        let ctx = quick();
+        let truth = OnlineArrivals::truth(&ctx);
+        let arrivals = ArrivalProcess::Poisson {
+            rate_per_hour: 0.5,
+            horizon_hours: 24,
+        };
+        let r = advisor::simulate_online(
+            &templates,
+            &arrivals,
+            &truth,
+            CLUSTER_SIZE,
+            &SimConfig::default(),
+        )
+        .unwrap();
+        // Mean offered load is ~6 capacity-hours/hour on 32 servers: the
+        // engine must place the whole stream.
+        assert_eq!(r.n_admitted, r.n_arrived);
+        assert!(r.all_finished());
+    }
+}

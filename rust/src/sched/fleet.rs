@@ -43,8 +43,10 @@ const MIN_CARBON: f64 = 1e-9;
 /// Above this many job-slot cells the polish pass is skipped: local
 /// search is O(cells · horizon) per pass and the greedy is already
 /// near-optimal at scale (DESIGN.md §7 perf budget: 100 jobs × 96 slots
-/// must plan in < 50 ms).
-const POLISH_CELL_BUDGET: usize = 2048;
+/// must plan in < 50 ms). Shared with the online engine (DESIGN.md §10),
+/// which uses the same budget to decide when a cold-replan candidate and
+/// the polish pass are affordable inside a repair.
+pub(crate) const POLISH_CELL_BUDGET: usize = 2048;
 
 /// Shared planning context for a fleet of jobs.
 ///
@@ -321,6 +323,264 @@ fn checked(
     })
 }
 
+/// The incremental core shared by cold fleet planning and the online
+/// engine's warm-start repair (DESIGN.md §10): per-slot residual
+/// capacity, per-job work cursors, per-(job, slot) allocation state, and
+/// the candidate heap, all in one arena.
+///
+/// Cold planning seeds every job from scratch and runs the heap to
+/// completion — exactly the interleaved greedy this module has always
+/// implemented (the candidate order is a strict total order, so the heap
+/// pops in the same sequence regardless of how state was assembled).
+/// Warm repair instead *adopts* an incumbent [`FleetSchedule`] (debiting
+/// residual capacity and crediting each job's phase-0 work cursor), then
+/// seeds only the jobs touched by a delta; untouched jobs are never
+/// re-opened and their allocations pass through unchanged.
+///
+/// Invariant the chain-drop rule relies on: committed capacity only grows
+/// while the heap runs. Adoption and [`FleetArena::clear_future`] happen
+/// strictly before [`FleetArena::run`], so the invariant holds for warm
+/// repairs exactly as it does for cold plans.
+pub(crate) struct FleetArena<'a> {
+    jobs: &'a [JobSpec],
+    ctx: &'a PlanContext,
+    /// Residual servers per context slot.
+    free: Vec<usize>,
+    totals: Vec<f64>,
+    /// Phase-0 work cursor per job (capacity-hours credited so far).
+    done: Vec<f64>,
+    /// Per-job per-relative-slot allocation.
+    alloc: Vec<Vec<usize>>,
+    /// Jobs opened by [`FleetArena::seed`] (candidates in the heap).
+    counted: Vec<bool>,
+    open: usize,
+    heap: BinaryHeap<Cand>,
+}
+
+impl<'a> FleetArena<'a> {
+    pub(crate) fn new(jobs: &'a [JobSpec], ctx: &'a PlanContext) -> Self {
+        FleetArena {
+            jobs,
+            ctx,
+            free: ctx.capacity.clone(),
+            totals: jobs.iter().map(|j| j.total_work()).collect(),
+            done: vec![0.0; jobs.len()],
+            alloc: jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect(),
+            counted: vec![false; jobs.len()],
+            open: 0,
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// Install an incumbent schedule for job `ji`: debit residual capacity
+    /// for every in-window slot and credit the phase-0 work cursor. Slots
+    /// before the context window (the frozen past of a partially executed
+    /// job) keep their full allocation and still credit work; in-window
+    /// slots are clamped to the residual (the `reserve_upto` semantics
+    /// used for plans that were never admission-checked — for a sanely
+    /// admitted incumbent the clamp never binds).
+    ///
+    /// The schedule's own `arrival` may differ from the spec's (denial
+    /// recomputes produce remainder plans starting at the recompute
+    /// hour); allocations are re-indexed into the spec's window by
+    /// absolute hour, and anything outside it is ignored.
+    pub(crate) fn adopt(&mut self, ji: usize, s: &Schedule) {
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        for (srel, &a) in s.alloc.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let abs = s.arrival + srel;
+            if abs < job.arrival || abs >= self.ctx.end() {
+                continue;
+            }
+            let rel = abs - job.arrival;
+            if rel >= self.alloc[ji].len() {
+                continue;
+            }
+            let take = match self.ctx.rel(abs) {
+                Some(fi) => {
+                    let t = a.min(self.free[fi]);
+                    self.free[fi] -= t;
+                    t
+                }
+                None => a, // frozen past: capacity there is history
+            };
+            self.alloc[ji][rel] = take;
+            if take >= job.min_servers {
+                self.done[ji] += curve.capacity(take.min(curve.max_servers()));
+            }
+        }
+    }
+
+    /// Remove job `ji`'s allocations at absolute slots `>= from_abs`,
+    /// returning their capacity to the residual and debiting the work
+    /// cursor. Returns the number of cells cleared. Used to re-open a
+    /// job's future when a delta (forecast revision, capacity change)
+    /// touches it.
+    pub(crate) fn clear_future(&mut self, ji: usize, from_abs: usize) -> usize {
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let mut cells = 0usize;
+        for rel in 0..self.alloc[ji].len() {
+            let abs = job.arrival + rel;
+            let a = self.alloc[ji][rel];
+            if a == 0 || abs < from_abs {
+                continue;
+            }
+            if let Some(fi) = self.ctx.rel(abs) {
+                self.free[fi] += a;
+            }
+            if a >= job.min_servers {
+                self.done[ji] -= curve.capacity(a.min(curve.max_servers()));
+            }
+            self.alloc[ji][rel] = 0;
+            cells += 1;
+        }
+        if self.done[ji] < 0.0 {
+            self.done[ji] = 0.0;
+        }
+        cells
+    }
+
+    /// Open job `ji` and push its candidate chains for absolute slots
+    /// `>= from_abs`: unallocated slots enter with the minimum-bundle
+    /// candidate, partially allocated slots resume at their next marginal
+    /// step (the per-job marginal cursor). Jobs whose work cursor already
+    /// covers their total are trivially complete and stay closed.
+    /// Idempotent per job.
+    pub(crate) fn seed(&mut self, ji: usize, from_abs: usize) -> Result<()> {
+        if self.counted[ji] || self.done[ji] >= self.totals[ji] - 1e-9 {
+            return Ok(());
+        }
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let m = job.min_servers;
+        let bundle = curve.capacity(m);
+        if bundle <= 0.0 {
+            bail!("job {:?}: zero capacity at minimum allocation", job.name);
+        }
+        self.counted[ji] = true;
+        let before = self.heap.len();
+        for rel in 0..job.n_slots() {
+            let abs = job.arrival + rel;
+            if abs < from_abs {
+                continue;
+            }
+            let Some(fi) = self.ctx.rel(abs) else {
+                continue;
+            };
+            let c = self.ctx.carbon[fi].max(MIN_CARBON);
+            let a = self.alloc[ji][rel];
+            if a == 0 {
+                self.heap.push(checked(
+                    bundle / (m as f64 * c),
+                    bundle,
+                    &job.name,
+                    abs,
+                    m,
+                    ji,
+                )?);
+            } else if a < job.max_servers {
+                let next = a + 1;
+                let w = curve.marginal(next);
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    self.heap.push(checked(w / c, w, &job.name, abs, next, ji)?);
+                }
+            }
+        }
+        // A job with no seedable future (window elapsed, or every slot
+        // already at its maximum) stays closed: the heap cannot complete
+        // it and counting it open would deadlock `run` into an error even
+        // when the caller's completion gate would have handled it. Cold
+        // planning always seeds at least one candidate per incomplete
+        // job (check_jobs guarantees an in-window, sub-maximum slot
+        // exists), so the cold path is unaffected.
+        if self.heap.len() > before {
+            self.open += 1;
+        }
+        Ok(())
+    }
+
+    /// Run the interleaved greedy to completion of every open job. Errors
+    /// when the heap drains first — every genuinely infeasible instance,
+    /// plus some feasible deadline-tight mixes (the chain-drop rule is
+    /// greedy, not exhaustive).
+    pub(crate) fn run(&mut self) -> Result<()> {
+        while self.open > 0 {
+            let Some(cand) = self.heap.pop() else {
+                bail!(
+                    "infeasible fleet: {} job(s) cannot complete within \
+                     capacity and deadlines",
+                    self.open
+                );
+            };
+            let ji = cand.job;
+            if self.done[ji] >= self.totals[ji] - 1e-9 {
+                continue; // stale entry for an already-complete job
+            }
+            let job = &self.jobs[ji];
+            let rel = cand.slot - job.arrival;
+            let fi = cand.slot - self.ctx.start;
+            if cand.servers <= self.alloc[ji][rel] {
+                continue; // defensive: chains are monotone per (job, slot)
+            }
+            let need = cand.servers - self.alloc[ji][rel];
+            if self.free[fi] < need {
+                // The slot cannot host this step, and committed capacity
+                // only grows during a run — the rest of this (job, slot)
+                // chain is dead, so dropping the candidate is permanent
+                // and safe.
+                continue;
+            }
+            self.free[fi] -= need;
+            self.alloc[ji][rel] = cand.servers;
+            self.done[ji] += cand.work;
+            if self.done[ji] >= self.totals[ji] - 1e-9 {
+                self.open -= 1;
+            } else if cand.servers < job.max_servers {
+                let next = cand.servers + 1;
+                let w = job.curve.at_progress(0.0).marginal(next);
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    let c = self.ctx.carbon[fi].max(MIN_CARBON);
+                    self.heap.push(checked(w / c, w, &job.name, cand.slot, next, ji)?);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The arena's current allocation for one job as a [`Schedule`].
+    pub(crate) fn schedule_of(&self, ji: usize) -> Schedule {
+        Schedule::new(self.jobs[ji].arrival, self.alloc[ji].clone())
+    }
+
+    /// All allocations as a [`FleetSchedule`] aligned with the job slice.
+    pub(crate) fn into_fleet(self) -> FleetSchedule {
+        FleetSchedule {
+            schedules: self
+                .jobs
+                .iter()
+                .zip(self.alloc)
+                .map(|(j, a)| Schedule::new(j.arrival, a))
+                .collect(),
+        }
+    }
+}
+
 /// Interleaved fleet greedy: Algorithm 1 generalized to `N` jobs sharing
 /// per-slot capacity. Candidates from all jobs compete in one heap in
 /// decreasing marginal-work-per-unit-carbon order; a popped step commits
@@ -330,89 +590,19 @@ fn checked(
 /// also reject some feasible deadline-tight mixes (the chain-drop rule is
 /// greedy, not exhaustive; [`plan_fleet`]'s EDF pass rescues most such
 /// cases).
+///
+/// Implemented as the all-jobs-seeded, nothing-adopted case of
+/// `FleetArena`, so the cold path and the online engine's warm repair
+/// (DESIGN.md §10) cannot diverge in priorities, tie-breaks, or
+/// validation.
 pub fn plan_fleet_greedy(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
     ctx.check_jobs(jobs)?;
-    let mut free = ctx.capacity.clone();
-    let totals: Vec<f64> = jobs.iter().map(|j| j.total_work()).collect();
-    let mut done = vec![0.0f64; jobs.len()];
-    let mut alloc: Vec<Vec<usize>> = jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect();
-    let mut open = 0usize;
-    let mut heap: BinaryHeap<Cand> = BinaryHeap::new();
-
-    for (ji, job) in jobs.iter().enumerate() {
-        if totals[ji] <= 1e-9 {
-            continue;
-        }
-        open += 1;
-        let curve = job.curve.at_progress(0.0);
-        let m = job.min_servers;
-        let bundle = curve.capacity(m);
-        if bundle <= 0.0 {
-            bail!("job {:?}: zero capacity at minimum allocation", job.name);
-        }
-        for rel in 0..job.n_slots() {
-            let abs = job.arrival + rel;
-            let c = ctx.carbon[abs - ctx.start].max(MIN_CARBON);
-            heap.push(checked(
-                bundle / (m as f64 * c),
-                bundle,
-                &job.name,
-                abs,
-                m,
-                ji,
-            )?);
-        }
+    let mut arena = FleetArena::new(jobs, ctx);
+    for ji in 0..jobs.len() {
+        arena.seed(ji, ctx.start)?;
     }
-
-    while open > 0 {
-        let Some(cand) = heap.pop() else {
-            bail!(
-                "infeasible fleet: {open} job(s) cannot complete within \
-                 capacity and deadlines"
-            );
-        };
-        let ji = cand.job;
-        if done[ji] >= totals[ji] - 1e-9 {
-            continue; // stale entry for an already-complete job
-        }
-        let job = &jobs[ji];
-        let rel = cand.slot - job.arrival;
-        let fi = cand.slot - ctx.start;
-        let need = cand.servers - alloc[ji][rel];
-        if free[fi] < need {
-            // The slot cannot host this step, and committed capacity only
-            // grows during a plan — the rest of this (job, slot) chain is
-            // dead, so dropping the candidate is permanent and safe.
-            continue;
-        }
-        free[fi] -= need;
-        alloc[ji][rel] = cand.servers;
-        done[ji] += cand.work;
-        if done[ji] >= totals[ji] - 1e-9 {
-            open -= 1;
-        } else if cand.servers < job.max_servers {
-            let next = cand.servers + 1;
-            let w = job.curve.at_progress(0.0).marginal(next);
-            if !w.is_finite() {
-                bail!(
-                    "job {:?}: non-finite marginal capacity at {next} servers",
-                    job.name
-                );
-            }
-            if w > 0.0 {
-                let c = ctx.carbon[fi].max(MIN_CARBON);
-                heap.push(checked(w / c, w, &job.name, cand.slot, next, ji)?);
-            }
-        }
-    }
-
-    Ok(FleetSchedule {
-        schedules: jobs
-            .iter()
-            .zip(alloc)
-            .map(|(j, a)| Schedule::new(j.arrival, a))
-            .collect(),
-    })
+    arena.run()?;
+    Ok(arena.into_fleet())
 }
 
 /// Sequential admission in an explicit order: each job plans the
@@ -526,6 +716,21 @@ pub fn polish_fleet(
     fleet: &mut FleetSchedule,
     max_passes: usize,
 ) {
+    polish_fleet_from(jobs, ctx, fleet, max_passes, ctx.start)
+}
+
+/// [`polish_fleet`] with a frozen prefix: slots strictly before
+/// `frozen_before` (absolute hour) are never modified — they already
+/// happened. The online engine (DESIGN.md §10) polishes repaired plans
+/// with `frozen_before = now`; batch planning uses `ctx.start`, where the
+/// restriction is vacuous.
+pub fn polish_fleet_from(
+    jobs: &[JobSpec],
+    ctx: &PlanContext,
+    fleet: &mut FleetSchedule,
+    max_passes: usize,
+    frozen_before: usize,
+) {
     let trace = ctx.forecast_trace();
     let usage = fleet.slot_usage(ctx);
     let mut free: Vec<usize> = ctx
@@ -540,6 +745,12 @@ pub fn polish_fleet(
         for (ji, job) in jobs.iter().enumerate() {
             let s = &mut fleet.schedules[ji];
             let arrival = s.arrival;
+            if arrival < ctx.start {
+                // A mid-flight job whose window predates the context (its
+                // past is frozen anyway) cannot be rebased onto the
+                // forecast trace — leave it untouched.
+                continue;
+            }
             let arel = arrival - ctx.start;
             // Rebase to relative indexing for the duration of the search so
             // emissions_fast lines up with the forecast trace.
@@ -552,6 +763,9 @@ pub fn polish_fleet(
             let m = job.min_servers;
             let mm = job.max_servers;
             for i in 0..s.alloc.len() {
+                if arrival + i < frozen_before {
+                    continue; // the past is not up for optimization
+                }
                 loop {
                     let orig = s.alloc[i];
                     let fi = arel + i;
@@ -598,7 +812,7 @@ pub fn polish_fleet(
 
 /// Production fleet planner: run the interleaved greedy plus two
 /// sequential-admission passes (slice order and earliest-deadline-first),
-/// polish each (small instances only, see [`POLISH_CELL_BUDGET`]), and
+/// polish each (small instances only, see `POLISH_CELL_BUDGET`), and
 /// return whichever result has the lowest forecast carbon among those
 /// that complete every job under phase-aware accounting. Guarantees:
 /// per-slot capacity respected, every returned job completes (else
@@ -889,6 +1103,47 @@ mod tests {
         };
         fs2.trim_completed_tails(std::slice::from_ref(&long));
         assert_eq!(fs2.schedules[0].alloc, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn arena_adopt_then_seed_resumes_marginal_cursor() {
+        // Adopt a partial allocation, then resume: the arena must credit
+        // the adopted work and continue from the next marginal step, and
+        // the combined plan must complete within capacity.
+        let j = job("resume", 4.0, 2.0, 4);
+        let ctx = PlanContext::uniform(0, 4, vec![50.0, 10.0, 90.0, 20.0, 60.0, 30.0, 80.0, 40.0])
+            .unwrap();
+        let partial = Schedule::new(0, vec![0, 2, 0, 0, 0, 0, 0, 0]);
+        let jobs = vec![j.clone()];
+        let mut arena = FleetArena::new(&jobs, &ctx);
+        arena.adopt(0, &partial);
+        arena.seed(0, 0).unwrap();
+        arena.run().unwrap();
+        let s = arena.schedule_of(0);
+        // The adopted allocation survives (chains only grow from it).
+        assert!(s.alloc[1] >= 2);
+        assert!(s.completion_hours(&j).is_some());
+        let fs = FleetSchedule {
+            schedules: vec![s],
+        };
+        assert!(fs.respects_capacity(&ctx));
+    }
+
+    #[test]
+    fn arena_clear_future_reopens_capacity_and_work() {
+        let j = job("clear", 2.0, 2.0, 2);
+        let ctx = PlanContext::uniform(0, 2, vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        let jobs = vec![j];
+        let full = plan_fleet_greedy(&jobs, &ctx).unwrap();
+        let mut arena = FleetArena::new(&jobs, &ctx);
+        arena.adopt(0, &full.schedules[0]);
+        let cleared = arena.clear_future(0, 0);
+        assert!(cleared > 0);
+        // Everything returned: re-seeding from scratch reproduces the
+        // cold plan exactly.
+        arena.seed(0, 0).unwrap();
+        arena.run().unwrap();
+        assert_eq!(arena.schedule_of(0).alloc, full.schedules[0].alloc);
     }
 
     #[test]

@@ -489,6 +489,314 @@ fn checked(
     })
 }
 
+/// The geo twin of the fleet engine's incremental core (DESIGN.md §10):
+/// per-region residual capacity, per-job work cursors, per-(job, slot)
+/// allocation *and placement* state, and the candidate heap in one arena.
+/// Cold planning seeds every job from scratch; warm repair adopts an
+/// incumbent [`GeoFleetSchedule`] and re-opens only the jobs a delta
+/// touches, resuming each from its marginal cursors (and, optionally,
+/// restricted to the regions it already occupies, so online repairs never
+/// silently move a running job's state across the planet).
+pub(crate) struct GeoArena<'a> {
+    jobs: &'a [JobSpec],
+    geo: &'a GeoPlanContext,
+    free: Vec<Vec<usize>>,
+    totals: Vec<f64>,
+    done: Vec<f64>,
+    alloc: Vec<Vec<usize>>,
+    region: Vec<Vec<usize>>,
+    used: Vec<Vec<usize>>,
+    counted: Vec<bool>,
+    open: usize,
+    heap: BinaryHeap<GeoCand>,
+}
+
+impl<'a> GeoArena<'a> {
+    pub(crate) fn new(jobs: &'a [JobSpec], geo: &'a GeoPlanContext) -> Self {
+        GeoArena {
+            jobs,
+            geo,
+            free: geo.regions.iter().map(|r| r.ctx.capacity.clone()).collect(),
+            totals: jobs.iter().map(|j| j.total_work()).collect(),
+            done: vec![0.0; jobs.len()],
+            alloc: jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect(),
+            region: jobs.iter().map(|j| vec![NO_REGION; j.n_slots()]).collect(),
+            used: vec![Vec::new(); jobs.len()],
+            counted: vec![false; jobs.len()],
+            open: 0,
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// Install an incumbent geo schedule for job `ji`: debit each active
+    /// slot's region residual (clamped, `reserve_upto` semantics), record
+    /// placement and the distinct-region set (frozen-past regions count
+    /// against the migration budget — checkpoints live there), and credit
+    /// the phase-0 work cursor. Like the fleet arena, allocations are
+    /// re-indexed into the spec's window by absolute hour (the incumbent
+    /// schedule's `arrival` may be a recompute hour, not the job's).
+    pub(crate) fn adopt(&mut self, ji: usize, gs: &GeoSchedule) {
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let start = self.geo.start();
+        for (srel, (&a, &r)) in gs.alloc.iter().zip(&gs.region).enumerate() {
+            if a == 0 || r >= self.geo.n_regions() {
+                continue;
+            }
+            let abs = gs.arrival + srel;
+            if abs < job.arrival || abs >= self.geo.end() {
+                continue;
+            }
+            let rel = abs - job.arrival;
+            if rel >= self.alloc[ji].len() {
+                continue;
+            }
+            let take = if abs < start {
+                a // frozen past: capacity there is history
+            } else {
+                let fi = abs - start;
+                let t = a.min(self.free[r][fi]);
+                self.free[r][fi] -= t;
+                t
+            };
+            self.alloc[ji][rel] = take;
+            self.region[ji][rel] = r;
+            if !self.used[ji].contains(&r) {
+                self.used[ji].push(r);
+            }
+            if take >= job.min_servers {
+                self.done[ji] += curve.capacity(take.min(curve.max_servers()));
+            }
+        }
+    }
+
+    /// Remove job `ji`'s allocations at absolute slots `>= from_abs`,
+    /// returning region capacity and work credit; the distinct-region set
+    /// is recomputed from what remains (the frozen prefix). Returns the
+    /// number of cells cleared.
+    pub(crate) fn clear_future(&mut self, ji: usize, from_abs: usize) -> usize {
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let start = self.geo.start();
+        let mut cells = 0usize;
+        for rel in 0..self.alloc[ji].len() {
+            let abs = job.arrival + rel;
+            let a = self.alloc[ji][rel];
+            if a == 0 || abs < from_abs {
+                continue;
+            }
+            let r = self.region[ji][rel];
+            if abs >= start && abs < self.geo.end() && r < self.geo.n_regions() {
+                self.free[r][abs - start] += a;
+            }
+            if a >= job.min_servers {
+                self.done[ji] -= curve.capacity(a.min(curve.max_servers()));
+            }
+            self.alloc[ji][rel] = 0;
+            self.region[ji][rel] = NO_REGION;
+            cells += 1;
+        }
+        if self.done[ji] < 0.0 {
+            self.done[ji] = 0.0;
+        }
+        self.used[ji] = {
+            let mut u: Vec<usize> = self.region[ji]
+                .iter()
+                .zip(&self.alloc[ji])
+                .filter(|(_, a)| **a > 0)
+                .map(|(r, _)| *r)
+                .collect();
+            u.sort_unstable();
+            u.dedup();
+            u
+        };
+        cells
+    }
+
+    /// Open job `ji` and push candidate chains for absolute slots
+    /// `>= from_abs`: unallocated slots enter with the minimum bundle in
+    /// every permitted region (all of them, or `restrict` when given);
+    /// partially allocated slots resume at their next marginal step in
+    /// their owning region. Idempotent per job; trivially complete jobs
+    /// stay closed.
+    pub(crate) fn seed(
+        &mut self,
+        ji: usize,
+        from_abs: usize,
+        restrict: Option<&[usize]>,
+    ) -> Result<()> {
+        if self.counted[ji] || self.done[ji] >= self.totals[ji] - 1e-9 {
+            return Ok(());
+        }
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let m = job.min_servers;
+        let bundle = curve.capacity(m);
+        if bundle <= 0.0 {
+            bail!("job {:?}: zero capacity at minimum allocation", job.name);
+        }
+        self.counted[ji] = true;
+        let before = self.heap.len();
+        let start = self.geo.start();
+        for rel in 0..job.n_slots() {
+            let abs = job.arrival + rel;
+            if abs < from_abs || abs < start || abs >= self.geo.end() {
+                continue;
+            }
+            let fi = abs - start;
+            let a = self.alloc[ji][rel];
+            if a == 0 {
+                for (ri, r) in self.geo.regions.iter().enumerate() {
+                    if restrict.map_or(false, |f| !f.contains(&ri)) {
+                        continue;
+                    }
+                    let c = r.ctx.carbon[fi].max(MIN_CARBON);
+                    self.heap.push(checked(
+                        bundle / (m as f64 * c),
+                        bundle,
+                        &job.name,
+                        ri,
+                        abs,
+                        m,
+                        ji,
+                    )?);
+                }
+            } else if a < job.max_servers {
+                let ri = self.region[ji][rel];
+                if ri >= self.geo.n_regions() {
+                    continue;
+                }
+                let next = a + 1;
+                let w = curve.marginal(next);
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    let c = self.geo.regions[ri].ctx.carbon[fi].max(MIN_CARBON);
+                    self.heap.push(checked(w / c, w, &job.name, ri, abs, next, ji)?);
+                }
+            }
+        }
+        // Same rule as the fleet arena: a job with no seedable future
+        // stays closed rather than deadlocking `run` (cold planning
+        // always pushes at least one candidate per incomplete job).
+        if self.heap.len() > before {
+            self.open += 1;
+        }
+        Ok(())
+    }
+
+    /// Run the interleaved placement greedy to completion of every open
+    /// job (same commit rules as cold planning: region-slot residual,
+    /// slot ownership, distinct-region budget).
+    pub(crate) fn run(&mut self) -> Result<()> {
+        let allowed = 1 + self.geo.migration.max_migrations;
+        let start = self.geo.start();
+        while self.open > 0 {
+            let Some(cand) = self.heap.pop() else {
+                bail!(
+                    "infeasible geo fleet: {} job(s) cannot complete within \
+                     per-region capacity, deadlines, and the migration budget",
+                    self.open
+                );
+            };
+            let ji = cand.job;
+            if self.done[ji] >= self.totals[ji] - 1e-9 {
+                continue; // stale entry for an already-complete job
+            }
+            let job = &self.jobs[ji];
+            let rel = cand.slot - job.arrival;
+            let fi = cand.slot - start;
+            // A slot belongs to at most one region per job: a candidate
+            // for a slot another region already owns is dead (ownership
+            // never moves during a run).
+            if self.alloc[ji][rel] > 0 && self.region[ji][rel] != cand.region {
+                continue;
+            }
+            if cand.servers <= self.alloc[ji][rel] {
+                continue; // stale duplicate (defensive; chains are monotone)
+            }
+            // Distinct-region budget: entering a new region is permanent,
+            // so once the budget is spent all other-region candidates are
+            // dead.
+            if self.used[ji].len() >= allowed && !self.used[ji].contains(&cand.region) {
+                continue;
+            }
+            let need = cand.servers - self.alloc[ji][rel];
+            if self.free[cand.region][fi] < need {
+                // Committed capacity only grows, so the rest of this
+                // (job, region, slot) chain is dead — dropping is
+                // permanent and safe, exactly like the fleet engine.
+                continue;
+            }
+            self.free[cand.region][fi] -= need;
+            self.alloc[ji][rel] = cand.servers;
+            self.region[ji][rel] = cand.region;
+            if !self.used[ji].contains(&cand.region) {
+                self.used[ji].push(cand.region);
+            }
+            self.done[ji] += cand.work;
+            if self.done[ji] >= self.totals[ji] - 1e-9 {
+                self.open -= 1;
+            } else if cand.servers < job.max_servers {
+                let next = cand.servers + 1;
+                let w = job.curve.at_progress(0.0).marginal(next);
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    let c = self.geo.regions[cand.region].ctx.carbon[fi].max(MIN_CARBON);
+                    self.heap.push(checked(
+                        w / c,
+                        w,
+                        &job.name,
+                        cand.region,
+                        cand.slot,
+                        next,
+                        ji,
+                    )?);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The arena's current placement for one job.
+    pub(crate) fn geo_schedule_of(&self, ji: usize) -> GeoSchedule {
+        GeoSchedule {
+            arrival: self.jobs[ji].arrival,
+            alloc: self.alloc[ji].clone(),
+            region: self.region[ji].clone(),
+        }
+    }
+
+    /// All placements as a [`GeoFleetSchedule`] aligned with the job
+    /// slice (region vectors normalized like cold planning).
+    pub(crate) fn into_geo(self) -> GeoFleetSchedule {
+        let mut out = GeoFleetSchedule {
+            schedules: self
+                .jobs
+                .iter()
+                .zip(self.alloc)
+                .zip(self.region)
+                .map(|((j, a), r)| GeoSchedule {
+                    arrival: j.arrival,
+                    alloc: a,
+                    region: r,
+                })
+                .collect(),
+        };
+        out.normalize_regions();
+        out
+    }
+}
+
 /// Interleaved geo greedy: the fleet engine's heap loop with a placement
 /// dimension. Candidates from all (job, region) pairs compete in one heap
 /// in decreasing marginal-work-per-unit-carbon order; a popped step
@@ -498,136 +806,18 @@ fn checked(
 /// Errors if a job cannot be completed by this heuristic — including
 /// every genuinely infeasible fleet, plus some feasible deadline-tight
 /// mixes ([`plan_geo`]'s admission passes rescue most of those).
+///
+/// Implemented as the all-jobs-seeded, nothing-adopted case of
+/// `GeoArena`, so cold planning and the online engine's warm repair
+/// share one set of priority/tie-break/commit rules.
 pub fn plan_geo_greedy(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedule> {
     geo.check_jobs(jobs)?;
-    let start = geo.start();
-    let allowed = 1 + geo.migration.max_migrations;
-    let mut free: Vec<Vec<usize>> = geo
-        .regions
-        .iter()
-        .map(|r| r.ctx.capacity.clone())
-        .collect();
-    let totals: Vec<f64> = jobs.iter().map(|j| j.total_work()).collect();
-    let mut done = vec![0.0f64; jobs.len()];
-    let mut alloc: Vec<Vec<usize>> = jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect();
-    let mut region: Vec<Vec<usize>> = jobs
-        .iter()
-        .map(|j| vec![NO_REGION; j.n_slots()])
-        .collect();
-    let mut used: Vec<Vec<usize>> = vec![Vec::new(); jobs.len()];
-    let mut open = 0usize;
-    let mut heap: BinaryHeap<GeoCand> = BinaryHeap::new();
-
-    for (ji, job) in jobs.iter().enumerate() {
-        if totals[ji] <= 1e-9 {
-            continue;
-        }
-        open += 1;
-        let curve = job.curve.at_progress(0.0);
-        let m = job.min_servers;
-        let bundle = curve.capacity(m);
-        if bundle <= 0.0 {
-            bail!("job {:?}: zero capacity at minimum allocation", job.name);
-        }
-        for rel in 0..job.n_slots() {
-            let abs = job.arrival + rel;
-            for (ri, r) in geo.regions.iter().enumerate() {
-                let c = r.ctx.carbon[abs - start].max(MIN_CARBON);
-                heap.push(checked(
-                    bundle / (m as f64 * c),
-                    bundle,
-                    &job.name,
-                    ri,
-                    abs,
-                    m,
-                    ji,
-                )?);
-            }
-        }
+    let mut arena = GeoArena::new(jobs, geo);
+    for ji in 0..jobs.len() {
+        arena.seed(ji, geo.start(), None)?;
     }
-
-    while open > 0 {
-        let Some(cand) = heap.pop() else {
-            bail!(
-                "infeasible geo fleet: {open} job(s) cannot complete within \
-                 per-region capacity, deadlines, and the migration budget"
-            );
-        };
-        let ji = cand.job;
-        if done[ji] >= totals[ji] - 1e-9 {
-            continue; // stale entry for an already-complete job
-        }
-        let job = &jobs[ji];
-        let rel = cand.slot - job.arrival;
-        let fi = cand.slot - start;
-        // A slot belongs to at most one region per job: a candidate for a
-        // slot another region already owns is dead (ownership never moves
-        // during a plan).
-        if alloc[ji][rel] > 0 && region[ji][rel] != cand.region {
-            continue;
-        }
-        if cand.servers <= alloc[ji][rel] {
-            continue; // stale duplicate (defensive; chains are monotone)
-        }
-        // Distinct-region budget: entering a new region is permanent, so
-        // once the budget is spent all other-region candidates are dead.
-        if used[ji].len() >= allowed && !used[ji].contains(&cand.region) {
-            continue;
-        }
-        let need = cand.servers - alloc[ji][rel];
-        if free[cand.region][fi] < need {
-            // Committed capacity only grows, so the rest of this
-            // (job, region, slot) chain is dead — dropping is permanent
-            // and safe, exactly like the fleet engine.
-            continue;
-        }
-        free[cand.region][fi] -= need;
-        alloc[ji][rel] = cand.servers;
-        region[ji][rel] = cand.region;
-        if !used[ji].contains(&cand.region) {
-            used[ji].push(cand.region);
-        }
-        done[ji] += cand.work;
-        if done[ji] >= totals[ji] - 1e-9 {
-            open -= 1;
-        } else if cand.servers < job.max_servers {
-            let next = cand.servers + 1;
-            let w = job.curve.at_progress(0.0).marginal(next);
-            if !w.is_finite() {
-                bail!(
-                    "job {:?}: non-finite marginal capacity at {next} servers",
-                    job.name
-                );
-            }
-            if w > 0.0 {
-                let c = geo.regions[cand.region].ctx.carbon[fi].max(MIN_CARBON);
-                heap.push(checked(
-                    w / c,
-                    w,
-                    &job.name,
-                    cand.region,
-                    cand.slot,
-                    next,
-                    ji,
-                )?);
-            }
-        }
-    }
-
-    let mut out = GeoFleetSchedule {
-        schedules: jobs
-            .iter()
-            .zip(alloc)
-            .zip(region)
-            .map(|((j, a), r)| GeoSchedule {
-                arrival: j.arrival,
-                alloc: a,
-                region: r,
-            })
-            .collect(),
-    };
-    out.normalize_regions();
-    Ok(out)
+    arena.run()?;
+    Ok(arena.into_geo())
 }
 
 /// Sequential admission in an explicit order: each job plans the
@@ -882,6 +1072,218 @@ pub fn plan_geo(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedu
              per-region capacity and the migration budget"
         ),
     }
+}
+
+/// Warm-start repair after a single job arrival, the geo face of the
+/// online engine (DESIGN.md §10): the incumbent placement passes through
+/// untouched when some region's residual hosts the newcomer; when not,
+/// every job's *future* is re-opened with each incumbent restricted to
+/// the regions it already occupies (checkpoints do not teleport), and on
+/// small batch-start instances a cold [`plan_geo`] candidate competes
+/// too. Returns the full placement aligned `incumbent_jobs ++ [new_job]`
+/// plus repair stats.
+pub fn repair_geo_arrival(
+    incumbent_jobs: &[JobSpec],
+    incumbent: &GeoFleetSchedule,
+    new_job: &JobSpec,
+    geo: &GeoPlanContext,
+    now: usize,
+) -> Result<(GeoFleetSchedule, crate::sched::engine::RepairStats)> {
+    use crate::sched::engine::{RepairKind, RepairStats};
+
+    if incumbent.schedules.len() != incumbent_jobs.len() {
+        bail!(
+            "incumbent has {} schedules for {} jobs",
+            incumbent.schedules.len(),
+            incumbent_jobs.len()
+        );
+    }
+    geo.check_jobs(std::slice::from_ref(new_job))?;
+    if new_job.arrival < now {
+        bail!(
+            "job {:?} arrives at h{} before now h{now}",
+            new_job.name,
+            new_job.arrival
+        );
+    }
+    let mut jobs: Vec<JobSpec> = incumbent_jobs.to_vec();
+    jobs.push(new_job.clone());
+    let new_ji = jobs.len() - 1;
+    for job in &jobs {
+        if job.deadline() > geo.end() {
+            bail!(
+                "job {:?} deadline h{} exceeds geo window end h{}",
+                job.name,
+                job.deadline(),
+                geo.end()
+            );
+        }
+    }
+    let cells: usize = jobs.iter().map(|j| j.n_slots()).sum();
+    let incumbent_ok: Vec<bool> = incumbent_jobs
+        .iter()
+        .zip(&incumbent.schedules)
+        .map(|(j, s)| s.as_schedule().completion_hours(j).is_some())
+        .collect();
+
+    let mut candidates: Vec<(GeoFleetSchedule, RepairKind, usize, usize)> = Vec::new();
+
+    // Stage 1 — warm: incumbents pass through, only the newcomer plans.
+    {
+        let mut arena = GeoArena::new(&jobs, geo);
+        for (ji, gs) in incumbent.schedules.iter().enumerate() {
+            arena.adopt(ji, gs);
+        }
+        if arena.seed(new_ji, now.max(new_job.arrival), None).is_ok() && arena.run().is_ok() {
+            let mut gfs = GeoFleetSchedule {
+                schedules: incumbent.schedules.clone(),
+            };
+            gfs.schedules.push(arena.geo_schedule_of(new_ji));
+            candidates.push((gfs, RepairKind::Warm, 1, new_job.n_slots()));
+        }
+    }
+
+    // Stage 2 — escalated: every future re-opened, incumbents pinned to
+    // their already-used regions.
+    if candidates.is_empty() {
+        let prior: Vec<Vec<usize>> = incumbent
+            .schedules
+            .iter()
+            .map(GeoSchedule::active_regions)
+            .collect();
+        let mut arena = GeoArena::new(&jobs, geo);
+        for (ji, gs) in incumbent.schedules.iter().enumerate() {
+            arena.adopt(ji, gs);
+        }
+        let mut cleared = 0usize;
+        let mut ok = true;
+        for ji in 0..incumbent_jobs.len() {
+            cleared += arena.clear_future(ji, now);
+            let restrict = if prior[ji].is_empty() {
+                None
+            } else {
+                Some(prior[ji].as_slice())
+            };
+            if arena.seed(ji, now.max(jobs[ji].arrival), restrict).is_err() {
+                ok = false;
+                break;
+            }
+        }
+        if ok
+            && arena.seed(new_ji, now.max(new_job.arrival), None).is_ok()
+            && arena.run().is_ok()
+        {
+            candidates.push((arena.into_geo(), RepairKind::Escalated, jobs.len(), cleared));
+        }
+    }
+
+    // Stage 3 — cold portfolio: batch-start instances only (frozen geo
+    // prefixes cannot be re-fed to plan_geo), affordable or as rescue.
+    if now <= geo.start()
+        && jobs.iter().all(|j| j.arrival >= geo.start())
+        && (cells <= GEO_POLISH_CELL_BUDGET || candidates.is_empty())
+    {
+        if let Ok(gfs) = plan_geo(&jobs, geo) {
+            candidates.push((gfs, RepairKind::Cold, jobs.len(), cells));
+        }
+    }
+
+    let mut best: Option<(f64, GeoFleetSchedule, RepairKind, usize, usize)> = None;
+    for (gfs, kind, rjobs, rcells) in candidates {
+        let completes =
+            |ji: usize| gfs.schedules[ji].as_schedule().completion_hours(&jobs[ji]).is_some();
+        let required_ok = (0..jobs.len()).all(|ji| {
+            if ji == new_ji {
+                completes(ji)
+            } else {
+                !incumbent_ok[ji] || completes(ji)
+            }
+        });
+        if !required_ok
+            || !gfs.respects_migration_budget(geo)
+            || !fits_geo_capacity_from(&gfs, geo, now)
+        {
+            continue;
+        }
+        let g = repair_objective(&jobs, &gfs, geo);
+        if best.as_ref().map_or(true, |(bg, ..)| g < *bg) {
+            best = Some((g, gfs, kind, rjobs, rcells));
+        }
+    }
+    match best {
+        Some((_, mut gfs, kind, reopened_jobs, reopened_cells)) => {
+            gfs.trim_completed_tails(&jobs);
+            Ok((
+                gfs,
+                RepairStats {
+                    kind,
+                    reopened_jobs,
+                    reopened_cells,
+                },
+            ))
+        }
+        None => bail!(
+            "no geo repair candidate completes the required jobs within \
+             per-region capacity, deadlines, and the migration budget"
+        ),
+    }
+}
+
+/// Per-region per-slot capacity check restricted to `[now, end)`: the
+/// frozen past is history and out-of-window allocations belong to it.
+/// The geo twin of the fleet repair's gate — a warm candidate built from
+/// unclamped incumbent clones must not win on paper carbon while
+/// overcommitting a region-slot.
+fn fits_geo_capacity_from(gfs: &GeoFleetSchedule, geo: &GeoPlanContext, now: usize) -> bool {
+    let start = geo.start();
+    let lo = now.saturating_sub(start).min(geo.horizon());
+    let width = geo.horizon() - lo;
+    let mut usage = vec![vec![0usize; width]; geo.n_regions()];
+    for gs in &gfs.schedules {
+        for (rel, (&a, &r)) in gs.alloc.iter().zip(&gs.region).enumerate() {
+            if a == 0 || r >= geo.n_regions() {
+                continue;
+            }
+            let abs = gs.arrival + rel;
+            if abs < start + lo || abs >= geo.end() {
+                continue;
+            }
+            usage[r][abs - start - lo] += a;
+        }
+    }
+    usage.iter().zip(&geo.regions).all(|(u, reg)| {
+        u.iter()
+            .zip(&reg.ctx.capacity[lo..])
+            .all(|(x, c)| x <= c)
+    })
+}
+
+/// Repair objective: forecast emissions by absolute slot (the shared
+/// [`Schedule::emissions_by_slot`] loop, charging each active slot at its
+/// assigned region) plus the migration penalty. Unlike
+/// [`GeoFleetSchedule::objective_g`] this stays correct for mid-flight
+/// jobs whose arrival predates the shared window — out-of-window (frozen
+/// past) slots charge zero, identically across candidates.
+fn repair_objective(jobs: &[JobSpec], gfs: &GeoFleetSchedule, geo: &GeoPlanContext) -> f64 {
+    let start = geo.start();
+    let carbon: f64 = jobs
+        .iter()
+        .zip(&gfs.schedules)
+        .map(|(job, gs)| {
+            let s = gs.as_schedule();
+            s.emissions_by_slot(job, |i| {
+                let abs = gs.arrival + i;
+                let r = gs.region[i];
+                if r < geo.n_regions() && abs >= start && abs < geo.end() {
+                    geo.regions[r].ctx.carbon[abs - start]
+                } else {
+                    0.0
+                }
+            })
+            .0
+        })
+        .sum();
+    carbon + geo.migration.penalty_g * gfs.total_transitions() as f64
 }
 
 #[cfg(test)]
@@ -1175,5 +1577,67 @@ mod tests {
         });
         let gfs = plan_geo_greedy(&jobs, &geo).unwrap();
         assert!(gfs.schedules[1].alloc.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn geo_arrival_repair_places_newcomer_without_moving_incumbents() {
+        // Beta is cheap but capacity 1: the incumbent owns it; the
+        // arriving job must land in alpha while the incumbent placement
+        // passes through verbatim.
+        let geo = two_regions(1, vec![30.0, 30.0], vec![10.0, 10.0]);
+        let a = job("a", 2.0, 1.0, 1);
+        let incumbent = plan_geo(std::slice::from_ref(&a), &geo).unwrap();
+        let before = incumbent.schedules[0].clone();
+        let b = job("b", 2.0, 1.0, 1);
+        let (gfs, stats) =
+            repair_geo_arrival(std::slice::from_ref(&a), &incumbent, &b, &geo, 0).unwrap();
+        assert_eq!(
+            stats.kind,
+            crate::sched::engine::RepairKind::Warm
+        );
+        assert_eq!(gfs.schedules[0], before);
+        assert_eq!(gfs.schedules[1].active_regions(), vec![0]);
+        let jobs = vec![a, b];
+        assert!(gfs.all_complete(&jobs));
+        assert!(gfs.respects_capacity(&geo));
+    }
+
+    #[test]
+    fn geo_arrival_repair_rejects_when_nothing_fits() {
+        let geo = two_regions(1, vec![5.0, 5.0], vec![6.0, 6.0]);
+        let jobs = vec![job("a", 2.0, 1.0, 1), job("b", 2.0, 1.0, 1)];
+        let incumbent = plan_geo(&jobs, &geo).unwrap();
+        let c = job("c", 2.0, 1.0, 1);
+        assert!(repair_geo_arrival(&jobs, &incumbent, &c, &geo, 0).is_err());
+    }
+
+    #[test]
+    fn geo_arrival_repair_matches_cold_quality_on_small_instances() {
+        let mut rng = crate::util::rng::Rng::new(37);
+        for case in 0..10 {
+            let jobs: Vec<JobSpec> = (0..3)
+                .map(|i| job(&format!("j{i}"), rng.range(1.0, 2.5), rng.range(1.4, 2.2), 2))
+                .collect();
+            let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+            let a: Vec<f64> = (0..end).map(|_| rng.range(5.0, 100.0)).collect();
+            let b: Vec<f64> = (0..end).map(|_| rng.range(5.0, 100.0)).collect();
+            let geo = two_regions(3, a, b);
+            let Ok(incumbent) = plan_geo(&jobs[..2], &geo) else {
+                continue;
+            };
+            let Ok(cold) = plan_geo(&jobs, &geo) else {
+                continue;
+            };
+            let (repaired, _) =
+                repair_geo_arrival(&jobs[..2], &incumbent, &jobs[2], &geo, 0).unwrap();
+            let rg = repaired.objective_g(&jobs, &geo);
+            let cg = cold.objective_g(&jobs, &geo);
+            assert!(
+                rg <= cg * 1.05 + 1e-9,
+                "case {case}: repair {rg} vs cold {cg}"
+            );
+            assert!(repaired.respects_capacity(&geo), "case {case}");
+            assert!(repaired.respects_migration_budget(&geo), "case {case}");
+        }
     }
 }

@@ -1,9 +1,11 @@
 //! Scheduling policies: CarbonScaler's greedy Algorithm 1 and the paper's
 //! baselines, the capacity-constrained fleet planning engine, the
-//! geo-distributed placement engine, plus the schedule type and
-//! accounting.
+//! geo-distributed placement engine, the online event-driven scheduling
+//! engine with warm-start incremental replanning, plus the schedule type
+//! and accounting.
 
 pub mod baselines;
+pub mod engine;
 pub mod fleet;
 pub mod geo;
 pub mod greedy;
@@ -13,6 +15,10 @@ pub mod schedule;
 pub use baselines::{
     CarbonAgnostic, OracleStaticScale, StaticScale, SuspendResumeDeadline,
     SuspendResumeThreshold,
+};
+pub use engine::{
+    DriftMonitor, EngineJob, EngineStats, Event, JobState, RepairKind, RepairStats,
+    ScheduleEngine, TickEvent,
 };
 pub use fleet::{FleetSchedule, IndependentFleet, PlanContext};
 pub use geo::{GeoFleetSchedule, GeoPlanContext, GeoRegion, GeoSchedule, MigrationPolicy};

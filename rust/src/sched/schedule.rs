@@ -119,6 +119,21 @@ impl Schedule {
     /// removing `accounting()`'s per-slot Vec from the local search cut
     /// plan_polished by ~2x). Matches `accounting()` exactly.
     pub fn emissions_fast(&self, job: &JobSpec, trace: &CarbonTrace) -> (f64, bool) {
+        self.emissions_by_slot(job, |i| trace.at(self.arrival + i))
+    }
+
+    /// The single chronological phase-aware accounting loop (fractional
+    /// final slot) with a caller-supplied intensity lookup:
+    /// `intensity(i)` is the gCO₂eq/kWh charged to relative slot `i`.
+    /// Backs [`Schedule::emissions_fast`] and the online/geo repair
+    /// objectives (which charge by absolute slot or per-slot region, and
+    /// charge 0 outside their planning windows), so the accounting
+    /// semantics cannot diverge between execution and repair.
+    pub fn emissions_by_slot(
+        &self,
+        job: &JobSpec,
+        intensity: impl Fn(usize) -> f64,
+    ) -> (f64, bool) {
         let total = job.total_work();
         let mut done = 0.0;
         let mut carbon = 0.0;
@@ -131,11 +146,11 @@ impl Schedule {
             let rate = curve.capacity(a.min(curve.max_servers()));
             if rate > 0.0 && done + rate >= total - 1e-9 {
                 let frac = ((total - done) / rate).clamp(0.0, 1.0);
-                carbon += a as f64 * per_server_kwh * frac * trace.at(self.arrival + i);
+                carbon += a as f64 * per_server_kwh * frac * intensity(i);
                 return (carbon, true);
             }
             done += rate;
-            carbon += a as f64 * per_server_kwh * trace.at(self.arrival + i);
+            carbon += a as f64 * per_server_kwh * intensity(i);
         }
         (carbon, total <= 1e-9)
     }

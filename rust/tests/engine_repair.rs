@@ -1,0 +1,224 @@
+//! Warm-start equivalence property tests for the online scheduling
+//! engine (DESIGN.md §10):
+//!
+//! (a) a repair with an empty delta is identical to the incumbent;
+//! (b) a repair after an arrival never violates capacity, server-bound,
+//!     window, or frozen-past invariants;
+//! (c) repair carbon is within 1.05x of a cold replan on randomized
+//!     instances (the repair portfolio contains a cold candidate on
+//!     small instances, so this bound is structural, not luck).
+
+use carbonscaler::scaling::MarginalCapacityCurve;
+use carbonscaler::sched::engine::{self, Event, RepairKind, ScheduleEngine};
+use carbonscaler::sched::fleet::{self, FleetSchedule, PlanContext};
+use carbonscaler::util::rng::Rng;
+use carbonscaler::workload::job::{JobBuilder, JobSpec};
+
+fn job(name: &str, arrival: usize, len: f64, slack: f64, max: usize) -> JobSpec {
+    JobBuilder::new(name, MarginalCapacityCurve::linear(max))
+        .arrival(arrival)
+        .servers(1, max)
+        .length(len)
+        .slack_factor(slack)
+        .power(1000.0)
+        .build()
+        .unwrap()
+}
+
+fn random_job(rng: &mut Rng, i: usize, max_arrival: usize) -> JobSpec {
+    job(
+        &format!("j{i}"),
+        rng.below(max_arrival as u64 + 1) as usize,
+        rng.range(1.0, 4.0),
+        rng.range(1.3, 2.5),
+        1 + rng.below(3) as usize,
+    )
+}
+
+fn random_carbon(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.range(5.0, 100.0)).collect()
+}
+
+/// (a) Empty deltas: re-issuing the identical forecast, growing
+/// capacity, and revising slots no job touches all leave every committed
+/// plan byte-identical.
+#[test]
+fn empty_delta_repair_is_identity() {
+    let mut rng = Rng::new(101);
+    for case in 0..15 {
+        let jobs: Vec<JobSpec> = (0..3).map(|i| random_job(&mut rng, i, 2)).collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap() + 2;
+        let carbon = random_carbon(&mut rng, end);
+        let mut eng = ScheduleEngine::uniform(0, 6, carbon.clone()).unwrap();
+        let mut admitted = Vec::new();
+        for j in &jobs {
+            if eng.handle(Event::JobArrived { spec: j.clone() }).is_ok() {
+                admitted.push(j.name.clone());
+            }
+        }
+        let before: Vec<_> = admitted
+            .iter()
+            .map(|n| eng.plan_of(n).unwrap().clone())
+            .collect();
+
+        // Identical forecast re-issue.
+        let s = eng
+            .handle(Event::ForecastRevised {
+                start: 0,
+                carbon: carbon.clone(),
+            })
+            .unwrap();
+        assert_eq!(s.kind, RepairKind::NoOp, "case {case}");
+        // Capacity growth.
+        let s = eng
+            .handle(Event::CapacityChanged {
+                start: 0,
+                capacity: vec![60; end],
+            })
+            .unwrap();
+        assert_eq!(s.kind, RepairKind::NoOp, "case {case}");
+        // Revision of slots past every deadline.
+        let tail = end - 1;
+        let s = eng
+            .handle(Event::ForecastRevised {
+                start: tail,
+                carbon: vec![carbon[tail] + 500.0],
+            })
+            .unwrap();
+        assert_eq!(s.kind, RepairKind::NoOp, "case {case}");
+
+        for (name, b) in admitted.iter().zip(&before) {
+            assert_eq!(eng.plan_of(name).unwrap(), b, "case {case}: {name} moved");
+        }
+    }
+}
+
+/// (b) Arrival repairs never violate invariants: per-slot capacity,
+/// per-job server bounds, allocation confined to each job's window, the
+/// frozen past untouched, and every previously admitted job still
+/// completing.
+#[test]
+fn arrival_repair_preserves_invariants() {
+    let mut rng = Rng::new(202);
+    for case in 0..30 {
+        let n_jobs = 2 + (case % 4);
+        let capacity = 2 + rng.below(5) as usize;
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| random_job(&mut rng, i, 3))
+            .collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap() + 2;
+        let carbon = random_carbon(&mut rng, end);
+        let mut eng = ScheduleEngine::uniform(0, capacity, carbon).unwrap();
+
+        let mut admitted: Vec<JobSpec> = Vec::new();
+        for j in &jobs {
+            // Advance time to each arrival, completing due plans first —
+            // the full online lifecycle, not just back-to-back admission.
+            eng.advance_to(j.arrival);
+            for name in eng.due_completions(j.arrival) {
+                eng.handle(Event::JobCompleted { name }).unwrap();
+            }
+            let frozen: Vec<(String, Vec<usize>)> = admitted
+                .iter()
+                .filter_map(|s| {
+                    let p = eng.plan_of(&s.name)?;
+                    let upto = j.arrival.saturating_sub(p.arrival).min(p.alloc.len());
+                    Some((s.name.clone(), p.alloc[..upto].to_vec()))
+                })
+                .collect();
+            if eng.handle(Event::JobArrived { spec: j.clone() }).is_ok() {
+                admitted.push(j.clone());
+            }
+            // Frozen prefixes survived verbatim.
+            for (name, prefix) in frozen {
+                let p = eng.plan_of(&name).unwrap();
+                assert_eq!(
+                    &p.alloc[..prefix.len()],
+                    prefix.as_slice(),
+                    "case {case}: frozen past of {name} was replanned"
+                );
+            }
+        }
+
+        let specs: Vec<JobSpec> = eng.jobs().iter().map(|j| j.spec.clone()).collect();
+        let fs = FleetSchedule {
+            schedules: eng.jobs().iter().map(|j| j.plan.clone()).collect(),
+        };
+        assert!(fs.respects_capacity(eng.context()), "case {case}");
+        for (spec, s) in specs.iter().zip(&fs.schedules) {
+            assert!(s.respects_bounds(spec), "case {case}: {}", spec.name);
+            assert_eq!(s.arrival, spec.arrival, "case {case}");
+            assert!(s.n_slots() <= spec.n_slots(), "case {case}");
+            assert!(
+                s.completion_hours(spec).is_some(),
+                "case {case}: admitted {} does not complete",
+                spec.name
+            );
+        }
+    }
+}
+
+/// (c) Repair quality: admitting the last job by warm-start repair stays
+/// within 1.05x of a cold replan of the full set, on randomized
+/// moderately-contended instances.
+#[test]
+fn arrival_repair_within_5pct_of_cold_replan() {
+    let mut rng = Rng::new(303);
+    let mut compared = 0usize;
+    for case in 0..40 {
+        let n_jobs = 3 + (case % 3);
+        let jobs: Vec<JobSpec> = (0..n_jobs)
+            .map(|i| random_job(&mut rng, i, 2))
+            .collect();
+        let max_sum: usize = jobs.iter().map(|j| j.max_servers).sum();
+        let capacity = (max_sum * 3 / 4).max(2);
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap() + 1;
+        let ctx = PlanContext::uniform(0, capacity, random_carbon(&mut rng, end)).unwrap();
+
+        let k = jobs.len() - 1;
+        let Ok(incumbent) = fleet::plan_fleet(&jobs[..k], &ctx) else {
+            continue;
+        };
+        let Ok(cold) = fleet::plan_fleet(&jobs, &ctx) else {
+            continue;
+        };
+        let (repaired, stats) =
+            engine::repair_arrival(&jobs[..k], &incumbent, &jobs[k], &ctx, 0)
+                .expect("cold replan is feasible, so repair must be too");
+        compared += 1;
+
+        assert!(repaired.respects_capacity(&ctx), "case {case}");
+        assert!(repaired.all_complete(&jobs), "case {case}");
+        let rg = repaired.forecast_carbon_g(&jobs, &ctx);
+        let cg = cold.forecast_carbon_g(&jobs, &ctx);
+        assert!(
+            rg <= cg * 1.05 + 1e-9,
+            "case {case}: repair {rg} vs cold {cg} ({:?})",
+            stats.kind
+        );
+    }
+    assert!(compared >= 20, "only {compared} comparable instances");
+}
+
+/// Warm repair and cold replan coincide exactly when capacity never
+/// binds: with an ample cluster both reduce to per-job solo-optimal
+/// plans.
+#[test]
+fn repair_equals_cold_without_contention() {
+    let mut rng = Rng::new(404);
+    for case in 0..20 {
+        let jobs: Vec<JobSpec> = (0..3).map(|i| random_job(&mut rng, i, 2)).collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap() + 1;
+        let ctx = PlanContext::uniform(0, 1000, random_carbon(&mut rng, end)).unwrap();
+        let incumbent = fleet::plan_fleet(&jobs[..2], &ctx).unwrap();
+        let cold = fleet::plan_fleet(&jobs, &ctx).unwrap();
+        let (repaired, _) =
+            engine::repair_arrival(&jobs[..2], &incumbent, &jobs[2], &ctx, 0).unwrap();
+        let rg = repaired.forecast_carbon_g(&jobs, &ctx);
+        let cg = cold.forecast_carbon_g(&jobs, &ctx);
+        assert!(
+            (rg - cg).abs() < 1e-6,
+            "case {case}: repair {rg} != cold {cg} despite ample capacity"
+        );
+    }
+}
