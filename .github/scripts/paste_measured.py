@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Fold CI-measured artifacts back into the committed ledgers.
+
+The authoring environment has no Rust toolchain, so EXPERIMENTS.md's
+measured columns and BENCH_baseline.json's absolute numbers are seeded
+from budgets until a measured refresh lands. CI produces the two
+artifacts on every run:
+
+  * EXPERIMENTS_measured.txt  (check job: full expt fleet/geo/online/service runs)
+  * BENCH_scheduler.json      (bench job: benches/scheduler.rs output)
+
+This script applies them:
+
+  paste_measured.py --experiments EXPERIMENTS_measured.txt
+      copies the artifact to the repo root (committed alongside
+      EXPERIMENTS.md) and flips the fleet/geo/online/service measured
+      columns from "pending CI refresh" to a pointer at the committed
+      tables, stamped with the artifact's content hash so staleness is
+      detectable.
+
+  paste_measured.py --bench BENCH_scheduler.json
+      copies each measured mean_ns over the matching entry in
+      BENCH_baseline.json (names not present in the baseline are
+      reported, not invented; gates and ratio_gates are left untouched).
+
+CI runs both modes against the artifacts it just produced and uploads
+the patched files as the measured-refresh artifacts — committing those
+from any toolchain-bearing checkout completes the refresh. Exit status
+is nonzero when an artifact is malformed or matches nothing, so a
+renamed bench case or experiment cannot silently disable the refresh
+path.
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+EXPERIMENT_IDS = ("fleet", "geo", "online", "service")
+PENDING_MARKER = "pending CI refresh"
+
+
+def fail(msg):
+    print(f"paste_measured: error: {msg}", file=sys.stderr)
+    return 1
+
+
+def apply_experiments(artifact_path):
+    artifact = pathlib.Path(artifact_path)
+    if not artifact.is_file():
+        return fail(f"{artifact} does not exist")
+    text = artifact.read_text()
+    missing = [eid for eid in EXPERIMENT_IDS if f"# {eid} " not in text]
+    if missing:
+        return fail(
+            f"artifact {artifact} lacks experiment section(s) {missing}; "
+            "was the measured-tables step truncated?"
+        )
+    digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+    (ROOT / "EXPERIMENTS_measured.txt").write_text(text)
+
+    exp_md = ROOT / "EXPERIMENTS.md"
+    lines = exp_md.read_text().splitlines(keepends=True)
+    replaced = 0
+    # A cell is refreshable if it still carries the pending marker OR an
+    # earlier refresh stamp (idempotent: re-running just updates the
+    # artifact hash).
+    refreshed_marker = "EXPERIMENTS_measured.txt §"
+    for i, line in enumerate(lines):
+        row_id = line.split("|")[1].strip() if line.startswith("|") and line.count("|") > 2 else ""
+        if row_id not in EXPERIMENT_IDS:
+            continue
+        cell = next(
+            (
+                c
+                for c in line.split("|")
+                if PENDING_MARKER in c or refreshed_marker in c
+            ),
+            None,
+        )
+        if cell is None:
+            continue
+        # Only the measured cell carries a marker, so a plain substring
+        # replace cannot touch other columns.
+        lines[i] = line.replace(
+            cell.strip(),
+            f"✓ see EXPERIMENTS_measured.txt §{row_id} (artifact sha256 {digest})",
+        )
+        replaced += 1
+    if replaced == 0:
+        return fail(
+            f"no EXPERIMENTS.md measured cell carries {PENDING_MARKER!r} or a "
+            "refresh stamp — the rows were renamed"
+        )
+    exp_md.write_text("".join(lines))
+    print(f"paste_measured: refreshed {replaced} EXPERIMENTS.md row(s) from {artifact} "
+          f"(sha256 {digest})")
+    return 0
+
+
+def apply_bench(measured_path):
+    measured_file = pathlib.Path(measured_path)
+    if not measured_file.is_file():
+        return fail(f"{measured_file} does not exist")
+    measured = json.loads(measured_file.read_text())
+    meas = {r["name"]: r["mean_ns"] for r in measured["results"]}
+    baseline_path = ROOT / "BENCH_baseline.json"
+    baseline_text = baseline_path.read_text()
+    baseline = json.loads(baseline_text)
+
+    updated = 0
+    unmatched = []
+    for row in baseline["results"]:
+        if row["name"] in meas:
+            row["mean_ns"] = int(round(meas[row["name"]]))
+            updated += 1
+        else:
+            unmatched.append(row["name"])
+    if updated == 0:
+        return fail("no baseline entry matches any measured case — bench renamed wholesale?")
+    for name in unmatched:
+        print(f"paste_measured: warning: baseline case {name!r} missing from measured run")
+    for name in sorted(set(meas) - {r["name"] for r in baseline["results"]}):
+        print(f"paste_measured: note: new measured case {name!r} not in baseline")
+    stamp = ("Refreshed from a CI-measured BENCH_scheduler.json run via "
+             ".github/scripts/paste_measured.py. ")
+    if not baseline["note"].startswith(stamp):
+        baseline["note"] = stamp + baseline["note"].replace(
+            "Absolute values are still seeded",
+            "Absolute values were originally seeded",
+            1,
+        )
+    baseline_path.write_text(json.dumps(baseline, indent=2) + "\n")
+    print(f"paste_measured: refreshed {updated}/{len(baseline['results'])} baseline mean_ns "
+          f"values from {measured_file}")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--experiments", help="path to EXPERIMENTS_measured.txt artifact")
+    ap.add_argument("--bench", help="path to BENCH_scheduler.json artifact")
+    args = ap.parse_args()
+    if not args.experiments and not args.bench:
+        ap.error("pass --experiments and/or --bench")
+    rc = 0
+    if args.experiments:
+        rc |= apply_experiments(args.experiments)
+    if args.bench:
+        rc |= apply_bench(args.bench)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

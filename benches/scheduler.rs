@@ -11,6 +11,10 @@ use carbonscaler::sched::engine;
 use carbonscaler::sched::fleet::{self, PlanContext};
 use carbonscaler::sched::geo::{self, GeoPlanContext, MigrationPolicy};
 use carbonscaler::sched::greedy;
+use carbonscaler::service::api::{self, ServiceState};
+use carbonscaler::service::http::HttpServer;
+use carbonscaler::service::loadgen::{JobTemplate, LoadGen};
+use carbonscaler::service::shard::{ShardPool, ShardPoolConfig};
 use carbonscaler::util::bench::{bench, BenchResult};
 use carbonscaler::util::json::Json;
 use carbonscaler::workload::{JobBuilder, JobSpec};
@@ -151,6 +155,69 @@ fn main() {
         println!("warm-start repair speedup vs cold replan: {speedup:.1}x (acceptance: >= 5x)");
         results.push(cold);
         results.push(warm);
+    }
+
+    println!("\n== service layer (pallas-serve sharded submit throughput, DESIGN.md §11) ==");
+    {
+        // ISSUE 5 acceptance: the sharded server must sustain >= 2x the
+        // single-shard submit throughput at 4 shards. Each iteration
+        // stands up a fresh service on an ephemeral loopback port and
+        // pushes a fixed batch of jobs through the real HTTP + loadgen
+        // path; the wall time per batch is the inverse throughput, so
+        // the CI ratio gate (bench_gate.py "ratio_gates") asserts
+        // 1-shard mean >= 2x the 4-shard mean, machine-independently.
+        const N_JOBS: usize = 720;
+        const THREADS: usize = 8;
+        const CLUSTER: usize = 768;
+        const HORIZON: usize = 96;
+        let carbon = trace.window(0, HORIZON);
+        let service_budget = Duration::from_secs(3);
+        for shards in [1usize, 4] {
+            let carbon = carbon.clone();
+            results.push(bench(
+                &format!("service submit jobs={N_JOBS} shards={shards}"),
+                1,
+                3,
+                service_budget,
+                || {
+                    let pool = ShardPool::start(ShardPoolConfig::new(
+                        shards,
+                        CLUSTER,
+                        carbon.clone(),
+                    ))
+                    .expect("bench pool starts");
+                    let state = ServiceState::new(pool);
+                    let server =
+                        HttpServer::bind("127.0.0.1:0", THREADS, api::handler(state.clone()))
+                            .expect("bench server binds");
+                    let template = JobTemplate {
+                        length_hours: 48.0,
+                        slack: 1.8,
+                        max_servers: 8,
+                        tenants: 96,
+                        seed: 7,
+                    };
+                    let report = LoadGen::new(server.addr(), THREADS, template)
+                        .saturation(N_JOBS)
+                        .expect("bench loadgen runs");
+                    assert_eq!(report.errors, 0, "service bench must be error-free");
+                    assert_eq!(
+                        report.admitted, N_JOBS,
+                        "service bench must admit every job (load is ~52%)"
+                    );
+                    server.shutdown();
+                    state.pool().shutdown();
+                    report.admitted
+                },
+            ));
+        }
+        let single = &results[results.len() - 2];
+        let sharded = &results[results.len() - 1];
+        let speedup =
+            single.mean.as_nanos() as f64 / sharded.mean.as_nanos().max(1) as f64;
+        println!(
+            "sharded submit throughput speedup 4 vs 1 shards: {speedup:.1}x (acceptance: >= 2x)"
+        );
     }
 
     println!("\n== geo engine (multi-region placement, 96-slot windows) ==");

@@ -84,6 +84,7 @@ pub fn all() -> Vec<Box<dyn Experiment>> {
         Box::new(evaluation::FleetContention),
         Box::new(geo::GeoPlacement),
         Box::new(online::OnlineArrivals),
+        Box::new(service::ServiceThroughput),
         Box::new(sensitivity::Fig13),
         Box::new(sensitivity::Fig14),
         Box::new(sensitivity::Fig15),
@@ -123,11 +124,12 @@ mod tests {
         let mut dedup = ids.clone();
         dedup.dedup();
         assert_eq!(ids, dedup);
-        assert_eq!(ids.len(), 24);
+        assert_eq!(ids.len(), 25);
         assert!(by_id("fig9").is_some());
         assert!(by_id("fleet").is_some());
         assert!(by_id("geo").is_some());
         assert!(by_id("online").is_some());
+        assert!(by_id("service").is_some());
         assert!(by_id("nope").is_none());
     }
 }

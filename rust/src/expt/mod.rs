@@ -8,5 +8,6 @@ pub mod motivation;
 pub mod online;
 pub mod robustness;
 pub mod sensitivity;
+pub mod service;
 
 pub use harness::{all, by_id, run_and_print, ExpContext, Experiment};

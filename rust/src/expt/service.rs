@@ -1,0 +1,163 @@
+//! Service-layer experiment (beyond paper; DESIGN.md §11): carbon and
+//! request throughput versus shard count under offered load.
+//!
+//! For each (shard count, offered RPS) cell a fresh `pallas-serve`
+//! instance is started on an ephemeral loopback port and driven by the
+//! closed-loop Poisson load generator; the row reports what the server
+//! sustained (RPS, p50/p99 submit latency), how admission went, how much
+//! the event batching amortized (events per batch), and the planned
+//! carbon per admitted job. The carbon column is the price of sharding:
+//! capacity is partitioned, so a hot shard cannot borrow a sibling's
+//! cheap-slot headroom and per-job carbon creeps up as shards multiply —
+//! while throughput scales out (the `service submit` bench cases gate
+//! the ≥ 2× claim at 4 shards in CI).
+
+use crate::carbon::{regions, synthetic};
+use crate::expt::harness::{ExpContext, Experiment};
+use crate::service::api::{self, ServiceState};
+use crate::service::http::{HttpClient, HttpServer};
+use crate::service::loadgen::{JobTemplate, LoadGen};
+use crate::service::shard::{ShardPool, ShardPoolConfig};
+use crate::util::json::{self, Json};
+use crate::util::table::{f, Table};
+use anyhow::{anyhow, Result};
+use std::time::Duration;
+
+const CLUSTER_SIZE: usize = 128;
+const HORIZON: usize = 96;
+
+/// The `service` experiment.
+pub struct ServiceThroughput;
+
+impl Experiment for ServiceThroughput {
+    fn id(&self) -> &'static str {
+        "service"
+    }
+    fn title(&self) -> &'static str {
+        "pallas-serve: sustained RPS, submit latency, and carbon vs shard count \
+         (beyond paper, DESIGN.md §11)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let (shard_counts, rates, secs): (Vec<usize>, Vec<f64>, f64) = if ctx.quick {
+            (vec![1, 4], vec![100.0], 1.2)
+        } else {
+            (vec![1, 2, 4], vec![60.0, 240.0], 3.0)
+        };
+        let carbon = synthetic::generate(
+            regions::by_name("ontario").unwrap(),
+            HORIZON,
+            ctx.seed,
+        )
+        .window(0, HORIZON);
+
+        let mut t = Table::new(&format!(
+            "pallas-serve under Poisson load, {CLUSTER_SIZE} servers, {HORIZON} h window"
+        ))
+        .headers(&[
+            "shards",
+            "offered rps",
+            "sustained rps",
+            "p50 ms",
+            "p99 ms",
+            "admitted",
+            "rejected",
+            "errors",
+            "events/batch",
+            "g/job",
+        ]);
+        for &shards in &shard_counts {
+            for &rate in &rates {
+                match run_cell(shards, rate, secs, &carbon, ctx.seed) {
+                    Ok(row) => t.row(row),
+                    Err(e) => t.row(vec![
+                        shards.to_string(),
+                        f(rate, 0),
+                        format!("error: {e}"),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]),
+                }
+            }
+        }
+        Ok(vec![t])
+    }
+}
+
+fn run_cell(
+    shards: usize,
+    rate: f64,
+    secs: f64,
+    carbon: &[f64],
+    seed: u64,
+) -> Result<Vec<String>> {
+    let pool = ShardPool::start(ShardPoolConfig::new(shards, CLUSTER_SIZE, carbon.to_vec()))?;
+    let state = ServiceState::new(pool);
+    let server = HttpServer::bind("127.0.0.1:0", 8, api::handler(state.clone()))?;
+    let template = JobTemplate {
+        length_hours: 8.0,
+        slack: 1.6,
+        max_servers: 4,
+        tenants: 64,
+        seed,
+    };
+    let gen = LoadGen::new(server.addr(), 4, template);
+    let report = gen.paced(rate, Duration::from_secs_f64(secs))?;
+
+    // Read the aggregate through the public API, like any client would.
+    let mut client = HttpClient::new(server.addr());
+    let (status, body) = client.request("GET", "/v1/stats", "")?;
+    if status != 200 {
+        anyhow::bail!("stats endpoint returned {status}");
+    }
+    let stats = json::parse(&body).map_err(|e| anyhow!("{e}"))?;
+    let admitted = stats.get("admitted").and_then(Json::as_usize).unwrap_or(0);
+    let rejected = stats.get("rejected").and_then(Json::as_usize).unwrap_or(0);
+    let carbon_g = stats.get("carbonG").and_then(Json::as_f64).unwrap_or(0.0);
+    let shard_rows = stats.get("shards").and_then(Json::as_arr).unwrap_or(&[]);
+    let batches: usize = shard_rows
+        .iter()
+        .filter_map(|s| s.get("batches").and_then(Json::as_usize))
+        .sum();
+    let events: usize = shard_rows
+        .iter()
+        .filter_map(|s| s.get("batchedEvents").and_then(Json::as_usize))
+        .sum();
+    server.shutdown();
+    state.pool().shutdown();
+
+    Ok(vec![
+        shards.to_string(),
+        f(rate, 0),
+        f(report.sustained_rps, 1),
+        f(report.p50_ms, 2),
+        f(report.p99_ms, 2),
+        admitted.to_string(),
+        rejected.to_string(),
+        report.errors.to_string(),
+        f(events as f64 / batches.max(1) as f64, 2),
+        f(carbon_g / admitted.max(1) as f64, 1),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_experiment_reports_each_cell_without_errors() {
+        let ctx = ExpContext {
+            quick: true,
+            ..Default::default()
+        };
+        let tables = ServiceThroughput.run(&ctx).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].n_rows(), 2);
+        let text = tables[0].render();
+        assert!(!text.contains("error:"), "no cell may error:\n{text}");
+    }
+}

@@ -15,5 +15,6 @@ pub mod profiler;
 pub mod runtime;
 pub mod scaling;
 pub mod sched;
+pub mod service;
 pub mod util;
 pub mod workload;

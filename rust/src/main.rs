@@ -8,6 +8,8 @@
 //!   profile            profile the real elastic training pool
 //!   train              run the end-to-end PJRT training under CarbonScaler
 //!   submit             plan a job spec and print its schedule
+//!   serve              run pallas-serve, the sharded scheduler-as-a-service
+//!   loadtest           drive a running service instance at a target RPS
 
 use anyhow::{anyhow, bail, Result};
 use carbonscaler::advisor::{self, SimConfig};
@@ -21,11 +23,17 @@ use carbonscaler::sched::{
     CarbonAgnostic, CarbonScalerPolicy, OracleStaticScale, Policy, StaticScale,
     SuspendResumeDeadline,
 };
+use carbonscaler::service::api::{self as service_api, ServiceState};
+use carbonscaler::service::http::HttpServer;
+use carbonscaler::service::loadgen::{JobTemplate, LoadGen, LoadReport};
+use carbonscaler::service::shard::{ShardPool, ShardPoolConfig};
 use carbonscaler::util::cli::{Args, ArgSpec};
 use carbonscaler::util::table::{f, pct, Table};
 use std::path::PathBuf;
+use std::time::Duration;
 
-const USAGE: &str = "carbonscaler <expt|advisor|trace|regions|profile|train|submit> [options]
+const USAGE: &str =
+    "carbonscaler <expt|advisor|trace|regions|profile|train|submit|serve|loadtest> [options]
 Reproduction of CarbonScaler (SIGMETRICS/POMACS 2023). See README.md.";
 
 fn main() {
@@ -54,6 +62,8 @@ fn run(argv: &[String]) -> Result<()> {
         "profile" => cmd_profile(rest),
         "train" => cmd_train(rest),
         "submit" => cmd_submit(rest),
+        "serve" => cmd_serve(rest),
+        "loadtest" => cmd_loadtest(rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -361,6 +371,144 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         r.wall_seconds
     );
     pool.shutdown();
+    Ok(())
+}
+
+fn print_load_report(report: &LoadReport) {
+    let mut t = Table::new("load test").headers(&[
+        "sent",
+        "admitted",
+        "rejected",
+        "errors",
+        "sustained rps",
+        "mean ms",
+        "p50 ms",
+        "p99 ms",
+    ]);
+    t.row(vec![
+        report.sent.to_string(),
+        report.admitted.to_string(),
+        report.rejected.to_string(),
+        report.errors.to_string(),
+        f(report.sustained_rps, 1),
+        f(report.mean_ms, 2),
+        f(report.p50_ms, 2),
+        f(report.p99_ms, 2),
+    ]);
+    t.print();
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::opt("port", "TCP port on 127.0.0.1 (0 = ephemeral)", "8080"),
+        ArgSpec::opt("shards", "engine shards (planning threads)", "4"),
+        ArgSpec::opt("cluster-size", "total servers, split across shards", "64"),
+        ArgSpec::opt("horizon", "planning window in hours", "168"),
+        ArgSpec::opt("region", "carbon region for the forecast", "ontario"),
+        ArgSpec::opt("seed", "forecast trace seed", "2023"),
+        ArgSpec::opt("http-workers", "HTTP worker threads", "8"),
+        ArgSpec::opt("secs", "run duration in seconds (0 = until killed)", "0"),
+        ArgSpec::flag("selftest", "drive an in-process load test, then exit"),
+        ArgSpec::opt("rps", "selftest target RPS", "20"),
+        ArgSpec::opt("threads", "selftest client threads", "4"),
+    ];
+    let args = parse(rest, SPECS, "carbonscaler serve [--shards 4] [--selftest]")?;
+    let region_name = args.str("region")?;
+    let region = regions::by_name(&region_name)
+        .ok_or_else(|| anyhow!("unknown region {region_name:?}"))?;
+    let horizon = args.usize("horizon")?;
+    let trace = synthetic::generate(region, horizon, args.u64("seed")?);
+    let cfg = ShardPoolConfig::new(
+        args.usize("shards")?,
+        args.usize("cluster-size")?,
+        trace.window(0, horizon),
+    );
+    let shards = cfg.shards;
+    let cluster = cfg.cluster_size;
+    let pool = ShardPool::start(cfg)?;
+    let state = ServiceState::new(pool);
+    let server = HttpServer::bind(
+        &format!("127.0.0.1:{}", args.usize("port")?),
+        args.usize("http-workers")?,
+        service_api::handler(state.clone()),
+    )?;
+    println!(
+        "pallas-serve listening on http://{} ({shards} shards, {cluster} servers, \
+         {horizon} h window, forecast {region_name})",
+        server.addr()
+    );
+
+    if args.flag("selftest") {
+        let secs = args.f64("secs")?;
+        let duration = Duration::from_secs_f64(if secs > 0.0 { secs } else { 10.0 });
+        let rps = args.f64("rps")?;
+        println!("selftest: {rps} RPS for {:.0} s ...", duration.as_secs_f64());
+        let gen = LoadGen::new(server.addr(), args.usize("threads")?, JobTemplate::default());
+        let report = gen.paced(rps, duration)?;
+        print_load_report(&report);
+        let snaps = state.pool().snapshots();
+        let batches: usize = snaps.iter().map(|s| s.batches).sum();
+        let events: usize = snaps.iter().map(|s| s.batched_events).sum();
+        println!(
+            "shards processed {events} events in {batches} batches \
+             ({:.2} events/batch)",
+            events as f64 / batches.max(1) as f64
+        );
+        server.shutdown();
+        state.pool().shutdown();
+        if report.errors > 0 {
+            bail!("selftest saw {} transport errors", report.errors);
+        }
+        if report.completed() == 0 {
+            bail!("selftest completed zero requests");
+        }
+        println!("selftest OK: zero errors, sustained {:.1} RPS", report.sustained_rps);
+        return Ok(());
+    }
+
+    let secs = args.f64("secs")?;
+    if secs > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        server.shutdown();
+        state.pool().shutdown();
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_loadtest(rest: &[String]) -> Result<()> {
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::req("addr", "service address, e.g. 127.0.0.1:8080"),
+        ArgSpec::opt("rps", "target requests per second", "50"),
+        ArgSpec::opt("secs", "test duration in seconds", "10"),
+        ArgSpec::opt("threads", "client threads", "4"),
+        ArgSpec::opt("seed", "workload sampling seed", "1"),
+        ArgSpec::opt("tenants", "distinct tenant ids", "64"),
+        ArgSpec::opt("length", "job length in hours", "6"),
+        ArgSpec::opt("slack", "completion factor T/l", "1.5"),
+        ArgSpec::opt("max-servers", "job max servers M", "4"),
+    ];
+    let args = parse(rest, SPECS, "carbonscaler loadtest --addr <host:port>")?;
+    let addr: std::net::SocketAddr = args
+        .str("addr")?
+        .parse()
+        .map_err(|_| anyhow!("--addr must be ip:port"))?;
+    let template = JobTemplate {
+        length_hours: args.f64("length")?,
+        slack: args.f64("slack")?,
+        max_servers: args.usize("max-servers")?,
+        tenants: args.usize("tenants")?,
+        seed: args.u64("seed")?,
+    };
+    let gen = LoadGen::new(addr, args.usize("threads")?, template);
+    let report = gen.paced(
+        args.f64("rps")?,
+        Duration::from_secs_f64(args.f64("secs")?),
+    )?;
+    print_load_report(&report);
     Ok(())
 }
 

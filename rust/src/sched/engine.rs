@@ -259,6 +259,117 @@ impl ScheduleEngine {
         }
     }
 
+    /// Admit a batch of arrivals in **one repair pass** (DESIGN.md §11):
+    /// all structurally valid newcomers are appended and re-opened
+    /// together, so a burst of `k` arrivals costs one incumbent adoption
+    /// instead of `k` — the amortization the service layer's event
+    /// batching relies on under storm load. Admission semantics match
+    /// the sequential path: when the joint repair cannot place *every*
+    /// newcomer it falls back to per-arrival [`ScheduleEngine::handle`],
+    /// so one infeasible job never drags admissible peers down with it.
+    /// Returns one result per input spec, in order; `Err` means that
+    /// arrival was rejected and engine state excludes it.
+    pub fn handle_arrivals(&mut self, specs: Vec<JobSpec>) -> Vec<Result<RepairStats>> {
+        if specs.len() <= 1 {
+            return specs
+                .into_iter()
+                .map(|spec| self.handle(Event::JobArrived { spec }))
+                .collect();
+        }
+        let t0 = Instant::now();
+        let mut results: Vec<Option<Result<RepairStats>>> = Vec::new();
+        let mut valid: Vec<(usize, JobSpec)> = Vec::new();
+        for (i, spec) in specs.into_iter().enumerate() {
+            let duplicate = self.jobs.iter().any(|j| j.spec.name == spec.name)
+                || valid.iter().any(|(_, v)| v.name == spec.name);
+            let verdict = if spec.arrival < self.now {
+                Some(format!(
+                    "job {:?} arrives at h{} before now h{}",
+                    spec.name, spec.arrival, self.now
+                ))
+            } else if duplicate {
+                Some(format!("duplicate job name {:?}", spec.name))
+            } else {
+                self.ctx
+                    .check_jobs(std::slice::from_ref(&spec))
+                    .err()
+                    .map(|e| format!("{e:#}"))
+            };
+            match verdict {
+                Some(msg) => {
+                    self.stats.events += 1;
+                    self.stats.rejected += 1;
+                    results.push(Some(Err(anyhow::anyhow!(msg))));
+                }
+                None => {
+                    results.push(None);
+                    valid.push((i, spec));
+                }
+            }
+        }
+        if valid.is_empty() {
+            return results.into_iter().map(|r| r.expect("all rejected")).collect();
+        }
+
+        let active = self.active();
+        let mut jobs: Vec<JobSpec> = active.iter().map(|&i| self.jobs[i].spec.clone()).collect();
+        let mut incumbent: Vec<Schedule> =
+            active.iter().map(|&i| self.jobs[i].plan.clone()).collect();
+        for (_, spec) in &valid {
+            jobs.push(spec.clone());
+            incumbent.push(Schedule::empty(spec.arrival, spec.n_slots()));
+        }
+        let newcomers: Vec<usize> = (active.len()..jobs.len()).collect();
+        match repair_fleet(
+            &jobs,
+            &incumbent,
+            &newcomers,
+            &newcomers,
+            &self.ctx,
+            self.now,
+            false,
+        ) {
+            Ok((fs, stats)) => {
+                self.stats.events += valid.len();
+                self.stats.record(stats.kind, t0.elapsed().as_nanos());
+                for (k, &i) in active.iter().enumerate() {
+                    self.jobs[i].plan = fs.schedules[k].clone();
+                }
+                for (k, (i, spec)) in valid.into_iter().enumerate() {
+                    self.jobs.push(EngineJob {
+                        spec,
+                        plan: fs.schedules[active.len() + k].clone(),
+                        state: JobState::Active,
+                    });
+                    results[i] = Some(Ok(stats.clone()));
+                }
+                results.into_iter().map(|r| r.expect("filled")).collect()
+            }
+            Err(_) => {
+                // Joint admission failed: at least one newcomer does not
+                // fit alongside the others. Per-arrival admission keeps
+                // the placeable ones.
+                for (i, spec) in valid {
+                    results[i] = Some(self.handle(Event::JobArrived { spec }));
+                }
+                results.into_iter().map(|r| r.expect("filled")).collect()
+            }
+        }
+    }
+
+    /// Drop terminal (completed/failed) jobs from the job table,
+    /// returning how many were evicted. The engine keeps terminal jobs
+    /// for reporting by default, which is fine for bounded simulations;
+    /// an always-on service (DESIGN.md §11) must evict them or per-event
+    /// cost and memory grow with lifetime throughput. Safe at any point
+    /// between events: repairs only ever index the *active* subset and
+    /// no index is retained across events.
+    pub fn evict_terminal(&mut self) -> usize {
+        let before = self.jobs.len();
+        self.jobs.retain(|j| j.state == JobState::Active);
+        before - self.jobs.len()
+    }
+
     /// Indices of active jobs.
     fn active(&self) -> Vec<usize> {
         (0..self.jobs.len())
@@ -1072,6 +1183,78 @@ mod tests {
         assert_eq!(m.triggers, 1);
         m.observe(TickEvent::CarbonDrift { realized_error: 0.01 });
         assert!(!m.take_replan());
+    }
+
+    #[test]
+    fn evict_terminal_drops_history_but_not_active_jobs() {
+        let mut eng = ScheduleEngine::uniform(0, 4, vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        eng.handle(Event::JobArrived {
+            spec: job("a", 1.0, 2.0, 2),
+        })
+        .unwrap();
+        eng.handle(Event::JobArrived {
+            spec: job("b", 1.0, 2.0, 2),
+        })
+        .unwrap();
+        eng.handle(Event::JobCompleted { name: "a".into() }).unwrap();
+        assert_eq!(eng.evict_terminal(), 1);
+        assert_eq!(eng.jobs().len(), 1);
+        assert!(eng.plan_of("b").is_some());
+        // The evicted name is free again (real deployments reuse ids).
+        eng.handle(Event::JobArrived {
+            spec: job("a", 1.0, 2.0, 2),
+        })
+        .unwrap();
+        assert_eq!(eng.evict_terminal(), 0);
+    }
+
+    #[test]
+    fn batch_admission_matches_capacity_and_counts_events() {
+        let mut eng = ScheduleEngine::uniform(0, 8, vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        let results = eng.handle_arrivals(vec![job("a", 2.0, 2.0, 2), job("b", 2.0, 2.0, 2)]);
+        assert!(results.iter().all(|r| r.is_ok()));
+        assert_eq!(eng.jobs().len(), 2);
+        let s = eng.stats();
+        // Two arrivals, one joint repair pass.
+        assert_eq!(s.events, 2);
+        assert_eq!(s.warm_repairs + s.escalated_repairs + s.cold_replans, 1);
+        let jobs: Vec<JobSpec> = eng.jobs().iter().map(|j| j.spec.clone()).collect();
+        let fs = FleetSchedule {
+            schedules: eng.jobs().iter().map(|j| j.plan.clone()).collect(),
+        };
+        assert!(fs.respects_capacity(eng.context()));
+        assert!(fs.all_complete(&jobs));
+    }
+
+    #[test]
+    fn batch_admission_falls_back_per_job_under_contention() {
+        // Capacity 1 with two one-slot-window jobs: the joint pass cannot
+        // place both, so the fallback admits the first and rejects the
+        // second — identical to sequential submission.
+        let mut eng = ScheduleEngine::uniform(0, 1, vec![10.0, 10.0]).unwrap();
+        let results = eng.handle_arrivals(vec![job("a", 2.0, 1.0, 1), job("b", 2.0, 1.0, 1)]);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert_eq!(eng.jobs().len(), 1);
+        assert_eq!(eng.stats().rejected, 1);
+    }
+
+    #[test]
+    fn batch_admission_rejects_duplicates_and_bad_windows_individually() {
+        let mut eng = ScheduleEngine::uniform(0, 8, vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        let too_long = job("long", 2.0, 4.0, 2); // deadline h8 > window end h4
+        let results = eng.handle_arrivals(vec![
+            job("a", 1.0, 2.0, 2),
+            job("a", 1.0, 2.0, 2),
+            too_long,
+        ]);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err(), "duplicate name must be rejected");
+        assert!(results[2].is_err(), "out-of-window deadline must be rejected");
+        assert_eq!(eng.jobs().len(), 1);
+        assert_eq!(eng.stats().rejected, 2);
+        // The admitted job matches its solo-planned quality.
+        assert!(eng.plan_of("a").unwrap().completion_hours(&job("a", 1.0, 2.0, 2)).is_some());
     }
 
     #[test]

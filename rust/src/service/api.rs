@@ -1,0 +1,410 @@
+//! `pallas-serve` REST surface (DESIGN.md §11).
+//!
+//! Routes (all JSON over HTTP/1.1, see `service::http`):
+//!
+//! | method | path                     | action |
+//! |--------|--------------------------|--------|
+//! | POST   | `/v1/jobs`               | submit a job spec (the `cluster::api` format plus an optional `"tenant"`); returns the planned schedule + carbon estimate, or 409 when admission control refuses |
+//! | GET    | `/v1/jobs/{id}`          | one job's plan and state, served from snapshots |
+//! | POST   | `/v1/jobs/{id}/complete` | mark a job finished, freeing its capacity |
+//! | POST   | `/v1/forecast`           | `{"start": h, "carbon": [...]}` — revision fan-out to every shard |
+//! | POST   | `/v1/capacity`           | `{"start": h, "capacity": [...]}` — **total cluster** capacity revision, partitioned across shards |
+//! | GET    | `/v1/stats`              | pool totals + per-shard planning/batching counters |
+//! | GET    | `/healthz`               | liveness |
+//!
+//! GETs read [`crate::service::snapshot::ShardSnapshot`]s only — they
+//! never wait on a planning thread. Writes block until the owning
+//! shard's batch (including the covering snapshot publish) completes,
+//! so a `200` implies the job is visible to every subsequent read.
+
+use crate::cluster::api as jobspec;
+use crate::sched::engine::Event;
+use crate::service::http::{Handler, HttpRequest, HttpResponse};
+use crate::service::shard::{kind_str, ReviseVerdict, ShardPool, SubmitResult};
+use crate::service::snapshot::JobView;
+use crate::util::json::{self, Json};
+use std::sync::Arc;
+
+/// Shared service state behind the HTTP handler.
+pub struct ServiceState {
+    pool: ShardPool,
+}
+
+impl ServiceState {
+    pub fn new(pool: ShardPool) -> Arc<Self> {
+        Arc::new(ServiceState { pool })
+    }
+
+    pub fn pool(&self) -> &ShardPool {
+        &self.pool
+    }
+}
+
+/// Build the HTTP handler for a service state.
+pub fn handler(state: Arc<ServiceState>) -> Handler {
+    Arc::new(move |req: &HttpRequest| route(&state, req))
+}
+
+fn route(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
+    let parts: Vec<&str> = req.path.trim_matches('/').split('/').collect();
+    match (req.method.as_str(), parts.as_slice()) {
+        ("POST", ["v1", "jobs"]) => submit(state, &req.body),
+        ("GET", ["v1", "jobs", id]) => get_job(state, id),
+        ("POST", ["v1", "jobs", id, "complete"]) => complete(state, id),
+        ("POST", ["v1", "forecast"]) => revise(state, &req.body, Signal::Forecast),
+        ("POST", ["v1", "capacity"]) => revise(state, &req.body, Signal::Capacity),
+        ("GET", ["v1", "stats"]) => stats(state),
+        ("GET", ["healthz"]) => HttpResponse::ok(
+            Json::obj()
+                .set("status", "ok")
+                .set("shards", state.pool.n_shards())
+                .to_string_compact(),
+        ),
+        ("GET" | "POST", _) => HttpResponse::not_found(),
+        _ => HttpResponse::error(405, "method not allowed"),
+    }
+}
+
+fn submit(state: &ServiceState, body: &str) -> HttpResponse {
+    let doc = match json::parse(body) {
+        Ok(doc) => doc,
+        Err(e) => return HttpResponse::bad_request(&format!("{e}")),
+    };
+    let req = match jobspec::parse_job_request(body) {
+        Ok(req) => req,
+        Err(e) => return HttpResponse::bad_request(&format!("{e:#}")),
+    };
+    let name = req.spec.name.clone();
+    let tenant = doc
+        .get("tenant")
+        .and_then(Json::as_str)
+        .unwrap_or(name.as_str())
+        .to_string();
+    match state.pool.submit(&tenant, &req.workload, req.spec) {
+        Ok(SubmitResult::Admitted(out)) => HttpResponse::ok(
+            Json::obj()
+                .set("job", name)
+                .set("tenant", tenant)
+                .set("admitted", true)
+                .set("shard", out.shard)
+                .set("carbonG", out.carbon_g)
+                .set(
+                    "completionHours",
+                    out.completion_hours.map_or(Json::Null, Json::from),
+                )
+                .set(
+                    "schedule",
+                    Json::obj()
+                        .set("arrival", out.arrival)
+                        .set("alloc", out.alloc),
+                )
+                .set("batchedWith", out.batched_with)
+                .to_string_compact(),
+        ),
+        Ok(SubmitResult::Rejected(msg)) => HttpResponse::json(
+            409,
+            Json::obj()
+                .set("job", name)
+                .set("tenant", tenant)
+                .set("admitted", false)
+                .set("error", msg)
+                .to_string_compact(),
+        ),
+        Err(e) => HttpResponse::error(503, &format!("{e:#}")),
+    }
+}
+
+fn job_json(shard: usize, job: &JobView) -> Json {
+    Json::obj()
+        .set("job", job.name.as_str())
+        .set("tenant", job.tenant.as_str())
+        .set("workload", job.workload.as_str())
+        .set("shard", shard)
+        .set("state", job.state)
+        .set("carbonG", job.carbon_g)
+        .set(
+            "completionHours",
+            job.completion_hours.map_or(Json::Null, Json::from),
+        )
+        .set(
+            "schedule",
+            Json::obj()
+                .set("arrival", job.arrival)
+                .set("alloc", job.alloc.clone()),
+        )
+}
+
+fn get_job(state: &ServiceState, id: &str) -> HttpResponse {
+    match state.pool.find_job(id) {
+        Some((shard, job)) => HttpResponse::ok(job_json(shard, &job).to_string_compact()),
+        None => HttpResponse::not_found(),
+    }
+}
+
+fn complete(state: &ServiceState, id: &str) -> HttpResponse {
+    match state.pool.complete(id) {
+        Ok(true) => HttpResponse::ok(
+            Json::obj()
+                .set("job", id)
+                .set("state", "completed")
+                .to_string_compact(),
+        ),
+        Ok(false) => HttpResponse::not_found(),
+        Err(e) => HttpResponse::error(503, &format!("{e:#}")),
+    }
+}
+
+enum Signal {
+    Forecast,
+    Capacity,
+}
+
+fn revise(state: &ServiceState, body: &str, signal: Signal) -> HttpResponse {
+    let doc = match json::parse(body) {
+        Ok(doc) => doc,
+        Err(e) => return HttpResponse::bad_request(&format!("{e}")),
+    };
+    let Some(start) = doc.get("start").and_then(Json::as_usize) else {
+        return HttpResponse::bad_request("missing numeric 'start'");
+    };
+    let (outcome, label) = match signal {
+        Signal::Forecast => {
+            let Some(vals) = doc
+                .get("carbon")
+                .and_then(Json::as_arr)
+                .and_then(|a| a.iter().map(Json::as_f64).collect::<Option<Vec<f64>>>())
+            else {
+                return HttpResponse::bad_request("missing 'carbon' number array");
+            };
+            // The forecast is shared state: every shard gets the same
+            // splice.
+            (
+                state.pool.revise_all(Event::ForecastRevised { start, carbon: vals }),
+                "forecast",
+            )
+        }
+        Signal::Capacity => {
+            let Some(vals) = doc
+                .get("capacity")
+                .and_then(Json::as_arr)
+                .and_then(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<usize>>>())
+            else {
+                return HttpResponse::bad_request("missing 'capacity' integer array");
+            };
+            // Capacity is cluster-level: each shard repairs against its
+            // even-partition share of the posted totals.
+            (state.pool.revise_capacity(start, vals), "capacity")
+        }
+    };
+    let verdicts = match outcome {
+        Ok(v) => v,
+        Err(e) => return HttpResponse::error(503, &format!("{e:#}")),
+    };
+    let all_ok = verdicts.iter().all(ReviseVerdict::is_ok);
+    let shards: Vec<Json> = verdicts
+        .into_iter()
+        .enumerate()
+        .map(|(shard, verdict)| {
+            let obj = Json::obj().set("shard", shard);
+            match verdict {
+                Ok(kind) => obj.set("repair", kind_str(kind)),
+                Err(msg) => obj.set("error", msg),
+            }
+        })
+        .collect();
+    let body = Json::obj()
+        .set("event", label)
+        .set("applied", all_ok)
+        .set("shards", Json::Arr(shards))
+        .to_string_compact();
+    HttpResponse::json(if all_ok { 200 } else { 409 }, body)
+}
+
+fn stats(state: &ServiceState) -> HttpResponse {
+    let totals = state.pool.totals();
+    let snaps = state.pool.snapshots();
+    let mut active = 0usize;
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    let mut carbon_g = 0.0f64;
+    let mut shard_rows: Vec<Json> = Vec::with_capacity(snaps.len());
+    for snap in &snaps {
+        active += snap.active_jobs();
+        completed += snap.completed_total;
+        failed += snap.failed_total;
+        carbon_g += snap.admitted_carbon_g;
+        let s = &snap.stats;
+        shard_rows.push(
+            Json::obj()
+                .set("shard", snap.shard)
+                .set("jobs", snap.jobs.len())
+                .set("active", snap.active_jobs())
+                .set("completed", snap.completed_total)
+                .set("servers", snap.capacity.first().copied().unwrap_or(0))
+                .set("usagePeak", snap.usage.iter().max().copied().unwrap_or(0))
+                .set("overcommittedSlots", snap.overcommitted_slots())
+                .set("carbonG", snap.admitted_carbon_g)
+                .set("events", s.events)
+                .set("batches", snap.batches)
+                .set("batchedEvents", snap.batched_events)
+                .set("coalescedRevisions", snap.coalesced_revisions)
+                .set("warmRepairs", s.warm_repairs)
+                .set("escalatedRepairs", s.escalated_repairs)
+                .set("coldReplans", s.cold_replans)
+                .set("noops", s.noops)
+                .set("engineRejected", s.rejected)
+                .set("meanReplanUs", s.mean_replan_us()),
+        );
+    }
+    HttpResponse::ok(
+        Json::obj()
+            .set("submitted", totals.submitted)
+            .set("admitted", totals.admitted)
+            .set("rejected", totals.rejected)
+            .set("active", active)
+            .set("completed", completed)
+            .set("failed", failed)
+            .set("carbonG", carbon_g)
+            .set("shards", Json::Arr(shard_rows))
+            .to_string_compact(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::shard::ShardPoolConfig;
+
+    fn state() -> Arc<ServiceState> {
+        let carbon = vec![10.0, 40.0, 20.0, 80.0, 15.0, 60.0];
+        let pool = ShardPool::start(ShardPoolConfig::new(2, 8, carbon)).unwrap();
+        ServiceState::new(pool)
+    }
+
+    fn call(state: &Arc<ServiceState>, method: &str, path: &str, body: &str) -> (u16, Json) {
+        let h = handler(Arc::clone(state));
+        let resp = (*h)(&HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            body: body.to_string(),
+            close: false,
+        });
+        let doc = json::parse(&resp.body).expect("response is json");
+        (resp.status, doc)
+    }
+
+    const SPEC: &str = r#"{
+        "name": "svc-1", "tenant": "acme", "workload": "resnet18",
+        "maxServers": 2, "lengthHours": 2, "slackFactor": 2
+    }"#;
+
+    #[test]
+    fn submit_get_stats_roundtrip() {
+        let st = state();
+        let (status, doc) = call(&st, "POST", "/v1/jobs", SPEC);
+        assert_eq!(status, 200, "{doc:?}");
+        assert_eq!(doc.get("admitted").and_then(Json::as_bool), Some(true));
+        assert!(doc.get("carbonG").and_then(Json::as_f64).unwrap() > 0.0);
+        let alloc = doc.get_path(&["schedule", "alloc"]).unwrap().as_arr().unwrap();
+        assert!(!alloc.is_empty());
+
+        let (status, doc) = call(&st, "GET", "/v1/jobs/svc-1", "");
+        assert_eq!(status, 200);
+        assert_eq!(doc.get("tenant").and_then(Json::as_str), Some("acme"));
+        assert_eq!(doc.get("state").and_then(Json::as_str), Some("active"));
+
+        let (status, doc) = call(&st, "GET", "/v1/stats", "");
+        assert_eq!(status, 200);
+        assert_eq!(doc.get("submitted").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("admitted").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("active").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            doc.get("shards").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+
+        let (status, doc) = call(&st, "POST", "/v1/jobs/svc-1/complete", "");
+        assert_eq!(status, 200, "{doc:?}");
+        let (_, doc) = call(&st, "GET", "/v1/stats", "");
+        assert_eq!(doc.get("completed").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("active").and_then(Json::as_usize), Some(0));
+        st.pool().shutdown();
+    }
+
+    #[test]
+    fn forecast_revision_applies_to_all_shards() {
+        let st = state();
+        let (status, _) = call(&st, "POST", "/v1/jobs", SPEC);
+        assert_eq!(status, 200);
+        let (status, doc) = call(
+            &st,
+            "POST",
+            "/v1/forecast",
+            r#"{"start": 0, "carbon": [5, 5, 5, 5, 5, 5]}"#,
+        );
+        assert_eq!(status, 200, "{doc:?}");
+        assert_eq!(doc.get("applied").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            doc.get("shards").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+        // Out-of-window revision: refused by every shard.
+        let (status, doc) = call(
+            &st,
+            "POST",
+            "/v1/forecast",
+            r#"{"start": 4, "carbon": [5, 5, 5, 5]}"#,
+        );
+        assert_eq!(status, 409);
+        assert_eq!(doc.get("applied").and_then(Json::as_bool), Some(false));
+        st.pool().shutdown();
+    }
+
+    #[test]
+    fn capacity_revision_and_bad_requests() {
+        let st = state();
+        let (status, doc) = call(
+            &st,
+            "POST",
+            "/v1/capacity",
+            r#"{"start": 0, "capacity": [3, 3, 3, 3, 3, 3]}"#,
+        );
+        assert_eq!(status, 200, "{doc:?}");
+        // Cluster-level semantics: per-shard shares sum to the posted
+        // totals in every slot, never multiply them.
+        let snaps = st.pool().snapshots();
+        for slot in 0..6 {
+            let total: usize = snaps.iter().map(|s| s.capacity[slot]).sum();
+            assert_eq!(total, 3, "slot {slot}");
+        }
+        let (status, _) = call(&st, "POST", "/v1/forecast", r#"{"start": 0}"#);
+        assert_eq!(status, 400);
+        let (status, _) = call(&st, "POST", "/v1/jobs", "not json");
+        assert_eq!(status, 400);
+        let (status, _) = call(&st, "GET", "/v1/jobs/nope", "");
+        assert_eq!(status, 404);
+        let (status, _) = call(&st, "GET", "/v1/unknown", "");
+        assert_eq!(status, 404);
+        let (status, _) = call(&st, "DELETE", "/v1/jobs", "");
+        assert_eq!(status, 405);
+        st.pool().shutdown();
+    }
+
+    #[test]
+    fn rejection_is_a_409_with_reason() {
+        let carbon = vec![10.0, 20.0];
+        let pool = ShardPool::start(ShardPoolConfig::new(1, 1, carbon)).unwrap();
+        let st = ServiceState::new(pool);
+        let (status, doc) = call(
+            &st,
+            "POST",
+            "/v1/jobs",
+            r#"{"name": "big", "workload": "resnet18", "maxServers": 1,
+                "lengthHours": 48, "slackFactor": 1}"#,
+        );
+        assert_eq!(status, 409, "{doc:?}");
+        assert_eq!(doc.get("admitted").and_then(Json::as_bool), Some(false));
+        assert!(doc.get("error").and_then(Json::as_str).is_some());
+        st.pool().shutdown();
+    }
+}

@@ -1,0 +1,487 @@
+//! Minimal multi-threaded HTTP/1.1 server and client (DESIGN.md §11).
+//!
+//! No async runtime and no HTTP crate are available offline, so this is
+//! a deliberately small std-only implementation: a `TcpListener` shared
+//! by a fixed pool of worker threads, each serving one connection at a
+//! time with keep-alive, plus a matching blocking client used by the
+//! load generator and the tests. Only the subset of HTTP/1.1 the service
+//! needs is supported: request line + headers + `Content-Length` bodies,
+//! JSON responses, `Connection: keep-alive`/`close`. Requests and
+//! responses are size-capped so a misbehaving peer cannot balloon
+//! memory.
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Largest accepted header block + body, server and client side.
+const MAX_MESSAGE_BYTES: usize = 1 << 20;
+
+/// Idle keep-alive connections are dropped after this long, which also
+/// bounds how long `shutdown` can block on a worker mid-connection.
+const KEEPALIVE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One parsed request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    pub body: String,
+    /// Peer sent `Connection: close`.
+    pub close: bool,
+}
+
+/// One response; the server always emits `Content-Type: application/json`.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        HttpResponse {
+            status,
+            body: body.into(),
+        }
+    }
+
+    pub fn ok(body: impl Into<String>) -> Self {
+        Self::json(200, body)
+    }
+
+    /// Error payload in the service's uniform `{"error": ...}` shape.
+    pub fn error(status: u16, msg: &str) -> Self {
+        Self::json(
+            status,
+            crate::util::json::Json::obj()
+                .set("error", msg)
+                .to_string_compact(),
+        )
+    }
+
+    pub fn not_found() -> Self {
+        Self::error(404, "not found")
+    }
+
+    pub fn bad_request(msg: &str) -> Self {
+        Self::error(400, msg)
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Request handler shared by every worker thread.
+pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+/// The server: a bound listener plus a fixed worker pool. Each worker
+/// accepts connections directly from the shared listener (the kernel
+/// load-balances `accept`), so there is no dispatcher thread and no
+/// unbounded queue — at most `n_workers` connections are served
+/// concurrently and the rest wait in the accept backlog, which is the
+/// service's admission backpressure (DESIGN.md §11).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start `n_workers` serving threads running `handler`.
+    pub fn bind(addr: &str, n_workers: usize, handler: Handler) -> Result<HttpServer> {
+        if n_workers == 0 {
+            bail!("http server needs at least one worker");
+        }
+        let listener =
+            TcpListener::bind(addr).map_err(|e| anyhow!("binding {addr}: {e}"))?;
+        let addr = listener.local_addr()?;
+        let listener = Arc::new(listener);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let listener = Arc::clone(&listener);
+            let stop = Arc::clone(&stop);
+            let handler = Arc::clone(&handler);
+            let worker = std::thread::Builder::new()
+                .name(format!("http-{i}"))
+                .spawn(move || loop {
+                    // Checked before blocking in accept: a worker that was
+                    // busy serving while the shutdown wake-ups were consumed
+                    // by its peers must not re-enter accept and hang.
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match listener.accept() {
+                        Ok((stream, _)) => stream,
+                        Err(_) => continue,
+                    };
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Per-connection errors (malformed requests, resets)
+                    // only kill that connection, never the worker.
+                    let _ = serve_connection(stream, &handler, &stop);
+                })?;
+            workers.push(worker);
+        }
+        Ok(HttpServer {
+            addr,
+            stop,
+            workers,
+        })
+    }
+
+    /// The bound address (useful with ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake blocked workers, and join them. Workers
+    /// mid-connection finish their current request first (bounded by the
+    /// keep-alive timeout).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // One dummy connection per worker unblocks every `accept`.
+        for _ in 0..self.workers.len() {
+            let _ = TcpStream::connect(self.addr);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    handler: &Handler,
+    stop: &Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(KEEPALIVE_TIMEOUT))?;
+    let _ = stream.set_nodelay(true);
+    let mut buf: Vec<u8> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        let Some(req) = read_request(&mut stream, &mut buf)? else {
+            break; // clean close (EOF or idle timeout)
+        };
+        // `Arc<dyn Fn>` has no `Fn` impl of its own; call through a deref.
+        let resp = (**handler)(&req);
+        write_response(&mut stream, &resp, req.close)?;
+        if req.close {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Read one request off the connection. `Ok(None)` means the peer closed
+/// (or idled past the keep-alive timeout) between requests; errors mean
+/// a malformed or truncated message. `buf` carries leftover bytes
+/// between keep-alive requests.
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Option<HttpRequest>> {
+    let Some(head_end) = read_until_header_end(stream, buf)? else {
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| anyhow!("non-utf8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| anyhow!("request line has no target"))?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    let (content_length, close) = parse_framing(lines)?;
+    let body_start = head_end + 4;
+    read_until_len(stream, buf, body_start + content_length)?;
+    let body = String::from_utf8(buf[body_start..body_start + content_length].to_vec())
+        .map_err(|_| anyhow!("non-utf8 request body"))?;
+    buf.drain(..body_start + content_length);
+    Ok(Some(HttpRequest {
+        method,
+        path,
+        body,
+        close,
+    }))
+}
+
+/// Grow `buf` from the stream until it contains `\r\n\r\n`; returns the
+/// offset of that delimiter, or `None` on clean EOF / idle timeout with
+/// an empty buffer. Shared by the server (requests) and client
+/// (responses) so message framing cannot diverge between them.
+fn read_until_header_end(stream: &mut impl Read, buf: &mut Vec<u8>) -> Result<Option<usize>> {
+    loop {
+        if let Some(pos) = find_header_end(buf) {
+            return Ok(Some(pos));
+        }
+        if buf.len() > MAX_MESSAGE_BYTES {
+            bail!("header block exceeds limit");
+        }
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-request");
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                bail!("timed out mid-request");
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Grow `buf` until it holds at least `want` bytes.
+fn read_until_len(stream: &mut impl Read, buf: &mut Vec<u8>, want: usize) -> Result<()> {
+    while buf.len() < want {
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => bail!("connection closed mid-body"),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                bail!("timed out mid-body")
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the framing headers shared by requests and responses:
+/// (`Content-Length`, `Connection: close`). `lines` must already be past
+/// the request/status line.
+fn parse_framing<'a>(lines: impl Iterator<Item = &'a str>) -> Result<(usize, bool)> {
+    let mut content_length = 0usize;
+    let mut close = false;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .parse()
+                .map_err(|_| anyhow!("bad content-length {value:?}"))?;
+        } else if name.eq_ignore_ascii_case("connection") {
+            close = value.eq_ignore_ascii_case("close");
+        }
+    }
+    if content_length > MAX_MESSAGE_BYTES {
+        bail!("body of {content_length} bytes exceeds limit");
+    }
+    Ok((content_length, close))
+}
+
+fn write_response(stream: &mut TcpStream, resp: &HttpResponse, close: bool) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.body.len(),
+        if close { "close" } else { "keep-alive" }
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Blocking keep-alive client. One instance owns at most one connection;
+/// a request on a stale connection (e.g. the server timed it out)
+/// reconnects and retries once, so callers see transport errors only
+/// when the server is genuinely unreachable.
+pub struct HttpClient {
+    addr: SocketAddr,
+    stream: Option<TcpStream>,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn new(addr: SocketAddr) -> Self {
+        HttpClient {
+            addr,
+            stream: None,
+            buf: Vec::new(),
+        }
+    }
+
+    fn connect(&mut self) -> Result<()> {
+        let stream = TcpStream::connect(self.addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let _ = stream.set_nodelay(true);
+        self.stream = Some(stream);
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// Issue one request; returns `(status, body)`.
+    ///
+    /// Retry policy: a failure on a **reused** keep-alive connection is
+    /// retried once on a fresh one — this server only closes idle
+    /// connections *between* requests (timeout/shutdown), so the failed
+    /// attempt was never read and resending cannot double-apply a
+    /// non-idempotent request. A failure on a fresh connection is
+    /// surfaced as-is, never silently resent.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let reused = self.stream.is_some();
+        if !reused {
+            self.connect()?;
+        }
+        match self.try_request(method, path, body) {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                self.stream = None;
+                self.buf.clear();
+                if !reused {
+                    return Err(e);
+                }
+                self.connect()?;
+                let out = self.try_request(method, path, body);
+                if out.is_err() {
+                    self.stream = None;
+                    self.buf.clear();
+                }
+                out
+            }
+        }
+    }
+
+    fn try_request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let stream = self.stream.as_mut().expect("connected");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: service\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+
+        let head_end = read_until_header_end(stream, &mut self.buf)?
+            .ok_or_else(|| anyhow!("server closed connection before responding"))?;
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| anyhow!("non-utf8 response head"))?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?;
+        let (content_length, server_closes) = parse_framing(lines)?;
+        let body_start = head_end + 4;
+        read_until_len(stream, &mut self.buf, body_start + content_length)?;
+        let body =
+            String::from_utf8(self.buf[body_start..body_start + content_length].to_vec())
+                .map_err(|_| anyhow!("non-utf8 response body"))?;
+        self.buf.drain(..body_start + content_length);
+        if server_closes {
+            self.stream = None;
+            self.buf.clear();
+        }
+        Ok((status, body))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server(n_workers: usize) -> HttpServer {
+        let handler: Handler = Arc::new(|req: &HttpRequest| {
+            if req.path == "/missing" {
+                HttpResponse::not_found()
+            } else {
+                HttpResponse::ok(format!(
+                    "{{\"method\":\"{}\",\"path\":\"{}\",\"len\":{}}}",
+                    req.method,
+                    req.path,
+                    req.body.len()
+                ))
+            }
+        });
+        HttpServer::bind("127.0.0.1:0", n_workers, handler).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_and_keep_alive() {
+        let server = echo_server(2);
+        let mut client = HttpClient::new(server.addr());
+        // Two requests over the same connection exercise keep-alive and
+        // leftover-buffer handling.
+        let (status, body) = client.request("POST", "/v1/echo", "hello body").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"len\":10"), "{body}");
+        let (status, body) = client.request("GET", "/other?q=1", "").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"path\":\"/other\""), "{body}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn not_found_and_concurrent_clients() {
+        let server = echo_server(4);
+        let addr = server.addr();
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut client = HttpClient::new(addr);
+                    for k in 0..10 {
+                        let (status, _) = client
+                            .request("POST", "/v1/echo", &format!("t{i}k{k}"))
+                            .unwrap();
+                        assert_eq!(status, 200);
+                    }
+                    let (status, _) = client.request("GET", "/missing", "").unwrap();
+                    assert_eq!(status, 404);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_unblocks_workers() {
+        let server = echo_server(3);
+        let addr = server.addr();
+        server.shutdown();
+        // After shutdown the port no longer answers requests.
+        let mut client = HttpClient::new(addr);
+        assert!(client.request("GET", "/", "").is_err());
+    }
+}

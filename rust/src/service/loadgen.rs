@@ -1,0 +1,325 @@
+//! Closed-loop multi-threaded load generator (DESIGN.md §11).
+//!
+//! Drives a running `pallas-serve` instance over loopback HTTP with job
+//! submissions drawn from the Table-1 workload catalog, and reports
+//! sustained request throughput and latency percentiles. Two modes:
+//!
+//! * [`LoadGen::paced`] — open-loop *target*, closed-loop *execution*:
+//!   each client thread samples Poisson arrival times at its share of
+//!   the target RPS and fires the next submit at its scheduled instant,
+//!   but never queues more than one outstanding request (a thread that
+//!   falls behind fires immediately instead of building an unbounded
+//!   backlog, so the measured RPS is what the server actually absorbed);
+//! * [`LoadGen::saturation`] — a fixed batch of jobs pushed back-to-back
+//!   from every thread, measuring peak submit throughput. This is the
+//!   mode behind the `service submit` benchmark cases and the CI
+//!   `ratio_gates` entry asserting 4 shards ≥ 2× 1 shard.
+//!
+//! HTTP 200 counts as admitted, 409 as rejected-by-admission-control
+//! (still a *successful* request), anything else as an error. The CI
+//! service smoke asserts zero errors at low offered load.
+
+use crate::service::http::HttpClient;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workload::catalog;
+use anyhow::{bail, Result};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic per-process run counter: combined with the process id it
+/// makes every generator run's job names unique, so a second `loadtest`
+/// against the same long-running server is not a wall of
+/// duplicate-name rejections.
+static NEXT_RUN: AtomicUsize = AtomicUsize::new(0);
+
+/// Shape of the jobs the generator submits.
+#[derive(Debug, Clone)]
+pub struct JobTemplate {
+    pub length_hours: f64,
+    pub slack: f64,
+    pub max_servers: usize,
+    /// Distinct tenant ids to spread submissions across shards.
+    pub tenants: usize,
+    pub seed: u64,
+}
+
+impl Default for JobTemplate {
+    fn default() -> Self {
+        JobTemplate {
+            length_hours: 6.0,
+            slack: 1.5,
+            max_servers: 4,
+            tenants: 64,
+            seed: 1,
+        }
+    }
+}
+
+/// Aggregated load-test results.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub sent: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    /// Transport failures and non-200/409 statuses.
+    pub errors: usize,
+    pub wall: Duration,
+    /// Successfully answered requests (admitted + rejected) per second.
+    pub sustained_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl LoadReport {
+    pub fn completed(&self) -> usize {
+        self.admitted + self.rejected
+    }
+}
+
+#[derive(Debug, Default)]
+struct ThreadStats {
+    sent: usize,
+    admitted: usize,
+    rejected: usize,
+    errors: usize,
+    latencies_ms: Vec<f64>,
+}
+
+impl ThreadStats {
+    fn fire(&mut self, client: &mut HttpClient, body: &str) {
+        self.sent += 1;
+        let t0 = Instant::now();
+        match client.request("POST", "/v1/jobs", body) {
+            Ok((200, _)) => {
+                self.admitted += 1;
+                self.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok((409, _)) => {
+                self.rejected += 1;
+                self.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(_) | Err(_) => self.errors += 1,
+        }
+    }
+}
+
+/// The generator: a target address, a client-thread count, and the job
+/// shape to submit.
+pub struct LoadGen {
+    addr: SocketAddr,
+    threads: usize,
+    template: JobTemplate,
+    /// Run-unique job-name prefix (process id + run counter).
+    tag: String,
+}
+
+impl LoadGen {
+    pub fn new(addr: SocketAddr, threads: usize, template: JobTemplate) -> Self {
+        LoadGen {
+            addr,
+            threads: threads.max(1),
+            template,
+            tag: format!(
+                "{:x}.{}",
+                std::process::id(),
+                NEXT_RUN.fetch_add(1, Ordering::Relaxed)
+            ),
+        }
+    }
+
+    /// Poisson-paced submissions at `target_rps` for `duration`.
+    pub fn paced(&self, target_rps: f64, duration: Duration) -> Result<LoadReport> {
+        if target_rps <= 0.0 {
+            bail!("target RPS must be positive");
+        }
+        let rate_per_thread = target_rps / self.threads as f64;
+        let t0 = Instant::now();
+        let per_thread = self.run_threads(|gen, t| gen.paced_worker(t, rate_per_thread, duration));
+        Ok(merge(per_thread, t0.elapsed()))
+    }
+
+    /// Back-to-back submission of exactly `n_jobs` jobs.
+    pub fn saturation(&self, n_jobs: usize) -> Result<LoadReport> {
+        if n_jobs == 0 {
+            bail!("need at least one job");
+        }
+        let t0 = Instant::now();
+        let per_thread = self.run_threads(|gen, t| gen.saturation_worker(t, n_jobs));
+        Ok(merge(per_thread, t0.elapsed()))
+    }
+
+    fn run_threads<F>(&self, work: F) -> Vec<ThreadStats>
+    where
+        F: Fn(&LoadGen, usize) -> ThreadStats + Sync,
+    {
+        let work = &work;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.threads)
+                .map(|t| scope.spawn(move || work(self, t)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("loadgen thread panicked"))
+                .collect()
+        })
+    }
+
+    fn paced_worker(&self, t: usize, rate_per_thread: f64, duration: Duration) -> ThreadStats {
+        let mut rng = Rng::new(
+            self.template
+                .seed
+                .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(t as u64 + 1)),
+        );
+        let mut client = HttpClient::new(self.addr);
+        let mut stats = ThreadStats::default();
+        let names = catalog::names();
+        let start = Instant::now();
+        let deadline = start + duration;
+        let mut next = start;
+        let mut k = 0usize;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            if next > now {
+                std::thread::sleep((next - now).min(deadline - now));
+                if Instant::now() >= deadline {
+                    break;
+                }
+            }
+            let tenant = rng.below(self.template.tenants.max(1) as u64) as usize;
+            let name = format!("lg{}-{t}-{k}", self.tag);
+            let body = self.job_body(&name, tenant, names[k % names.len()]);
+            stats.fire(&mut client, &body);
+            k += 1;
+            // Next Poisson arrival; behind-schedule threads fire
+            // immediately (closed loop, no backlog).
+            let gap = -(1.0 - rng.f64()).ln() / rate_per_thread;
+            next += Duration::from_secs_f64(gap);
+            let now = Instant::now();
+            if next < now {
+                next = now;
+            }
+        }
+        stats
+    }
+
+    fn saturation_worker(&self, t: usize, n_jobs: usize) -> ThreadStats {
+        let mut client = HttpClient::new(self.addr);
+        let mut stats = ThreadStats::default();
+        let names = catalog::names();
+        let mut idx = t;
+        while idx < n_jobs {
+            let name = format!("lg{}-{idx}", self.tag);
+            let body = self.job_body(
+                &name,
+                idx % self.template.tenants.max(1),
+                names[idx % names.len()],
+            );
+            stats.fire(&mut client, &body);
+            idx += self.threads;
+        }
+        stats
+    }
+
+    fn job_body(&self, name: &str, tenant: usize, workload: &str) -> String {
+        Json::obj()
+            .set("name", name)
+            .set("tenant", format!("tenant-{tenant}"))
+            .set("workload", workload)
+            .set("maxServers", self.template.max_servers)
+            .set("lengthHours", self.template.length_hours)
+            .set("slackFactor", self.template.slack)
+            .to_string_compact()
+    }
+}
+
+fn merge(per_thread: Vec<ThreadStats>, wall: Duration) -> LoadReport {
+    let mut sent = 0;
+    let mut admitted = 0;
+    let mut rejected = 0;
+    let mut errors = 0;
+    let mut latencies: Vec<f64> = Vec::new();
+    for t in per_thread {
+        sent += t.sent;
+        admitted += t.admitted;
+        rejected += t.rejected;
+        errors += t.errors;
+        latencies.extend(t.latencies_ms);
+    }
+    latencies.sort_by(f64::total_cmp);
+    let (mean_ms, p50_ms, p99_ms) = if latencies.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            stats::mean(&latencies),
+            stats::percentile_sorted(&latencies, 50.0),
+            stats::percentile_sorted(&latencies, 99.0),
+        )
+    };
+    LoadReport {
+        sent,
+        admitted,
+        rejected,
+        errors,
+        wall,
+        sustained_rps: (admitted + rejected) as f64 / wall.as_secs_f64().max(1e-9),
+        mean_ms,
+        p50_ms,
+        p99_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::api::{self, ServiceState};
+    use crate::service::http::HttpServer;
+    use crate::service::shard::{ShardPool, ShardPoolConfig};
+
+    fn service(shards: usize, cluster: usize) -> (HttpServer, std::sync::Arc<ServiceState>) {
+        let carbon: Vec<f64> = (0..24).map(|h| 50.0 + 30.0 * ((h % 8) as f64)).collect();
+        let pool = ShardPool::start(ShardPoolConfig::new(shards, cluster, carbon)).unwrap();
+        let state = ServiceState::new(pool);
+        let server =
+            HttpServer::bind("127.0.0.1:0", 4, api::handler(std::sync::Arc::clone(&state)))
+                .unwrap();
+        (server, state)
+    }
+
+    #[test]
+    fn saturation_submits_exactly_n_jobs_without_errors() {
+        let (server, state) = service(2, 16);
+        let gen = LoadGen::new(server.addr(), 3, JobTemplate::default());
+        let report = gen.saturation(12).unwrap();
+        assert_eq!(report.sent, 12);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.completed(), 12);
+        assert!(report.sustained_rps > 0.0);
+        assert!(report.p50_ms <= report.p99_ms);
+        let totals = state.pool().totals();
+        assert_eq!(totals.submitted, 12);
+        assert_eq!(totals.admitted + totals.rejected, 12);
+        server.shutdown();
+        state.pool().shutdown();
+    }
+
+    #[test]
+    fn paced_run_reports_sane_latency_stats() {
+        let (server, state) = service(1, 8);
+        let gen = LoadGen::new(server.addr(), 2, JobTemplate::default());
+        let report = gen
+            .paced(40.0, Duration::from_millis(300))
+            .unwrap();
+        assert!(report.sent > 0, "paced run must submit something");
+        assert_eq!(report.errors, 0);
+        assert!(report.mean_ms >= 0.0);
+        server.shutdown();
+        state.pool().shutdown();
+    }
+}

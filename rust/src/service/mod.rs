@@ -1,0 +1,37 @@
+//! `pallas-serve`: the scheduler-as-a-service layer (DESIGN.md §11).
+//!
+//! PRs 2–4 built a full planning stack — capacity-constrained fleet
+//! greedy (§8), 37-region geo placement (§9), and the online warm-start
+//! repair engine (§10) — but it was reachable only as a library/CLI.
+//! This subsystem turns the online engine into an always-on, concurrent,
+//! multi-tenant web service, the deployment shape CASPER (arXiv
+//! 2403.14792) argues for and the ROADMAP's "serving heavy traffic"
+//! north star requires. Std-only: no async runtime, no HTTP or serde
+//! crates.
+//!
+//! Layering (one module per concern):
+//!
+//! * [`http`] — minimal HTTP/1.1 server (fixed worker-thread pool,
+//!   keep-alive, accept-backlog backpressure) and the blocking client;
+//! * [`shard`] — `N` engine shards, each a planning thread owning a
+//!   `ScheduleEngine` over an even capacity partition, fed by an `mpsc`
+//!   queue drained in batches: revisions coalesce to one repair pass
+//!   per signal, arrivals admit jointly via
+//!   `ScheduleEngine::handle_arrivals`;
+//! * [`snapshot`] — `Arc`-swapped read-mostly per-shard state so GETs
+//!   never block a planning thread;
+//! * [`api`] — the `/v1/*` JSON routes gluing the two together;
+//! * [`loadgen`] — closed-loop multi-threaded load generator (Poisson
+//!   pacing or saturation batches) reporting sustained RPS and
+//!   p50/p99 latency; drives the `service` experiment, the
+//!   `benches/scheduler.rs` shard-scaling cases, and the CI smoke.
+//!
+//! Entry points: `carbonscaler serve` starts a server (`--selftest`
+//! adds an in-process load test and asserts zero errors);
+//! `carbonscaler loadtest` drives a remote instance.
+
+pub mod api;
+pub mod http;
+pub mod loadgen;
+pub mod shard;
+pub mod snapshot;

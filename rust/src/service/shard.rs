@@ -1,0 +1,931 @@
+//! Engine shards with admission batching (DESIGN.md §11).
+//!
+//! The online `ScheduleEngine` (§10) is single-threaded by design — a
+//! repair mutates the whole planning arena. `pallas-serve` scales it the
+//! way CASPER (arXiv 2403.14792) scales carbon-aware web scheduling:
+//! **shard the state**. A [`ShardPool`] runs `N` independent engines,
+//! each owning an even partition of cluster capacity and its own copy of
+//! the shared carbon forecast, behind an `mpsc` event queue consumed by
+//! a dedicated planning thread. Jobs are hashed to shards by tenant, so
+//! one tenant's elastic jobs contend with each other locally while the
+//! fleet scales horizontally.
+//!
+//! Each planning thread drains its queue into a **batch** before
+//! touching the engine:
+//!
+//! * all `ForecastRevised` (resp. `CapacityChanged`) revisions in the
+//!   batch are coalesced into a single spliced event — one repair pass
+//!   instead of one per revision, which is what makes the
+//!   `POST /v1/forecast` fan-out affordable on hot shards;
+//! * completions apply next, freeing capacity — departed jobs are then
+//!   retired out of the engine into a bounded terminal ring, so an
+//!   always-on shard never grows with lifetime throughput;
+//! * arrivals are admitted through
+//!   `ScheduleEngine::handle_arrivals`, one joint repair pass per batch
+//!   with per-job fallback, so storms amortize incumbent adoption.
+//!
+//! Replies are sent only *after* the shard publishes its post-batch
+//! [`ShardSnapshot`], so a client that saw `admitted` is guaranteed to
+//! find its job in every subsequent read — the consistency contract the
+//! concurrency tests (`rust/tests/service_concurrent.rs`) assert.
+
+use crate::sched::engine::{EngineJob, Event, JobState, RepairKind, ScheduleEngine};
+use crate::sched::fleet::PlanContext;
+use crate::sched::schedule::Schedule;
+use crate::service::snapshot::{JobView, ShardSnapshot, Swap};
+use crate::workload::job::JobSpec;
+use anyhow::{anyhow, bail, Result};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Configuration for a [`ShardPool`].
+#[derive(Debug, Clone)]
+pub struct ShardPoolConfig {
+    /// Number of engine shards (planning threads).
+    pub shards: usize,
+    /// Total cluster servers, partitioned evenly across shards.
+    pub cluster_size: usize,
+    /// Shared carbon forecast for hours `[0, carbon.len())`; every shard
+    /// starts from the same copy and revisions fan out to all of them.
+    pub carbon: Vec<f64>,
+    /// Most events drained into one batch (bounds per-batch latency).
+    pub max_batch: usize,
+}
+
+impl ShardPoolConfig {
+    pub fn new(shards: usize, cluster_size: usize, carbon: Vec<f64>) -> Self {
+        ShardPoolConfig {
+            shards,
+            cluster_size,
+            carbon,
+            max_batch: 64,
+        }
+    }
+}
+
+/// What an admitted submit gets back.
+#[derive(Debug, Clone)]
+pub struct SubmitOutcome {
+    pub shard: usize,
+    /// Planned emissions over the shard forecast, gCO₂eq.
+    pub carbon_g: f64,
+    pub completion_hours: Option<f64>,
+    pub arrival: usize,
+    pub alloc: Vec<usize>,
+    /// Other events sharing this event batch (amortization indicator).
+    pub batched_with: usize,
+}
+
+/// Admission verdict for one submit. Transport failures (shard thread
+/// gone) surface as `Err` from [`ShardPool::submit`] instead.
+#[derive(Debug, Clone)]
+pub enum SubmitResult {
+    Admitted(SubmitOutcome),
+    Rejected(String),
+}
+
+/// Pool-level counters; `submitted == admitted + rejected` once every
+/// in-flight request has been answered.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolTotals {
+    pub submitted: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+}
+
+/// Terminal (completed/failed) jobs retained per shard for reads after
+/// the engine evicts them — an always-on shard must not grow with
+/// lifetime throughput (the cumulative snapshot counters stay exact).
+const RETAINED_TERMINAL: usize = 256;
+
+/// Human-readable repair kind for API payloads.
+pub fn kind_str(kind: RepairKind) -> &'static str {
+    match kind {
+        RepairKind::NoOp => "noop",
+        RepairKind::Warm => "warm",
+        RepairKind::Escalated => "escalated",
+        RepairKind::Cold => "cold",
+    }
+}
+
+/// Per-shard verdict for a fanned-out revision.
+pub type ReviseVerdict = std::result::Result<RepairKind, String>;
+type CompleteVerdict = std::result::Result<(), String>;
+
+enum ShardRequest {
+    Submit {
+        spec: JobSpec,
+        tenant: String,
+        workload: String,
+        reply: Sender<SubmitResult>,
+    },
+    Complete {
+        name: String,
+        reply: Sender<CompleteVerdict>,
+    },
+    Revise {
+        event: Event,
+        reply: Sender<ReviseVerdict>,
+    },
+}
+
+/// The sharded scheduler pool. Cheap to share behind an `Arc`; all
+/// methods take `&self`.
+pub struct ShardPool {
+    shards: usize,
+    txs: Mutex<Vec<Sender<ShardRequest>>>,
+    cells: Vec<Arc<Swap<ShardSnapshot>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    submitted: AtomicUsize,
+    admitted: Arc<AtomicUsize>,
+    rejected: Arc<AtomicUsize>,
+}
+
+impl ShardPool {
+    /// Spawn the shard threads and return the pool.
+    pub fn start(cfg: ShardPoolConfig) -> Result<ShardPool> {
+        if cfg.shards == 0 {
+            bail!("pool needs at least one shard");
+        }
+        if cfg.cluster_size < cfg.shards {
+            bail!(
+                "cluster of {} servers cannot be split into {} shards",
+                cfg.cluster_size,
+                cfg.shards
+            );
+        }
+        if cfg.carbon.is_empty() {
+            bail!("service needs a non-empty forecast window");
+        }
+        if cfg.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        let admitted = Arc::new(AtomicUsize::new(0));
+        let rejected = Arc::new(AtomicUsize::new(0));
+        let mut txs = Vec::with_capacity(cfg.shards);
+        let mut cells = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let cap = partition_share(cfg.cluster_size, cfg.shards, shard);
+            let ctx = PlanContext::uniform(0, cap, cfg.carbon.clone())?;
+            let cell = Arc::new(Swap::new(ShardSnapshot::empty(shard, 0, ctx.capacity.clone())));
+            let (tx, rx) = channel();
+            let worker = ShardWorker {
+                shard,
+                engine: ScheduleEngine::new(ctx),
+                meta: HashMap::new(),
+                cell: Arc::clone(&cell),
+                terminal: VecDeque::new(),
+                completed_total: 0,
+                failed_total: 0,
+                admitted_carbon_g: 0.0,
+                batches: 0,
+                batched_events: 0,
+                coalesced: 0,
+                admitted: Arc::clone(&admitted),
+                rejected: Arc::clone(&rejected),
+            };
+            let max_batch = cfg.max_batch;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("shard-{shard}"))
+                    .spawn(move || worker.run(rx, max_batch))?,
+            );
+            txs.push(tx);
+            cells.push(cell);
+        }
+        Ok(ShardPool {
+            shards: cfg.shards,
+            txs: Mutex::new(txs),
+            cells,
+            handles: Mutex::new(handles),
+            submitted: AtomicUsize::new(0),
+            admitted,
+            rejected,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Deterministic tenant → shard placement.
+    pub fn shard_of(&self, tenant: &str) -> usize {
+        let mut h = DefaultHasher::new();
+        tenant.hash(&mut h);
+        (h.finish() % self.shards as u64) as usize
+    }
+
+    fn sender(&self, shard: usize) -> Result<Sender<ShardRequest>> {
+        self.txs
+            .lock()
+            .expect("pool poisoned")
+            .get(shard)
+            .cloned()
+            .ok_or_else(|| anyhow!("service is shutting down"))
+    }
+
+    /// Submit one job for `tenant`; blocks until its shard has planned
+    /// (or refused) it and published the covering snapshot.
+    pub fn submit(&self, tenant: &str, workload: &str, spec: JobSpec) -> Result<SubmitResult> {
+        let shard = self.shard_of(tenant);
+        let tx = self.sender(shard)?;
+        let (reply_tx, reply_rx) = channel();
+        tx.send(ShardRequest::Submit {
+            spec,
+            tenant: tenant.to_string(),
+            workload: workload.to_string(),
+            reply: reply_tx,
+        })
+        .map_err(|_| anyhow!("shard {shard} is gone"))?;
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("shard {shard} dropped the request"))
+    }
+
+    /// Mark an active job completed, freeing its capacity. Returns
+    /// `false` when no shard knows an active job by that name.
+    pub fn complete(&self, name: &str) -> Result<bool> {
+        for (shard, cell) in self.cells.iter().enumerate() {
+            let holds = cell
+                .load()
+                .jobs
+                .iter()
+                .any(|j| j.name == name && j.state == "active");
+            if !holds {
+                continue;
+            }
+            let tx = self.sender(shard)?;
+            let (reply_tx, reply_rx) = channel();
+            tx.send(ShardRequest::Complete {
+                name: name.to_string(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("shard {shard} is gone"))?;
+            return match reply_rx.recv() {
+                Ok(Ok(())) => Ok(true),
+                // The engine refusing ("no active job named ...") means a
+                // concurrent completion won the race after we read the
+                // snapshot: not-found, not a service failure.
+                Ok(Err(_)) => Ok(false),
+                Err(_) => Err(anyhow!("shard {shard} dropped the request")),
+            };
+        }
+        Ok(false)
+    }
+
+    /// Fan a revision event verbatim to every shard; returns one verdict
+    /// per shard, in shard order. Correct for forecast revisions (the
+    /// forecast is shared state, each shard holds a copy); capacity
+    /// revisions must go through [`ShardPool::revise_capacity`] instead,
+    /// which partitions the cluster-level vector — fanning an absolute
+    /// capacity vector verbatim would multiply it by the shard count.
+    pub fn revise_all(&self, event: Event) -> Result<Vec<ReviseVerdict>> {
+        let txs: Vec<Sender<ShardRequest>> = {
+            let guard = self.txs.lock().expect("pool poisoned");
+            guard.clone()
+        };
+        if txs.is_empty() {
+            bail!("service is shutting down");
+        }
+        let mut replies = Vec::with_capacity(txs.len());
+        for (shard, tx) in txs.iter().enumerate() {
+            let (reply_tx, reply_rx) = channel();
+            tx.send(ShardRequest::Revise {
+                event: event.clone(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("shard {shard} is gone"))?;
+            replies.push(reply_rx);
+        }
+        Ok(replies
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err("shard dropped the request".to_string()))
+            })
+            .collect())
+    }
+
+    /// Revise **total cluster** capacity for `[start, start + total.len())`:
+    /// each slot's value is split across shards with the same even
+    /// partition used at pool start, and each shard repairs against its
+    /// own share (one verdict per shard, in shard order).
+    pub fn revise_capacity(&self, start: usize, total: Vec<usize>) -> Result<Vec<ReviseVerdict>> {
+        let txs: Vec<Sender<ShardRequest>> = {
+            let guard = self.txs.lock().expect("pool poisoned");
+            guard.clone()
+        };
+        if txs.is_empty() {
+            bail!("service is shutting down");
+        }
+        let mut replies = Vec::with_capacity(txs.len());
+        for (shard, tx) in txs.iter().enumerate() {
+            let capacity: Vec<usize> = total
+                .iter()
+                .map(|&c| partition_share(c, self.shards, shard))
+                .collect();
+            let (reply_tx, reply_rx) = channel();
+            tx.send(ShardRequest::Revise {
+                event: Event::CapacityChanged { start, capacity },
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("shard {shard} is gone"))?;
+            replies.push(reply_rx);
+        }
+        Ok(replies
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err("shard dropped the request".to_string()))
+            })
+            .collect())
+    }
+
+    /// Latest published snapshot of every shard.
+    pub fn snapshots(&self) -> Vec<Arc<ShardSnapshot>> {
+        self.cells.iter().map(|c| c.load()).collect()
+    }
+
+    /// Find a job by name across shards (names are unique per shard; the
+    /// service treats them as globally unique by convention).
+    pub fn find_job(&self, name: &str) -> Option<(usize, JobView)> {
+        for cell in &self.cells {
+            let snap = cell.load();
+            if let Some(j) = snap.jobs.iter().find(|j| j.name == name) {
+                return Some((snap.shard, j.clone()));
+            }
+        }
+        None
+    }
+
+    pub fn totals(&self) -> PoolTotals {
+        PoolTotals {
+            submitted: self.submitted.load(Ordering::SeqCst),
+            admitted: self.admitted.load(Ordering::SeqCst),
+            rejected: self.rejected.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Close the queues and join the shard threads. Snapshots stay
+    /// readable; further submits/revisions fail cleanly.
+    pub fn shutdown(&self) {
+        self.txs.lock().expect("pool poisoned").clear();
+        let handles: Vec<JoinHandle<()>> = {
+            let mut guard = self.handles.lock().expect("pool poisoned");
+            guard.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Shard `shard`'s share of `total` units under the pool's even
+/// partition (first `total % shards` shards take the remainder).
+fn partition_share(total: usize, shards: usize, shard: usize) -> usize {
+    total / shards + usize::from(shard < total % shards)
+}
+
+/// Planned emissions of one schedule against a shard's context, charging
+/// out-of-window slots zero (same accounting as the engine's repair
+/// objective, so API numbers and planner numbers cannot diverge).
+pub fn planned_carbon(spec: &JobSpec, plan: &Schedule, ctx: &PlanContext) -> f64 {
+    plan.emissions_by_slot(spec, |i| {
+        ctx.rel(plan.arrival + i).map_or(0.0, |fi| ctx.carbon[fi])
+    })
+    .0
+}
+
+struct ShardWorker {
+    shard: usize,
+    engine: ScheduleEngine,
+    /// job name → (tenant, workload)
+    meta: HashMap<String, (String, String)>,
+    cell: Arc<Swap<ShardSnapshot>>,
+    /// Recently departed jobs, retained for reads after engine eviction.
+    terminal: VecDeque<JobView>,
+    completed_total: usize,
+    failed_total: usize,
+    admitted_carbon_g: f64,
+    batches: usize,
+    batched_events: usize,
+    coalesced: usize,
+    admitted: Arc<AtomicUsize>,
+    rejected: Arc<AtomicUsize>,
+}
+
+/// Replies deferred until after the post-batch snapshot publish.
+enum DeferredReply {
+    Submit(Sender<SubmitResult>, SubmitResult),
+    Complete(Sender<CompleteVerdict>, CompleteVerdict),
+    Revise(Sender<ReviseVerdict>, ReviseVerdict),
+}
+
+impl ShardWorker {
+    fn run(mut self, rx: Receiver<ShardRequest>, max_batch: usize) {
+        loop {
+            let first = match rx.recv() {
+                Ok(msg) => msg,
+                Err(_) => break, // pool dropped the sender: shut down
+            };
+            let mut batch = vec![first];
+            while batch.len() < max_batch {
+                match rx.try_recv() {
+                    Ok(msg) => batch.push(msg),
+                    Err(_) => break,
+                }
+            }
+            let replies = self.process_batch(batch);
+            self.publish();
+            for reply in replies {
+                // A dropped receiver just means the caller gave up.
+                match reply {
+                    DeferredReply::Submit(tx, out) => {
+                        let _ = tx.send(out);
+                    }
+                    DeferredReply::Complete(tx, out) => {
+                        let _ = tx.send(out);
+                    }
+                    DeferredReply::Revise(tx, out) => {
+                        let _ = tx.send(out);
+                    }
+                }
+            }
+        }
+    }
+
+    fn process_batch(&mut self, batch: Vec<ShardRequest>) -> Vec<DeferredReply> {
+        self.batches += 1;
+        self.batched_events += batch.len();
+        let batched_with = batch.len() - 1;
+        let mut submits = Vec::new();
+        let mut completes = Vec::new();
+        let mut revisions = Vec::new();
+        for msg in batch {
+            match msg {
+                ShardRequest::Submit {
+                    spec,
+                    tenant,
+                    workload,
+                    reply,
+                } => submits.push((spec, tenant, workload, reply)),
+                ShardRequest::Complete { name, reply } => completes.push((name, reply)),
+                ShardRequest::Revise { event, reply } => revisions.push((event, reply)),
+            }
+        }
+        let mut replies = Vec::new();
+
+        // 1. Revisions, coalesced to one repair pass per signal.
+        self.apply_revisions(revisions, &mut replies);
+
+        // 2. Completions, freeing capacity for the arrivals below; the
+        // departed jobs are then retired into the bounded terminal ring
+        // so the engine never grows with lifetime throughput.
+        for (name, reply) in completes {
+            let out = self
+                .engine
+                .handle(Event::JobCompleted { name })
+                .map(|_| ())
+                .map_err(|e| format!("{e:#}"));
+            replies.push(DeferredReply::Complete(reply, out));
+        }
+        self.retire_terminal();
+
+        // 3. Arrivals, admitted jointly (per-job fallback inside).
+        if !submits.is_empty() {
+            let specs: Vec<JobSpec> = submits.iter().map(|(s, ..)| s.clone()).collect();
+            let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
+            let results = self.engine.handle_arrivals(specs);
+            for (((_, tenant, workload, reply), name), result) in
+                submits.into_iter().zip(names).zip(results)
+            {
+                let out = match result {
+                    Ok(_) => {
+                        self.meta.insert(name.clone(), (tenant, workload));
+                        self.admitted.fetch_add(1, Ordering::SeqCst);
+                        let outcome = self.outcome_of(&name, batched_with);
+                        self.admitted_carbon_g += outcome.carbon_g;
+                        SubmitResult::Admitted(outcome)
+                    }
+                    Err(e) => {
+                        self.rejected.fetch_add(1, Ordering::SeqCst);
+                        SubmitResult::Rejected(format!("{e:#}"))
+                    }
+                };
+                replies.push(DeferredReply::Submit(reply, out));
+            }
+        }
+        replies
+    }
+
+    fn apply_revisions(
+        &mut self,
+        revisions: Vec<(Event, Sender<ReviseVerdict>)>,
+        replies: &mut Vec<DeferredReply>,
+    ) {
+        if revisions.is_empty() {
+            return;
+        }
+        let ctx_start = self.engine.context().start;
+        let ctx_end = self.engine.context().end();
+        let mut forecast: Vec<(usize, Vec<f64>)> = Vec::new();
+        let mut forecast_replies = Vec::new();
+        let mut capacity: Vec<(usize, Vec<usize>)> = Vec::new();
+        let mut capacity_replies = Vec::new();
+        let window_err = |start: usize, len: usize| {
+            format!(
+                "revision window [{start}, {}) outside service window [{ctx_start}, {ctx_end})",
+                start + len
+            )
+        };
+        for (event, reply) in revisions {
+            match event {
+                Event::ForecastRevised { start, carbon } => {
+                    if carbon.is_empty() || start < ctx_start || start + carbon.len() > ctx_end {
+                        let msg = window_err(start, carbon.len());
+                        replies.push(DeferredReply::Revise(reply, Err(msg)));
+                    } else if let Some(i) =
+                        carbon.iter().position(|c| !c.is_finite() || *c < 0.0)
+                    {
+                        let msg = format!(
+                            "revised forecast slot {} is invalid: {}",
+                            start + i,
+                            carbon[i]
+                        );
+                        replies.push(DeferredReply::Revise(reply, Err(msg)));
+                    } else {
+                        forecast.push((start, carbon));
+                        forecast_replies.push(reply);
+                    }
+                }
+                Event::CapacityChanged { start, capacity: cap } => {
+                    if cap.is_empty() || start < ctx_start || start + cap.len() > ctx_end {
+                        let msg = window_err(start, cap.len());
+                        replies.push(DeferredReply::Revise(reply, Err(msg)));
+                    } else {
+                        capacity.push((start, cap));
+                        capacity_replies.push(reply);
+                    }
+                }
+                other => {
+                    let msg = format!("unsupported revision event {other:?}");
+                    replies.push(DeferredReply::Revise(reply, Err(msg)));
+                }
+            }
+        }
+        if !forecast.is_empty() {
+            self.coalesced += forecast.len() - 1;
+            let merged = merge_forecast(self.engine.context(), &forecast);
+            let out = self
+                .engine
+                .handle(merged)
+                .map(|s| s.kind)
+                .map_err(|e| format!("{e:#}"));
+            for reply in forecast_replies {
+                replies.push(DeferredReply::Revise(reply, out.clone()));
+            }
+        }
+        if !capacity.is_empty() {
+            self.coalesced += capacity.len() - 1;
+            let merged = merge_capacity(self.engine.context(), &capacity);
+            let out = self
+                .engine
+                .handle(merged)
+                .map(|s| s.kind)
+                .map_err(|e| format!("{e:#}"));
+            for reply in capacity_replies {
+                replies.push(DeferredReply::Revise(reply, out.clone()));
+            }
+        }
+    }
+
+    fn outcome_of(&self, name: &str, batched_with: usize) -> SubmitOutcome {
+        let job = self
+            .engine
+            .jobs()
+            .iter()
+            .find(|j| j.spec.name == name)
+            .expect("just admitted");
+        SubmitOutcome {
+            shard: self.shard,
+            carbon_g: planned_carbon(&job.spec, &job.plan, self.engine.context()),
+            completion_hours: job.plan.completion_hours(&job.spec),
+            arrival: job.spec.arrival,
+            alloc: job.plan.alloc.clone(),
+            batched_with,
+        }
+    }
+
+    /// One job as the API reports it (tenant/workload joined from shard
+    /// metadata, carbon from the shard forecast).
+    fn view_of(&self, j: &EngineJob) -> JobView {
+        let ctx = self.engine.context();
+        let (tenant, workload) = self
+            .meta
+            .get(&j.spec.name)
+            .cloned()
+            .unwrap_or_else(|| (j.spec.name.clone(), "custom".to_string()));
+        JobView {
+            name: j.spec.name.clone(),
+            tenant,
+            workload,
+            state: match j.state {
+                JobState::Active => "active",
+                JobState::Completed => "completed",
+                JobState::Failed => "failed",
+            },
+            carbon_g: planned_carbon(&j.spec, &j.plan, ctx),
+            completion_hours: j.plan.completion_hours(&j.spec),
+            arrival: j.spec.arrival,
+            alloc: j.plan.alloc.clone(),
+        }
+    }
+
+    /// Move departed jobs out of the engine into the bounded terminal
+    /// ring, keeping the cumulative counters exact (DESIGN.md §11: an
+    /// always-on shard must not grow with lifetime throughput).
+    fn retire_terminal(&mut self) {
+        let departed: Vec<JobView> = self
+            .engine
+            .jobs()
+            .iter()
+            .filter(|j| j.state != JobState::Active)
+            .map(|j| self.view_of(j))
+            .collect();
+        if departed.is_empty() {
+            return;
+        }
+        for view in departed {
+            if view.state == "completed" {
+                self.completed_total += 1;
+            } else {
+                self.failed_total += 1;
+            }
+            self.meta.remove(&view.name);
+            self.terminal.push_back(view);
+            if self.terminal.len() > RETAINED_TERMINAL {
+                self.terminal.pop_front();
+            }
+        }
+        self.engine.evict_terminal();
+    }
+
+    fn publish(&self) {
+        let ctx = self.engine.context();
+        let mut usage = vec![0usize; ctx.horizon()];
+        for j in self.engine.jobs() {
+            if j.state != JobState::Active {
+                continue;
+            }
+            for (fi, u) in usage.iter_mut().enumerate() {
+                *u += j.plan.at(ctx.start + fi);
+            }
+        }
+        // Active views first: a name freed by eviction may be reused, and
+        // `find_job` returns the first match — it must see the live job,
+        // not its retired namesake.
+        let mut jobs: Vec<JobView> =
+            self.engine.jobs().iter().map(|j| self.view_of(j)).collect();
+        jobs.extend(self.terminal.iter().cloned());
+        self.cell.store(ShardSnapshot {
+            shard: self.shard,
+            now: self.engine.now(),
+            start: ctx.start,
+            capacity: ctx.capacity.clone(),
+            usage,
+            jobs,
+            stats: self.engine.stats().clone(),
+            completed_total: self.completed_total,
+            failed_total: self.failed_total,
+            admitted_carbon_g: self.admitted_carbon_g,
+            batches: self.batches,
+            batched_events: self.batched_events,
+            coalesced_revisions: self.coalesced,
+        });
+    }
+}
+
+/// Merge overlapping forecast revisions (later entries win per slot)
+/// into one spliced event covering the dirty range.
+fn merge_forecast(ctx: &PlanContext, revs: &[(usize, Vec<f64>)]) -> Event {
+    let mut carbon = ctx.carbon.clone();
+    let mut lo = usize::MAX;
+    let mut hi = 0usize;
+    for (start, vals) in revs {
+        let s = start - ctx.start;
+        carbon[s..s + vals.len()].copy_from_slice(vals);
+        lo = lo.min(s);
+        hi = hi.max(s + vals.len());
+    }
+    Event::ForecastRevised {
+        start: ctx.start + lo,
+        carbon: carbon[lo..hi].to_vec(),
+    }
+}
+
+/// Capacity twin of [`merge_forecast`].
+fn merge_capacity(ctx: &PlanContext, revs: &[(usize, Vec<usize>)]) -> Event {
+    let mut capacity = ctx.capacity.clone();
+    let mut lo = usize::MAX;
+    let mut hi = 0usize;
+    for (start, vals) in revs {
+        let s = start - ctx.start;
+        capacity[s..s + vals.len()].copy_from_slice(vals);
+        lo = lo.min(s);
+        hi = hi.max(s + vals.len());
+    }
+    Event::CapacityChanged {
+        start: ctx.start + lo,
+        capacity: capacity[lo..hi].to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::workload::job::JobBuilder;
+
+    fn job(name: &str, len: f64, slack: f64, max: usize) -> JobSpec {
+        JobBuilder::new(name, MarginalCapacityCurve::linear(max))
+            .length(len)
+            .slack_factor(slack)
+            .power(1000.0)
+            .build()
+            .unwrap()
+    }
+
+    fn pool(shards: usize, cluster: usize) -> ShardPool {
+        let carbon = vec![10.0, 40.0, 20.0, 80.0, 15.0, 60.0];
+        ShardPool::start(ShardPoolConfig::new(shards, cluster, carbon)).unwrap()
+    }
+
+    #[test]
+    fn submit_admits_and_snapshot_covers_the_job() {
+        let p = pool(2, 8);
+        let out = p.submit("tenant-a", "custom", job("j1", 2.0, 2.0, 2)).unwrap();
+        let SubmitResult::Admitted(out) = out else {
+            panic!("j1 must be admitted");
+        };
+        assert_eq!(out.shard, p.shard_of("tenant-a"));
+        assert!(out.carbon_g > 0.0);
+        assert!(out.completion_hours.is_some());
+        // Reply-after-publish: the job is immediately visible.
+        let (shard, view) = p.find_job("j1").expect("visible after admission");
+        assert_eq!(shard, out.shard);
+        assert_eq!(view.tenant, "tenant-a");
+        assert_eq!(view.state, "active");
+        let t = p.totals();
+        assert_eq!((t.submitted, t.admitted, t.rejected), (1, 1, 0));
+        p.shutdown();
+    }
+
+    #[test]
+    fn rejection_counts_and_leaves_no_job() {
+        let p = pool(1, 1);
+        // Window is 6 h; a 12 h on-time job cannot fit.
+        let out = p.submit("t", "custom", job("big", 12.0, 1.0, 1)).unwrap();
+        assert!(matches!(out, SubmitResult::Rejected(_)));
+        assert!(p.find_job("big").is_none());
+        let t = p.totals();
+        assert_eq!((t.submitted, t.admitted, t.rejected), (1, 0, 1));
+        p.shutdown();
+    }
+
+    #[test]
+    fn forecast_revision_fans_out_to_every_shard() {
+        let p = pool(3, 9);
+        for i in 0..3 {
+            let tenant = format!("tenant-{i}");
+            p.submit(&tenant, "custom", job(&format!("j{i}"), 1.0, 3.0, 1))
+                .unwrap();
+        }
+        let verdicts = p
+            .revise_all(Event::ForecastRevised {
+                start: 0,
+                carbon: vec![500.0, 1.0, 500.0, 500.0, 500.0, 500.0],
+            })
+            .unwrap();
+        assert_eq!(verdicts.len(), 3);
+        assert!(verdicts.iter().all(|v| v.is_ok()), "{verdicts:?}");
+        // Every shard now plans its (1-hour, slack-3) job into slot 1.
+        for snap in p.snapshots() {
+            for j in &snap.jobs {
+                assert_eq!(j.alloc.iter().position(|&a| a > 0), Some(1), "{j:?}");
+            }
+        }
+        p.shutdown();
+    }
+
+    #[test]
+    fn capacity_revision_is_cluster_level_and_partitioned() {
+        let p = pool(2, 8); // shards own 4 + 4 servers
+        let verdicts = p.revise_capacity(0, vec![6; 6]).unwrap();
+        assert!(verdicts.iter().all(|v| v.is_ok()), "{verdicts:?}");
+        // Shares sum to the posted cluster totals in every slot — never
+        // the totals times the shard count.
+        for snap in p.snapshots() {
+            assert_eq!(snap.capacity.len(), 6);
+        }
+        for slot in 0..6 {
+            let total: usize = p.snapshots().iter().map(|s| s.capacity[slot]).sum();
+            assert_eq!(total, 6, "slot {slot}");
+        }
+        p.shutdown();
+    }
+
+    #[test]
+    fn departed_jobs_survive_in_snapshots_after_engine_eviction() {
+        let p = pool(1, 4);
+        p.submit("t", "custom", job("done", 1.0, 2.0, 1)).unwrap();
+        assert!(p.complete("done").unwrap());
+        let (_, view) = p.find_job("done").expect("retained in the terminal ring");
+        assert_eq!(view.state, "completed");
+        let snap = &p.snapshots()[0];
+        assert_eq!(snap.completed_total, 1);
+        assert_eq!(snap.active_jobs(), 0);
+        assert!(snap.admitted_carbon_g > 0.0);
+        // The name is reusable once its owner departed, and the live job
+        // shadows the retired namesake in reads.
+        let again = p.submit("t", "custom", job("done", 1.0, 2.0, 1)).unwrap();
+        assert!(matches!(again, SubmitResult::Admitted(_)));
+        let (_, view) = p.find_job("done").unwrap();
+        assert_eq!(view.state, "active");
+        p.shutdown();
+    }
+
+    #[test]
+    fn out_of_window_revision_is_refused_without_state_damage() {
+        let p = pool(2, 4);
+        let verdicts = p
+            .revise_all(Event::ForecastRevised {
+                start: 4,
+                carbon: vec![1.0; 10],
+            })
+            .unwrap();
+        assert!(verdicts.iter().all(|v| v.is_err()));
+        let ok = p.submit("t", "custom", job("after", 1.0, 2.0, 1)).unwrap();
+        assert!(matches!(ok, SubmitResult::Admitted(_)));
+        p.shutdown();
+    }
+
+    #[test]
+    fn complete_frees_capacity_for_a_successor() {
+        let p = pool(1, 1);
+        let a = p.submit("t", "custom", job("a", 6.0, 1.0, 1)).unwrap();
+        assert!(matches!(a, SubmitResult::Admitted(_)));
+        // Cluster of 1 is fully booked for the whole window.
+        let b = p.submit("t", "custom", job("b", 6.0, 1.0, 1)).unwrap();
+        assert!(matches!(b, SubmitResult::Rejected(_)));
+        assert!(p.complete("a").unwrap());
+        assert!(!p.complete("a").unwrap(), "already completed");
+        let b = p.submit("t", "custom", job("b", 6.0, 1.0, 1)).unwrap();
+        assert!(matches!(b, SubmitResult::Admitted(_)));
+        let t = p.totals();
+        assert_eq!((t.submitted, t.admitted, t.rejected), (3, 2, 1));
+        p.shutdown();
+    }
+
+    #[test]
+    fn merge_overlapping_revisions_latest_wins() {
+        let ctx = PlanContext::uniform(0, 4, vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        let merged = merge_forecast(
+            &ctx,
+            &[(1, vec![99.0, 98.0]), (2, vec![50.0])],
+        );
+        let Event::ForecastRevised { start, carbon } = merged else {
+            panic!("wrong event kind");
+        };
+        assert_eq!(start, 1);
+        assert_eq!(carbon, vec![99.0, 50.0]);
+        let merged = merge_capacity(&ctx, &[(0, vec![7]), (3, vec![9])]);
+        let Event::CapacityChanged { start, capacity } = merged else {
+            panic!("wrong event kind");
+        };
+        // Union range seeded from the current context between revisions.
+        assert_eq!(start, 0);
+        assert_eq!(capacity, vec![7, 4, 4, 9]);
+    }
+
+    #[test]
+    fn shutdown_refuses_new_work_but_keeps_snapshots() {
+        let p = pool(2, 4);
+        p.submit("t", "custom", job("keep", 1.0, 2.0, 1)).unwrap();
+        p.shutdown();
+        assert!(p.find_job("keep").is_some());
+        assert!(p.submit("t", "custom", job("late", 1.0, 2.0, 1)).is_err());
+        assert!(p
+            .revise_all(Event::ForecastRevised {
+                start: 0,
+                carbon: vec![1.0; 6],
+            })
+            .is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Concurrency tests for `pallas-serve` (DESIGN.md §11): a real server
+//! on an ephemeral loopback port, hammered by concurrent client threads
+//! submitting jobs and fanning out forecast revisions. Asserts the
+//! service's core guarantees:
+//!
+//! * **no lost jobs** — every submit gets exactly one verdict, every
+//!   admitted job is retrievable afterwards, every rejected one is not;
+//! * **per-shard capacity invariants** — no snapshot ever shows a slot
+//!   committed beyond its shard's partition, and every active plan
+//!   completes its job within bounds;
+//! * **stats reconcile** — `GET /v1/stats` totals equal what the clients
+//!   actually submitted, with `submitted == admitted + rejected`.
+
+use carbonscaler::service::api::{self, ServiceState};
+use carbonscaler::service::http::{HttpClient, HttpServer};
+use carbonscaler::service::shard::{ShardPool, ShardPoolConfig};
+use carbonscaler::util::json::{self, Json};
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+const HORIZON: usize = 48;
+
+fn start_service(shards: usize, cluster: usize) -> (HttpServer, Arc<ServiceState>) {
+    // Deterministic zig-zag forecast: cheap and dirty slots alternate so
+    // planning has real choices to fight over.
+    let carbon: Vec<f64> = (0..HORIZON)
+        .map(|h| 40.0 + 60.0 * ((h % 6) as f64))
+        .collect();
+    let pool = ShardPool::start(ShardPoolConfig::new(shards, cluster, carbon)).unwrap();
+    let state = ServiceState::new(pool);
+    let server = HttpServer::bind("127.0.0.1:0", 8, api::handler(Arc::clone(&state))).unwrap();
+    (server, state)
+}
+
+fn job_body(name: &str, tenant: &str, length: f64, slack: f64, max: usize) -> String {
+    Json::obj()
+        .set("name", name)
+        .set("tenant", tenant)
+        .set("workload", "resnet18")
+        .set("maxServers", max)
+        .set("lengthHours", length)
+        .set("slackFactor", slack)
+        .to_string_compact()
+}
+
+/// (admitted names, rejected names) submitted by one client thread.
+fn submit_many(addr: SocketAddr, thread: usize, count: usize) -> (Vec<String>, Vec<String>) {
+    let mut client = HttpClient::new(addr);
+    let mut admitted = Vec::new();
+    let mut rejected = Vec::new();
+    for k in 0..count {
+        let name = format!("t{thread}-j{k}");
+        let tenant = format!("tenant-{thread}-{}", k % 3);
+        let body = job_body(&name, &tenant, 6.0, 1.5, 4);
+        let (status, resp) = client
+            .request("POST", "/v1/jobs", &body)
+            .expect("transport must not fail on loopback");
+        match status {
+            200 => admitted.push(name),
+            409 => rejected.push(name),
+            other => panic!("unexpected status {other}: {resp}"),
+        }
+    }
+    (admitted, rejected)
+}
+
+fn get_stats(addr: SocketAddr) -> Json {
+    let mut client = HttpClient::new(addr);
+    let (status, body) = client.request("GET", "/v1/stats", "").unwrap();
+    assert_eq!(status, 200);
+    json::parse(&body).unwrap()
+}
+
+fn assert_shard_invariants(state: &ServiceState) {
+    for snap in state.pool().snapshots() {
+        assert_eq!(
+            snap.overcommitted_slots(),
+            0,
+            "shard {} violates its capacity partition",
+            snap.shard
+        );
+        for job in &snap.jobs {
+            if job.state != "active" {
+                continue;
+            }
+            assert!(
+                job.completion_hours.is_some(),
+                "active job {} has a non-completing plan",
+                job.name
+            );
+        }
+    }
+}
+
+#[test]
+fn concurrent_submits_lose_no_jobs_and_stats_reconcile() {
+    const THREADS: usize = 6;
+    const PER_THREAD: usize = 20;
+    let (server, state) = start_service(4, 64);
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| std::thread::spawn(move || submit_many(addr, t, PER_THREAD)))
+        .collect();
+    let mut admitted = Vec::new();
+    let mut rejected = Vec::new();
+    for h in handles {
+        let (a, r) = h.join().unwrap();
+        admitted.extend(a);
+        rejected.extend(r);
+    }
+    assert_eq!(admitted.len() + rejected.len(), THREADS * PER_THREAD);
+
+    // Every verdict is durable: admitted jobs are retrievable, rejected
+    // ones are genuinely absent.
+    let mut client = HttpClient::new(addr);
+    for name in &admitted {
+        let (status, body) = client
+            .request("GET", &format!("/v1/jobs/{name}"), "")
+            .unwrap();
+        assert_eq!(status, 200, "admitted job {name} was lost: {body}");
+        let doc = json::parse(&body).unwrap();
+        assert_eq!(doc.get("state").and_then(Json::as_str), Some("active"));
+        assert!(doc.get("carbonG").and_then(Json::as_f64).unwrap().is_finite());
+    }
+    for name in &rejected {
+        let (status, _) = client
+            .request("GET", &format!("/v1/jobs/{name}"), "")
+            .unwrap();
+        assert_eq!(status, 404, "rejected job {name} leaked into a shard");
+    }
+
+    let stats = get_stats(addr);
+    assert_eq!(
+        stats.get("submitted").and_then(Json::as_usize),
+        Some(THREADS * PER_THREAD)
+    );
+    assert_eq!(
+        stats.get("admitted").and_then(Json::as_usize),
+        Some(admitted.len())
+    );
+    assert_eq!(
+        stats.get("rejected").and_then(Json::as_usize),
+        Some(rejected.len())
+    );
+    assert_eq!(
+        stats.get("active").and_then(Json::as_usize),
+        Some(admitted.len())
+    );
+    // Per-shard job counts must add up to the pool totals (nothing
+    // double-placed, nothing dropped between shards).
+    let per_shard: usize = stats
+        .get("shards")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(|s| s.get("jobs").and_then(Json::as_usize))
+        .sum();
+    assert_eq!(per_shard, admitted.len());
+
+    assert_shard_invariants(&state);
+    server.shutdown();
+    state.pool().shutdown();
+}
+
+#[test]
+fn submits_interleaved_with_forecast_revisions_hold_invariants() {
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 12;
+    let (server, state) = start_service(3, 48);
+    let addr = server.addr();
+
+    let revision_thread = std::thread::spawn(move || {
+        let mut client = HttpClient::new(addr);
+        let mut applied = 0usize;
+        for round in 0..10 {
+            // Alternate which slots are cheap so repairs keep moving work.
+            let carbon: Vec<f64> = (0..HORIZON)
+                .map(|h| if (h + round) % 2 == 0 { 10.0 } else { 120.0 })
+                .collect();
+            let body = Json::obj()
+                .set("start", 0usize)
+                .set("carbon", carbon)
+                .to_string_compact();
+            let (status, resp) = client.request("POST", "/v1/forecast", &body).unwrap();
+            assert!(
+                status == 200 || status == 409,
+                "forecast fan-out must not transport-fail: {status} {resp}"
+            );
+            if status == 200 {
+                applied += 1;
+            }
+        }
+        applied
+    });
+    let submit_handles: Vec<_> = (0..THREADS)
+        .map(|t| std::thread::spawn(move || submit_many(addr, t, PER_THREAD)))
+        .collect();
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    for h in submit_handles {
+        let (a, r) = h.join().unwrap();
+        admitted += a.len();
+        rejected += r.len();
+    }
+    let applied = revision_thread.join().unwrap();
+    assert!(applied > 0, "at least one revision round must apply cleanly");
+
+    let stats = get_stats(addr);
+    assert_eq!(
+        stats.get("submitted").and_then(Json::as_usize),
+        Some(THREADS * PER_THREAD)
+    );
+    assert_eq!(stats.get("admitted").and_then(Json::as_usize), Some(admitted));
+    assert_eq!(stats.get("rejected").and_then(Json::as_usize), Some(rejected));
+    assert_eq!(admitted + rejected, THREADS * PER_THREAD);
+
+    assert_shard_invariants(&state);
+    server.shutdown();
+    state.pool().shutdown();
+}
+
+#[test]
+fn completions_free_capacity_and_reconcile_in_stats() {
+    let (server, state) = start_service(2, 24);
+    let addr = server.addr();
+    let (admitted, rejected) = submit_many(addr, 0, 10);
+    assert_eq!(rejected.len(), 0, "24 servers must admit 10 small jobs");
+
+    let mut client = HttpClient::new(addr);
+    for name in admitted.iter().take(4) {
+        let (status, _) = client
+            .request("POST", &format!("/v1/jobs/{name}/complete"), "")
+            .unwrap();
+        assert_eq!(status, 200);
+    }
+    // Completing twice is a 404 (no active job by that name).
+    let (status, _) = client
+        .request("POST", &format!("/v1/jobs/{}/complete", admitted[0]), "")
+        .unwrap();
+    assert_eq!(status, 404);
+
+    let stats = get_stats(addr);
+    assert_eq!(stats.get("admitted").and_then(Json::as_usize), Some(10));
+    assert_eq!(stats.get("completed").and_then(Json::as_usize), Some(4));
+    assert_eq!(stats.get("active").and_then(Json::as_usize), Some(6));
+    assert_shard_invariants(&state);
+    server.shutdown();
+    state.pool().shutdown();
+}
