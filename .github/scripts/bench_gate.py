@@ -8,11 +8,14 @@ baseline; every other shared case is reported informationally (CI runners
 are too noisy to gate sub-millisecond cases hard).
 
 The baseline may also carry "ratio_gates": a list of
-{"slow": <case>, "fast": <case>, "min_ratio": <x>} entries asserting that
-the *measured* slow case takes at least min_ratio times the fast case's
-mean — machine-independent structural guarantees (e.g. ISSUE 4's
-"warm-start repair >= 5x faster than a cold replan"), which absolute
-nanosecond baselines cannot express.
+{"slow": <case>, "fast": <case>, "min_ratio": <x>, "max_ratio": <y>}
+entries (at least one of min_ratio/max_ratio required) asserting bounds
+on the *measured* slow/fast mean ratio — machine-independent structural
+guarantees which absolute nanosecond baselines cannot express.
+min_ratio floors a speedup (e.g. ISSUE 4's "warm-start repair >= 5x
+faster than a cold replan", ISSUE 6's "flat-arena planner >= 5x faster
+than the retained reference"); max_ratio caps a scaling factor (ISSUE
+6's "10x the jobs costs <= 15x the time").
 
 Refresh the baseline from a quiet machine by copying the measured
 mean_ns values from BENCH_scheduler.json into BENCH_baseline.json.
@@ -63,21 +66,40 @@ def main(baseline_path, measured_path):
 
     for gate in baseline.get("ratio_gates", []):
         slow, fast = gate["slow"], gate["fast"]
-        need = float(gate["min_ratio"])
+        if "min_ratio" not in gate and "max_ratio" not in gate:
+            failures.append(
+                f"ratio gate {slow!r} / {fast!r}: neither min_ratio nor "
+                f"max_ratio set — gate misconfigured"
+            )
+            continue
         if slow not in meas or fast not in meas:
             failures.append(
                 f"ratio gate {slow!r} / {fast!r}: case(s) missing from bench output"
             )
             continue
         ratio = meas[slow] / meas[fast] if meas[fast] > 0 else float("inf")
-        ok = ratio >= need
-        print(f"ratio {slow!r} / {fast!r} = {ratio:.1f}x (need >= {need:.1f}x)"
+        bounds = []
+        ok = True
+        if "min_ratio" in gate:
+            need = float(gate["min_ratio"])
+            bounds.append(f">= {need:.1f}x")
+            if ratio < need:
+                ok = False
+                failures.append(
+                    f"ratio gate: {slow} is only {ratio:.2f}x slower than {fast} "
+                    f"(need >= {need}x)"
+                )
+        if "max_ratio" in gate:
+            cap = float(gate["max_ratio"])
+            bounds.append(f"<= {cap:.1f}x")
+            if ratio > cap:
+                ok = False
+                failures.append(
+                    f"ratio gate: {slow} is {ratio:.2f}x slower than {fast} "
+                    f"(need <= {cap}x)"
+                )
+        print(f"ratio {slow!r} / {fast!r} = {ratio:.1f}x (need {', '.join(bounds)})"
               f"{' OK' if ok else ' FAIL'}")
-        if not ok:
-            failures.append(
-                f"ratio gate: {slow} is only {ratio:.2f}x slower than {fast} "
-                f"(need >= {need}x)"
-            )
 
     if failures:
         print("\nFAIL: fleet-scale benchmark regression(s):", file=sys.stderr)

@@ -11,6 +11,7 @@ use carbonscaler::sched::engine;
 use carbonscaler::sched::fleet::{self, PlanContext};
 use carbonscaler::sched::geo::{self, GeoPlanContext, MigrationPolicy};
 use carbonscaler::sched::greedy;
+use carbonscaler::sched::reference;
 use carbonscaler::service::api::{self, ServiceState};
 use carbonscaler::service::http::HttpServer;
 use carbonscaler::service::loadgen::{JobTemplate, LoadGen};
@@ -108,6 +109,66 @@ fn main() {
                 || fleet::plan_fleet(&jobs, &ctx).expect("bench fleet feasible"),
             ));
         }
+    }
+
+    println!("\n== hot-path overhaul (flat arena + bucket queue vs retained reference) ==");
+    {
+        // ISSUE 6 acceptance: the flat-arena/bucketed-queue planner must
+        // be >= 5x faster than the retained pre-overhaul implementation
+        // (sched::reference — Vec<Vec<_>> state + BinaryHeap) on the
+        // 100 jobs x 96 slots acceptance case, and a cold 1k-job plan
+        // must be sub-second. Both are gated in CI
+        // (.github/scripts/bench_gate.py "ratio_gates" + the 1k entry in
+        // BENCH_baseline.json "gated").
+        let mk_jobs = |n_jobs: usize| -> Vec<JobSpec> {
+            (0..n_jobs)
+                .map(|i| {
+                    JobBuilder::new(&format!("s{i}"), presets::RESNET18.curve(8))
+                        .servers(1, 8)
+                        .arrival(i % 24)
+                        .length(64.0)
+                        .slack_factor(1.5)
+                        .build()
+                        .unwrap()
+                })
+                .collect()
+        };
+        {
+            let jobs = mk_jobs(100);
+            let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+            let ctx = PlanContext::uniform(0, 128, trace.window(0, end)).unwrap();
+            results.push(bench(
+                "fleet plan reference jobs=100 n=96 cap=128",
+                2,
+                10,
+                budget,
+                || reference::plan_fleet(&jobs, &ctx).expect("bench reference feasible"),
+            ));
+        }
+        // 10k-job scale: the 1k -> 10k mean-time ratio is gated <= 15x,
+        // i.e. the planner must scale no worse than ~n^1.18 across that
+        // decade (candidate count grows linearly; the bucket queue keeps
+        // the per-pop cost from compounding).
+        let scale_budget = Duration::from_secs(20);
+        let mut scale_means: Vec<(usize, f64)> = Vec::new();
+        for n_jobs in [1000usize, 10_000] {
+            let jobs = mk_jobs(n_jobs);
+            let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+            let cap = n_jobs * 128 / 100; // same per-job contention as 100@128
+            let ctx = PlanContext::uniform(0, cap, trace.window(0, end)).unwrap();
+            let iters = if n_jobs >= 10_000 { 2 } else { 3 };
+            let r = bench(
+                &format!("fleet plan jobs={n_jobs} n=96 cap={cap}"),
+                1,
+                iters,
+                scale_budget,
+                || fleet::plan_fleet(&jobs, &ctx).expect("bench fleet feasible"),
+            );
+            scale_means.push((n_jobs, r.mean.as_nanos() as f64));
+            results.push(r);
+        }
+        let scaling = scale_means[1].1 / scale_means[0].1.max(1.0);
+        println!("fleet plan 1k -> 10k scaling: {scaling:.1}x (acceptance: <= 15x)");
     }
 
     println!("\n== online engine (warm-start repair vs cold replan, DESIGN.md §10) ==");

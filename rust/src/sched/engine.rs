@@ -627,12 +627,15 @@ pub fn repair_fleet(
     // (fleet, kind, reopened_jobs, reopened_cells)
     let mut candidates: Vec<(FleetSchedule, RepairKind, usize, usize)> = Vec::new();
 
-    // Stage 1 — warm.
-    {
+    // Stage 1 — warm. The adopted arena is checkpointed (a flat-buffer
+    // clone) so an escalated repair resumes from the same state instead
+    // of rebuilding and re-adopting the whole fleet.
+    let snapshot = {
         let mut arena = FleetArena::new(jobs, ctx);
         for (ji, s) in incumbent.iter().enumerate() {
             arena.adopt(ji, s);
         }
+        let snapshot = arena.clone();
         let mut cleared = 0usize;
         let mut ok = true;
         for &ji in reopen {
@@ -657,14 +660,13 @@ pub fn repair_fleet(
             let planned: usize = reopen.iter().map(|&ji| jobs[ji].n_slots()).sum();
             candidates.push((fs, RepairKind::Warm, reopen.len(), cleared + planned));
         }
-    }
+        snapshot
+    };
 
-    // Stage 2 — escalated: every job's future re-opened.
+    // Stage 2 — escalated: every job's future re-opened, resuming from
+    // the stage-1 checkpoint.
     if candidates.is_empty() {
-        let mut arena = FleetArena::new(jobs, ctx);
-        for (ji, s) in incumbent.iter().enumerate() {
-            arena.adopt(ji, s);
-        }
+        let mut arena = snapshot;
         let mut cleared = 0usize;
         let mut ok = true;
         for ji in 0..jobs.len() {

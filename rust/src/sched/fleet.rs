@@ -30,11 +30,10 @@
 
 use crate::carbon::trace::CarbonTrace;
 use crate::sched::policy::Policy;
+use crate::sched::prio::{self, BucketQueue, Cand};
 use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
 use anyhow::{bail, Result};
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 /// Floor applied to carbon intensities when forming priorities, so
 /// zero-carbon slots sort first without dividing by zero.
@@ -256,119 +255,183 @@ impl FleetSchedule {
     }
 }
 
-/// Heap entry: one candidate allocation step for one job.
-#[derive(Debug, Clone, Copy)]
-struct Cand {
-    /// Work added per unit carbon if this step is taken.
-    priority: f64,
-    /// Index into the planning job slice.
-    job: usize,
-    /// Absolute slot.
-    slot: usize,
-    /// Target server count after this step.
-    servers: usize,
-    /// Work added by this step.
-    work: f64,
-}
+/// Cells threshold above which cold seeding fans out across a scoped
+/// thread pool. Below it, thread spawn latency outweighs the win; above
+/// it (1k jobs × 96 slots is ~96k cells) seeding parallelizes nearly
+/// perfectly because candidate generation is read-only against the arena.
+pub(crate) const SEED_PAR_CELLS: usize = 16_384;
 
-impl PartialEq for Cand {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-impl Eq for Cand {}
+/// Cap on seeding threads; matches the service layer's std-only scoped
+/// thread style (no pool crate, threads live for one fan-out).
+pub(crate) const SEED_MAX_THREADS: usize = 8;
 
-impl Ord for Cand {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Max-heap on priority; ties -> earlier slot, fewer servers, lower
-        // job index, so fleet plans are deterministic. Priorities are
-        // validated finite at insertion; total_cmp keeps even a slipped
-        // NaN ordered instead of panicking mid-plan.
-        self.priority
-            .total_cmp(&other.priority)
-            .then_with(|| other.slot.cmp(&self.slot))
-            .then_with(|| other.servers.cmp(&self.servers))
-            .then_with(|| other.job.cmp(&self.job))
+/// Key-space bounds for the bucket queue: the extreme candidate
+/// priorities any plan over `jobs` can produce, derived once per arena
+/// from each job's positive marginals (and minimum-bundle rate) and the
+/// floored carbon range. Bounds only balance buckets — out-of-range keys
+/// clamp to edge buckets and stay exactly ordered — so the 1-ulp
+/// difference between `b / (m·c)` and `(b/m) / c` is irrelevant here.
+pub(crate) fn candidate_key_bounds(jobs: &[JobSpec], carbon_floor: &[f64]) -> (u64, u64) {
+    let mut min_num = f64::INFINITY;
+    let mut max_num = 0.0f64;
+    for j in jobs {
+        let curve = j.curve.at_progress(0.0);
+        let covered = curve.max_servers();
+        let b = curve.capacity(j.min_servers.min(covered)) / j.min_servers as f64;
+        if b > 0.0 {
+            if b < min_num {
+                min_num = b;
+            }
+            if b > max_num {
+                max_num = b;
+            }
+        }
+        for &w in &curve.marginals()[..j.max_servers.min(covered)] {
+            if w > 0.0 {
+                if w < min_num {
+                    min_num = w;
+                }
+                if w > max_num {
+                    max_num = w;
+                }
+            }
+        }
     }
-}
-impl PartialOrd for Cand {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+    let mut min_c = f64::INFINITY;
+    let mut max_c = 0.0f64;
+    for &c in carbon_floor {
+        if c < min_c {
+            min_c = c;
+        }
+        if c > max_c {
+            max_c = c;
+        }
     }
-}
-
-/// Validate a candidate at insertion: degenerate capacity curves or
-/// pathological forecasts must surface as an `Err`, never as a NaN that
-/// panics inside the heap comparator.
-fn checked(
-    priority: f64,
-    work: f64,
-    name: &str,
-    slot: usize,
-    servers: usize,
-    job: usize,
-) -> Result<Cand> {
-    if !priority.is_finite() || !work.is_finite() || work < 0.0 {
-        bail!(
-            "job {name:?}: invalid candidate at slot {slot} ({servers} servers): \
-             work {work}, priority {priority}"
-        );
+    if !(max_num > 0.0) || !max_num.is_finite() || !(min_c > 0.0) {
+        return (prio::prio_key(1.0), prio::prio_key(1.0));
     }
-    Ok(Cand {
-        priority,
-        job,
-        slot,
-        servers,
-        work,
-    })
+    (
+        prio::prio_key(min_num / max_c),
+        prio::prio_key(max_num / min_c),
+    )
 }
 
 /// The incremental core shared by cold fleet planning and the online
 /// engine's warm-start repair (DESIGN.md §10): per-slot residual
 /// capacity, per-job work cursors, per-(job, slot) allocation state, and
-/// the candidate heap, all in one arena.
+/// the candidate queue, all in one arena.
 ///
-/// Cold planning seeds every job from scratch and runs the heap to
+/// Since the hot-path overhaul (DESIGN.md §12) the per-job state lives in
+/// flat struct-of-arrays buffers — one contiguous `alloc` array indexed
+/// by precomputed `job_off` strides, one flattened phase-0 marginal table
+/// so the commit loop never re-walks a `PhasedCurve`, and a floored
+/// carbon vector hoisted out of the candidate math — and the
+/// `BinaryHeap<Cand>` is a [`BucketQueue`] with the shared
+/// [`crate::sched::prio`] key. Candidate priorities, validation, and
+/// tie-breaks are bit-identical to the retained
+/// [`crate::sched::reference`] implementation; `rust/tests/arena_equivalence.rs`
+/// enforces that.
+///
+/// Cold planning seeds every job from scratch and runs the queue to
 /// completion — exactly the interleaved greedy this module has always
-/// implemented (the candidate order is a strict total order, so the heap
+/// implemented (the candidate order is a strict total order, so the queue
 /// pops in the same sequence regardless of how state was assembled).
 /// Warm repair instead *adopts* an incumbent [`FleetSchedule`] (debiting
 /// residual capacity and crediting each job's phase-0 work cursor), then
 /// seeds only the jobs touched by a delta; untouched jobs are never
-/// re-opened and their allocations pass through unchanged.
+/// re-opened and their allocations pass through unchanged. The arena is
+/// `Clone`, and a clone is a true checkpoint: the online engine snapshots
+/// the post-adoption state once and restores it for escalated repairs
+/// instead of re-adopting the whole fleet.
 ///
 /// Invariant the chain-drop rule relies on: committed capacity only grows
-/// while the heap runs. Adoption and [`FleetArena::clear_future`] happen
+/// while the queue runs. Adoption and [`FleetArena::clear_future`] happen
 /// strictly before [`FleetArena::run`], so the invariant holds for warm
 /// repairs exactly as it does for cold plans.
-pub(crate) struct FleetArena<'a> {
+///
+/// Public (but `doc(hidden)`) so the equivalence property tests can
+/// drive adoption paths head-to-head against the reference arena; not a
+/// supported API.
+#[doc(hidden)]
+#[derive(Clone)]
+pub struct FleetArena<'a> {
     jobs: &'a [JobSpec],
     ctx: &'a PlanContext,
     /// Residual servers per context slot.
     free: Vec<usize>,
+    /// `ctx.carbon` with the `MIN_CARBON` floor pre-applied.
+    carbon_floor: Vec<f64>,
     totals: Vec<f64>,
     /// Phase-0 work cursor per job (capacity-hours credited so far).
     done: Vec<f64>,
-    /// Per-job per-relative-slot allocation.
-    alloc: Vec<Vec<usize>>,
-    /// Jobs opened by [`FleetArena::seed`] (candidates in the heap).
+    /// Prefix-sum strides: job `ji`'s cells are
+    /// `alloc[job_off[ji]..job_off[ji + 1]]`, relative slot `rel` at
+    /// `job_off[ji] + rel`.
+    job_off: Vec<usize>,
+    /// All jobs' allocations, flattened (struct-of-arrays).
+    alloc: Vec<u32>,
+    /// Strides into `marg`: job `ji`'s phase-0 marginal at `s` servers is
+    /// `marg[marg_off[ji] + s - 1]`, `s` in `1..=max_servers[ji]`.
+    marg_off: Vec<usize>,
+    marg: Vec<f64>,
+    min_servers: Vec<u32>,
+    max_servers: Vec<u32>,
+    /// Phase-0 capacity at the job's minimum allocation.
+    bundle: Vec<f64>,
+    /// Jobs opened by [`FleetArena::seed`] (candidates in the queue).
     counted: Vec<bool>,
     open: usize,
-    heap: BinaryHeap<Cand>,
+    queue: BucketQueue,
 }
 
 impl<'a> FleetArena<'a> {
-    pub(crate) fn new(jobs: &'a [JobSpec], ctx: &'a PlanContext) -> Self {
+    pub fn new(jobs: &'a [JobSpec], ctx: &'a PlanContext) -> Self {
+        let n = jobs.len();
+        let mut job_off = Vec::with_capacity(n + 1);
+        job_off.push(0usize);
+        let mut cells = 0usize;
+        for j in jobs {
+            cells += j.n_slots();
+            job_off.push(cells);
+        }
+        let mut marg_off = Vec::with_capacity(n + 1);
+        marg_off.push(0usize);
+        let mut marg = Vec::new();
+        let mut min_servers = Vec::with_capacity(n);
+        let mut max_servers = Vec::with_capacity(n);
+        let mut bundle = Vec::with_capacity(n);
+        for j in jobs {
+            let curve = j.curve.at_progress(0.0);
+            let covered = j.max_servers.min(curve.max_servers());
+            marg.extend_from_slice(&curve.marginals()[..covered]);
+            // A curve shorter than M is invalid (check_jobs rejects it);
+            // pad with NaN so a slipped-through job fails the non-finite
+            // marginal check instead of reading a neighbour's stride.
+            marg.resize(marg.len() + (j.max_servers - covered), f64::NAN);
+            marg_off.push(marg.len());
+            min_servers.push(j.min_servers as u32);
+            max_servers.push(j.max_servers as u32);
+            bundle.push(curve.capacity(j.min_servers.min(curve.max_servers())));
+        }
+        let carbon_floor: Vec<f64> = ctx.carbon.iter().map(|c| c.max(MIN_CARBON)).collect();
+        let (lo, hi) = candidate_key_bounds(jobs, &carbon_floor);
         FleetArena {
             jobs,
             ctx,
             free: ctx.capacity.clone(),
+            carbon_floor,
             totals: jobs.iter().map(|j| j.total_work()).collect(),
-            done: vec![0.0; jobs.len()],
-            alloc: jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect(),
-            counted: vec![false; jobs.len()],
+            done: vec![0.0; n],
+            job_off,
+            alloc: vec![0u32; cells],
+            marg_off,
+            marg,
+            min_servers,
+            max_servers,
+            bundle,
+            counted: vec![false; n],
             open: 0,
-            heap: BinaryHeap::new(),
+            queue: BucketQueue::with_bounds(lo, hi),
         }
     }
 
@@ -384,9 +447,11 @@ impl<'a> FleetArena<'a> {
     /// recomputes produce remainder plans starting at the recompute
     /// hour); allocations are re-indexed into the spec's window by
     /// absolute hour, and anything outside it is ignored.
-    pub(crate) fn adopt(&mut self, ji: usize, s: &Schedule) {
+    pub fn adopt(&mut self, ji: usize, s: &Schedule) {
         let job = &self.jobs[ji];
         let curve = job.curve.at_progress(0.0);
+        let base = self.job_off[ji];
+        let n_slots = self.job_off[ji + 1] - base;
         for (srel, &a) in s.alloc.iter().enumerate() {
             if a == 0 {
                 continue;
@@ -396,7 +461,7 @@ impl<'a> FleetArena<'a> {
                 continue;
             }
             let rel = abs - job.arrival;
-            if rel >= self.alloc[ji].len() {
+            if rel >= n_slots {
                 continue;
             }
             let take = match self.ctx.rel(abs) {
@@ -407,7 +472,7 @@ impl<'a> FleetArena<'a> {
                 }
                 None => a, // frozen past: capacity there is history
             };
-            self.alloc[ji][rel] = take;
+            self.alloc[base + rel] = take as u32;
             if take >= job.min_servers {
                 self.done[ji] += curve.capacity(take.min(curve.max_servers()));
             }
@@ -419,13 +484,15 @@ impl<'a> FleetArena<'a> {
     /// cursor. Returns the number of cells cleared. Used to re-open a
     /// job's future when a delta (forecast revision, capacity change)
     /// touches it.
-    pub(crate) fn clear_future(&mut self, ji: usize, from_abs: usize) -> usize {
+    pub fn clear_future(&mut self, ji: usize, from_abs: usize) -> usize {
         let job = &self.jobs[ji];
         let curve = job.curve.at_progress(0.0);
+        let base = self.job_off[ji];
+        let n_slots = self.job_off[ji + 1] - base;
         let mut cells = 0usize;
-        for rel in 0..self.alloc[ji].len() {
+        for rel in 0..n_slots {
             let abs = job.arrival + rel;
-            let a = self.alloc[ji][rel];
+            let a = self.alloc[base + rel] as usize;
             if a == 0 || abs < from_abs {
                 continue;
             }
@@ -435,7 +502,7 @@ impl<'a> FleetArena<'a> {
             if a >= job.min_servers {
                 self.done[ji] -= curve.capacity(a.min(curve.max_servers()));
             }
-            self.alloc[ji][rel] = 0;
+            self.alloc[base + rel] = 0;
             cells += 1;
         }
         if self.done[ji] < 0.0 {
@@ -444,26 +511,21 @@ impl<'a> FleetArena<'a> {
         cells
     }
 
-    /// Open job `ji` and push its candidate chains for absolute slots
-    /// `>= from_abs`: unallocated slots enter with the minimum-bundle
-    /// candidate, partially allocated slots resume at their next marginal
-    /// step (the per-job marginal cursor). Jobs whose work cursor already
-    /// covers their total are trivially complete and stay closed.
-    /// Idempotent per job.
-    pub(crate) fn seed(&mut self, ji: usize, from_abs: usize) -> Result<()> {
-        if self.counted[ji] || self.done[ji] >= self.totals[ji] - 1e-9 {
-            return Ok(());
-        }
+    /// Generate job `ji`'s candidate chain entries for absolute slots
+    /// `>= from_abs` into `out` without touching arena state. This is the
+    /// read-only half of [`FleetArena::seed`], split out so cold seeding
+    /// can fan out across jobs on scoped threads.
+    fn seed_candidates(&self, ji: usize, from_abs: usize, out: &mut Vec<Cand>) -> Result<()> {
         let job = &self.jobs[ji];
-        let curve = job.curve.at_progress(0.0);
-        let m = job.min_servers;
-        let bundle = curve.capacity(m);
+        let m = self.min_servers[ji];
+        let bundle = self.bundle[ji];
         if bundle <= 0.0 {
             bail!("job {:?}: zero capacity at minimum allocation", job.name);
         }
-        self.counted[ji] = true;
-        let before = self.heap.len();
-        for rel in 0..job.n_slots() {
+        let base = self.job_off[ji];
+        let n_slots = self.job_off[ji + 1] - base;
+        let mmax = self.max_servers[ji];
+        for rel in 0..n_slots {
             let abs = job.arrival + rel;
             if abs < from_abs {
                 continue;
@@ -471,20 +533,20 @@ impl<'a> FleetArena<'a> {
             let Some(fi) = self.ctx.rel(abs) else {
                 continue;
             };
-            let c = self.ctx.carbon[fi].max(MIN_CARBON);
-            let a = self.alloc[ji][rel];
+            let c = self.carbon_floor[fi];
+            let a = self.alloc[base + rel];
             if a == 0 {
-                self.heap.push(checked(
+                out.push(prio::checked_fleet(
                     bundle / (m as f64 * c),
                     bundle,
                     &job.name,
                     abs,
-                    m,
+                    m as usize,
                     ji,
                 )?);
-            } else if a < job.max_servers {
+            } else if a < mmax {
                 let next = a + 1;
-                let w = curve.marginal(next);
+                let w = self.marg[self.marg_off[ji] + next as usize - 1];
                 if !w.is_finite() {
                     bail!(
                         "job {:?}: non-finite marginal capacity at {next} servers",
@@ -492,47 +554,140 @@ impl<'a> FleetArena<'a> {
                     );
                 }
                 if w > 0.0 {
-                    self.heap.push(checked(w / c, w, &job.name, abs, next, ji)?);
+                    out.push(prio::checked_fleet(
+                        w / c,
+                        w,
+                        &job.name,
+                        abs,
+                        next as usize,
+                        ji,
+                    )?);
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Open job `ji` and push its candidate chains for absolute slots
+    /// `>= from_abs`: unallocated slots enter with the minimum-bundle
+    /// candidate, partially allocated slots resume at their next marginal
+    /// step (the per-job marginal cursor). Jobs whose work cursor already
+    /// covers their total are trivially complete and stay closed.
+    /// Idempotent per job.
+    pub fn seed(&mut self, ji: usize, from_abs: usize) -> Result<()> {
+        if self.counted[ji] || self.done[ji] >= self.totals[ji] - 1e-9 {
+            return Ok(());
+        }
+        let mut cands = Vec::new();
+        self.seed_candidates(ji, from_abs, &mut cands)?;
+        self.counted[ji] = true;
         // A job with no seedable future (window elapsed, or every slot
-        // already at its maximum) stays closed: the heap cannot complete
+        // already at its maximum) stays closed: the queue cannot complete
         // it and counting it open would deadlock `run` into an error even
         // when the caller's completion gate would have handled it. Cold
         // planning always seeds at least one candidate per incomplete
         // job (check_jobs guarantees an in-window, sub-maximum slot
         // exists), so the cold path is unaffected.
-        if self.heap.len() > before {
+        if !cands.is_empty() {
             self.open += 1;
+            for c in cands {
+                self.queue.push(c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Seed every job from `from_abs`, fanning candidate generation out
+    /// across scoped threads when the instance is large enough to pay for
+    /// them. Generation is read-only against the arena; results are
+    /// merged in job order, so queue contents (and therefore the plan)
+    /// are identical to sequential seeding.
+    pub fn seed_all(&mut self, from_abs: usize) -> Result<()> {
+        let n = self.jobs.len();
+        let cells = *self.job_off.last().unwrap_or(&0);
+        let threads = std::thread::available_parallelism()
+            .map(|t| t.get())
+            .unwrap_or(1)
+            .min(SEED_MAX_THREADS)
+            .min(n.max(1));
+        if cells < SEED_PAR_CELLS || threads < 2 {
+            for ji in 0..n {
+                self.seed(ji, from_abs)?;
+            }
+            return Ok(());
+        }
+        let todo: Vec<usize> = (0..n)
+            .filter(|&ji| !self.counted[ji] && self.done[ji] < self.totals[ji] - 1e-9)
+            .collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let chunk = (todo.len() + threads - 1) / threads;
+        let parts: Vec<Result<Vec<(usize, Vec<Cand>)>>> = {
+            let this: &FleetArena = self;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = todo
+                    .chunks(chunk)
+                    .map(|ch| {
+                        s.spawn(move || {
+                            let mut part = Vec::with_capacity(ch.len());
+                            for &ji in ch {
+                                let mut cands = Vec::new();
+                                this.seed_candidates(ji, from_abs, &mut cands)?;
+                                part.push((ji, cands));
+                            }
+                            Ok(part)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("seed worker panicked"))
+                    .collect()
+            })
+        };
+        // Chunks are in job order and each worker stops at its first
+        // failing job, so surfacing the first chunk error reproduces the
+        // sequential error exactly.
+        for part in parts {
+            for (ji, cands) in part? {
+                self.counted[ji] = true;
+                if !cands.is_empty() {
+                    self.open += 1;
+                    for c in cands {
+                        self.queue.push(c);
+                    }
+                }
+            }
         }
         Ok(())
     }
 
     /// Run the interleaved greedy to completion of every open job. Errors
-    /// when the heap drains first — every genuinely infeasible instance,
+    /// when the queue drains first — every genuinely infeasible instance,
     /// plus some feasible deadline-tight mixes (the chain-drop rule is
     /// greedy, not exhaustive).
-    pub(crate) fn run(&mut self) -> Result<()> {
+    pub fn run(&mut self) -> Result<()> {
         while self.open > 0 {
-            let Some(cand) = self.heap.pop() else {
+            let Some(cand) = self.queue.pop() else {
                 bail!(
                     "infeasible fleet: {} job(s) cannot complete within \
                      capacity and deadlines",
                     self.open
                 );
             };
-            let ji = cand.job;
+            let ji = cand.job as usize;
             if self.done[ji] >= self.totals[ji] - 1e-9 {
                 continue; // stale entry for an already-complete job
             }
-            let job = &self.jobs[ji];
-            let rel = cand.slot - job.arrival;
-            let fi = cand.slot - self.ctx.start;
-            if cand.servers <= self.alloc[ji][rel] {
+            let rel = cand.slot as usize - self.jobs[ji].arrival;
+            let fi = cand.slot as usize - self.ctx.start;
+            let cell = self.job_off[ji] + rel;
+            let cur = self.alloc[cell];
+            if cand.servers <= cur {
                 continue; // defensive: chains are monotone per (job, slot)
             }
-            let need = cand.servers - self.alloc[ji][rel];
+            let need = (cand.servers - cur) as usize;
             if self.free[fi] < need {
                 // The slot cannot host this step, and committed capacity
                 // only grows during a run — the rest of this (job, slot)
@@ -541,22 +696,29 @@ impl<'a> FleetArena<'a> {
                 continue;
             }
             self.free[fi] -= need;
-            self.alloc[ji][rel] = cand.servers;
+            self.alloc[cell] = cand.servers;
             self.done[ji] += cand.work;
             if self.done[ji] >= self.totals[ji] - 1e-9 {
                 self.open -= 1;
-            } else if cand.servers < job.max_servers {
+            } else if cand.servers < self.max_servers[ji] {
                 let next = cand.servers + 1;
-                let w = job.curve.at_progress(0.0).marginal(next);
+                let w = self.marg[self.marg_off[ji] + next as usize - 1];
                 if !w.is_finite() {
                     bail!(
                         "job {:?}: non-finite marginal capacity at {next} servers",
-                        job.name
+                        self.jobs[ji].name
                     );
                 }
                 if w > 0.0 {
-                    let c = self.ctx.carbon[fi].max(MIN_CARBON);
-                    self.heap.push(checked(w / c, w, &job.name, cand.slot, next, ji)?);
+                    let c = self.carbon_floor[fi];
+                    self.queue.push(prio::checked_fleet(
+                        w / c,
+                        w,
+                        &self.jobs[ji].name,
+                        cand.slot as usize,
+                        next as usize,
+                        ji,
+                    )?);
                 }
             }
         }
@@ -564,25 +726,26 @@ impl<'a> FleetArena<'a> {
     }
 
     /// The arena's current allocation for one job as a [`Schedule`].
-    pub(crate) fn schedule_of(&self, ji: usize) -> Schedule {
-        Schedule::new(self.jobs[ji].arrival, self.alloc[ji].clone())
+    pub fn schedule_of(&self, ji: usize) -> Schedule {
+        let a = self.alloc[self.job_off[ji]..self.job_off[ji + 1]]
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        Schedule::new(self.jobs[ji].arrival, a)
     }
 
     /// All allocations as a [`FleetSchedule`] aligned with the job slice.
-    pub(crate) fn into_fleet(self) -> FleetSchedule {
+    pub fn into_fleet(self) -> FleetSchedule {
         FleetSchedule {
-            schedules: self
-                .jobs
-                .iter()
-                .zip(self.alloc)
-                .map(|(j, a)| Schedule::new(j.arrival, a))
+            schedules: (0..self.jobs.len())
+                .map(|ji| self.schedule_of(ji))
                 .collect(),
         }
     }
 }
 
 /// Interleaved fleet greedy: Algorithm 1 generalized to `N` jobs sharing
-/// per-slot capacity. Candidates from all jobs compete in one heap in
+/// per-slot capacity. Candidates from all jobs compete in one queue in
 /// decreasing marginal-work-per-unit-carbon order; a popped step commits
 /// only if its slot still has room, and each job stops generating steps
 /// once its work fits. Errors if a job cannot be completed by this
@@ -598,35 +761,123 @@ impl<'a> FleetArena<'a> {
 pub fn plan_fleet_greedy(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
     ctx.check_jobs(jobs)?;
     let mut arena = FleetArena::new(jobs, ctx);
-    for ji in 0..jobs.len() {
-        arena.seed(ji, ctx.start)?;
-    }
+    arena.seed_all(ctx.start)?;
     arena.run()?;
     Ok(arena.into_fleet())
 }
 
+/// Single-job capacity-capped greedy committing directly against a shared
+/// residual, the hot inner step of the sequential-admission passes. Plan
+/// order, priorities, and tie-breaks are bit-identical to running
+/// [`plan_fleet_greedy`] on a one-job slice against a residual context
+/// (the retained reference does exactly that; the equivalence tests
+/// compare the two) — this path just skips the per-job context clone,
+/// `check_jobs` re-run, and arena construction, and reuses one cleared
+/// [`BucketQueue`] across all jobs of a pass.
+fn plan_one_residual(
+    job: &JobSpec,
+    ctx: &PlanContext,
+    free: &mut [usize],
+    carbon_floor: &[f64],
+    queue: &mut BucketQueue,
+) -> Result<Vec<usize>> {
+    let n_slots = job.n_slots();
+    let mut alloc = vec![0usize; n_slots];
+    let total = job.total_work();
+    let mut done = 0.0f64;
+    if done >= total - 1e-9 {
+        return Ok(alloc); // zero-work job: empty schedule, like seed()
+    }
+    let curve = job.curve.at_progress(0.0);
+    let m = job.min_servers;
+    let bundle = curve.capacity(m);
+    if bundle <= 0.0 {
+        bail!("job {:?}: zero capacity at minimum allocation", job.name);
+    }
+    queue.clear();
+    for rel in 0..n_slots {
+        let abs = job.arrival + rel;
+        let Some(fi) = ctx.rel(abs) else {
+            continue;
+        };
+        let c = carbon_floor[fi];
+        queue.push(prio::checked_fleet(
+            bundle / (m as f64 * c),
+            bundle,
+            &job.name,
+            abs,
+            m,
+            0,
+        )?);
+    }
+    if queue.is_empty() {
+        // No seedable slot: the arena would leave the job closed and
+        // return its empty schedule (the caller's completion gate
+        // decides). check_jobs makes this unreachable on cold paths.
+        return Ok(alloc);
+    }
+    let marginals = curve.marginals();
+    loop {
+        let Some(cand) = queue.pop() else {
+            bail!(
+                "infeasible fleet: {} job(s) cannot complete within \
+                 capacity and deadlines",
+                1
+            );
+        };
+        let rel = cand.slot as usize - job.arrival;
+        let fi = cand.slot as usize - ctx.start;
+        let cur = alloc[rel];
+        if cand.servers as usize <= cur {
+            continue;
+        }
+        let need = cand.servers as usize - cur;
+        if free[fi] < need {
+            continue; // chain dead, exactly like the arena
+        }
+        free[fi] -= need;
+        alloc[rel] = cand.servers as usize;
+        done += cand.work;
+        if done >= total - 1e-9 {
+            return Ok(alloc);
+        }
+        if (cand.servers as usize) < job.max_servers {
+            let next = cand.servers as usize + 1;
+            let w = marginals[next - 1];
+            if !w.is_finite() {
+                bail!(
+                    "job {:?}: non-finite marginal capacity at {next} servers",
+                    job.name
+                );
+            }
+            if w > 0.0 {
+                let c = carbon_floor[fi];
+                queue.push(prio::checked_fleet(w / c, w, &job.name, cand.slot as usize, next, 0)?);
+            }
+        }
+    }
+}
+
 /// Sequential admission in an explicit order: each job plans the
 /// capacity-capped greedy against the residual its predecessors left.
-/// Output schedules stay aligned with the input job order.
+/// Output schedules stay aligned with the input job order. Shares one
+/// residual vector, floored carbon table, and bucket queue across all
+/// jobs of the pass (DESIGN.md §12) instead of cloning the context per
+/// job; results are bit-identical to the retained reference pass.
 fn plan_sequential_order(
     jobs: &[JobSpec],
     ctx: &PlanContext,
     order: &[usize],
 ) -> Result<FleetSchedule> {
-    let mut residual = ctx.clone();
+    let mut free = ctx.capacity.clone();
+    let carbon_floor: Vec<f64> = ctx.carbon.iter().map(|c| c.max(MIN_CARBON)).collect();
+    let (lo, hi) = candidate_key_bounds(jobs, &carbon_floor);
+    let mut queue = BucketQueue::with_bounds(lo, hi);
     let mut schedules: Vec<Option<Schedule>> = vec![None; jobs.len()];
     for &ji in order {
         let job = &jobs[ji];
-        let one = plan_fleet_greedy(std::slice::from_ref(job), &residual)?;
-        let s = one
-            .schedules
-            .into_iter()
-            .next()
-            .expect("one job in, one schedule out");
-        for (rel, &a) in s.alloc.iter().enumerate() {
-            residual.capacity[job.arrival + rel - ctx.start] -= a;
-        }
-        schedules[ji] = Some(s);
+        let alloc = plan_one_residual(job, ctx, &mut free, &carbon_floor, &mut queue)?;
+        schedules[ji] = Some(Schedule::new(job.arrival, alloc));
     }
     Ok(FleetSchedule {
         schedules: schedules
@@ -828,9 +1079,20 @@ pub fn polish_fleet_from(
 /// make this rare).
 pub fn plan_fleet(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
     ctx.check_jobs(jobs)?;
-    let greedy = plan_fleet_greedy(jobs, ctx);
-    let sequential = plan_fleet_sequential(jobs, ctx);
-    let edf = plan_sequential_order(jobs, ctx, &edf_order(jobs));
+    // The three portfolio passes are independent; run the two sequential
+    // admission orders on scoped threads while this thread does the
+    // interleaved greedy (DESIGN.md §12). Each pass is deterministic, so
+    // the portfolio result is exactly the serial portfolio's.
+    let (greedy, sequential, edf) = std::thread::scope(|s| {
+        let seq = s.spawn(|| plan_fleet_sequential(jobs, ctx));
+        let edf = s.spawn(|| plan_sequential_order(jobs, ctx, &edf_order(jobs)));
+        let greedy = plan_fleet_greedy(jobs, ctx);
+        (
+            greedy,
+            seq.join().expect("sequential pass panicked"),
+            edf.join().expect("edf pass panicked"),
+        )
+    });
     if greedy.is_err() && sequential.is_err() && edf.is_err() {
         return greedy; // carries the engine's diagnostic
     }

@@ -36,11 +36,10 @@ use crate::carbon::regions::RegionParams;
 use crate::carbon::trace::CarbonTrace;
 use crate::sched::fleet::{self, FleetSchedule, PlanContext};
 use crate::sched::policy::Policy;
+use crate::sched::prio::{self, BucketQueue, Cand};
 use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
 use anyhow::{bail, Result};
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 /// Floor applied to carbon intensities when forming priorities, so
 /// zero-carbon slots sort first without dividing by zero.
@@ -397,7 +396,7 @@ impl GeoFleetSchedule {
     /// Give single-region jobs a uniform region vector (polish may turn
     /// previously idle slots active; those slots must inherit the job's
     /// region).
-    fn normalize_regions(&mut self) {
+    pub(crate) fn normalize_regions(&mut self) {
         for s in &mut self.schedules {
             let active = s.active_regions();
             if active.len() == 1 {
@@ -419,112 +418,134 @@ impl GeoFleetSchedule {
     }
 }
 
-/// Heap entry: one candidate allocation step for one job in one region.
-#[derive(Debug, Clone, Copy)]
-struct GeoCand {
-    /// Work added per unit carbon if this step is taken.
-    priority: f64,
-    job: usize,
-    region: usize,
-    /// Absolute slot.
-    slot: usize,
-    /// Target server count after this step.
-    servers: usize,
-    /// Work added by this step.
-    work: f64,
-}
-
-impl PartialEq for GeoCand {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-impl Eq for GeoCand {}
-
-impl Ord for GeoCand {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Max-heap on priority; ties -> earlier slot, fewer servers, lower
-        // region, lower job, so geo plans are deterministic. Priorities
-        // are validated finite at insertion; total_cmp keeps even a
-        // slipped NaN ordered instead of panicking mid-plan.
-        self.priority
-            .total_cmp(&other.priority)
-            .then_with(|| other.slot.cmp(&self.slot))
-            .then_with(|| other.servers.cmp(&self.servers))
-            .then_with(|| other.region.cmp(&self.region))
-            .then_with(|| other.job.cmp(&self.job))
-    }
-}
-impl PartialOrd for GeoCand {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-/// Validate a candidate at insertion (same contract as the fleet engine's
-/// `checked`): degenerate curves or pathological forecasts surface as an
-/// `Err`, never as a NaN inside the heap comparator.
-fn checked(
-    priority: f64,
-    work: f64,
-    name: &str,
-    region: usize,
-    slot: usize,
-    servers: usize,
-    job: usize,
-) -> Result<GeoCand> {
-    if !priority.is_finite() || !work.is_finite() || work < 0.0 {
-        bail!(
-            "job {name:?}: invalid candidate in region {region} at slot {slot} \
-             ({servers} servers): work {work}, priority {priority}"
-        );
-    }
-    Ok(GeoCand {
-        priority,
-        job,
-        region,
-        slot,
-        servers,
-        work,
-    })
-}
+/// Arena-internal region sentinel (u32 cell encoding of [`NO_REGION`]).
+const NO_REGION32: u32 = u32::MAX;
 
 /// The geo twin of the fleet engine's incremental core (DESIGN.md §10):
 /// per-region residual capacity, per-job work cursors, per-(job, slot)
-/// allocation *and placement* state, and the candidate heap in one arena.
-/// Cold planning seeds every job from scratch; warm repair adopts an
-/// incumbent [`GeoFleetSchedule`] and re-opens only the jobs a delta
+/// allocation *and placement* state, and the candidate queue in one
+/// arena. Cold planning seeds every job from scratch; warm repair adopts
+/// an incumbent [`GeoFleetSchedule`] and re-opens only the jobs a delta
 /// touches, resuming each from its marginal cursors (and, optionally,
 /// restricted to the regions it already occupies, so online repairs never
 /// silently move a running job's state across the planet).
-pub(crate) struct GeoArena<'a> {
+///
+/// Like the fleet arena it is flat since the hot-path overhaul
+/// (DESIGN.md §12): allocations and region ownership live in contiguous
+/// struct-of-arrays buffers under precomputed `job_off` strides, residual
+/// capacity and floored carbon are region-major flat tables with a
+/// `horizon` stride, each job's distinct-region set is a fixed-stride
+/// slice with an explicit length, and candidates flow through the shared
+/// [`BucketQueue`]. Priorities, validation, and tie-breaks are
+/// bit-identical to the retained [`crate::sched::reference`] arena.
+///
+/// Public (but `doc(hidden)`) so the equivalence property tests can
+/// drive adoption paths head-to-head against the reference arena; not a
+/// supported API.
+#[doc(hidden)]
+#[derive(Clone)]
+pub struct GeoArena<'a> {
     jobs: &'a [JobSpec],
     geo: &'a GeoPlanContext,
-    free: Vec<Vec<usize>>,
+    /// Region-major flattened residual: `free[r * horizon + fi]`.
+    free: Vec<usize>,
+    /// Region-major floored carbon, same stride as `free`.
+    carbon_floor: Vec<f64>,
     totals: Vec<f64>,
     done: Vec<f64>,
-    alloc: Vec<Vec<usize>>,
-    region: Vec<Vec<usize>>,
-    used: Vec<Vec<usize>>,
+    /// Prefix-sum strides shared by `alloc` and `region`.
+    job_off: Vec<usize>,
+    alloc: Vec<u32>,
+    /// Region ownership per cell; `NO_REGION32` when unplaced.
+    region: Vec<u32>,
+    /// Distinct-region sets, flat with stride `n_regions` per job.
+    used: Vec<u32>,
+    used_len: Vec<usize>,
+    /// Strides into `marg` (phase-0 marginals, 1-indexed per job).
+    marg_off: Vec<usize>,
+    marg: Vec<f64>,
+    min_servers: Vec<u32>,
+    max_servers: Vec<u32>,
+    bundle: Vec<f64>,
     counted: Vec<bool>,
     open: usize,
-    heap: BinaryHeap<GeoCand>,
+    queue: BucketQueue,
 }
 
 impl<'a> GeoArena<'a> {
-    pub(crate) fn new(jobs: &'a [JobSpec], geo: &'a GeoPlanContext) -> Self {
+    pub fn new(jobs: &'a [JobSpec], geo: &'a GeoPlanContext) -> Self {
+        let n = jobs.len();
+        let nr = geo.n_regions();
+        let mut job_off = Vec::with_capacity(n + 1);
+        job_off.push(0usize);
+        let mut cells = 0usize;
+        for j in jobs {
+            cells += j.n_slots();
+            job_off.push(cells);
+        }
+        let mut marg_off = Vec::with_capacity(n + 1);
+        marg_off.push(0usize);
+        let mut marg = Vec::new();
+        let mut min_servers = Vec::with_capacity(n);
+        let mut max_servers = Vec::with_capacity(n);
+        let mut bundle = Vec::with_capacity(n);
+        for j in jobs {
+            let curve = j.curve.at_progress(0.0);
+            let covered = j.max_servers.min(curve.max_servers());
+            marg.extend_from_slice(&curve.marginals()[..covered]);
+            // Invalid (check_jobs-rejected) curves pad with NaN so a
+            // slipped-through job fails the non-finite marginal check
+            // instead of reading a neighbour's stride.
+            marg.resize(marg.len() + (j.max_servers - covered), f64::NAN);
+            marg_off.push(marg.len());
+            min_servers.push(j.min_servers as u32);
+            max_servers.push(j.max_servers as u32);
+            bundle.push(curve.capacity(j.min_servers.min(curve.max_servers())));
+        }
+        let mut free = Vec::with_capacity(nr * geo.horizon());
+        let mut carbon_floor = Vec::with_capacity(nr * geo.horizon());
+        for r in &geo.regions {
+            free.extend_from_slice(&r.ctx.capacity);
+            carbon_floor.extend(r.ctx.carbon.iter().map(|c| c.max(MIN_CARBON)));
+        }
+        let (lo, hi) = fleet::candidate_key_bounds(jobs, &carbon_floor);
         GeoArena {
             jobs,
             geo,
-            free: geo.regions.iter().map(|r| r.ctx.capacity.clone()).collect(),
+            free,
+            carbon_floor,
             totals: jobs.iter().map(|j| j.total_work()).collect(),
-            done: vec![0.0; jobs.len()],
-            alloc: jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect(),
-            region: jobs.iter().map(|j| vec![NO_REGION; j.n_slots()]).collect(),
-            used: vec![Vec::new(); jobs.len()],
-            counted: vec![false; jobs.len()],
+            done: vec![0.0; n],
+            job_off,
+            alloc: vec![0u32; cells],
+            region: vec![NO_REGION32; cells],
+            used: vec![0u32; n * nr],
+            used_len: vec![0usize; n],
+            marg_off,
+            marg,
+            min_servers,
+            max_servers,
+            bundle,
+            counted: vec![false; n],
             open: 0,
-            heap: BinaryHeap::new(),
+            queue: BucketQueue::with_bounds(lo, hi),
+        }
+    }
+
+    /// Whether region `r` is in job `ji`'s distinct-region set.
+    #[inline]
+    fn uses(&self, ji: usize, r: u32) -> bool {
+        let base = ji * self.geo.n_regions();
+        self.used[base..base + self.used_len[ji]].contains(&r)
+    }
+
+    /// Add region `r` to job `ji`'s distinct-region set if absent.
+    #[inline]
+    fn mark_used(&mut self, ji: usize, r: u32) {
+        if !self.uses(ji, r) {
+            let base = ji * self.geo.n_regions();
+            self.used[base + self.used_len[ji]] = r;
+            self.used_len[ji] += 1;
         }
     }
 
@@ -535,10 +556,13 @@ impl<'a> GeoArena<'a> {
     /// the phase-0 work cursor. Like the fleet arena, allocations are
     /// re-indexed into the spec's window by absolute hour (the incumbent
     /// schedule's `arrival` may be a recompute hour, not the job's).
-    pub(crate) fn adopt(&mut self, ji: usize, gs: &GeoSchedule) {
+    pub fn adopt(&mut self, ji: usize, gs: &GeoSchedule) {
         let job = &self.jobs[ji];
         let curve = job.curve.at_progress(0.0);
         let start = self.geo.start();
+        let h = self.geo.horizon();
+        let base = self.job_off[ji];
+        let n_slots = self.job_off[ji + 1] - base;
         for (srel, (&a, &r)) in gs.alloc.iter().zip(&gs.region).enumerate() {
             if a == 0 || r >= self.geo.n_regions() {
                 continue;
@@ -548,22 +572,20 @@ impl<'a> GeoArena<'a> {
                 continue;
             }
             let rel = abs - job.arrival;
-            if rel >= self.alloc[ji].len() {
+            if rel >= n_slots {
                 continue;
             }
             let take = if abs < start {
                 a // frozen past: capacity there is history
             } else {
-                let fi = abs - start;
-                let t = a.min(self.free[r][fi]);
-                self.free[r][fi] -= t;
+                let fslot = r * h + (abs - start);
+                let t = a.min(self.free[fslot]);
+                self.free[fslot] -= t;
                 t
             };
-            self.alloc[ji][rel] = take;
-            self.region[ji][rel] = r;
-            if !self.used[ji].contains(&r) {
-                self.used[ji].push(r);
-            }
+            self.alloc[base + rel] = take as u32;
+            self.region[base + rel] = r as u32;
+            self.mark_used(ji, r as u32);
             if take >= job.min_servers {
                 self.done[ji] += curve.capacity(take.min(curve.max_servers()));
             }
@@ -574,43 +596,124 @@ impl<'a> GeoArena<'a> {
     /// returning region capacity and work credit; the distinct-region set
     /// is recomputed from what remains (the frozen prefix). Returns the
     /// number of cells cleared.
-    pub(crate) fn clear_future(&mut self, ji: usize, from_abs: usize) -> usize {
+    pub fn clear_future(&mut self, ji: usize, from_abs: usize) -> usize {
         let job = &self.jobs[ji];
         let curve = job.curve.at_progress(0.0);
         let start = self.geo.start();
+        let h = self.geo.horizon();
+        let nr = self.geo.n_regions();
+        let base = self.job_off[ji];
+        let n_slots = self.job_off[ji + 1] - base;
         let mut cells = 0usize;
-        for rel in 0..self.alloc[ji].len() {
+        for rel in 0..n_slots {
             let abs = job.arrival + rel;
-            let a = self.alloc[ji][rel];
+            let a = self.alloc[base + rel] as usize;
             if a == 0 || abs < from_abs {
                 continue;
             }
-            let r = self.region[ji][rel];
-            if abs >= start && abs < self.geo.end() && r < self.geo.n_regions() {
-                self.free[r][abs - start] += a;
+            let r = self.region[base + rel] as usize;
+            if abs >= start && abs < self.geo.end() && r < nr {
+                self.free[r * h + (abs - start)] += a;
             }
             if a >= job.min_servers {
                 self.done[ji] -= curve.capacity(a.min(curve.max_servers()));
             }
-            self.alloc[ji][rel] = 0;
-            self.region[ji][rel] = NO_REGION;
+            self.alloc[base + rel] = 0;
+            self.region[base + rel] = NO_REGION32;
             cells += 1;
         }
         if self.done[ji] < 0.0 {
             self.done[ji] = 0.0;
         }
-        self.used[ji] = {
-            let mut u: Vec<usize> = self.region[ji]
-                .iter()
-                .zip(&self.alloc[ji])
-                .filter(|(_, a)| **a > 0)
-                .map(|(r, _)| *r)
-                .collect();
-            u.sort_unstable();
-            u.dedup();
-            u
-        };
+        // Recompute the distinct-region set from the surviving cells.
+        let ub = ji * nr;
+        self.used_len[ji] = 0;
+        for rel in 0..n_slots {
+            if self.alloc[base + rel] > 0 {
+                let r = self.region[base + rel];
+                if !self.used[ub..ub + self.used_len[ji]].contains(&r) {
+                    self.used[ub + self.used_len[ji]] = r;
+                    self.used_len[ji] += 1;
+                }
+            }
+        }
         cells
+    }
+
+    /// Generate job `ji`'s candidate chain entries for absolute slots
+    /// `>= from_abs` into `out` without touching arena state — the
+    /// read-only half of [`GeoArena::seed`], split out so cold seeding
+    /// can fan out across jobs on scoped threads.
+    fn seed_candidates(
+        &self,
+        ji: usize,
+        from_abs: usize,
+        restrict: Option<&[usize]>,
+        out: &mut Vec<Cand>,
+    ) -> Result<()> {
+        let job = &self.jobs[ji];
+        let m = self.min_servers[ji];
+        let bundle = self.bundle[ji];
+        if bundle <= 0.0 {
+            bail!("job {:?}: zero capacity at minimum allocation", job.name);
+        }
+        let start = self.geo.start();
+        let h = self.geo.horizon();
+        let nr = self.geo.n_regions();
+        let base = self.job_off[ji];
+        let n_slots = self.job_off[ji + 1] - base;
+        let mmax = self.max_servers[ji];
+        for rel in 0..n_slots {
+            let abs = job.arrival + rel;
+            if abs < from_abs || abs < start || abs >= self.geo.end() {
+                continue;
+            }
+            let fi = abs - start;
+            let a = self.alloc[base + rel];
+            if a == 0 {
+                for ri in 0..nr {
+                    if restrict.map_or(false, |f| !f.contains(&ri)) {
+                        continue;
+                    }
+                    let c = self.carbon_floor[ri * h + fi];
+                    out.push(prio::checked_geo(
+                        bundle / (m as f64 * c),
+                        bundle,
+                        &job.name,
+                        ri,
+                        abs,
+                        m as usize,
+                        ji,
+                    )?);
+                }
+            } else if a < mmax {
+                let ri = self.region[base + rel] as usize;
+                if ri >= nr {
+                    continue;
+                }
+                let next = a + 1;
+                let w = self.marg[self.marg_off[ji] + next as usize - 1];
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    let c = self.carbon_floor[ri * h + fi];
+                    out.push(prio::checked_geo(
+                        w / c,
+                        w,
+                        &job.name,
+                        ri,
+                        abs,
+                        next as usize,
+                        ji,
+                    )?);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Open job `ji` and push candidate chains for absolute slots
@@ -619,7 +722,7 @@ impl<'a> GeoArena<'a> {
     /// partially allocated slots resume at their next marginal step in
     /// their owning region. Idempotent per job; trivially complete jobs
     /// stay closed.
-    pub(crate) fn seed(
+    pub fn seed(
         &mut self,
         ji: usize,
         from_abs: usize,
@@ -628,63 +731,79 @@ impl<'a> GeoArena<'a> {
         if self.counted[ji] || self.done[ji] >= self.totals[ji] - 1e-9 {
             return Ok(());
         }
-        let job = &self.jobs[ji];
-        let curve = job.curve.at_progress(0.0);
-        let m = job.min_servers;
-        let bundle = curve.capacity(m);
-        if bundle <= 0.0 {
-            bail!("job {:?}: zero capacity at minimum allocation", job.name);
-        }
+        let mut cands = Vec::new();
+        self.seed_candidates(ji, from_abs, restrict, &mut cands)?;
         self.counted[ji] = true;
-        let before = self.heap.len();
-        let start = self.geo.start();
-        for rel in 0..job.n_slots() {
-            let abs = job.arrival + rel;
-            if abs < from_abs || abs < start || abs >= self.geo.end() {
-                continue;
-            }
-            let fi = abs - start;
-            let a = self.alloc[ji][rel];
-            if a == 0 {
-                for (ri, r) in self.geo.regions.iter().enumerate() {
-                    if restrict.map_or(false, |f| !f.contains(&ri)) {
-                        continue;
-                    }
-                    let c = r.ctx.carbon[fi].max(MIN_CARBON);
-                    self.heap.push(checked(
-                        bundle / (m as f64 * c),
-                        bundle,
-                        &job.name,
-                        ri,
-                        abs,
-                        m,
-                        ji,
-                    )?);
-                }
-            } else if a < job.max_servers {
-                let ri = self.region[ji][rel];
-                if ri >= self.geo.n_regions() {
-                    continue;
-                }
-                let next = a + 1;
-                let w = curve.marginal(next);
-                if !w.is_finite() {
-                    bail!(
-                        "job {:?}: non-finite marginal capacity at {next} servers",
-                        job.name
-                    );
-                }
-                if w > 0.0 {
-                    let c = self.geo.regions[ri].ctx.carbon[fi].max(MIN_CARBON);
-                    self.heap.push(checked(w / c, w, &job.name, ri, abs, next, ji)?);
-                }
-            }
-        }
         // Same rule as the fleet arena: a job with no seedable future
         // stays closed rather than deadlocking `run` (cold planning
         // always pushes at least one candidate per incomplete job).
-        if self.heap.len() > before {
+        if !cands.is_empty() {
             self.open += 1;
+            for c in cands {
+                self.queue.push(c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Seed every job from `from_abs` with no region restriction, fanning
+    /// candidate generation out across scoped threads on large instances
+    /// (the geo candidate count is cells × regions). Merging in job order
+    /// keeps the result identical to sequential seeding.
+    pub fn seed_all(&mut self, from_abs: usize) -> Result<()> {
+        let n = self.jobs.len();
+        let cands_est = self.job_off[n] * self.geo.n_regions();
+        let threads = std::thread::available_parallelism()
+            .map(|t| t.get())
+            .unwrap_or(1)
+            .min(fleet::SEED_MAX_THREADS)
+            .min(n.max(1));
+        if cands_est < fleet::SEED_PAR_CELLS || threads < 2 {
+            for ji in 0..n {
+                self.seed(ji, from_abs, None)?;
+            }
+            return Ok(());
+        }
+        let todo: Vec<usize> = (0..n)
+            .filter(|&ji| !self.counted[ji] && self.done[ji] < self.totals[ji] - 1e-9)
+            .collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let chunk = (todo.len() + threads - 1) / threads;
+        let parts: Vec<Result<Vec<(usize, Vec<Cand>)>>> = {
+            let this: &GeoArena = self;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = todo
+                    .chunks(chunk)
+                    .map(|ch| {
+                        s.spawn(move || {
+                            let mut part = Vec::with_capacity(ch.len());
+                            for &ji in ch {
+                                let mut cands = Vec::new();
+                                this.seed_candidates(ji, from_abs, None, &mut cands)?;
+                                part.push((ji, cands));
+                            }
+                            Ok(part)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("seed worker panicked"))
+                    .collect()
+            })
+        };
+        for part in parts {
+            for (ji, cands) in part? {
+                self.counted[ji] = true;
+                if !cands.is_empty() {
+                    self.open += 1;
+                    for c in cands {
+                        self.queue.push(c);
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -692,73 +811,77 @@ impl<'a> GeoArena<'a> {
     /// Run the interleaved placement greedy to completion of every open
     /// job (same commit rules as cold planning: region-slot residual,
     /// slot ownership, distinct-region budget).
-    pub(crate) fn run(&mut self) -> Result<()> {
+    pub fn run(&mut self) -> Result<()> {
         let allowed = 1 + self.geo.migration.max_migrations;
         let start = self.geo.start();
+        let h = self.geo.horizon();
         while self.open > 0 {
-            let Some(cand) = self.heap.pop() else {
+            let Some(cand) = self.queue.pop() else {
                 bail!(
                     "infeasible geo fleet: {} job(s) cannot complete within \
                      per-region capacity, deadlines, and the migration budget",
                     self.open
                 );
             };
-            let ji = cand.job;
+            let ji = cand.job as usize;
             if self.done[ji] >= self.totals[ji] - 1e-9 {
                 continue; // stale entry for an already-complete job
             }
-            let job = &self.jobs[ji];
-            let rel = cand.slot - job.arrival;
-            let fi = cand.slot - start;
+            let rel = cand.slot as usize - self.jobs[ji].arrival;
+            let fi = cand.slot as usize - start;
+            let cell = self.job_off[ji] + rel;
+            let cur = self.alloc[cell];
             // A slot belongs to at most one region per job: a candidate
             // for a slot another region already owns is dead (ownership
             // never moves during a run).
-            if self.alloc[ji][rel] > 0 && self.region[ji][rel] != cand.region {
+            if cur > 0 && self.region[cell] != cand.region {
                 continue;
             }
-            if cand.servers <= self.alloc[ji][rel] {
+            if cand.servers <= cur {
                 continue; // stale duplicate (defensive; chains are monotone)
             }
             // Distinct-region budget: entering a new region is permanent,
             // so once the budget is spent all other-region candidates are
             // dead.
-            if self.used[ji].len() >= allowed && !self.used[ji].contains(&cand.region) {
+            let in_used = self.uses(ji, cand.region);
+            if self.used_len[ji] >= allowed && !in_used {
                 continue;
             }
-            let need = cand.servers - self.alloc[ji][rel];
-            if self.free[cand.region][fi] < need {
+            let need = (cand.servers - cur) as usize;
+            let fslot = cand.region as usize * h + fi;
+            if self.free[fslot] < need {
                 // Committed capacity only grows, so the rest of this
                 // (job, region, slot) chain is dead — dropping is
                 // permanent and safe, exactly like the fleet engine.
                 continue;
             }
-            self.free[cand.region][fi] -= need;
-            self.alloc[ji][rel] = cand.servers;
-            self.region[ji][rel] = cand.region;
-            if !self.used[ji].contains(&cand.region) {
-                self.used[ji].push(cand.region);
+            self.free[fslot] -= need;
+            self.alloc[cell] = cand.servers;
+            self.region[cell] = cand.region;
+            if !in_used {
+                self.mark_used(ji, cand.region);
             }
             self.done[ji] += cand.work;
             if self.done[ji] >= self.totals[ji] - 1e-9 {
                 self.open -= 1;
-            } else if cand.servers < job.max_servers {
+            } else if cand.servers < self.max_servers[ji] {
                 let next = cand.servers + 1;
-                let w = job.curve.at_progress(0.0).marginal(next);
+                let w = self.marg[self.marg_off[ji] + next as usize - 1];
                 if !w.is_finite() {
                     bail!(
                         "job {:?}: non-finite marginal capacity at {next} servers",
-                        job.name
+                        self.jobs[ji].name
                     );
                 }
                 if w > 0.0 {
-                    let c = self.geo.regions[cand.region].ctx.carbon[fi].max(MIN_CARBON);
-                    self.heap.push(checked(
+                    let c = self.carbon_floor[fslot];
+                    self.queue.push(prio::checked_geo(
                         w / c,
                         w,
-                        &job.name,
-                        cand.region,
-                        cand.slot,
-                        next,
+                        &self.jobs[ji].name,
+                        cand.region as usize,
+                        cand.slot as usize,
+                        next as usize,
                         ji,
                     )?);
                 }
@@ -768,28 +891,28 @@ impl<'a> GeoArena<'a> {
     }
 
     /// The arena's current placement for one job.
-    pub(crate) fn geo_schedule_of(&self, ji: usize) -> GeoSchedule {
+    pub fn geo_schedule_of(&self, ji: usize) -> GeoSchedule {
+        let base = self.job_off[ji];
+        let n_slots = self.job_off[ji + 1] - base;
         GeoSchedule {
             arrival: self.jobs[ji].arrival,
-            alloc: self.alloc[ji].clone(),
-            region: self.region[ji].clone(),
+            alloc: self.alloc[base..base + n_slots]
+                .iter()
+                .map(|&a| a as usize)
+                .collect(),
+            region: self.region[base..base + n_slots]
+                .iter()
+                .map(|&r| if r == NO_REGION32 { NO_REGION } else { r as usize })
+                .collect(),
         }
     }
 
     /// All placements as a [`GeoFleetSchedule`] aligned with the job
     /// slice (region vectors normalized like cold planning).
-    pub(crate) fn into_geo(self) -> GeoFleetSchedule {
+    pub fn into_geo(self) -> GeoFleetSchedule {
         let mut out = GeoFleetSchedule {
-            schedules: self
-                .jobs
-                .iter()
-                .zip(self.alloc)
-                .zip(self.region)
-                .map(|((j, a), r)| GeoSchedule {
-                    arrival: j.arrival,
-                    alloc: a,
-                    region: r,
-                })
+            schedules: (0..self.jobs.len())
+                .map(|ji| self.geo_schedule_of(ji))
                 .collect(),
         };
         out.normalize_regions();
@@ -797,9 +920,9 @@ impl<'a> GeoArena<'a> {
     }
 }
 
-/// Interleaved geo greedy: the fleet engine's heap loop with a placement
-/// dimension. Candidates from all (job, region) pairs compete in one heap
-/// in decreasing marginal-work-per-unit-carbon order; a popped step
+/// Interleaved geo greedy: the fleet engine's queue loop with a placement
+/// dimension. Candidates from all (job, region) pairs compete in one
+/// queue in decreasing marginal-work-per-unit-carbon order; a popped step
 /// commits only if (a) its region-slot still has room, (b) the job's slot
 /// is not already owned by a different region, and (c) the job's
 /// distinct-region budget (`1 + max_migrations`) allows the region.
@@ -813,9 +936,7 @@ impl<'a> GeoArena<'a> {
 pub fn plan_geo_greedy(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedule> {
     geo.check_jobs(jobs)?;
     let mut arena = GeoArena::new(jobs, geo);
-    for ji in 0..jobs.len() {
-        arena.seed(ji, geo.start(), None)?;
-    }
+    arena.seed_all(geo.start())?;
     arena.run()?;
     Ok(arena.into_geo())
 }
@@ -1034,14 +1155,26 @@ pub fn polish_geo(jobs: &[JobSpec], geo: &GeoPlanContext, gfs: &mut GeoFleetSche
 /// be reported infeasible.
 pub fn plan_geo(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedule> {
     geo.check_jobs(jobs)?;
-    let greedy = plan_geo_greedy(jobs, geo);
-    let sequential = plan_geo_sequential(jobs, geo);
-    let edf = plan_geo_sequential_order(jobs, geo, &edf_order(jobs));
+    // The admission passes are independent and deterministic, so they run
+    // concurrently on scoped threads; joining in a fixed order keeps the
+    // portfolio (and thus the chosen plan) identical to the serial form.
+    let (greedy, sequential, edf, single) = std::thread::scope(|s| {
+        let seq = s.spawn(|| plan_geo_sequential(jobs, geo));
+        let edf = s.spawn(|| plan_geo_sequential_order(jobs, geo, &edf_order(jobs)));
+        let single = s.spawn(|| plan_all_single_region(jobs, geo));
+        let greedy = plan_geo_greedy(jobs, geo);
+        (
+            greedy,
+            seq.join().expect("sequential pass panicked"),
+            edf.join().expect("edf pass panicked"),
+            single.join().expect("single-region pass panicked"),
+        )
+    });
     let mut candidates: Vec<GeoFleetSchedule> = [greedy.as_ref(), sequential.as_ref(), edf.as_ref()]
         .into_iter()
         .filter_map(|r| r.ok().cloned())
         .collect();
-    candidates.extend(plan_all_single_region(jobs, geo).into_iter().map(|(_, g)| g));
+    candidates.extend(single.into_iter().map(|(_, g)| g));
     if candidates.is_empty() {
         return greedy; // carries the engine's diagnostic
     }
@@ -1129,11 +1262,15 @@ pub fn repair_geo_arrival(
     let mut candidates: Vec<(GeoFleetSchedule, RepairKind, usize, usize)> = Vec::new();
 
     // Stage 1 — warm: incumbents pass through, only the newcomer plans.
-    {
+    // The adopted arena state is checkpointed (a flat-buffer clone) so an
+    // escalated repair resumes from it instead of rebuilding and
+    // re-adopting the whole fleet.
+    let snapshot = {
         let mut arena = GeoArena::new(&jobs, geo);
         for (ji, gs) in incumbent.schedules.iter().enumerate() {
             arena.adopt(ji, gs);
         }
+        let snapshot = arena.clone();
         if arena.seed(new_ji, now.max(new_job.arrival), None).is_ok() && arena.run().is_ok() {
             let mut gfs = GeoFleetSchedule {
                 schedules: incumbent.schedules.clone(),
@@ -1141,7 +1278,8 @@ pub fn repair_geo_arrival(
             gfs.schedules.push(arena.geo_schedule_of(new_ji));
             candidates.push((gfs, RepairKind::Warm, 1, new_job.n_slots()));
         }
-    }
+        snapshot
+    };
 
     // Stage 2 — escalated: every future re-opened, incumbents pinned to
     // their already-used regions.
@@ -1151,10 +1289,7 @@ pub fn repair_geo_arrival(
             .iter()
             .map(GeoSchedule::active_regions)
             .collect();
-        let mut arena = GeoArena::new(&jobs, geo);
-        for (ji, gs) in incumbent.schedules.iter().enumerate() {
-            arena.adopt(ji, gs);
-        }
+        let mut arena = snapshot;
         let mut cleared = 0usize;
         let mut ok = true;
         for ji in 0..incumbent_jobs.len() {

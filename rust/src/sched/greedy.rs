@@ -8,8 +8,11 @@
 //! against a brute-force oracle on small instances.
 //!
 //! Implementation notes:
-//! * a binary heap pops the next-best (slot, server) in `O(log nM)`;
-//!   total complexity `O(nM log nM)`, matching the paper's analysis;
+//! * candidates pop in decreasing priority from the shared bucketed
+//!   monotone queue ([`crate::sched::prio::BucketQueue`], DESIGN.md §12)
+//!   over the fleet engine's flat arena; pop order is bit-identical to
+//!   the binary heap the engine used pre-overhaul, and the asymptotics
+//!   match the paper's `O(nM log nM)` analysis;
 //! * when a slot is first selected it must receive the job's minimum `m`
 //!   servers at once (§3.4); that initial *bundle* enters the heap with
 //!   priority `capacity(m) / (m · c_i)` — its aggregate work per unit

@@ -10,6 +10,8 @@ pub mod fleet;
 pub mod geo;
 pub mod greedy;
 pub mod policy;
+pub mod prio;
+pub mod reference;
 pub mod schedule;
 
 pub use baselines::{
@@ -23,4 +25,5 @@ pub use engine::{
 pub use fleet::{FleetSchedule, IndependentFleet, PlanContext};
 pub use geo::{GeoFleetSchedule, GeoPlanContext, GeoRegion, GeoSchedule, MigrationPolicy};
 pub use policy::{CarbonScalerPolicy, Policy};
+pub use prio::{BucketQueue, Cand};
 pub use schedule::{Schedule, ScheduleAccounting};

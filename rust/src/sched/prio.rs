@@ -1,0 +1,466 @@
+//! Shared candidate priority key and bucketed monotone queue for the
+//! planning hot path (DESIGN.md §12).
+//!
+//! Both the fleet and geo greedy used to carry their own `Cand` struct
+//! with a hand-rolled `total_cmp` + tie-break `Ord` impl and push it into
+//! a `BinaryHeap`. This module collapses the two float comparators into
+//! one integer key ([`prio_key`]) and replaces the heap with a
+//! [`BucketQueue`]: pushes are O(1) inserts into a key-range bucket, pops
+//! scan only the highest live bucket. Because the key mapping is the
+//! *exact* order of `f64::total_cmp` (not a lossy quantization) and
+//! within-bucket selection uses the full candidate `Ord`, the pop
+//! sequence is bit-identical to the old heap's — bucket granularity
+//! affects only speed, never plan quality. `rust/tests/arena_equivalence.rs`
+//! and the retained [`crate::sched::reference`] module hold that claim to
+//! account.
+
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+
+/// Map an `f64` priority to a `u64` whose unsigned order equals
+/// `f64::total_cmp` order. For the planner's priorities (finite, ≥ 0:
+/// work per unit of floored-positive carbon) this is just a monotone
+/// re-encoding of the same number; the sign-folding keeps even a
+/// negative or NaN that slips past validation ordered exactly as the old
+/// comparator would have ordered it.
+#[inline]
+pub fn prio_key(priority: f64) -> u64 {
+    let b = priority.to_bits() as i64;
+    // Standard total-order fold (the same trick `f64::total_cmp` uses),
+    // then a sign-bit flip to move the i64 order into u64 order.
+    let adj = b ^ ((((b >> 63) as u64) >> 1) as i64);
+    (adj as u64) ^ (1u64 << 63)
+}
+
+/// One candidate allocation step: job `job` raises slot `slot` (absolute
+/// hour) to `servers` servers in `region`, adding `work` capacity-hours
+/// at priority `key` (encoded marginal work per unit carbon). The fleet
+/// engine uses `region = 0` throughout, making its tie-break vacuous, so
+/// one comparator serves both engines.
+#[derive(Debug, Clone, Copy)]
+pub struct Cand {
+    /// Priority encoded by [`prio_key`]; higher pops first.
+    pub key: u64,
+    /// Absolute slot.
+    pub slot: u32,
+    /// Target server count after this step.
+    pub servers: u32,
+    /// Region index (0 for the single-region fleet engine).
+    pub region: u32,
+    /// Index into the planning job slice.
+    pub job: u32,
+    /// Work added by this step (capacity-hours).
+    pub work: f64,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-first on priority; ties -> earlier slot, fewer servers,
+        // lower region, lower job, so plans are deterministic. This is
+        // the single source of truth for candidate order: the old
+        // per-engine `total_cmp` impls are retained only in
+        // `sched::reference` for equivalence testing.
+        self.key
+            .cmp(&other.key)
+            .then_with(|| other.slot.cmp(&self.slot))
+            .then_with(|| other.servers.cmp(&self.servers))
+            .then_with(|| other.region.cmp(&self.region))
+            .then_with(|| other.job.cmp(&self.job))
+    }
+}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Validate and build a fleet candidate (region 0). Degenerate capacity
+/// curves or pathological forecasts must surface as an `Err`, never as a
+/// NaN comparing inside the queue; the message matches the original
+/// fleet engine's byte for byte.
+pub fn checked_fleet(
+    priority: f64,
+    work: f64,
+    name: &str,
+    slot: usize,
+    servers: usize,
+    job: usize,
+) -> Result<Cand> {
+    if !priority.is_finite() || !work.is_finite() || work < 0.0 {
+        bail!(
+            "job {name:?}: invalid candidate at slot {slot} ({servers} servers): \
+             work {work}, priority {priority}"
+        );
+    }
+    Ok(Cand {
+        key: prio_key(priority),
+        slot: slot as u32,
+        servers: servers as u32,
+        region: 0,
+        job: job as u32,
+        work,
+    })
+}
+
+/// Validate and build a geo candidate; same contract as [`checked_fleet`]
+/// with the original geo engine's message.
+pub fn checked_geo(
+    priority: f64,
+    work: f64,
+    name: &str,
+    region: usize,
+    slot: usize,
+    servers: usize,
+    job: usize,
+) -> Result<Cand> {
+    if !priority.is_finite() || !work.is_finite() || work < 0.0 {
+        bail!(
+            "job {name:?}: invalid candidate in region {region} at slot {slot} \
+             ({servers} servers): work {work}, priority {priority}"
+        );
+    }
+    Ok(Cand {
+        key: prio_key(priority),
+        slot: slot as u32,
+        servers: servers as u32,
+        region: region as u32,
+        job: job as u32,
+        work,
+    })
+}
+
+/// Bucket count: keys span at most one f64 exponent range per plan, so a
+/// thousand log-spaced buckets keep each bucket's population small
+/// without measurable build cost.
+const N_BUCKETS: usize = 1024;
+
+/// Beyond this many unsorted entries a bucket is sorted wholesale, so
+/// degenerate instances (uniform carbon + linear curves collapse every
+/// candidate into one bucket) pay O(k log k) once instead of O(k²) in
+/// scans.
+const SORT_TAIL: usize = 64;
+
+/// One bucket: a sorted ascending prefix (`items[..sorted_len]`) and an
+/// unsorted tail. Pop compares the prefix max (last sorted element) with
+/// a linear scan of the tail, so pops stay exact under the full candidate
+/// `Ord` no matter how skewed the key distribution is.
+#[derive(Debug, Clone, Default)]
+struct Bucket {
+    items: Vec<Cand>,
+    sorted_len: usize,
+}
+
+impl Bucket {
+    /// Remove and return the bucket's maximum under the full `Ord`.
+    /// Caller guarantees the bucket is non-empty.
+    fn pop_max(&mut self) -> Cand {
+        let n = self.items.len();
+        debug_assert!(n > 0);
+        let mut tail_best: Option<usize> = None;
+        for i in self.sorted_len..n {
+            match tail_best {
+                Some(b) if self.items[i] <= self.items[b] => {}
+                _ => tail_best = Some(i),
+            }
+        }
+        match tail_best {
+            Some(t)
+                if self.sorted_len == 0 || self.items[t] > self.items[self.sorted_len - 1] =>
+            {
+                // swap_remove pulls a tail element into the tail region
+                // (or removes the last element), leaving the prefix
+                // sorted.
+                self.items.swap_remove(t)
+            }
+            _ => {
+                // Prefix max: shrink the sorted prefix by one, then
+                // swap_remove at the old prefix end — the displaced last
+                // element lands at the new tail start.
+                self.sorted_len -= 1;
+                self.items.swap_remove(self.sorted_len)
+            }
+        }
+    }
+}
+
+/// Monotone bucketed priority queue over [`Cand`]s, the hot-path
+/// replacement for `BinaryHeap<Cand>` (DESIGN.md §12).
+///
+/// Keys are partitioned into `N_BUCKETS` contiguous ranges between the
+/// caller-supplied bounds (arenas derive them from each plan's extreme
+/// marginals and carbon floor — a few comparisons, done once). `cur`
+/// tracks the highest bucket that may be non-empty; pushes above `cur`
+/// move it back up, so non-monotone marginal chains (curve monotonicity
+/// is *not* enforced anywhere) remain correct, merely slower. Pops are
+/// exact: the highest live bucket strictly dominates every lower bucket
+/// by key, and within the bucket the full candidate `Ord` picks the
+/// winner, so the pop order is identical to the old heap's.
+#[derive(Debug, Clone)]
+pub struct BucketQueue {
+    buckets: Vec<Bucket>,
+    /// Inclusive lower key bound; keys below clamp to bucket 0.
+    lo: u64,
+    /// Per-bucket key-range width as a right-shift amount.
+    shift: u32,
+    /// Highest bucket index that may be non-empty.
+    cur: usize,
+    len: usize,
+}
+
+impl BucketQueue {
+    /// Build a queue for keys expected in `[lo_key, hi_key]` (both from
+    /// [`prio_key`]). Out-of-range keys are clamped to the edge buckets —
+    /// correctness never depends on the bounds, only bucket balance does.
+    pub fn with_bounds(lo_key: u64, hi_key: u64) -> Self {
+        let span = hi_key.saturating_sub(lo_key).max(1);
+        let mut shift = 0u32;
+        while (span >> shift) >= N_BUCKETS as u64 {
+            shift += 1;
+        }
+        BucketQueue {
+            buckets: vec![Bucket::default(); N_BUCKETS],
+            lo: lo_key,
+            shift,
+            cur: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(&self, key: u64) -> usize {
+        ((key.saturating_sub(self.lo) >> self.shift) as usize).min(N_BUCKETS - 1)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop all entries, keeping bucket allocations for reuse (the
+    /// sequential-admission passes run hundreds of single-job plans
+    /// through one queue).
+    pub fn clear(&mut self) {
+        if self.len == 0 {
+            return;
+        }
+        for b in &mut self.buckets[..=self.cur] {
+            b.items.clear();
+            b.sorted_len = 0;
+        }
+        self.cur = 0;
+        self.len = 0;
+    }
+
+    /// O(1) insert (amortized: a bucket whose unsorted tail outgrows
+    /// `SORT_TAIL` is sorted on the spot).
+    pub fn push(&mut self, c: Cand) {
+        let idx = self.bucket_of(c.key);
+        if idx > self.cur {
+            self.cur = idx;
+        }
+        let b = &mut self.buckets[idx];
+        b.items.push(c);
+        if b.items.len() - b.sorted_len > SORT_TAIL {
+            b.items.sort_unstable();
+            b.sorted_len = b.items.len();
+        }
+        self.len += 1;
+    }
+
+    /// Remove and return the maximum candidate under the shared `Ord`,
+    /// or `None` when empty — exactly `BinaryHeap::pop`'s contract.
+    pub fn pop(&mut self) -> Option<Cand> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.buckets[self.cur].items.is_empty() {
+            if self.cur == 0 {
+                // Unreachable if the push/pop invariant holds; recover
+                // rather than panic mid-plan.
+                debug_assert!(false, "BucketQueue cursor invariant breached");
+                self.cur = self.buckets.iter().rposition(|b| !b.items.is_empty())?;
+                break;
+            }
+            self.cur -= 1;
+        }
+        self.len -= 1;
+        Some(self.buckets[self.cur].pop_max())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn prio_key_orders_like_total_cmp() {
+        let vals = [
+            0.0,
+            -0.0,
+            1e-308,
+            -1e-308,
+            1e-9,
+            0.5,
+            1.0,
+            1.0 + f64::EPSILON,
+            3.7,
+            1e6,
+            f64::MAX,
+            f64::INFINITY,
+            -1.0,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(
+                    prio_key(a).cmp(&prio_key(b)),
+                    a.total_cmp(&b),
+                    "key order diverged for {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    fn rand_cand(rng: &mut Rng) -> Cand {
+        Cand {
+            key: prio_key(rng.range(1e-6, 1e6)),
+            slot: rng.below(96) as u32,
+            servers: 1 + rng.below(8) as u32,
+            region: rng.below(4) as u32,
+            job: rng.below(50) as u32,
+            work: rng.range(0.0, 10.0),
+        }
+    }
+
+    #[test]
+    fn bucket_queue_matches_binary_heap_pop_order() {
+        let mut rng = Rng::new(42);
+        for round in 0..20u64 {
+            let mut r = rng.fork(round);
+            let mut q = BucketQueue::with_bounds(prio_key(1e-6), prio_key(1e6));
+            let mut h: BinaryHeap<Cand> = BinaryHeap::new();
+            for _ in 0..500 {
+                if r.chance(0.6) || h.is_empty() {
+                    let c = rand_cand(&mut r);
+                    q.push(c);
+                    h.push(c);
+                } else {
+                    let a = q.pop().unwrap();
+                    let b = h.pop().unwrap();
+                    assert_eq!(a.cmp(&b), std::cmp::Ordering::Equal, "pop diverged");
+                }
+                assert_eq!(q.len(), h.len());
+            }
+            while let Some(b) = h.pop() {
+                let a = q.pop().unwrap();
+                assert_eq!(a.cmp(&b), std::cmp::Ordering::Equal, "drain diverged");
+            }
+            assert!(q.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn degenerate_equal_keys_stay_exact() {
+        // Uniform carbon + linear curves: every candidate lands in one
+        // bucket with one key; tie-breaks must still match the heap.
+        let key = prio_key(1.0);
+        let mut q = BucketQueue::with_bounds(key, key);
+        let mut h = BinaryHeap::new();
+        for slot in (0..200u32).rev() {
+            for servers in 1..4u32 {
+                let c = Cand {
+                    key,
+                    slot,
+                    servers,
+                    region: 0,
+                    job: slot % 7,
+                    work: 1.0,
+                };
+                q.push(c);
+                h.push(c);
+            }
+        }
+        while let Some(b) = h.pop() {
+            let a = q.pop().unwrap();
+            assert_eq!(a.cmp(&b), std::cmp::Ordering::Equal);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn out_of_bounds_keys_clamp_to_edge_buckets() {
+        let mut q = BucketQueue::with_bounds(prio_key(1.0), prio_key(2.0));
+        let lo = Cand {
+            key: prio_key(1e-12),
+            slot: 0,
+            servers: 1,
+            region: 0,
+            job: 0,
+            work: 1.0,
+        };
+        let hi = Cand {
+            key: prio_key(1e12),
+            slot: 1,
+            servers: 1,
+            region: 0,
+            job: 1,
+            work: 1.0,
+        };
+        let mid = Cand {
+            key: prio_key(1.5),
+            slot: 2,
+            servers: 1,
+            region: 0,
+            job: 2,
+            work: 1.0,
+        };
+        q.push(lo);
+        q.push(mid);
+        q.push(hi);
+        assert_eq!(q.pop().unwrap().job, 1);
+        assert_eq!(q.pop().unwrap().job, 2);
+        assert_eq!(q.pop().unwrap().job, 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn clear_resets_for_reuse() {
+        let mut q = BucketQueue::with_bounds(prio_key(0.1), prio_key(10.0));
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            q.push(rand_cand(&mut rng));
+        }
+        q.clear();
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+        let c = rand_cand(&mut rng);
+        q.push(c);
+        assert_eq!(q.pop().unwrap().cmp(&c), std::cmp::Ordering::Equal);
+    }
+
+    #[test]
+    fn checked_rejects_pathological_candidates() {
+        assert!(checked_fleet(f64::NAN, 1.0, "j", 0, 1, 0).is_err());
+        assert!(checked_fleet(f64::INFINITY, 1.0, "j", 0, 1, 0).is_err());
+        assert!(checked_fleet(1.0, f64::NAN, "j", 0, 1, 0).is_err());
+        assert!(checked_fleet(1.0, -1.0, "j", 0, 1, 0).is_err());
+        assert!(checked_fleet(1.0, 1.0, "j", 0, 1, 0).is_ok());
+        assert!(checked_geo(f64::NAN, 1.0, "j", 0, 0, 1, 0).is_err());
+        assert!(checked_geo(2.0, 3.0, "j", 1, 4, 2, 5).is_ok());
+    }
+}

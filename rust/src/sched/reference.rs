@@ -1,0 +1,881 @@
+//! Retained reference implementation of the pre-flat-arena planning core.
+//!
+//! This module is a verbatim copy of the `BinaryHeap<Cand>` /
+//! `Vec<Vec<usize>>` fleet and geo greedy that shipped before the
+//! flat-arena + bucketed-queue overhaul (DESIGN.md §12). It exists for two
+//! reasons:
+//!
+//! 1. **Equivalence testing** — `rust/tests/arena_equivalence.rs` asserts
+//!    the rewritten hot path produces bit-identical plans (same `Ok`/`Err`,
+//!    same allocations, hence identical carbon) on random fleet and geo
+//!    instances and across warm-repair adoption paths.
+//! 2. **Benchmark gating** — `benches/scheduler.rs` times
+//!    `reference::plan_fleet` against the new implementation and CI's
+//!    `bench_gate.py` enforces the ≥5× speedup ratio machine-independently.
+//!
+//! Nothing here is pessimized: this is the honest original code, sharing
+//! the unchanged `polish_fleet` / context / schedule types with the live
+//! engine so the comparison isolates the arena + queue rewrite.
+//!
+//! Do not "fix" or optimize this module; change the live engine and let
+//! the equivalence tests arbitrate.
+
+use crate::sched::fleet::{polish_fleet, FleetSchedule, PlanContext, POLISH_CELL_BUDGET};
+use crate::sched::geo::{GeoFleetSchedule, GeoPlanContext, GeoSchedule};
+use crate::sched::schedule::Schedule;
+use crate::workload::job::JobSpec;
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Carbon floor so zero-carbon slots sort first without dividing by zero.
+const MIN_CARBON: f64 = 1e-9;
+
+/// Region sentinel for not-yet-placed slots (geo arena).
+const NO_REGION: usize = usize::MAX;
+/// Heap entry: one candidate allocation step for one job.
+#[derive(Debug, Clone, Copy)]
+struct Cand {
+    /// Work added per unit carbon if this step is taken.
+    priority: f64,
+    /// Index into the planning job slice.
+    job: usize,
+    /// Absolute slot.
+    slot: usize,
+    /// Target server count after this step.
+    servers: usize,
+    /// Work added by this step.
+    work: f64,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap on priority; ties -> earlier slot, fewer servers, lower
+        // job index, so fleet plans are deterministic. Priorities are
+        // validated finite at insertion; total_cmp keeps even a slipped
+        // NaN ordered instead of panicking mid-plan.
+        self.priority
+            .total_cmp(&other.priority)
+            .then_with(|| other.slot.cmp(&self.slot))
+            .then_with(|| other.servers.cmp(&self.servers))
+            .then_with(|| other.job.cmp(&self.job))
+    }
+}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Validate a candidate at insertion: degenerate capacity curves or
+/// pathological forecasts must surface as an `Err`, never as a NaN that
+/// panics inside the heap comparator.
+fn checked(
+    priority: f64,
+    work: f64,
+    name: &str,
+    slot: usize,
+    servers: usize,
+    job: usize,
+) -> Result<Cand> {
+    if !priority.is_finite() || !work.is_finite() || work < 0.0 {
+        bail!(
+            "job {name:?}: invalid candidate at slot {slot} ({servers} servers): \
+             work {work}, priority {priority}"
+        );
+    }
+    Ok(Cand {
+        priority,
+        job,
+        slot,
+        servers,
+        work,
+    })
+}
+
+/// The incremental core shared by cold fleet planning and the online
+/// engine's warm-start repair (DESIGN.md §10): per-slot residual
+/// capacity, per-job work cursors, per-(job, slot) allocation state, and
+/// the candidate heap, all in one arena.
+///
+/// Cold planning seeds every job from scratch and runs the heap to
+/// completion — exactly the interleaved greedy this module has always
+/// implemented (the candidate order is a strict total order, so the heap
+/// pops in the same sequence regardless of how state was assembled).
+/// Warm repair instead *adopts* an incumbent [`FleetSchedule`] (debiting
+/// residual capacity and crediting each job's phase-0 work cursor), then
+/// seeds only the jobs touched by a delta; untouched jobs are never
+/// re-opened and their allocations pass through unchanged.
+///
+/// Invariant the chain-drop rule relies on: committed capacity only grows
+/// while the heap runs. Adoption and [`FleetArena::clear_future`] happen
+/// strictly before [`FleetArena::run`], so the invariant holds for warm
+/// repairs exactly as it does for cold plans.
+pub struct FleetArena<'a> {
+    jobs: &'a [JobSpec],
+    ctx: &'a PlanContext,
+    /// Residual servers per context slot.
+    free: Vec<usize>,
+    totals: Vec<f64>,
+    /// Phase-0 work cursor per job (capacity-hours credited so far).
+    done: Vec<f64>,
+    /// Per-job per-relative-slot allocation.
+    alloc: Vec<Vec<usize>>,
+    /// Jobs opened by [`FleetArena::seed`] (candidates in the heap).
+    counted: Vec<bool>,
+    open: usize,
+    heap: BinaryHeap<Cand>,
+}
+
+impl<'a> FleetArena<'a> {
+    pub fn new(jobs: &'a [JobSpec], ctx: &'a PlanContext) -> Self {
+        FleetArena {
+            jobs,
+            ctx,
+            free: ctx.capacity.clone(),
+            totals: jobs.iter().map(|j| j.total_work()).collect(),
+            done: vec![0.0; jobs.len()],
+            alloc: jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect(),
+            counted: vec![false; jobs.len()],
+            open: 0,
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// Install an incumbent schedule for job `ji`: debit residual capacity
+    /// for every in-window slot and credit the phase-0 work cursor. Slots
+    /// before the context window (the frozen past of a partially executed
+    /// job) keep their full allocation and still credit work; in-window
+    /// slots are clamped to the residual (the `reserve_upto` semantics
+    /// used for plans that were never admission-checked — for a sanely
+    /// admitted incumbent the clamp never binds).
+    ///
+    /// The schedule's own `arrival` may differ from the spec's (denial
+    /// recomputes produce remainder plans starting at the recompute
+    /// hour); allocations are re-indexed into the spec's window by
+    /// absolute hour, and anything outside it is ignored.
+    pub fn adopt(&mut self, ji: usize, s: &Schedule) {
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        for (srel, &a) in s.alloc.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let abs = s.arrival + srel;
+            if abs < job.arrival || abs >= self.ctx.end() {
+                continue;
+            }
+            let rel = abs - job.arrival;
+            if rel >= self.alloc[ji].len() {
+                continue;
+            }
+            let take = match self.ctx.rel(abs) {
+                Some(fi) => {
+                    let t = a.min(self.free[fi]);
+                    self.free[fi] -= t;
+                    t
+                }
+                None => a, // frozen past: capacity there is history
+            };
+            self.alloc[ji][rel] = take;
+            if take >= job.min_servers {
+                self.done[ji] += curve.capacity(take.min(curve.max_servers()));
+            }
+        }
+    }
+
+    /// Remove job `ji`'s allocations at absolute slots `>= from_abs`,
+    /// returning their capacity to the residual and debiting the work
+    /// cursor. Returns the number of cells cleared. Used to re-open a
+    /// job's future when a delta (forecast revision, capacity change)
+    /// touches it.
+    pub fn clear_future(&mut self, ji: usize, from_abs: usize) -> usize {
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let mut cells = 0usize;
+        for rel in 0..self.alloc[ji].len() {
+            let abs = job.arrival + rel;
+            let a = self.alloc[ji][rel];
+            if a == 0 || abs < from_abs {
+                continue;
+            }
+            if let Some(fi) = self.ctx.rel(abs) {
+                self.free[fi] += a;
+            }
+            if a >= job.min_servers {
+                self.done[ji] -= curve.capacity(a.min(curve.max_servers()));
+            }
+            self.alloc[ji][rel] = 0;
+            cells += 1;
+        }
+        if self.done[ji] < 0.0 {
+            self.done[ji] = 0.0;
+        }
+        cells
+    }
+
+    /// Open job `ji` and push its candidate chains for absolute slots
+    /// `>= from_abs`: unallocated slots enter with the minimum-bundle
+    /// candidate, partially allocated slots resume at their next marginal
+    /// step (the per-job marginal cursor). Jobs whose work cursor already
+    /// covers their total are trivially complete and stay closed.
+    /// Idempotent per job.
+    pub fn seed(&mut self, ji: usize, from_abs: usize) -> Result<()> {
+        if self.counted[ji] || self.done[ji] >= self.totals[ji] - 1e-9 {
+            return Ok(());
+        }
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let m = job.min_servers;
+        let bundle = curve.capacity(m);
+        if bundle <= 0.0 {
+            bail!("job {:?}: zero capacity at minimum allocation", job.name);
+        }
+        self.counted[ji] = true;
+        let before = self.heap.len();
+        for rel in 0..job.n_slots() {
+            let abs = job.arrival + rel;
+            if abs < from_abs {
+                continue;
+            }
+            let Some(fi) = self.ctx.rel(abs) else {
+                continue;
+            };
+            let c = self.ctx.carbon[fi].max(MIN_CARBON);
+            let a = self.alloc[ji][rel];
+            if a == 0 {
+                self.heap.push(checked(
+                    bundle / (m as f64 * c),
+                    bundle,
+                    &job.name,
+                    abs,
+                    m,
+                    ji,
+                )?);
+            } else if a < job.max_servers {
+                let next = a + 1;
+                let w = curve.marginal(next);
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    self.heap.push(checked(w / c, w, &job.name, abs, next, ji)?);
+                }
+            }
+        }
+        // A job with no seedable future (window elapsed, or every slot
+        // already at its maximum) stays closed: the heap cannot complete
+        // it and counting it open would deadlock `run` into an error even
+        // when the caller's completion gate would have handled it. Cold
+        // planning always seeds at least one candidate per incomplete
+        // job (check_jobs guarantees an in-window, sub-maximum slot
+        // exists), so the cold path is unaffected.
+        if self.heap.len() > before {
+            self.open += 1;
+        }
+        Ok(())
+    }
+
+    /// Run the interleaved greedy to completion of every open job. Errors
+    /// when the heap drains first — every genuinely infeasible instance,
+    /// plus some feasible deadline-tight mixes (the chain-drop rule is
+    /// greedy, not exhaustive).
+    pub fn run(&mut self) -> Result<()> {
+        while self.open > 0 {
+            let Some(cand) = self.heap.pop() else {
+                bail!(
+                    "infeasible fleet: {} job(s) cannot complete within \
+                     capacity and deadlines",
+                    self.open
+                );
+            };
+            let ji = cand.job;
+            if self.done[ji] >= self.totals[ji] - 1e-9 {
+                continue; // stale entry for an already-complete job
+            }
+            let job = &self.jobs[ji];
+            let rel = cand.slot - job.arrival;
+            let fi = cand.slot - self.ctx.start;
+            if cand.servers <= self.alloc[ji][rel] {
+                continue; // defensive: chains are monotone per (job, slot)
+            }
+            let need = cand.servers - self.alloc[ji][rel];
+            if self.free[fi] < need {
+                // The slot cannot host this step, and committed capacity
+                // only grows during a run — the rest of this (job, slot)
+                // chain is dead, so dropping the candidate is permanent
+                // and safe.
+                continue;
+            }
+            self.free[fi] -= need;
+            self.alloc[ji][rel] = cand.servers;
+            self.done[ji] += cand.work;
+            if self.done[ji] >= self.totals[ji] - 1e-9 {
+                self.open -= 1;
+            } else if cand.servers < job.max_servers {
+                let next = cand.servers + 1;
+                let w = job.curve.at_progress(0.0).marginal(next);
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    let c = self.ctx.carbon[fi].max(MIN_CARBON);
+                    self.heap.push(checked(w / c, w, &job.name, cand.slot, next, ji)?);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The arena's current allocation for one job as a [`Schedule`].
+    pub fn schedule_of(&self, ji: usize) -> Schedule {
+        Schedule::new(self.jobs[ji].arrival, self.alloc[ji].clone())
+    }
+
+    /// All allocations as a [`FleetSchedule`] aligned with the job slice.
+    pub fn into_fleet(self) -> FleetSchedule {
+        FleetSchedule {
+            schedules: self
+                .jobs
+                .iter()
+                .zip(self.alloc)
+                .map(|(j, a)| Schedule::new(j.arrival, a))
+                .collect(),
+        }
+    }
+}
+
+/// Interleaved fleet greedy: Algorithm 1 generalized to `N` jobs sharing
+/// per-slot capacity. Candidates from all jobs compete in one heap in
+/// decreasing marginal-work-per-unit-carbon order; a popped step commits
+/// only if its slot still has room, and each job stops generating steps
+/// once its work fits. Errors if a job cannot be completed by this
+/// heuristic — which includes every genuinely infeasible fleet but may
+/// also reject some feasible deadline-tight mixes (the chain-drop rule is
+/// greedy, not exhaustive; [`plan_fleet`]'s EDF pass rescues most such
+/// cases).
+///
+/// Implemented as the all-jobs-seeded, nothing-adopted case of
+/// `FleetArena`, so the cold path and the online engine's warm repair
+/// (DESIGN.md §10) cannot diverge in priorities, tie-breaks, or
+/// validation.
+pub fn plan_fleet_greedy(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+    ctx.check_jobs(jobs)?;
+    let mut arena = FleetArena::new(jobs, ctx);
+    for ji in 0..jobs.len() {
+        arena.seed(ji, ctx.start)?;
+    }
+    arena.run()?;
+    Ok(arena.into_fleet())
+}
+
+/// Sequential admission in an explicit order: each job plans the
+/// capacity-capped greedy against the residual its predecessors left.
+/// Output schedules stay aligned with the input job order.
+fn plan_sequential_order(
+    jobs: &[JobSpec],
+    ctx: &PlanContext,
+    order: &[usize],
+) -> Result<FleetSchedule> {
+    let mut residual = ctx.clone();
+    let mut schedules: Vec<Option<Schedule>> = vec![None; jobs.len()];
+    for &ji in order {
+        let job = &jobs[ji];
+        let one = plan_fleet_greedy(std::slice::from_ref(job), &residual)?;
+        let s = one
+            .schedules
+            .into_iter()
+            .next()
+            .expect("one job in, one schedule out");
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            residual.capacity[job.arrival + rel - ctx.start] -= a;
+        }
+        schedules[ji] = Some(s);
+    }
+    Ok(FleetSchedule {
+        schedules: schedules
+            .into_iter()
+            .map(|s| s.expect("every job planned"))
+            .collect(),
+    })
+}
+
+/// Sequential-admission baseline: jobs are admitted in slice order, each
+/// planning the capacity-capped greedy against the residual capacity the
+/// previously admitted jobs left behind. This is what independent
+/// CarbonScaler tenants behind an admission controller achieve, and the
+/// yardstick [`plan_fleet`] is guaranteed to match or beat.
+pub fn plan_fleet_sequential(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+    ctx.check_jobs(jobs)?;
+    let order: Vec<usize> = (0..jobs.len()).collect();
+    plan_sequential_order(jobs, ctx, &order)
+}
+
+/// Earliest-deadline-first admission order: jobs with tight windows plan
+/// first. Rescues mixes where pure priority order (or arrival order)
+/// hands a contended cheap slot to a flexible job and strands an
+/// inflexible one — the classic greedy blind spot on deadline-scarce
+/// instances.
+fn edf_order(jobs: &[JobSpec]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| (jobs[i].deadline(), i));
+    order
+}
+
+/// The reference portfolio planner: greedy + sequential + EDF passes over
+/// the heap-based arena, sharing the live engine's (unchanged)
+/// `polish_fleet`, completion gate, and carbon comparison so the benched
+/// difference against `fleet::plan_fleet` isolates the arena + queue
+/// rewrite.
+pub fn plan_fleet(jobs: &[JobSpec], ctx: &PlanContext) -> Result<FleetSchedule> {
+    ctx.check_jobs(jobs)?;
+    let greedy = plan_fleet_greedy(jobs, ctx);
+    let sequential = plan_fleet_sequential(jobs, ctx);
+    let edf = plan_sequential_order(jobs, ctx, &edf_order(jobs));
+    if greedy.is_err() && sequential.is_err() && edf.is_err() {
+        return greedy; // carries the engine's diagnostic
+    }
+    let cells: usize = jobs.iter().map(|j| j.n_slots()).sum();
+    let mut best: Option<(f64, FleetSchedule)> = None;
+    for fs in [greedy.ok(), sequential.ok(), edf.ok()].into_iter().flatten() {
+        let mut fs = fs;
+        if cells <= POLISH_CELL_BUDGET {
+            polish_fleet(jobs, ctx, &mut fs, 8);
+        }
+        if !fs.all_complete(jobs) {
+            continue; // phase-0 credit overestimated a multi-phase job
+        }
+        let g = fs.forecast_carbon_g(jobs, ctx);
+        if best.as_ref().map_or(true, |(bg, _)| g < *bg) {
+            best = Some((g, fs));
+        }
+    }
+    match best {
+        Some((_, mut fs)) => {
+            // Post-completion allocations (possible after polish moves a
+            // job's completion earlier) would hold capacity for nothing;
+            // emissions are unaffected by removing them.
+            fs.trim_completed_tails(jobs);
+            Ok(fs)
+        }
+        None => bail!(
+            "fleet plan found but no candidate completes all jobs under \
+             phase-aware accounting (multi-phase curves are planned with \
+             the phase-0 curve, like Algorithm 1)"
+        ),
+    }
+}
+
+/// Heap entry: one candidate allocation step for one job in one region.
+#[derive(Debug, Clone, Copy)]
+struct GeoCand {
+    /// Work added per unit carbon if this step is taken.
+    priority: f64,
+    job: usize,
+    region: usize,
+    /// Absolute slot.
+    slot: usize,
+    /// Target server count after this step.
+    servers: usize,
+    /// Work added by this step.
+    work: f64,
+}
+
+impl PartialEq for GeoCand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for GeoCand {}
+
+impl Ord for GeoCand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap on priority; ties -> earlier slot, fewer servers, lower
+        // region, lower job, so geo plans are deterministic. Priorities
+        // are validated finite at insertion; total_cmp keeps even a
+        // slipped NaN ordered instead of panicking mid-plan.
+        self.priority
+            .total_cmp(&other.priority)
+            .then_with(|| other.slot.cmp(&self.slot))
+            .then_with(|| other.servers.cmp(&self.servers))
+            .then_with(|| other.region.cmp(&self.region))
+            .then_with(|| other.job.cmp(&self.job))
+    }
+}
+impl PartialOrd for GeoCand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Validate a candidate at insertion (same contract as the fleet engine's
+/// `checked`): degenerate curves or pathological forecasts surface as an
+/// `Err`, never as a NaN inside the heap comparator.
+fn geo_checked(
+    priority: f64,
+    work: f64,
+    name: &str,
+    region: usize,
+    slot: usize,
+    servers: usize,
+    job: usize,
+) -> Result<GeoCand> {
+    if !priority.is_finite() || !work.is_finite() || work < 0.0 {
+        bail!(
+            "job {name:?}: invalid candidate in region {region} at slot {slot} \
+             ({servers} servers): work {work}, priority {priority}"
+        );
+    }
+    Ok(GeoCand {
+        priority,
+        job,
+        region,
+        slot,
+        servers,
+        work,
+    })
+}
+
+/// The geo twin of the fleet engine's incremental core (DESIGN.md §10):
+/// per-region residual capacity, per-job work cursors, per-(job, slot)
+/// allocation *and placement* state, and the candidate heap in one arena.
+/// Cold planning seeds every job from scratch; warm repair adopts an
+/// incumbent [`GeoFleetSchedule`] and re-opens only the jobs a delta
+/// touches, resuming each from its marginal cursors (and, optionally,
+/// restricted to the regions it already occupies, so online repairs never
+/// silently move a running job's state across the planet).
+pub struct GeoArena<'a> {
+    jobs: &'a [JobSpec],
+    geo: &'a GeoPlanContext,
+    free: Vec<Vec<usize>>,
+    totals: Vec<f64>,
+    done: Vec<f64>,
+    alloc: Vec<Vec<usize>>,
+    region: Vec<Vec<usize>>,
+    used: Vec<Vec<usize>>,
+    counted: Vec<bool>,
+    open: usize,
+    heap: BinaryHeap<GeoCand>,
+}
+
+impl<'a> GeoArena<'a> {
+    pub fn new(jobs: &'a [JobSpec], geo: &'a GeoPlanContext) -> Self {
+        GeoArena {
+            jobs,
+            geo,
+            free: geo.regions.iter().map(|r| r.ctx.capacity.clone()).collect(),
+            totals: jobs.iter().map(|j| j.total_work()).collect(),
+            done: vec![0.0; jobs.len()],
+            alloc: jobs.iter().map(|j| vec![0usize; j.n_slots()]).collect(),
+            region: jobs.iter().map(|j| vec![NO_REGION; j.n_slots()]).collect(),
+            used: vec![Vec::new(); jobs.len()],
+            counted: vec![false; jobs.len()],
+            open: 0,
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// Install an incumbent geo schedule for job `ji`: debit each active
+    /// slot's region residual (clamped, `reserve_upto` semantics), record
+    /// placement and the distinct-region set (frozen-past regions count
+    /// against the migration budget — checkpoints live there), and credit
+    /// the phase-0 work cursor. Like the fleet arena, allocations are
+    /// re-indexed into the spec's window by absolute hour (the incumbent
+    /// schedule's `arrival` may be a recompute hour, not the job's).
+    pub fn adopt(&mut self, ji: usize, gs: &GeoSchedule) {
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let start = self.geo.start();
+        for (srel, (&a, &r)) in gs.alloc.iter().zip(&gs.region).enumerate() {
+            if a == 0 || r >= self.geo.n_regions() {
+                continue;
+            }
+            let abs = gs.arrival + srel;
+            if abs < job.arrival || abs >= self.geo.end() {
+                continue;
+            }
+            let rel = abs - job.arrival;
+            if rel >= self.alloc[ji].len() {
+                continue;
+            }
+            let take = if abs < start {
+                a // frozen past: capacity there is history
+            } else {
+                let fi = abs - start;
+                let t = a.min(self.free[r][fi]);
+                self.free[r][fi] -= t;
+                t
+            };
+            self.alloc[ji][rel] = take;
+            self.region[ji][rel] = r;
+            if !self.used[ji].contains(&r) {
+                self.used[ji].push(r);
+            }
+            if take >= job.min_servers {
+                self.done[ji] += curve.capacity(take.min(curve.max_servers()));
+            }
+        }
+    }
+
+    /// Remove job `ji`'s allocations at absolute slots `>= from_abs`,
+    /// returning region capacity and work credit; the distinct-region set
+    /// is recomputed from what remains (the frozen prefix). Returns the
+    /// number of cells cleared.
+    pub fn clear_future(&mut self, ji: usize, from_abs: usize) -> usize {
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let start = self.geo.start();
+        let mut cells = 0usize;
+        for rel in 0..self.alloc[ji].len() {
+            let abs = job.arrival + rel;
+            let a = self.alloc[ji][rel];
+            if a == 0 || abs < from_abs {
+                continue;
+            }
+            let r = self.region[ji][rel];
+            if abs >= start && abs < self.geo.end() && r < self.geo.n_regions() {
+                self.free[r][abs - start] += a;
+            }
+            if a >= job.min_servers {
+                self.done[ji] -= curve.capacity(a.min(curve.max_servers()));
+            }
+            self.alloc[ji][rel] = 0;
+            self.region[ji][rel] = NO_REGION;
+            cells += 1;
+        }
+        if self.done[ji] < 0.0 {
+            self.done[ji] = 0.0;
+        }
+        self.used[ji] = {
+            let mut u: Vec<usize> = self.region[ji]
+                .iter()
+                .zip(&self.alloc[ji])
+                .filter(|(_, a)| **a > 0)
+                .map(|(r, _)| *r)
+                .collect();
+            u.sort_unstable();
+            u.dedup();
+            u
+        };
+        cells
+    }
+
+    /// Open job `ji` and push candidate chains for absolute slots
+    /// `>= from_abs`: unallocated slots enter with the minimum bundle in
+    /// every permitted region (all of them, or `restrict` when given);
+    /// partially allocated slots resume at their next marginal step in
+    /// their owning region. Idempotent per job; trivially complete jobs
+    /// stay closed.
+    pub fn seed(
+        &mut self,
+        ji: usize,
+        from_abs: usize,
+        restrict: Option<&[usize]>,
+    ) -> Result<()> {
+        if self.counted[ji] || self.done[ji] >= self.totals[ji] - 1e-9 {
+            return Ok(());
+        }
+        let job = &self.jobs[ji];
+        let curve = job.curve.at_progress(0.0);
+        let m = job.min_servers;
+        let bundle = curve.capacity(m);
+        if bundle <= 0.0 {
+            bail!("job {:?}: zero capacity at minimum allocation", job.name);
+        }
+        self.counted[ji] = true;
+        let before = self.heap.len();
+        let start = self.geo.start();
+        for rel in 0..job.n_slots() {
+            let abs = job.arrival + rel;
+            if abs < from_abs || abs < start || abs >= self.geo.end() {
+                continue;
+            }
+            let fi = abs - start;
+            let a = self.alloc[ji][rel];
+            if a == 0 {
+                for (ri, r) in self.geo.regions.iter().enumerate() {
+                    if restrict.map_or(false, |f| !f.contains(&ri)) {
+                        continue;
+                    }
+                    let c = r.ctx.carbon[fi].max(MIN_CARBON);
+                    self.heap.push(geo_checked(
+                        bundle / (m as f64 * c),
+                        bundle,
+                        &job.name,
+                        ri,
+                        abs,
+                        m,
+                        ji,
+                    )?);
+                }
+            } else if a < job.max_servers {
+                let ri = self.region[ji][rel];
+                if ri >= self.geo.n_regions() {
+                    continue;
+                }
+                let next = a + 1;
+                let w = curve.marginal(next);
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    let c = self.geo.regions[ri].ctx.carbon[fi].max(MIN_CARBON);
+                    self.heap.push(geo_checked(w / c, w, &job.name, ri, abs, next, ji)?);
+                }
+            }
+        }
+        // Same rule as the fleet arena: a job with no seedable future
+        // stays closed rather than deadlocking `run` (cold planning
+        // always pushes at least one candidate per incomplete job).
+        if self.heap.len() > before {
+            self.open += 1;
+        }
+        Ok(())
+    }
+
+    /// Run the interleaved placement greedy to completion of every open
+    /// job (same commit rules as cold planning: region-slot residual,
+    /// slot ownership, distinct-region budget).
+    pub fn run(&mut self) -> Result<()> {
+        let allowed = 1 + self.geo.migration.max_migrations;
+        let start = self.geo.start();
+        while self.open > 0 {
+            let Some(cand) = self.heap.pop() else {
+                bail!(
+                    "infeasible geo fleet: {} job(s) cannot complete within \
+                     per-region capacity, deadlines, and the migration budget",
+                    self.open
+                );
+            };
+            let ji = cand.job;
+            if self.done[ji] >= self.totals[ji] - 1e-9 {
+                continue; // stale entry for an already-complete job
+            }
+            let job = &self.jobs[ji];
+            let rel = cand.slot - job.arrival;
+            let fi = cand.slot - start;
+            // A slot belongs to at most one region per job: a candidate
+            // for a slot another region already owns is dead (ownership
+            // never moves during a run).
+            if self.alloc[ji][rel] > 0 && self.region[ji][rel] != cand.region {
+                continue;
+            }
+            if cand.servers <= self.alloc[ji][rel] {
+                continue; // stale duplicate (defensive; chains are monotone)
+            }
+            // Distinct-region budget: entering a new region is permanent,
+            // so once the budget is spent all other-region candidates are
+            // dead.
+            if self.used[ji].len() >= allowed && !self.used[ji].contains(&cand.region) {
+                continue;
+            }
+            let need = cand.servers - self.alloc[ji][rel];
+            if self.free[cand.region][fi] < need {
+                // Committed capacity only grows, so the rest of this
+                // (job, region, slot) chain is dead — dropping is
+                // permanent and safe, exactly like the fleet engine.
+                continue;
+            }
+            self.free[cand.region][fi] -= need;
+            self.alloc[ji][rel] = cand.servers;
+            self.region[ji][rel] = cand.region;
+            if !self.used[ji].contains(&cand.region) {
+                self.used[ji].push(cand.region);
+            }
+            self.done[ji] += cand.work;
+            if self.done[ji] >= self.totals[ji] - 1e-9 {
+                self.open -= 1;
+            } else if cand.servers < job.max_servers {
+                let next = cand.servers + 1;
+                let w = job.curve.at_progress(0.0).marginal(next);
+                if !w.is_finite() {
+                    bail!(
+                        "job {:?}: non-finite marginal capacity at {next} servers",
+                        job.name
+                    );
+                }
+                if w > 0.0 {
+                    let c = self.geo.regions[cand.region].ctx.carbon[fi].max(MIN_CARBON);
+                    self.heap.push(geo_checked(
+                        w / c,
+                        w,
+                        &job.name,
+                        cand.region,
+                        cand.slot,
+                        next,
+                        ji,
+                    )?);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The arena's current placement for one job.
+    pub fn geo_schedule_of(&self, ji: usize) -> GeoSchedule {
+        GeoSchedule {
+            arrival: self.jobs[ji].arrival,
+            alloc: self.alloc[ji].clone(),
+            region: self.region[ji].clone(),
+        }
+    }
+
+    /// All placements as a [`GeoFleetSchedule`] aligned with the job
+    /// slice (region vectors normalized like cold planning).
+    pub fn into_geo(self) -> GeoFleetSchedule {
+        let mut out = GeoFleetSchedule {
+            schedules: self
+                .jobs
+                .iter()
+                .zip(self.alloc)
+                .zip(self.region)
+                .map(|((j, a), r)| GeoSchedule {
+                    arrival: j.arrival,
+                    alloc: a,
+                    region: r,
+                })
+                .collect(),
+        };
+        out.normalize_regions();
+        out
+    }
+}
+
+/// Interleaved geo greedy: the fleet engine's heap loop with a placement
+/// dimension. Candidates from all (job, region) pairs compete in one heap
+/// in decreasing marginal-work-per-unit-carbon order; a popped step
+/// commits only if (a) its region-slot still has room, (b) the job's slot
+/// is not already owned by a different region, and (c) the job's
+/// distinct-region budget (`1 + max_migrations`) allows the region.
+/// Errors if a job cannot be completed by this heuristic — including
+/// every genuinely infeasible fleet, plus some feasible deadline-tight
+/// mixes ([`plan_geo`]'s admission passes rescue most of those).
+///
+/// Implemented as the all-jobs-seeded, nothing-adopted case of
+/// `GeoArena`, so cold planning and the online engine's warm repair
+/// share one set of priority/tie-break/commit rules.
+pub fn plan_geo_greedy(jobs: &[JobSpec], geo: &GeoPlanContext) -> Result<GeoFleetSchedule> {
+    geo.check_jobs(jobs)?;
+    let mut arena = GeoArena::new(jobs, geo);
+    for ji in 0..jobs.len() {
+        arena.seed(ji, geo.start(), None)?;
+    }
+    arena.run()?;
+    Ok(arena.into_geo())
+}
