@@ -14,8 +14,10 @@ on the *measured* slow/fast mean ratio — machine-independent structural
 guarantees which absolute nanosecond baselines cannot express.
 min_ratio floors a speedup (e.g. ISSUE 4's "warm-start repair >= 5x
 faster than a cold replan", ISSUE 6's "flat-arena planner >= 5x faster
-than the retained reference"); max_ratio caps a scaling factor (ISSUE
-6's "10x the jobs costs <= 15x the time").
+than the retained reference", ISSUE 7's "dirty-slot revision repair
+>= 5x faster than the full warm portfolio at <= 10% dirty, >= 20x on
+an empty-diff re-issue"); max_ratio caps a scaling factor (ISSUE 6's
+"10x the jobs costs <= 15x the time").
 
 Refresh the baseline from a quiet machine by copying the measured
 mean_ns values from BENCH_scheduler.json into BENCH_baseline.json.

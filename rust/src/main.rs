@@ -24,12 +24,14 @@ use carbonscaler::sched::{
     SuspendResumeDeadline,
 };
 use carbonscaler::service::api::{self as service_api, ServiceState};
-use carbonscaler::service::http::HttpServer;
+use carbonscaler::service::http::{HttpClient, HttpServer};
 use carbonscaler::service::loadgen::{JobTemplate, LoadGen, LoadReport};
 use carbonscaler::service::shard::{ShardPool, ShardPoolConfig};
 use carbonscaler::util::cli::{Args, ArgSpec};
 use carbonscaler::util::table::{f, pct, Table};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 const USAGE: &str =
@@ -443,16 +445,51 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         let duration = Duration::from_secs_f64(if secs > 0.0 { secs } else { 10.0 });
         let rps = args.f64("rps")?;
         println!("selftest: {rps} RPS for {:.0} s ...", duration.as_secs_f64());
+        // Revision storm: a sidecar thread posts alternating forecast
+        // revisions while the load test runs, so admission batches and
+        // coalesced revision batches interleave and the dirty-repair
+        // path (DESIGN.md §13) is exercised under live traffic.
+        let storm_stop = Arc::new(AtomicBool::new(false));
+        let storm = {
+            let stop = Arc::clone(&storm_stop);
+            let addr = server.addr();
+            let base = trace.window(0, horizon.min(8));
+            std::thread::spawn(move || -> Result<(usize, usize)> {
+                let mut client = HttpClient::new(addr);
+                let mut applied = 0usize;
+                let mut sent = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    let bump = if sent % 2 == 1 { 25.0 } else { 0.0 };
+                    let vals: Vec<String> =
+                        base.iter().map(|c| format!("{:.3}", c + bump)).collect();
+                    let body = format!(r#"{{"start": 0, "carbon": [{}]}}"#, vals.join(","));
+                    let (status, _) = client.request("POST", "/v1/forecast", &body)?;
+                    sent += 1;
+                    if status == 200 {
+                        applied += 1;
+                    }
+                    std::thread::sleep(Duration::from_millis(200));
+                }
+                Ok((applied, sent))
+            })
+        };
         let gen = LoadGen::new(server.addr(), args.usize("threads")?, JobTemplate::default());
         let report = gen.paced(rps, duration)?;
+        storm_stop.store(true, Ordering::SeqCst);
+        let (storm_applied, storm_sent) = storm.join().expect("revision storm panicked")?;
         print_load_report(&report);
         let snaps = state.pool().snapshots();
         let batches: usize = snaps.iter().map(|s| s.batches).sum();
         let events: usize = snaps.iter().map(|s| s.batched_events).sum();
+        let dirty: usize = snaps.iter().map(|s| s.dirty_slots).sum();
         println!(
             "shards processed {events} events in {batches} batches \
              ({:.2} events/batch)",
             events as f64 / batches.max(1) as f64
+        );
+        println!(
+            "revision storm: {storm_applied}/{storm_sent} forecast revisions \
+             applied, {dirty} dirty slots repaired"
         );
         server.shutdown();
         state.pool().shutdown();
@@ -461,6 +498,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         }
         if report.completed() == 0 {
             bail!("selftest completed zero requests");
+        }
+        if storm_applied == 0 || storm_applied != storm_sent {
+            bail!("revision storm applied {storm_applied}/{storm_sent} revisions");
         }
         println!("selftest OK: zero errors, sustained {:.1} RPS", report.sustained_rps);
         return Ok(());

@@ -1,0 +1,270 @@
+//! Slot-level dirty tracking for incremental revision repair
+//! (DESIGN.md §13).
+//!
+//! A forecast or capacity revision usually perturbs a handful of slots;
+//! re-opening every (job, slot[, region]) cell on each revision makes
+//! steady-state revision cost proportional to the fleet, not the delta.
+//! This module provides the two data structures the dirty repair path
+//! (`engine::repair_fleet_revision`, DESIGN.md §13) is built from:
+//!
+//! * [`DirtySet`] — a `u64`-word bitset over context slots (region-major
+//!   `region * horizon + slot` for geo), computed by diffing a revised
+//!   carbon/capacity vector against the incumbent's and unioned across a
+//!   coalesced revision batch (one union per shard per batch, §11);
+//! * [`SlotIndex`] — a reverse index from slot to the (job, servers)
+//!   units allocated there, built in two counting-sort passes over the
+//!   flat arena buffers (or committed plans), so "which jobs sit on
+//!   dirty slots" is answered in `O(dirty entries)` instead of
+//!   `O(jobs × horizon)`.
+
+/// Bitset over `len` slots: slot `i` is *dirty* when a revision changed
+/// its carbon intensity or capacity. For geo arenas the universe is
+/// region-major (`region * horizon + slot`), so one set covers every
+/// (region, slot) cell.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DirtySet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+/// Two carbon values within this tolerance are "unchanged" — the same
+/// epsilon the engine's forecast splice uses, so the dirty set and the
+/// no-op decision can never disagree.
+pub const CARBON_EPS: f64 = 1e-9;
+
+impl DirtySet {
+    /// An all-clean set over `len` slots.
+    pub fn new(len: usize) -> Self {
+        DirtySet {
+            words: vec![0u64; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// Dirty slots of a forecast revision: `new_vals` replaces
+    /// `old[lo..lo + new_vals.len()]`, and only slots at or after
+    /// `from` (the frozen-past boundary, relative) can become dirty.
+    pub fn from_carbon_diff(old: &[f64], new_vals: &[f64], lo: usize, from: usize) -> Self {
+        let mut set = DirtySet::new(old.len());
+        for (k, &v) in new_vals.iter().enumerate() {
+            let fi = lo + k;
+            if fi >= from && (old[fi] - v).abs() > CARBON_EPS {
+                set.mark(fi);
+            }
+        }
+        set
+    }
+
+    /// Dirty slots of a capacity revision (exact integer comparison).
+    pub fn from_capacity_diff(old: &[usize], new_vals: &[usize], lo: usize, from: usize) -> Self {
+        let mut set = DirtySet::new(old.len());
+        for (k, &v) in new_vals.iter().enumerate() {
+            let fi = lo + k;
+            if fi >= from && old[fi] != v {
+                set.mark(fi);
+            }
+        }
+        set
+    }
+
+    /// Number of slots in the universe (clean + dirty).
+    pub fn universe(&self) -> usize {
+        self.len
+    }
+
+    /// Mark slot `i` dirty.
+    pub fn mark(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Is slot `i` dirty?
+    pub fn contains(&self, i: usize) -> bool {
+        i < self.len && self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    /// Union with another set over the same universe — how a shard folds
+    /// a coalesced batch of revisions into one dirty set (§11).
+    pub fn union(&mut self, other: &DirtySet) {
+        assert_eq!(self.len, other.len, "dirty-set universes differ");
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= o;
+        }
+    }
+
+    /// Number of dirty slots.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Dirty fraction of the universe — the fallback-ladder gate
+    /// (`engine`'s `DIRTY_FRACTION_MAX`) compares against this.
+    pub fn fraction(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.count() as f64 / self.len as f64
+        }
+    }
+
+    /// Iterate dirty slot indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+/// Reverse index from context slot to the (job, servers) allocation
+/// units sitting on it, grouped per slot in one contiguous buffer
+/// (counting sort: one pass to size the groups, one to fill them). For
+/// geo the slot universe is region-major, matching [`DirtySet`].
+#[derive(Debug, Clone)]
+pub struct SlotIndex {
+    /// `offs[s]..offs[s + 1]` delimits slot `s`'s entries.
+    offs: Vec<u32>,
+    /// `(job, servers)` units, grouped by slot, jobs ascending within a
+    /// group when the scan visits jobs in ascending order.
+    entries: Vec<(u32, u32)>,
+}
+
+impl SlotIndex {
+    /// Build over `slots` slots from a scan closure that calls its
+    /// visitor once per allocated `(slot, job, servers)` cell. The scan
+    /// runs twice (count, then fill), so it must be deterministic.
+    pub fn build(slots: usize, scan: impl Fn(&mut dyn FnMut(usize, u32, u32))) -> Self {
+        let mut offs = vec![0u32; slots + 1];
+        scan(&mut |slot, _job, _servers| offs[slot + 1] += 1);
+        for i in 1..=slots {
+            offs[i] += offs[i - 1];
+        }
+        let mut entries = vec![(0u32, 0u32); offs[slots] as usize];
+        let mut cursor = offs.clone();
+        scan(&mut |slot, job, servers| {
+            entries[cursor[slot] as usize] = (job, servers);
+            cursor[slot] += 1;
+        });
+        SlotIndex { offs, entries }
+    }
+
+    /// Allocation units on one slot.
+    pub fn entries_on(&self, slot: usize) -> &[(u32, u32)] {
+        &self.entries[self.offs[slot] as usize..self.offs[slot + 1] as usize]
+    }
+
+    /// Total indexed allocation units.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Distinct jobs holding allocations on any dirty slot, ascending —
+    /// the *touched* set a revision repair re-opens. Cost is
+    /// `O(dirty entries)` plus a sort of the (small) touched set.
+    pub fn jobs_on(&self, dirty: &DirtySet) -> Vec<usize> {
+        let mut jobs: Vec<usize> = dirty
+            .iter()
+            .flat_map(|s| self.entries_on(s).iter().map(|&(j, _)| j as usize))
+            .collect();
+        jobs.sort_unstable();
+        jobs.dedup();
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mark_contains_count_iter_roundtrip() {
+        let mut s = DirtySet::new(130);
+        for i in [0usize, 63, 64, 65, 129] {
+            assert!(!s.contains(i));
+            s.mark(i);
+            assert!(s.contains(i));
+        }
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 63, 64, 65, 129]);
+        assert!(!s.contains(1));
+        assert!(!s.contains(200)); // out of universe, never dirty
+        assert!((s.fraction() - 5.0 / 130.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_union() {
+        let mut a = DirtySet::new(70);
+        assert!(a.is_empty());
+        assert_eq!(a.fraction(), 0.0);
+        let mut b = DirtySet::new(70);
+        a.mark(3);
+        b.mark(69);
+        a.union(&b);
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![3, 69]);
+        assert_eq!(b.count(), 1, "union leaves the other side untouched");
+    }
+
+    #[test]
+    fn carbon_diff_respects_epsilon_and_frozen_past() {
+        let old = vec![10.0, 20.0, 30.0, 40.0];
+        // Slot 0 changed but frozen (from = 1); slot 1 within epsilon;
+        // slots 2–3 genuinely changed.
+        let s = DirtySet::from_carbon_diff(&old, &[99.0, 20.0 + 1e-12, 31.0, 39.0], 0, 1);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![2, 3]);
+        // A partial splice marks only its own window.
+        let s = DirtySet::from_carbon_diff(&old, &[35.0], 2, 0);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn capacity_diff_is_exact() {
+        let old = vec![4usize, 4, 4];
+        let s = DirtySet::from_capacity_diff(&old, &[4, 3, 5], 0, 0);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![1, 2]);
+        assert!(DirtySet::from_capacity_diff(&old, &[4, 4, 4], 0, 0).is_empty());
+    }
+
+    #[test]
+    fn slot_index_groups_and_reverse_lookup() {
+        // Jobs: j0 on slots {0, 2}, j1 on slot {2}, j2 on slot {1}.
+        let cells = [(0usize, 0u32, 2u32), (2, 0, 1), (2, 1, 3), (1, 2, 4)];
+        let idx = SlotIndex::build(4, |f| {
+            for &(s, j, a) in &cells {
+                f(s, j, a);
+            }
+        });
+        assert_eq!(idx.len(), 4);
+        assert!(!idx.is_empty());
+        assert_eq!(idx.entries_on(0), &[(0, 2)]);
+        assert_eq!(idx.entries_on(1), &[(2, 4)]);
+        assert_eq!(idx.entries_on(2), &[(0, 1), (1, 3)]);
+        assert_eq!(idx.entries_on(3), &[] as &[(u32, u32)]);
+
+        let mut dirty = DirtySet::new(4);
+        dirty.mark(2);
+        assert_eq!(idx.jobs_on(&dirty), vec![0, 1]);
+        dirty.mark(3);
+        assert_eq!(idx.jobs_on(&dirty), vec![0, 1], "empty slot adds nothing");
+        let mut d2 = DirtySet::new(4);
+        d2.mark(1);
+        dirty.union(&d2);
+        assert_eq!(idx.jobs_on(&dirty), vec![0, 1, 2]);
+        assert!(idx.jobs_on(&DirtySet::new(4)).is_empty());
+    }
+}

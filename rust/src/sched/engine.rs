@@ -25,6 +25,15 @@
 //!   exactly where that comparison is affordable; at scale the warm path
 //!   stands alone (benchmarked ≥ 5× faster than a cold replan in
 //!   `benches/scheduler.rs`).
+//! * **Dirty** (DESIGN.md §13) — forecast/capacity revisions diff the
+//!   revised vector against the incumbent's into a [`DirtySet`], find
+//!   the jobs sitting on dirty slots through a [`SlotIndex`] reverse
+//!   index, and warm-repair only that touched sub-fleet against the
+//!   residual capacity the untouched fleet leaves behind
+//!   ([`repair_fleet_revision`]). A fallback ladder returns to the
+//!   staged portfolio whenever the shortcut's preconditions fail, so
+//!   revision cost scales with the delta while plan quality provably
+//!   never regresses.
 //!
 //! Repair invariants (property-tested in `rust/tests/engine_repair.rs`):
 //! an empty delta returns the incumbent unchanged; repairs never violate
@@ -38,11 +47,12 @@
 //! must be replanned, replacing their previous ad-hoc inline deviation
 //! checks.
 
+use crate::sched::dirty::{DirtySet, SlotIndex};
 use crate::sched::fleet::{self, FleetArena, FleetSchedule, PlanContext};
 use crate::sched::greedy;
 use crate::sched::schedule::Schedule;
 use crate::workload::job::JobSpec;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::time::Instant;
 
 /// An event consumed by the [`ScheduleEngine`].
@@ -85,6 +95,11 @@ pub struct RepairStats {
     pub reopened_jobs: usize,
     /// Allocation cells (job, slot) cleared or newly planned.
     pub reopened_cells: usize,
+    /// Candidate-seeding passes performed across **all attempted**
+    /// stages (not just the winner's) — the work metric the dirty-slot
+    /// path (DESIGN.md §13) exists to shrink. An empty-diff revision
+    /// must report 0 here: it never reaches any seeding stage.
+    pub seeded_jobs: usize,
 }
 
 impl RepairStats {
@@ -93,6 +108,7 @@ impl RepairStats {
             kind: RepairKind::NoOp,
             reopened_jobs: 0,
             reopened_cells: 0,
+            seeded_jobs: 0,
         }
     }
 }
@@ -127,6 +143,10 @@ pub struct EngineStats {
     pub replan_nanos: u128,
     /// Number of repairs timed in `replan_nanos`.
     pub replans: usize,
+    /// Cumulative candidate-seeding passes across all repairs
+    /// ([`RepairStats::seeded_jobs`] summed) — the reseed counter the
+    /// revision property tests assert against.
+    pub seeded_jobs: usize,
 }
 
 impl EngineStats {
@@ -239,6 +259,7 @@ impl ScheduleEngine {
             Ok(stats) => {
                 let s = stats.kind;
                 self.stats.record(s, t0.elapsed().as_nanos());
+                self.stats.seeded_jobs += stats.seeded_jobs;
             }
             // Only refused arrivals count as rejections; errors from
             // malformed revision events are the caller's bug, not
@@ -332,6 +353,7 @@ impl ScheduleEngine {
             Ok((fs, stats)) => {
                 self.stats.events += valid.len();
                 self.stats.record(stats.kind, t0.elapsed().as_nanos());
+                self.stats.seeded_jobs += stats.seeded_jobs;
                 for (k, &i) in active.iter().enumerate() {
                     self.jobs[i].plan = fs.schedules[k].clone();
                 }
@@ -438,29 +460,23 @@ impl ScheduleEngine {
         if let Some(i) = carbon.iter().position(|c| !c.is_finite() || *c < 0.0) {
             bail!("revised forecast slot {} is invalid: {}", start + i, carbon[i]);
         }
-        // Which future slots actually changed?
-        let changed: Vec<usize> = (lo..hi)
-            .filter(|&fi| {
-                self.ctx.start + fi >= self.now
-                    && (self.ctx.carbon[fi] - carbon[fi - lo]).abs() > 1e-9
-            })
-            .collect();
+        // Which future slots actually changed (DESIGN.md §13)? An
+        // empty-diff re-issue returns before any seeding stage runs.
+        let from = self.now.saturating_sub(self.ctx.start);
+        let dirty = DirtySet::from_carbon_diff(&self.ctx.carbon, &carbon, lo, from);
         self.ctx.carbon[lo..hi].copy_from_slice(&carbon);
-        if changed.is_empty() {
+        if dirty.is_empty() {
             return Ok(RepairStats::noop());
         }
-        let touched = self.jobs_using(&changed);
-        if touched.is_empty() {
-            return Ok(RepairStats::noop());
-        }
-        self.repair_active(&touched, &[])
+        self.repair_revision(&dirty)
     }
 
     fn on_capacity(&mut self, start: usize, capacity: Vec<usize>) -> Result<RepairStats> {
         let (lo, hi) = self.splice_range(start, capacity.len())?;
         let old: Vec<usize> = self.ctx.capacity[lo..hi].to_vec();
         self.ctx.capacity[lo..hi].copy_from_slice(&capacity);
-        // Slots (>= now) where active usage now exceeds capacity.
+        // Dirty slots (>= now) are those where active usage now exceeds
+        // capacity; growth and slack shrinks leave every slot clean.
         let active = self.active();
         let mut usage = vec![0usize; self.ctx.horizon()];
         for &i in &active {
@@ -469,14 +485,16 @@ impl ScheduleEngine {
                 *u += s.at(self.ctx.start + fi);
             }
         }
-        let violating: Vec<usize> = (lo..hi)
-            .filter(|&fi| self.ctx.start + fi >= self.now && usage[fi] > self.ctx.capacity[fi])
-            .collect();
-        if violating.is_empty() {
+        let mut dirty = DirtySet::new(self.ctx.horizon());
+        for fi in lo..hi {
+            if self.ctx.start + fi >= self.now && usage[fi] > self.ctx.capacity[fi] {
+                dirty.mark(fi);
+            }
+        }
+        if dirty.is_empty() {
             return Ok(RepairStats::noop());
         }
-        let touched = self.jobs_using(&violating);
-        match self.repair_active(&touched, &[]) {
+        match self.repair_revision(&dirty) {
             Ok(stats) => Ok(stats),
             Err(e) => {
                 // A shrink no repair candidate can satisfy is *refused*:
@@ -489,44 +507,14 @@ impl ScheduleEngine {
         }
     }
 
-    /// Active job indices holding a future allocation in any of the given
-    /// context slots.
-    fn jobs_using(&self, slots: &[usize]) -> Vec<usize> {
-        self.active()
-            .into_iter()
-            .filter(|&i| {
-                let s = &self.jobs[i].plan;
-                slots.iter().any(|&fi| {
-                    let abs = self.ctx.start + fi;
-                    abs >= self.now && s.at(abs) > 0
-                })
-            })
-            .collect()
-    }
-
-    /// Repair the active fleet re-opening `touched` (indices into
-    /// `self.jobs`), committing the winning candidate.
-    fn repair_active(&mut self, touched: &[usize], force: &[usize]) -> Result<RepairStats> {
+    /// Repair the active fleet after a revision marked `dirty` slots:
+    /// delegates to [`repair_fleet_revision`]'s fallback ladder and
+    /// commits the winning plans.
+    fn repair_revision(&mut self, dirty: &DirtySet) -> Result<RepairStats> {
         let active = self.active();
         let specs: Vec<JobSpec> = active.iter().map(|&i| self.jobs[i].spec.clone()).collect();
         let incumbent: Vec<Schedule> = active.iter().map(|&i| self.jobs[i].plan.clone()).collect();
-        let reopen: Vec<usize> = touched
-            .iter()
-            .filter_map(|t| active.iter().position(|&i| i == *t))
-            .collect();
-        let force: Vec<usize> = force
-            .iter()
-            .filter_map(|t| active.iter().position(|&i| i == *t))
-            .collect();
-        let (fs, stats) = repair_fleet(
-            &specs,
-            &incumbent,
-            &reopen,
-            &force,
-            &self.ctx,
-            self.now,
-            true,
-        )?;
+        let (fs, stats) = repair_fleet_revision(&specs, &incumbent, dirty, &self.ctx, self.now)?;
         for (k, &i) in active.iter().enumerate() {
             self.jobs[i].plan = fs.schedules[k].clone();
         }
@@ -626,6 +614,7 @@ pub fn repair_fleet(
 
     // (fleet, kind, reopened_jobs, reopened_cells)
     let mut candidates: Vec<(FleetSchedule, RepairKind, usize, usize)> = Vec::new();
+    let mut seeded = 0usize;
 
     // Stage 1 — warm. The adopted arena is checkpointed (a flat-buffer
     // clone) so an escalated repair resumes from the same state instead
@@ -640,6 +629,7 @@ pub fn repair_fleet(
         let mut ok = true;
         for &ji in reopen {
             cleared += arena.clear_future(ji, now);
+            seeded += 1;
             if arena.seed(ji, now.max(jobs[ji].arrival)).is_err() {
                 ok = false;
                 break;
@@ -671,6 +661,7 @@ pub fn repair_fleet(
         let mut ok = true;
         for ji in 0..jobs.len() {
             cleared += arena.clear_future(ji, now);
+            seeded += 1;
             if arena.seed(ji, now.max(jobs[ji].arrival)).is_err() {
                 ok = false;
                 break;
@@ -683,6 +674,7 @@ pub fn repair_fleet(
 
     // Stage 3 — cold portfolio (affordable, or the rescue path).
     if cells <= fleet::POLISH_CELL_BUDGET || candidates.is_empty() {
+        seeded += jobs.len();
         if let Ok(fs) = cold_replan(jobs, incumbent, ctx, now) {
             candidates.push((fs, RepairKind::Cold, jobs.len(), cells));
         }
@@ -726,6 +718,7 @@ pub fn repair_fleet(
                     kind,
                     reopened_jobs,
                     reopened_cells,
+                    seeded_jobs: seeded,
                 },
             ))
         }
@@ -733,6 +726,197 @@ pub fn repair_fleet(
             "no repair candidate completes the required jobs within \
              capacity and deadlines"
         ),
+    }
+}
+
+/// Above this dirty fraction of the horizon the revision repair skips
+/// the dirty-slot path: when most slots changed, the touched set
+/// converges to the whole fleet and the residual construction buys
+/// nothing over the full warm repair.
+pub const DIRTY_FRACTION_MAX: f64 = 0.25;
+
+/// Dirty-slot incremental revision repair (DESIGN.md §13): given the
+/// [`DirtySet`] of a forecast/capacity revision, re-open **only** the
+/// jobs holding future allocations on dirty slots, re-planned against
+/// the *residual* capacity left by every untouched job. The fallback
+/// ladder guarantees plan quality never regresses versus the staged
+/// portfolio in [`repair_fleet`]:
+///
+/// 1. **Dirty** ([`dirty_subfleet_repair`]) — touched sub-fleet on the
+///    residual context; bit-identical to the full warm repair
+///    (property-tested in `rust/tests/dirty_equivalence.rs`) at a cost
+///    proportional to the touched slice, not the fleet.
+/// 2. **Full portfolio** — taken up front when the instance is small
+///    (the polish budget makes the full path affordable *and* strictly
+///    stronger there), when every job is touched, or when the dirty
+///    fraction exceeds [`DIRTY_FRACTION_MAX`]; taken as fallback when
+///    any dirty-path invariant trips (residual underflow, infeasible
+///    sub-repair).
+pub fn repair_fleet_revision(
+    jobs: &[JobSpec],
+    incumbent: &[Schedule],
+    dirty: &DirtySet,
+    ctx: &PlanContext,
+    now: usize,
+) -> Result<(FleetSchedule, RepairStats)> {
+    if incumbent.len() != jobs.len() {
+        bail!("incumbent has {} schedules for {} jobs", incumbent.len(), jobs.len());
+    }
+    if dirty.universe() != ctx.horizon() {
+        bail!(
+            "dirty set covers {} slots for a horizon of {}",
+            dirty.universe(),
+            ctx.horizon()
+        );
+    }
+    let passthrough = || FleetSchedule {
+        schedules: incumbent.to_vec(),
+    };
+    if dirty.is_empty() {
+        return Ok((passthrough(), RepairStats::noop()));
+    }
+    // Reverse index over the committed plans: which jobs hold future
+    // allocations on dirty slots. Dirty sets only mark slots >= now, so
+    // indexing future cells is enough.
+    let index = SlotIndex::build(ctx.horizon(), |f| {
+        for (ji, s) in incumbent.iter().enumerate() {
+            for (rel, &a) in s.alloc.iter().enumerate() {
+                let abs = s.arrival + rel;
+                if a == 0 || abs < now {
+                    continue;
+                }
+                if let Some(fi) = ctx.rel(abs) {
+                    f(fi, ji as u32, a as u32);
+                }
+            }
+        }
+    });
+    let touched = index.jobs_on(dirty);
+    if touched.is_empty() {
+        return Ok((passthrough(), RepairStats::noop()));
+    }
+    let cells: usize = jobs.iter().map(|j| j.n_slots()).sum();
+    if cells <= fleet::POLISH_CELL_BUDGET
+        || touched.len() == jobs.len()
+        || dirty.fraction() > DIRTY_FRACTION_MAX
+    {
+        return repair_fleet(jobs, incumbent, &touched, &[], ctx, now, true);
+    }
+    dirty_subfleet_repair(jobs, incumbent, &touched, ctx, now)
+        .or_else(|_| repair_fleet(jobs, incumbent, &touched, &[], ctx, now, true))
+}
+
+/// The dirty path itself: warm-repair the `touched` sub-fleet against
+/// the residual context and gate the result exactly as [`repair_fleet`]
+/// would at scale (warm vs incumbent passthrough, since total cells are
+/// above the polish budget neither polish nor a cold candidate would
+/// run on the full path either).
+///
+/// **Why the result is bit-identical to the full warm repair**
+/// (DESIGN.md §13): the residual capacity equals the full arena's free
+/// grid after adopting every untouched incumbent; untouched jobs are
+/// never cleared or seeded, so they contribute no candidates; the
+/// touched jobs keep their relative order, carbon floors, and marginal
+/// cursors, so the bucketed queue pops the *same* candidate sequence in
+/// both constructions and commits the same schedules.
+fn dirty_subfleet_repair(
+    jobs: &[JobSpec],
+    incumbent: &[Schedule],
+    touched: &[usize],
+    ctx: &PlanContext,
+    now: usize,
+) -> Result<(FleetSchedule, RepairStats)> {
+    let mut is_touched = vec![false; jobs.len()];
+    for &t in touched {
+        is_touched[t] = true;
+    }
+    // Residual capacity: what the untouched fleet leaves behind. A slot
+    // where untouched usage exceeds capacity means that slot should have
+    // been dirty — bail to the full portfolio rather than guess.
+    let mut residual = ctx.capacity.clone();
+    for (ji, s) in incumbent.iter().enumerate() {
+        if is_touched[ji] {
+            continue;
+        }
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            if let Some(fi) = ctx.rel(s.arrival + rel) {
+                residual[fi] = residual[fi].checked_sub(a).ok_or_else(|| {
+                    anyhow!("untouched allocations exceed capacity at slot {fi}")
+                })?;
+            }
+        }
+    }
+    let rctx = PlanContext::new(ctx.start, residual, ctx.carbon.clone())?;
+    let sub_jobs: Vec<JobSpec> = touched.iter().map(|&t| jobs[t].clone()).collect();
+    let sub_inc: Vec<Schedule> = touched.iter().map(|&t| incumbent[t].clone()).collect();
+
+    let mut arena = FleetArena::new(&sub_jobs, &rctx);
+    for (k, s) in sub_inc.iter().enumerate() {
+        arena.adopt(k, s);
+    }
+    let mut cleared = 0usize;
+    let mut seeded = 0usize;
+    for (k, job) in sub_jobs.iter().enumerate() {
+        cleared += arena.clear_future(k, now);
+        seeded += 1;
+        arena.seed(k, now.max(job.arrival))?;
+    }
+    arena.run()?;
+    let mut warm = FleetSchedule {
+        schedules: incumbent.to_vec(),
+    };
+    for (k, &t) in touched.iter().enumerate() {
+        warm.schedules[t] = arena.schedule_of(k);
+    }
+    let planned: usize = touched.iter().map(|&t| jobs[t].n_slots()).sum();
+
+    let incumbent_ok: Vec<bool> = jobs
+        .iter()
+        .zip(incumbent)
+        .map(|(j, s)| s.completion_hours(j).is_some())
+        .collect();
+    let candidates = [
+        (warm, RepairKind::Warm, touched.len(), cleared + planned),
+        (
+            FleetSchedule {
+                schedules: incumbent.to_vec(),
+            },
+            RepairKind::NoOp,
+            0,
+            0,
+        ),
+    ];
+    let mut best: Option<(f64, FleetSchedule, RepairKind, usize, usize)> = None;
+    for (fs, kind, rjobs, rcells) in candidates {
+        if !fits_capacity_from(&fs, ctx, now) {
+            continue;
+        }
+        let completes = |ji: usize| fs.schedules[ji].completion_hours(&jobs[ji]).is_some();
+        if !(0..jobs.len()).all(|ji| !incumbent_ok[ji] || completes(ji)) {
+            continue;
+        }
+        let g = forecast_carbon(jobs, &fs, ctx);
+        if best.as_ref().map_or(true, |(bg, ..)| g < *bg) {
+            best = Some((g, fs, kind, rjobs, rcells));
+        }
+    }
+    match best {
+        Some((_, mut fs, kind, reopened_jobs, reopened_cells)) => {
+            fs.trim_completed_tails(jobs);
+            Ok((
+                fs,
+                RepairStats {
+                    kind,
+                    reopened_jobs,
+                    reopened_cells,
+                    seeded_jobs: seeded,
+                },
+            ))
+        }
+        None => bail!("dirty repair produced no feasible candidate"),
     }
 }
 

@@ -29,6 +29,7 @@
 //!   worse than sequential admission.
 
 use crate::carbon::trace::CarbonTrace;
+use crate::sched::dirty::{DirtySet, SlotIndex};
 use crate::sched::policy::Policy;
 use crate::sched::prio::{self, BucketQueue, Cand};
 use crate::sched::schedule::Schedule;
@@ -741,6 +742,36 @@ impl<'a> FleetArena<'a> {
                 .map(|ji| self.schedule_of(ji))
                 .collect(),
         }
+    }
+
+    /// Reverse index from context slot to the (job, servers) units
+    /// currently allocated there (DESIGN.md §13) — two counting-sort
+    /// passes over the flat `alloc` buffer, jobs ascending within each
+    /// slot group. The dirty-repair path asks it which jobs sit on the
+    /// revision's dirty slots in `O(dirty entries)` instead of scanning
+    /// every job's whole window.
+    pub fn slot_index(&self) -> SlotIndex {
+        SlotIndex::build(self.ctx.horizon(), |f| {
+            for (ji, job) in self.jobs.iter().enumerate() {
+                let base = self.job_off[ji];
+                let n_slots = self.job_off[ji + 1] - base;
+                for rel in 0..n_slots {
+                    let a = self.alloc[base + rel];
+                    if a == 0 {
+                        continue;
+                    }
+                    if let Some(fi) = self.ctx.rel(job.arrival + rel) {
+                        f(fi, ji as u32, a);
+                    }
+                }
+            }
+        })
+    }
+
+    /// Jobs holding an allocation on any dirty slot, ascending — the
+    /// *touched* set a revision repair must re-open.
+    pub fn touched_jobs(&self, dirty: &DirtySet) -> Vec<usize> {
+        self.slot_index().jobs_on(dirty)
     }
 }
 

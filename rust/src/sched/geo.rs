@@ -34,6 +34,7 @@
 
 use crate::carbon::regions::RegionParams;
 use crate::carbon::trace::CarbonTrace;
+use crate::sched::dirty::{DirtySet, SlotIndex};
 use crate::sched::fleet::{self, FleetSchedule, PlanContext};
 use crate::sched::policy::Policy;
 use crate::sched::prio::{self, BucketQueue, Cand};
@@ -918,6 +919,41 @@ impl<'a> GeoArena<'a> {
         out.normalize_regions();
         out
     }
+
+    /// Reverse index from region-major (region, slot) cell to the
+    /// (job, servers) units placed there (DESIGN.md §13), matching the
+    /// `region * horizon + slot` universe of the geo [`DirtySet`]. Built
+    /// with two counting-sort passes over the flat buffers; the
+    /// dirty-repair path asks it which jobs sit on a revision's dirty
+    /// region-slots in `O(dirty entries)`.
+    pub fn slot_index(&self) -> SlotIndex {
+        let h = self.geo.horizon();
+        let start = self.geo.start();
+        let end = self.geo.end();
+        SlotIndex::build(self.geo.n_regions() * h, |f| {
+            for (ji, job) in self.jobs.iter().enumerate() {
+                let base = self.job_off[ji];
+                let n_slots = self.job_off[ji + 1] - base;
+                for rel in 0..n_slots {
+                    let a = self.alloc[base + rel];
+                    let r = self.region[base + rel];
+                    if a == 0 || r == NO_REGION32 {
+                        continue;
+                    }
+                    let abs = job.arrival + rel;
+                    if abs >= start && abs < end {
+                        f(r as usize * h + (abs - start), ji as u32, a);
+                    }
+                }
+            }
+        })
+    }
+
+    /// Jobs holding a placement on any dirty (region, slot) cell,
+    /// ascending — the *touched* set a geo revision repair must re-open.
+    pub fn touched_jobs(&self, dirty: &DirtySet) -> Vec<usize> {
+        self.slot_index().jobs_on(dirty)
+    }
 }
 
 /// Interleaved geo greedy: the fleet engine's queue loop with a placement
@@ -1260,6 +1296,7 @@ pub fn repair_geo_arrival(
         .collect();
 
     let mut candidates: Vec<(GeoFleetSchedule, RepairKind, usize, usize)> = Vec::new();
+    let mut seeded = 0usize;
 
     // Stage 1 — warm: incumbents pass through, only the newcomer plans.
     // The adopted arena state is checkpointed (a flat-buffer clone) so an
@@ -1271,6 +1308,7 @@ pub fn repair_geo_arrival(
             arena.adopt(ji, gs);
         }
         let snapshot = arena.clone();
+        seeded += 1;
         if arena.seed(new_ji, now.max(new_job.arrival), None).is_ok() && arena.run().is_ok() {
             let mut gfs = GeoFleetSchedule {
                 schedules: incumbent.schedules.clone(),
@@ -1299,11 +1337,13 @@ pub fn repair_geo_arrival(
             } else {
                 Some(prior[ji].as_slice())
             };
+            seeded += 1;
             if arena.seed(ji, now.max(jobs[ji].arrival), restrict).is_err() {
                 ok = false;
                 break;
             }
         }
+        seeded += 1;
         if ok
             && arena.seed(new_ji, now.max(new_job.arrival), None).is_ok()
             && arena.run().is_ok()
@@ -1318,6 +1358,7 @@ pub fn repair_geo_arrival(
         && jobs.iter().all(|j| j.arrival >= geo.start())
         && (cells <= GEO_POLISH_CELL_BUDGET || candidates.is_empty())
     {
+        seeded += jobs.len();
         if let Ok(gfs) = plan_geo(&jobs, geo) {
             candidates.push((gfs, RepairKind::Cold, jobs.len(), cells));
         }
@@ -1354,6 +1395,7 @@ pub fn repair_geo_arrival(
                     kind,
                     reopened_jobs,
                     reopened_cells,
+                    seeded_jobs: seeded,
                 },
             ))
         }

@@ -5,6 +5,7 @@
 //! and accounting.
 
 pub mod baselines;
+pub mod dirty;
 pub mod engine;
 pub mod fleet;
 pub mod geo;
@@ -18,6 +19,7 @@ pub use baselines::{
     CarbonAgnostic, OracleStaticScale, StaticScale, SuspendResumeDeadline,
     SuspendResumeThreshold,
 };
+pub use dirty::{DirtySet, SlotIndex};
 pub use engine::{
     DriftMonitor, EngineJob, EngineStats, Event, JobState, RepairKind, RepairStats,
     ScheduleEngine, TickEvent,

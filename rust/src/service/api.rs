@@ -45,6 +45,23 @@ pub fn handler(state: Arc<ServiceState>) -> Handler {
     Arc::new(move |req: &HttpRequest| route(&state, req))
 }
 
+/// Serialize a response document through a per-thread pooled buffer:
+/// the JSON tree writes into a scratch string whose capacity is retained
+/// across requests (each HTTP worker serves sequentially), and the body
+/// is one exact-size copy instead of a chain of grow-reallocations.
+fn pooled_body(doc: &Json) -> String {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<String> =
+            const { std::cell::RefCell::new(String::new()) };
+    }
+    SCRATCH.with(|cell| {
+        let mut s = cell.borrow_mut();
+        s.clear();
+        doc.write_compact_into(&mut s);
+        s.as_str().to_owned()
+    })
+}
+
 fn route(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
     let parts: Vec<&str> = req.path.trim_matches('/').split('/').collect();
     match (req.method.as_str(), parts.as_slice()) {
@@ -54,12 +71,11 @@ fn route(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
         ("POST", ["v1", "forecast"]) => revise(state, &req.body, Signal::Forecast),
         ("POST", ["v1", "capacity"]) => revise(state, &req.body, Signal::Capacity),
         ("GET", ["v1", "stats"]) => stats(state),
-        ("GET", ["healthz"]) => HttpResponse::ok(
-            Json::obj()
+        ("GET", ["healthz"]) => HttpResponse::ok(pooled_body(
+            &Json::obj()
                 .set("status", "ok")
-                .set("shards", state.pool.n_shards())
-                .to_string_compact(),
-        ),
+                .set("shards", state.pool.n_shards()),
+        )),
         ("GET" | "POST", _) => HttpResponse::not_found(),
         _ => HttpResponse::error(405, "method not allowed"),
     }
@@ -81,8 +97,8 @@ fn submit(state: &ServiceState, body: &str) -> HttpResponse {
         .unwrap_or(name.as_str())
         .to_string();
     match state.pool.submit(&tenant, &req.workload, req.spec) {
-        Ok(SubmitResult::Admitted(out)) => HttpResponse::ok(
-            Json::obj()
+        Ok(SubmitResult::Admitted(out)) => HttpResponse::ok(pooled_body(
+            &Json::obj()
                 .set("job", name)
                 .set("tenant", tenant)
                 .set("admitted", true)
@@ -98,17 +114,17 @@ fn submit(state: &ServiceState, body: &str) -> HttpResponse {
                         .set("arrival", out.arrival)
                         .set("alloc", out.alloc),
                 )
-                .set("batchedWith", out.batched_with)
-                .to_string_compact(),
-        ),
+                .set("batchedWith", out.batched_with),
+        )),
         Ok(SubmitResult::Rejected(msg)) => HttpResponse::json(
             409,
-            Json::obj()
-                .set("job", name)
-                .set("tenant", tenant)
-                .set("admitted", false)
-                .set("error", msg)
-                .to_string_compact(),
+            pooled_body(
+                &Json::obj()
+                    .set("job", name)
+                    .set("tenant", tenant)
+                    .set("admitted", false)
+                    .set("error", msg),
+            ),
         ),
         Err(e) => HttpResponse::error(503, &format!("{e:#}")),
     }
@@ -136,19 +152,16 @@ fn job_json(shard: usize, job: &JobView) -> Json {
 
 fn get_job(state: &ServiceState, id: &str) -> HttpResponse {
     match state.pool.find_job(id) {
-        Some((shard, job)) => HttpResponse::ok(job_json(shard, &job).to_string_compact()),
+        Some((shard, job)) => HttpResponse::ok(pooled_body(&job_json(shard, &job))),
         None => HttpResponse::not_found(),
     }
 }
 
 fn complete(state: &ServiceState, id: &str) -> HttpResponse {
     match state.pool.complete(id) {
-        Ok(true) => HttpResponse::ok(
-            Json::obj()
-                .set("job", id)
-                .set("state", "completed")
-                .to_string_compact(),
-        ),
+        Ok(true) => HttpResponse::ok(pooled_body(
+            &Json::obj().set("job", id).set("state", "completed"),
+        )),
         Ok(false) => HttpResponse::not_found(),
         Err(e) => HttpResponse::error(503, &format!("{e:#}")),
     }
@@ -212,11 +225,12 @@ fn revise(state: &ServiceState, body: &str, signal: Signal) -> HttpResponse {
             }
         })
         .collect();
-    let body = Json::obj()
-        .set("event", label)
-        .set("applied", all_ok)
-        .set("shards", Json::Arr(shards))
-        .to_string_compact();
+    let body = pooled_body(
+        &Json::obj()
+            .set("event", label)
+            .set("applied", all_ok)
+            .set("shards", Json::Arr(shards)),
+    );
     HttpResponse::json(if all_ok { 200 } else { 409 }, body)
 }
 
@@ -248,6 +262,8 @@ fn stats(state: &ServiceState) -> HttpResponse {
                 .set("batches", snap.batches)
                 .set("batchedEvents", snap.batched_events)
                 .set("coalescedRevisions", snap.coalesced_revisions)
+                .set("dirtySlots", snap.dirty_slots)
+                .set("seededJobs", s.seeded_jobs)
                 .set("warmRepairs", s.warm_repairs)
                 .set("escalatedRepairs", s.escalated_repairs)
                 .set("coldReplans", s.cold_replans)
@@ -256,8 +272,8 @@ fn stats(state: &ServiceState) -> HttpResponse {
                 .set("meanReplanUs", s.mean_replan_us()),
         );
     }
-    HttpResponse::ok(
-        Json::obj()
+    HttpResponse::ok(pooled_body(
+        &Json::obj()
             .set("submitted", totals.submitted)
             .set("admitted", totals.admitted)
             .set("rejected", totals.rejected)
@@ -265,9 +281,8 @@ fn stats(state: &ServiceState) -> HttpResponse {
             .set("completed", completed)
             .set("failed", failed)
             .set("carbonG", carbon_g)
-            .set("shards", Json::Arr(shard_rows))
-            .to_string_compact(),
-    )
+            .set("shards", Json::Arr(shard_rows)),
+    ))
 }
 
 #[cfg(test)]

@@ -9,6 +9,13 @@
 //! JSON responses, `Connection: keep-alive`/`close`. Requests and
 //! responses are size-capped so a misbehaving peer cannot balloon
 //! memory.
+//!
+//! Buffers are **per-connection, not per-request**: the byte buffer, the
+//! parsed [`HttpRequest`] (method/path/body strings), and the response
+//! head scratch are all reused across keep-alive requests, so the steady
+//! state of a hot connection allocates only when a request outgrows what
+//! came before it. The client reuses its read buffer and request-head
+//! scratch the same way.
 
 use anyhow::{anyhow, bail, Result};
 use std::io::{ErrorKind, Read, Write};
@@ -176,14 +183,22 @@ fn serve_connection(
 ) -> Result<()> {
     stream.set_read_timeout(Some(KEEPALIVE_TIMEOUT))?;
     let _ = stream.set_nodelay(true);
+    // Reused across every keep-alive request on this connection.
     let mut buf: Vec<u8> = Vec::new();
+    let mut head_scratch = String::new();
+    let mut req = HttpRequest {
+        method: String::new(),
+        path: String::new(),
+        body: String::new(),
+        close: false,
+    };
     while !stop.load(Ordering::SeqCst) {
-        let Some(req) = read_request(&mut stream, &mut buf)? else {
+        if !read_request_into(&mut stream, &mut buf, &mut req)? {
             break; // clean close (EOF or idle timeout)
-        };
+        }
         // `Arc<dyn Fn>` has no `Fn` impl of its own; call through a deref.
         let resp = (**handler)(&req);
-        write_response(&mut stream, &resp, req.close)?;
+        write_response(&mut stream, &resp, req.close, &mut head_scratch)?;
         if req.close {
             break;
         }
@@ -191,39 +206,45 @@ fn serve_connection(
     Ok(())
 }
 
-/// Read one request off the connection. `Ok(None)` means the peer closed
-/// (or idled past the keep-alive timeout) between requests; errors mean
-/// a malformed or truncated message. `buf` carries leftover bytes
-/// between keep-alive requests.
-fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Option<HttpRequest>> {
+/// Read one request off the connection into `req` (whose strings are
+/// cleared and refilled in place, keeping their capacity). `Ok(false)`
+/// means the peer closed (or idled past the keep-alive timeout) between
+/// requests; errors mean a malformed or truncated message. `buf` carries
+/// leftover bytes between keep-alive requests.
+fn read_request_into(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    req: &mut HttpRequest,
+) -> Result<bool> {
     let Some(head_end) = read_until_header_end(stream, buf)? else {
-        return Ok(None);
+        return Ok(false);
     };
-    let head = std::str::from_utf8(&buf[..head_end])
-        .map_err(|_| anyhow!("non-utf8 request head"))?;
-    let mut lines = head.split("\r\n");
-    let request_line = lines.next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let method = parts
-        .next()
-        .ok_or_else(|| anyhow!("empty request line"))?
-        .to_string();
-    let target = parts
-        .next()
-        .ok_or_else(|| anyhow!("request line has no target"))?;
-    let path = target.split('?').next().unwrap_or(target).to_string();
-    let (content_length, close) = parse_framing(lines)?;
+    let (content_length, close) = {
+        let head = std::str::from_utf8(&buf[..head_end])
+            .map_err(|_| anyhow!("non-utf8 request head"))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?;
+        let target = parts
+            .next()
+            .ok_or_else(|| anyhow!("request line has no target"))?;
+        let path = target.split('?').next().unwrap_or(target);
+        req.method.clear();
+        req.method.push_str(method);
+        req.path.clear();
+        req.path.push_str(path);
+        parse_framing(lines)?
+    };
     let body_start = head_end + 4;
     read_until_len(stream, buf, body_start + content_length)?;
-    let body = String::from_utf8(buf[body_start..body_start + content_length].to_vec())
+    let body = std::str::from_utf8(&buf[body_start..body_start + content_length])
         .map_err(|_| anyhow!("non-utf8 request body"))?;
+    req.body.clear();
+    req.body.push_str(body);
+    req.close = close;
     buf.drain(..body_start + content_length);
-    Ok(Some(HttpRequest {
-        method,
-        path,
-        body,
-        close,
-    }))
+    Ok(true)
 }
 
 /// Grow `buf` from the stream until it contains `\r\n\r\n`; returns the
@@ -303,8 +324,17 @@ fn parse_framing<'a>(lines: impl Iterator<Item = &'a str>) -> Result<(usize, boo
     Ok((content_length, close))
 }
 
-fn write_response(stream: &mut TcpStream, resp: &HttpResponse, close: bool) -> Result<()> {
-    let head = format!(
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &HttpResponse,
+    close: bool,
+    head: &mut String,
+) -> Result<()> {
+    use std::fmt::Write as _;
+    head.clear();
+    // Writing into a String is infallible.
+    let _ = write!(
+        head,
         "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
          Connection: {}\r\n\r\n",
         resp.status,
@@ -326,6 +356,8 @@ pub struct HttpClient {
     addr: SocketAddr,
     stream: Option<TcpStream>,
     buf: Vec<u8>,
+    /// Request-head scratch, reused across requests.
+    head: String,
 }
 
 impl HttpClient {
@@ -334,6 +366,7 @@ impl HttpClient {
             addr,
             stream: None,
             buf: Vec::new(),
+            head: String::new(),
         }
     }
 
@@ -379,13 +412,16 @@ impl HttpClient {
     }
 
     fn try_request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
-        let stream = self.stream.as_mut().expect("connected");
-        let head = format!(
+        use std::fmt::Write as _;
+        self.head.clear();
+        let _ = write!(
+            self.head,
             "{method} {path} HTTP/1.1\r\nHost: service\r\nContent-Type: application/json\r\n\
              Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
             body.len()
         );
-        stream.write_all(head.as_bytes())?;
+        let stream = self.stream.as_mut().expect("connected");
+        stream.write_all(self.head.as_bytes())?;
         stream.write_all(body.as_bytes())?;
         stream.flush()?;
 

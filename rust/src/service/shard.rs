@@ -16,7 +16,13 @@
 //! * all `ForecastRevised` (resp. `CapacityChanged`) revisions in the
 //!   batch are coalesced into a single spliced event — one repair pass
 //!   instead of one per revision, which is what makes the
-//!   `POST /v1/forecast` fan-out affordable on hot shards;
+//!   `POST /v1/forecast` fan-out affordable on hot shards. Coalescing
+//!   is **slot-wise**: the later revision of slot *i* wins while slots
+//!   it does not cover keep the earlier revision's value, so interleaved
+//!   partial revisions are never dropped. The merged vector is diffed
+//!   against the shard's incumbent into one [`DirtySet`] union per
+//!   signal per batch (DESIGN.md §13) — the engine's dirty-slot repair
+//!   then touches only those slots' jobs;
 //! * completions apply next, freeing capacity — departed jobs are then
 //!   retired out of the engine into a bounded terminal ring, so an
 //!   always-on shard never grows with lifetime throughput;
@@ -29,6 +35,7 @@
 //! find its job in every subsequent read — the consistency contract the
 //! concurrency tests (`rust/tests/service_concurrent.rs`) assert.
 
+use crate::sched::dirty::DirtySet;
 use crate::sched::engine::{EngineJob, Event, JobState, RepairKind, ScheduleEngine};
 use crate::sched::fleet::PlanContext;
 use crate::sched::schedule::Schedule;
@@ -187,6 +194,7 @@ impl ShardPool {
                 batches: 0,
                 batched_events: 0,
                 coalesced: 0,
+                dirty_slots: 0,
                 admitted: Arc::clone(&admitted),
                 rejected: Arc::clone(&rejected),
             };
@@ -417,6 +425,8 @@ struct ShardWorker {
     batches: usize,
     batched_events: usize,
     coalesced: usize,
+    /// Cumulative popcount of the per-batch `DirtySet` unions.
+    dirty_slots: usize,
     admitted: Arc<AtomicUsize>,
     rejected: Arc<AtomicUsize>,
 }
@@ -583,6 +593,18 @@ impl ShardWorker {
         if !forecast.is_empty() {
             self.coalesced += forecast.len() - 1;
             let merged = merge_forecast(self.engine.context(), &forecast);
+            // One DirtySet union per shard per batch (DESIGN.md §13):
+            // the merged slot-wise splice diffed against the incumbent
+            // forecast. This is a subset of the per-revision diffs
+            // unioned — a slot revised away and back within one batch
+            // needs no repair at all.
+            if let Event::ForecastRevised { start, carbon } = &merged {
+                let ctx = self.engine.context();
+                let lo = start - ctx.start;
+                let from = self.engine.now().saturating_sub(ctx.start);
+                self.dirty_slots +=
+                    DirtySet::from_carbon_diff(&ctx.carbon, carbon, lo, from).count();
+            }
             let out = self
                 .engine
                 .handle(merged)
@@ -595,6 +617,13 @@ impl ShardWorker {
         if !capacity.is_empty() {
             self.coalesced += capacity.len() - 1;
             let merged = merge_capacity(self.engine.context(), &capacity);
+            if let Event::CapacityChanged { start, capacity } = &merged {
+                let ctx = self.engine.context();
+                let lo = start - ctx.start;
+                let from = self.engine.now().saturating_sub(ctx.start);
+                self.dirty_slots +=
+                    DirtySet::from_capacity_diff(&ctx.capacity, capacity, lo, from).count();
+            }
             let out = self
                 .engine
                 .handle(merged)
@@ -708,6 +737,7 @@ impl ShardWorker {
             batches: self.batches,
             batched_events: self.batched_events,
             coalesced_revisions: self.coalesced,
+            dirty_slots: self.dirty_slots,
         });
     }
 }
@@ -912,6 +942,61 @@ mod tests {
         // Union range seeded from the current context between revisions.
         assert_eq!(start, 0);
         assert_eq!(capacity, vec![7, 4, 4, 9]);
+    }
+
+    #[test]
+    fn interleaved_partial_revisions_coalesce_slot_wise() {
+        // Three partial revisions interleaved over the window. Coalescing
+        // must keep the latest value *per slot* — the last revision only
+        // covers slot 1, so treating it as latest-wins on the whole
+        // horizon would silently drop the slot-0 and slot-2 updates.
+        let ctx = PlanContext::uniform(0, 4, vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        let merged = merge_forecast(
+            &ctx,
+            &[(0, vec![100.0, 101.0]), (2, vec![200.0]), (1, vec![150.0])],
+        );
+        let Event::ForecastRevised { start, carbon } = merged else {
+            panic!("wrong event kind");
+        };
+        assert_eq!(start, 0);
+        assert_eq!(carbon, vec![100.0, 150.0, 200.0]);
+        // Same contract for capacity: the union range between partial
+        // revisions is seeded from the incumbent context.
+        let merged = merge_capacity(&ctx, &[(1, vec![9, 9]), (3, vec![5]), (2, vec![7])]);
+        let Event::CapacityChanged { start, capacity } = merged else {
+            panic!("wrong event kind");
+        };
+        assert_eq!(start, 1);
+        assert_eq!(capacity, vec![9, 7, 5]);
+    }
+
+    #[test]
+    fn revision_batches_account_dirty_slots() {
+        let p = pool(1, 4);
+        p.submit("t", "custom", job("j", 1.0, 3.0, 1)).unwrap();
+        // Two slots genuinely change → the batch's DirtySet counts 2.
+        let verdicts = p
+            .revise_all(Event::ForecastRevised {
+                start: 0,
+                carbon: vec![10.0, 40.0, 2.0, 80.0, 1.0, 60.0],
+            })
+            .unwrap();
+        assert!(verdicts.iter().all(|v| v.is_ok()), "{verdicts:?}");
+        assert_eq!(p.snapshots()[0].dirty_slots, 2);
+        // Re-issuing the incumbent forecast marks nothing dirty and the
+        // engine reports a no-op with zero seeding work.
+        let before = p.snapshots()[0].stats.seeded_jobs;
+        let verdicts = p
+            .revise_all(Event::ForecastRevised {
+                start: 0,
+                carbon: vec![10.0, 40.0, 2.0, 80.0, 1.0, 60.0],
+            })
+            .unwrap();
+        assert_eq!(verdicts[0], Ok(RepairKind::NoOp));
+        let snap = &p.snapshots()[0];
+        assert_eq!(snap.dirty_slots, 2, "empty diff adds no dirty slots");
+        assert_eq!(snap.stats.seeded_jobs, before, "no-op must not reseed");
+        p.shutdown();
     }
 
     #[test]

@@ -91,6 +91,12 @@ pub struct ShardSnapshot {
     /// Revision events merged away by coalescing (a batch carrying 5
     /// forecast revisions repairs once and counts 4 here).
     pub coalesced_revisions: usize,
+    /// Slots marked dirty by coalesced revision batches (each batch's
+    /// merged forecast/capacity vector is diffed against the engine's
+    /// incumbent into one `DirtySet` union per signal, DESIGN.md §13;
+    /// this is the cumulative popcount). A re-issue of the incumbent
+    /// forecast adds 0 — the dirty-repair no-op guarantee.
+    pub dirty_slots: usize,
 }
 
 impl ShardSnapshot {
@@ -111,6 +117,7 @@ impl ShardSnapshot {
             batches: 0,
             batched_events: 0,
             coalesced_revisions: 0,
+            dirty_slots: 0,
         }
     }
 

@@ -120,6 +120,14 @@ impl Json {
         s
     }
 
+    /// Compact serialization appended to a caller-owned buffer — lets
+    /// hot paths (the service's response building) reuse one scratch
+    /// string across serializations instead of growing a fresh one each
+    /// time.
+    pub fn write_compact_into(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     /// Pretty serialization with 2-space indent.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();

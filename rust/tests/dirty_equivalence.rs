@@ -1,0 +1,368 @@
+//! Bit-identity property tests for the dirty-slot revision repair
+//! (DESIGN.md §13): `engine::repair_fleet_revision` must produce the
+//! **same plans and stats** as the full warm-repair portfolio re-opening
+//! the same touched set, on instances large enough that the fallback
+//! ladder actually takes the dirty sub-fleet path (total cells above the
+//! polish budget, dirty fraction under `DIRTY_FRACTION_MAX`, touched set
+//! a strict subset of the fleet).
+//!
+//! The argument the tests pin down: the residual capacity handed to the
+//! touched sub-fleet equals the full arena's free grid after adopting
+//! every untouched incumbent, untouched jobs contribute no candidates,
+//! and the touched jobs keep their relative order, carbon floors, and
+//! marginal cursors — so the bucketed queue pops the same candidate
+//! sequence in both constructions. Equality is asserted on schedules
+//! *and* repair stats (kind, reopened counts, seeding passes), so a
+//! divergence in either the plans or the work accounting fails loudly.
+//!
+//! The reverse indexes feeding the touched set ([`FleetArena::slot_index`]
+//! / [`GeoArena::slot_index`]) are checked against brute-force oracles on
+//! random fleet and geo instances.
+
+use carbonscaler::scaling::MarginalCapacityCurve;
+use carbonscaler::sched::dirty::{DirtySet, SlotIndex};
+use carbonscaler::sched::engine::{self, RepairKind};
+use carbonscaler::sched::fleet::{self, FleetArena, PlanContext};
+use carbonscaler::sched::geo::{self, GeoArena, GeoPlanContext, GeoRegion, MigrationPolicy};
+use carbonscaler::sched::schedule::Schedule;
+use carbonscaler::util::rng::Rng;
+use carbonscaler::workload::job::{JobBuilder, JobSpec};
+
+/// The fleet engine's polish budget (`sched::fleet::POLISH_CELL_BUDGET`,
+/// crate-private): above this many cells the repair portfolio runs no
+/// polish and no routine cold candidate, which is the regime where the
+/// dirty path is provably bit-identical to the full warm repair.
+const POLISH_CELL_BUDGET: usize = 2048;
+
+fn job(name: &str, arrival: usize, len: f64, slack: f64, max: usize) -> JobSpec {
+    JobBuilder::new(name, MarginalCapacityCurve::linear(max))
+        .arrival(arrival)
+        .servers(1, max)
+        .length(len)
+        .slack_factor(slack)
+        .power(1000.0)
+        .build()
+        .unwrap()
+}
+
+fn random_carbon(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.range(5.0, 100.0)).collect()
+}
+
+/// A fleet big enough to clear the polish budget but with short per-job
+/// windows, so a few dirty slots touch a strict subset of the jobs.
+fn big_fleet(rng: &mut Rng) -> Vec<JobSpec> {
+    (0..600)
+        .map(|i| {
+            job(
+                &format!("j{i}"),
+                i % 96,
+                rng.range(1.5, 3.5),
+                rng.range(1.4, 2.2),
+                1 + (i % 3),
+            )
+        })
+        .collect()
+}
+
+/// The touched set exactly as `repair_fleet_revision` derives it: jobs
+/// holding future allocations on dirty slots, via the reverse index.
+fn touched_of(
+    incumbent: &[Schedule],
+    dirty: &DirtySet,
+    ctx: &PlanContext,
+    now: usize,
+) -> Vec<usize> {
+    let index = SlotIndex::build(ctx.horizon(), |f| {
+        for (ji, s) in incumbent.iter().enumerate() {
+            for (rel, &a) in s.alloc.iter().enumerate() {
+                let abs = s.arrival + rel;
+                if a == 0 || abs < now {
+                    continue;
+                }
+                if let Some(fi) = ctx.rel(abs) {
+                    f(fi, ji as u32, a as u32);
+                }
+            }
+        }
+    });
+    index.jobs_on(dirty)
+}
+
+fn assert_identical(
+    a: &(fleet::FleetSchedule, engine::RepairStats),
+    b: &(fleet::FleetSchedule, engine::RepairStats),
+    tag: &str,
+) {
+    assert_eq!(a.0.schedules, b.0.schedules, "{tag}: plans diverge");
+    assert_eq!(a.1.kind, b.1.kind, "{tag}: repair kind diverges");
+    assert_eq!(
+        a.1.reopened_jobs, b.1.reopened_jobs,
+        "{tag}: reopened job counts diverge"
+    );
+    assert_eq!(
+        a.1.reopened_cells, b.1.reopened_cells,
+        "{tag}: reopened cell counts diverge"
+    );
+    assert_eq!(
+        a.1.seeded_jobs, b.1.seeded_jobs,
+        "{tag}: seeding pass counts diverge"
+    );
+}
+
+/// Forecast revisions at scale: the dirty path's result is bit-identical
+/// to the full warm-repair portfolio re-opening the same touched set.
+#[test]
+fn dirty_forecast_repair_bit_identical_to_full_warm_repair() {
+    let mut rng = Rng::new(0xD1F7);
+    let jobs = big_fleet(&mut rng);
+    let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+    let cells: usize = jobs.iter().map(|j| j.n_slots()).sum();
+    assert!(cells > POLISH_CELL_BUDGET, "instance too small ({cells} cells)");
+    let ctx = PlanContext::uniform(0, 48, random_carbon(&mut rng, end)).unwrap();
+    let incumbent = fleet::plan_fleet(&jobs, &ctx).expect("seed fleet infeasible");
+
+    let mut exercised = 0usize;
+    for case in 0..8 {
+        let now = rng.below(40) as usize;
+        let lo = now + 1 + rng.below(50) as usize;
+        let w = (1 + rng.below(3) as usize).min(end - lo);
+        let mut carbon = ctx.carbon.clone();
+        for c in &mut carbon[lo..lo + w] {
+            *c *= rng.range(0.2, 3.0);
+        }
+        let dirty = DirtySet::from_carbon_diff(&ctx.carbon, &carbon[lo..lo + w], lo, now);
+        if dirty.is_empty() {
+            continue;
+        }
+        let ctx2 = PlanContext::uniform(0, 48, carbon).unwrap();
+
+        let touched = touched_of(&incumbent.schedules, &dirty, &ctx2, now);
+        // Preconditions for the ladder to take the dirty path — without
+        // them the comparison is trivially true (both run the portfolio).
+        assert!(
+            dirty.fraction() <= engine::DIRTY_FRACTION_MAX,
+            "case {case}: dirty fraction gate tripped"
+        );
+        if touched.is_empty() || touched.len() == jobs.len() {
+            continue;
+        }
+        exercised += 1;
+
+        let a = engine::repair_fleet_revision(&jobs, &incumbent.schedules, &dirty, &ctx2, now)
+            .unwrap();
+        let b = engine::repair_fleet(&jobs, &incumbent.schedules, &touched, &[], &ctx2, now, true)
+            .unwrap();
+        assert_identical(&a, &b, &format!("case {case} (|touched| = {})", touched.len()));
+        assert_eq!(a.0.schedules.len(), jobs.len(), "case {case}: schedule count");
+    }
+    assert!(exercised >= 4, "only {exercised} cases took the dirty path");
+}
+
+/// Capacity revisions at scale: same bit-identity, with the dirty set
+/// from the exact integer capacity diff. Shrinks that underflow the
+/// residual fall back to the portfolio — which is the reference itself,
+/// so equality must hold on every instance either way.
+#[test]
+fn dirty_capacity_repair_bit_identical_to_full_warm_repair() {
+    let mut rng = Rng::new(0xD1CA);
+    let jobs = big_fleet(&mut rng);
+    let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+    let ctx = PlanContext::uniform(0, 48, random_carbon(&mut rng, end)).unwrap();
+    let incumbent = fleet::plan_fleet(&jobs, &ctx).expect("seed fleet infeasible");
+
+    let mut exercised = 0usize;
+    for case in 0..8 {
+        let now = rng.below(30) as usize;
+        let lo = now + 1 + rng.below(50) as usize;
+        let w = (1 + rng.below(2) as usize).min(end - lo);
+        let mut capacity = ctx.capacity.clone();
+        for c in &mut capacity[lo..lo + w] {
+            // Mix shrinks (which force re-planning) and growth (which
+            // the gate keeps only if it lowers carbon).
+            *c = if rng.chance(0.5) { *c / 2 } else { *c + 16 };
+        }
+        let dirty = DirtySet::from_capacity_diff(&ctx.capacity, &capacity[lo..lo + w], lo, now);
+        if dirty.is_empty() {
+            continue;
+        }
+        let ctx2 = PlanContext::new(0, capacity, ctx.carbon.clone()).unwrap();
+
+        let touched = touched_of(&incumbent.schedules, &dirty, &ctx2, now);
+        if touched.is_empty() || touched.len() == jobs.len() {
+            continue;
+        }
+        exercised += 1;
+
+        let a = engine::repair_fleet_revision(&jobs, &incumbent.schedules, &dirty, &ctx2, now);
+        let b = engine::repair_fleet(&jobs, &incumbent.schedules, &touched, &[], &ctx2, now, true);
+        match (a, b) {
+            (Ok(a), Ok(b)) => {
+                assert_identical(&a, &b, &format!("case {case}"));
+            }
+            (Err(ea), Err(eb)) => {
+                assert_eq!(ea.to_string(), eb.to_string(), "case {case}: diagnostics");
+            }
+            (a, b) => panic!(
+                "case {case}: outcome diverges (dirty {:?}, portfolio {:?})",
+                a.as_ref().map(|_| ()).map_err(|e| e.to_string()),
+                b.as_ref().map(|_| ()).map_err(|e| e.to_string()),
+            ),
+        }
+    }
+    assert!(exercised >= 3, "only {exercised} capacity cases exercised");
+}
+
+/// An all-clean dirty set is a guaranteed no-op: incumbent passthrough,
+/// zero reopened work, zero seeding passes.
+#[test]
+fn empty_dirty_set_is_passthrough_with_zero_seeding() {
+    let mut rng = Rng::new(0xD1E0);
+    let jobs: Vec<JobSpec> = (0..5)
+        .map(|i| job(&format!("j{i}"), i % 3, 2.0, 1.5, 2))
+        .collect();
+    let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+    let ctx = PlanContext::uniform(0, 6, random_carbon(&mut rng, end)).unwrap();
+    let incumbent = fleet::plan_fleet(&jobs, &ctx).unwrap();
+
+    let dirty = DirtySet::new(ctx.horizon());
+    let (fs, stats) =
+        engine::repair_fleet_revision(&jobs, &incumbent.schedules, &dirty, &ctx, 0).unwrap();
+    assert_eq!(fs.schedules, incumbent.schedules);
+    assert_eq!(stats.kind, RepairKind::NoOp);
+    assert_eq!(stats.reopened_jobs, 0);
+    assert_eq!(stats.reopened_cells, 0);
+    assert_eq!(stats.seeded_jobs, 0);
+
+    // Dirty slots no job allocates on are equally free.
+    let mut usage = vec![0usize; ctx.horizon()];
+    for s in &incumbent.schedules {
+        for (rel, &a) in s.alloc.iter().enumerate() {
+            if let Some(fi) = ctx.rel(s.arrival + rel) {
+                usage[fi] += a;
+            }
+        }
+    }
+    if let Some(idle) = (0..ctx.horizon()).find(|&fi| usage[fi] == 0) {
+        let mut dirty = DirtySet::new(ctx.horizon());
+        dirty.mark(idle);
+        let (fs, stats) =
+            engine::repair_fleet_revision(&jobs, &incumbent.schedules, &dirty, &ctx, 0).unwrap();
+        assert_eq!(fs.schedules, incumbent.schedules);
+        assert_eq!(stats.seeded_jobs, 0, "idle-slot revision must not seed");
+    }
+}
+
+/// The fleet arena's reverse index agrees with a brute-force scan of the
+/// adopted plans on random instances.
+#[test]
+fn fleet_arena_reverse_index_matches_brute_force() {
+    let mut rng = Rng::new(0xF1EE7);
+    for case in 0..30 {
+        let jobs: Vec<JobSpec> = (0..2 + rng.below(5) as usize)
+            .map(|i| {
+                job(
+                    &format!("j{i}"),
+                    rng.below(5) as usize,
+                    rng.range(1.0, 4.0),
+                    rng.range(1.3, 2.5),
+                    1 + rng.below(3) as usize,
+                )
+            })
+            .collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+        let cap = 2 + rng.below(5) as usize;
+        let ctx = PlanContext::uniform(0, cap, random_carbon(&mut rng, end)).unwrap();
+        let Ok(incumbent) = fleet::plan_fleet_greedy(&jobs, &ctx) else {
+            continue;
+        };
+        let mut arena = FleetArena::new(&jobs, &ctx);
+        for (ji, s) in incumbent.schedules.iter().enumerate() {
+            arena.adopt(ji, s);
+        }
+        let mut dirty = DirtySet::new(ctx.horizon());
+        for fi in 0..ctx.horizon() {
+            if rng.chance(0.3) {
+                dirty.mark(fi);
+            }
+        }
+        let expected: Vec<usize> = (0..jobs.len())
+            .filter(|&ji| {
+                let s = &incumbent.schedules[ji];
+                s.alloc.iter().enumerate().any(|(rel, &a)| {
+                    a > 0 && ctx.rel(s.arrival + rel).is_some_and(|fi| dirty.contains(fi))
+                })
+            })
+            .collect();
+        assert_eq!(
+            arena.touched_jobs(&dirty),
+            expected,
+            "case {case}: fleet reverse index diverges from brute force"
+        );
+    }
+}
+
+/// The geo arena's reverse index over the region-major universe agrees
+/// with a brute-force scan of the adopted placements.
+#[test]
+fn geo_arena_reverse_index_matches_brute_force() {
+    let mut rng = Rng::new(0x6E0D);
+    for case in 0..25 {
+        let jobs: Vec<JobSpec> = (0..2 + rng.below(4) as usize)
+            .map(|i| {
+                job(
+                    &format!("j{i}"),
+                    rng.below(4) as usize,
+                    rng.range(1.0, 4.0),
+                    rng.range(1.3, 2.5),
+                    1 + rng.below(3) as usize,
+                )
+            })
+            .collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap();
+        let n_regions = 2 + rng.below(2) as usize;
+        let cap = 2 + rng.below(4) as usize;
+        let geo_ctx = GeoPlanContext::new(
+            (0..n_regions)
+                .map(|i| GeoRegion {
+                    name: format!("r{i}"),
+                    ctx: PlanContext::uniform(0, cap, random_carbon(&mut rng, end)).unwrap(),
+                })
+                .collect(),
+            MigrationPolicy::bounded((case % 3) as usize, 50.0),
+        )
+        .unwrap();
+        let Ok(incumbent) = geo::plan_geo_greedy(&jobs, &geo_ctx) else {
+            continue;
+        };
+        let mut arena = GeoArena::new(&jobs, &geo_ctx);
+        for (ji, gs) in incumbent.schedules.iter().enumerate() {
+            arena.adopt(ji, gs);
+        }
+        let h = geo_ctx.horizon();
+        let mut dirty = DirtySet::new(n_regions * h);
+        for cell in 0..n_regions * h {
+            if rng.chance(0.25) {
+                dirty.mark(cell);
+            }
+        }
+        let expected: Vec<usize> = (0..jobs.len())
+            .filter(|&ji| {
+                let gs = &incumbent.schedules[ji];
+                gs.alloc.iter().zip(&gs.region).enumerate().any(|(rel, (&a, &r))| {
+                    let abs = gs.arrival + rel;
+                    a > 0
+                        && r < n_regions
+                        && abs >= geo_ctx.start()
+                        && abs < geo_ctx.end()
+                        && dirty.contains(r * h + (abs - geo_ctx.start()))
+                })
+            })
+            .collect();
+        assert_eq!(
+            arena.touched_jobs(&dirty),
+            expected,
+            "case {case}: geo reverse index diverges from brute force"
+        );
+    }
+}

@@ -6,7 +6,12 @@
 //!     window, or frozen-past invariants;
 //! (c) repair carbon is within 1.05x of a cold replan on randomized
 //!     instances (the repair portfolio contains a cold candidate on
-//!     small instances, so this bound is structural, not luck).
+//!     small instances, so this bound is structural, not luck);
+//! (d) forecast/capacity revisions (DESIGN.md §13): storms of partial
+//!     revisions preserve frozen prefixes and every invariant, capacity
+//!     shrinks either repair within the new envelope or roll back, and
+//!     empty-diff revisions perform zero candidate seeding (asserted via
+//!     the `seeded_jobs` counter, not just the `NoOp` verdict).
 
 use carbonscaler::scaling::MarginalCapacityCurve;
 use carbonscaler::sched::engine::{self, Event, RepairKind, ScheduleEngine};
@@ -198,6 +203,196 @@ fn arrival_repair_within_5pct_of_cold_replan() {
         );
     }
     assert!(compared >= 20, "only {compared} comparable instances");
+}
+
+/// (d) Revision storms: a barrage of overlapping partial forecast
+/// revisions after time has advanced leaves every frozen prefix
+/// byte-identical and every invariant (capacity, bounds, completion)
+/// intact — the dirty-repair path only ever touches slots `>= now`.
+#[test]
+fn revision_storms_preserve_frozen_prefixes_and_invariants() {
+    let mut rng = Rng::new(505);
+    for case in 0..12 {
+        let jobs: Vec<JobSpec> = (0..4).map(|i| random_job(&mut rng, i, 2)).collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap() + 2;
+        let carbon = random_carbon(&mut rng, end);
+        let mut eng = ScheduleEngine::uniform(0, 5, carbon).unwrap();
+        let mut admitted = Vec::new();
+        for j in &jobs {
+            if eng.handle(Event::JobArrived { spec: j.clone() }).is_ok() {
+                admitted.push(j.name.clone());
+            }
+        }
+        let mid = 2usize;
+        eng.advance_to(mid);
+        for name in eng.due_completions(mid) {
+            eng.handle(Event::JobCompleted { name }).unwrap();
+        }
+        let frozen: Vec<(String, Vec<usize>)> = admitted
+            .iter()
+            .filter_map(|n| {
+                let p = eng.plan_of(n)?;
+                let upto = mid.saturating_sub(p.arrival).min(p.alloc.len());
+                Some((n.clone(), p.alloc[..upto].to_vec()))
+            })
+            .collect();
+
+        for _ in 0..8 {
+            let lo = rng.below(end as u64) as usize;
+            let w = (1 + rng.below(3) as usize).min(end - lo);
+            let vals: Vec<f64> = (0..w).map(|_| rng.range(5.0, 120.0)).collect();
+            // Forecast revisions never change capacity, so the incumbent
+            // passthrough is always a feasible candidate: Ok guaranteed.
+            eng.handle(Event::ForecastRevised { start: lo, carbon: vals })
+                .unwrap_or_else(|e| panic!("case {case}: revision refused: {e}"));
+        }
+
+        for (name, prefix) in &frozen {
+            let p = eng.plan_of(name).unwrap();
+            assert_eq!(
+                &p.alloc[..prefix.len()],
+                prefix.as_slice(),
+                "case {case}: revision storm replanned the frozen past of {name}"
+            );
+        }
+        let specs: Vec<JobSpec> = eng.jobs().iter().map(|j| j.spec.clone()).collect();
+        let fs = FleetSchedule {
+            schedules: eng.jobs().iter().map(|j| j.plan.clone()).collect(),
+        };
+        assert!(fs.respects_capacity(eng.context()), "case {case}");
+        for (spec, s) in specs.iter().zip(&fs.schedules) {
+            assert!(s.respects_bounds(spec), "case {case}: {}", spec.name);
+            assert!(
+                s.completion_hours(spec).is_some(),
+                "case {case}: {} no longer completes after the storm",
+                spec.name
+            );
+        }
+    }
+}
+
+/// (d) Capacity shrinks: the engine either repairs every plan inside
+/// the new envelope or refuses and rolls the splice back, leaving both
+/// the recorded capacity and the committed plans untouched.
+#[test]
+fn capacity_shrink_repairs_within_envelope_or_rolls_back() {
+    let mut rng = Rng::new(606);
+    let mut shrunk = 0usize;
+    for case in 0..20 {
+        let jobs: Vec<JobSpec> = (0..3).map(|i| random_job(&mut rng, i, 1)).collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap() + 1;
+        let carbon = random_carbon(&mut rng, end);
+        let mut eng = ScheduleEngine::uniform(0, 4, carbon).unwrap();
+        for j in &jobs {
+            let _ = eng.handle(Event::JobArrived { spec: j.clone() });
+        }
+        let mut usage = vec![0usize; end];
+        for j in eng.jobs() {
+            for (rel, &a) in j.plan.alloc.iter().enumerate() {
+                let abs = j.plan.arrival + rel;
+                if abs < end {
+                    usage[abs] += a;
+                }
+            }
+        }
+        let Some(fi) = (0..end).max_by_key(|&i| usage[i]).filter(|&i| usage[i] > 1) else {
+            continue;
+        };
+        shrunk += 1;
+        let old_cap = eng.context().capacity.clone();
+        let before: Vec<_> = eng.jobs().iter().map(|j| j.plan.clone()).collect();
+        let specs: Vec<JobSpec> = eng.jobs().iter().map(|j| j.spec.clone()).collect();
+        match eng.handle(Event::CapacityChanged {
+            start: fi,
+            capacity: vec![usage[fi] - 1],
+        }) {
+            Ok(_) => {
+                let fs = FleetSchedule {
+                    schedules: eng.jobs().iter().map(|j| j.plan.clone()).collect(),
+                };
+                assert!(fs.respects_capacity(eng.context()), "case {case}");
+                for (spec, s) in specs.iter().zip(&fs.schedules) {
+                    assert!(
+                        s.completion_hours(spec).is_some(),
+                        "case {case}: {} dropped by shrink repair",
+                        spec.name
+                    );
+                }
+            }
+            Err(_) => {
+                assert_eq!(
+                    eng.context().capacity,
+                    old_cap,
+                    "case {case}: refused shrink must roll the splice back"
+                );
+                let after: Vec<_> = eng.jobs().iter().map(|j| j.plan.clone()).collect();
+                assert_eq!(before, after, "case {case}: refused shrink moved plans");
+            }
+        }
+    }
+    assert!(shrunk >= 10, "only {shrunk} shrinkable instances");
+}
+
+/// (d) Empty-diff revisions are free: re-issuing the incumbent forecast
+/// or growing capacity reports `NoOp` *and* performs zero candidate
+/// seeding — the cumulative `seeded_jobs` counter does not move. A
+/// genuine perturbation on an allocated slot must then seed at least
+/// one candidate pass.
+#[test]
+fn empty_diff_revision_performs_zero_seeding() {
+    let mut rng = Rng::new(707);
+    for case in 0..10 {
+        let jobs: Vec<JobSpec> = (0..3).map(|i| random_job(&mut rng, i, 2)).collect();
+        let end = jobs.iter().map(|j| j.deadline()).max().unwrap() + 2;
+        let carbon = random_carbon(&mut rng, end);
+        let mut eng = ScheduleEngine::uniform(0, 6, carbon.clone()).unwrap();
+        for j in &jobs {
+            let _ = eng.handle(Event::JobArrived { spec: j.clone() });
+        }
+        let seeded0 = eng.stats().seeded_jobs;
+        assert!(seeded0 > 0, "case {case}: admissions seed candidates");
+
+        let s = eng
+            .handle(Event::ForecastRevised {
+                start: 0,
+                carbon: carbon.clone(),
+            })
+            .unwrap();
+        assert_eq!(s.kind, RepairKind::NoOp, "case {case}");
+        assert_eq!(s.seeded_jobs, 0, "case {case}: re-issue seeded candidates");
+        let s = eng
+            .handle(Event::CapacityChanged {
+                start: 0,
+                capacity: vec![100; end],
+            })
+            .unwrap();
+        assert_eq!(s.kind, RepairKind::NoOp, "case {case}");
+        assert_eq!(s.seeded_jobs, 0, "case {case}: growth seeded candidates");
+        assert_eq!(
+            eng.stats().seeded_jobs,
+            seeded0,
+            "case {case}: empty-diff revisions must not seed"
+        );
+
+        // Perturb a slot some plan actually uses: the warm stage seeds
+        // every touched job whatever candidate ends up winning.
+        let used = (0..end).find(|&abs| {
+            eng.jobs()
+                .iter()
+                .any(|j| j.plan.at(abs) > 0 && abs >= eng.now())
+        });
+        if let Some(abs) = used {
+            eng.handle(Event::ForecastRevised {
+                start: abs,
+                carbon: vec![carbon[abs] + 75.0],
+            })
+            .unwrap();
+            assert!(
+                eng.stats().seeded_jobs > seeded0,
+                "case {case}: a real perturbation on an allocated slot must reseed"
+            );
+        }
+    }
 }
 
 /// Warm repair and cold replan coincide exactly when capacity never
