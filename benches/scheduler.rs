@@ -424,6 +424,81 @@ fn main() {
         );
     }
 
+    println!("\n== durability (WAL fsync ingest vs snapshot-free replay, DESIGN.md §14) ==");
+    {
+        // ISSUE 8 acceptance: startup replay of a 1k-event WAL must be
+        // >= 20x faster than the original durable ingest of those same
+        // events. Ingest pays one fsync per batch (sequential submits =>
+        // one-event batches, the worst case); replay re-drives the same
+        // events through the unchanged engine commit path with zero
+        // fsyncs and no reply plumbing. The ratio is gated in CI
+        // (bench_gate.py "ratio_gates") so a regression that starts
+        // fsyncing on the replay path, or batching on the ingest path
+        // without logging, fails loudly.
+        const EVENTS: usize = 1000;
+        const CLUSTER: usize = 512;
+        const HORIZON: usize = 96;
+        let carbon = trace.window(0, HORIZON);
+        let dir = std::env::temp_dir().join(format!("pallas-bench-wal-{}", std::process::id()));
+        let mk_job = |i: usize| {
+            JobBuilder::new(&format!("w{i}"), presets::RESNET18.curve(4))
+                .servers(1, 4)
+                .arrival(i % 90)
+                .length(4.0)
+                .slack_factor(1.5)
+                .build()
+                .unwrap()
+        };
+        let ingest = bench(
+            &format!("wal ingest events={EVENTS}"),
+            1,
+            3,
+            Duration::from_secs(2),
+            || {
+                let _ = std::fs::remove_dir_all(&dir);
+                let pool = ShardPool::start(
+                    ShardPoolConfig::new(1, CLUSTER, carbon.clone())
+                        .durable(&dir)
+                        .compact_every(1_000_000),
+                )
+                .expect("bench durable pool starts");
+                for i in 0..EVENTS {
+                    pool.submit(&format!("t{}", i % 16), "resnet18", mk_job(i))
+                        .expect("bench submit succeeds");
+                }
+                // Kill (not shutdown): leave the WAL exactly as a crash
+                // would, for the replay bench to recover from.
+                pool.kill();
+            },
+        );
+        let replay = bench(
+            &format!("wal replay events={EVENTS}"),
+            1,
+            5,
+            Duration::from_secs(2),
+            || {
+                let pool = ShardPool::start(
+                    ShardPoolConfig::new(1, CLUSTER, carbon.clone())
+                        .durable(&dir)
+                        .compact_every(1_000_000),
+                )
+                .expect("bench recovery starts");
+                let snap = pool.snapshots().remove(0);
+                assert_eq!(
+                    snap.replayed_events, EVENTS,
+                    "replay bench must re-drive the full log"
+                );
+                pool.kill();
+                snap.replayed_events
+            },
+        );
+        let speedup = ingest.mean.as_nanos() as f64 / replay.mean.as_nanos().max(1) as f64;
+        println!("wal replay speedup vs durable ingest: {speedup:.1}x (acceptance: >= 20x)");
+        let _ = std::fs::remove_dir_all(&dir);
+        results.push(ingest);
+        results.push(replay);
+    }
+
     println!("\n== geo engine (multi-region placement, 96-slot windows) ==");
     {
         let (n_jobs, n_regions, cap) = (40usize, 8usize, 16usize);

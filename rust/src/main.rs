@@ -25,9 +25,10 @@ use carbonscaler::sched::{
 };
 use carbonscaler::service::api::{self as service_api, ServiceState};
 use carbonscaler::service::http::{HttpClient, HttpServer};
-use carbonscaler::service::loadgen::{JobTemplate, LoadGen, LoadReport};
+use carbonscaler::service::loadgen::{self, JobTemplate, LoadGen, LoadReport};
 use carbonscaler::service::shard::{ShardPool, ShardPoolConfig};
 use carbonscaler::util::cli::{Args, ArgSpec};
+use carbonscaler::util::json::{self, Json};
 use carbonscaler::util::table::{f, pct, Table};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -410,7 +411,14 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         ArgSpec::opt("seed", "forecast trace seed", "2023"),
         ArgSpec::opt("http-workers", "HTTP worker threads", "8"),
         ArgSpec::opt("secs", "run duration in seconds (0 = until killed)", "0"),
+        ArgSpec::opt("data-dir", "per-shard WAL + snapshot dir", "pallas-data"),
+        ArgSpec::flag("no-wal", "run in-memory only (no durability, no recovery)"),
+        ArgSpec::opt("compact-every", "batches between WAL compactions", "256"),
         ArgSpec::flag("selftest", "drive an in-process load test, then exit"),
+        ArgSpec::flag(
+            "selftest-recover",
+            "run the kill-and-recover durability scenario, then exit",
+        ),
         ArgSpec::opt("rps", "selftest target RPS", "20"),
         ArgSpec::opt("threads", "selftest client threads", "4"),
     ];
@@ -420,13 +428,31 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown region {region_name:?}"))?;
     let horizon = args.usize("horizon")?;
     let trace = synthetic::generate(region, horizon, args.u64("seed")?);
-    let cfg = ShardPoolConfig::new(
-        args.usize("shards")?,
-        args.usize("cluster-size")?,
-        trace.window(0, horizon),
-    );
-    let shards = cfg.shards;
-    let cluster = cfg.cluster_size;
+    let shards = args.usize("shards")?;
+    let cluster = args.usize("cluster-size")?;
+    let no_wal = args.flag("no-wal");
+    let selftest = args.flag("selftest");
+
+    if args.flag("selftest-recover") {
+        return cmd_serve_recover(&args, shards, cluster, trace.window(0, horizon), no_wal);
+    }
+
+    let mut cfg = ShardPoolConfig::new(shards, cluster, trace.window(0, horizon))
+        .compact_every(args.usize("compact-every")?);
+    // The selftest must not inherit (or pollute) a real deployment's
+    // data dir: it gets a throwaway directory, removed on exit.
+    let selftest_dir = (selftest && !no_wal).then(|| ephemeral_data_dir("selftest"));
+    if let Some(dir) = &selftest_dir {
+        let _ = std::fs::remove_dir_all(dir);
+        cfg = cfg.durable(dir);
+    } else if !no_wal {
+        cfg = cfg.durable(args.str("data-dir")?);
+    }
+    let durability = match (&selftest_dir, no_wal) {
+        (_, true) => "in-memory (--no-wal)".to_string(),
+        (Some(dir), _) => format!("durable, throwaway {}", dir.display()),
+        (None, _) => format!("durable, {}", args.str("data-dir")?),
+    };
     let pool = ShardPool::start(cfg)?;
     let state = ServiceState::new(pool);
     let server = HttpServer::bind(
@@ -436,11 +462,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     )?;
     println!(
         "pallas-serve listening on http://{} ({shards} shards, {cluster} servers, \
-         {horizon} h window, forecast {region_name})",
+         {horizon} h window, forecast {region_name}, {durability})",
         server.addr()
     );
 
-    if args.flag("selftest") {
+    if selftest {
         let secs = args.f64("secs")?;
         let duration = Duration::from_secs_f64(if secs > 0.0 { secs } else { 10.0 });
         let rps = args.f64("rps")?;
@@ -491,18 +517,55 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             "revision storm: {storm_applied}/{storm_sent} forecast revisions \
              applied, {dirty} dirty slots repaired"
         );
+        // Snapshot the public counters before teardown so we can
+        // reconcile them against what the clients actually saw.
+        let stats_doc = HttpClient::new(server.addr())
+            .request("GET", "/v1/stats", "")
+            .ok()
+            .and_then(|(status, body)| (status == 200).then_some(body))
+            .and_then(|body| json::parse(&body).ok());
         server.shutdown();
         state.pool().shutdown();
-        if report.errors > 0 {
-            bail!("selftest saw {} transport errors", report.errors);
+        let verdict = (|| -> Result<()> {
+            if report.errors > 0 {
+                bail!("selftest saw {} transport errors", report.errors);
+            }
+            if report.completed() == 0 {
+                bail!("selftest completed zero requests");
+            }
+            if storm_applied == 0 || storm_applied != storm_sent {
+                bail!("revision storm applied {storm_applied}/{storm_sent} revisions");
+            }
+            let doc = stats_doc.ok_or_else(|| anyhow!("selftest could not fetch /v1/stats"))?;
+            let field = |k: &str| {
+                doc.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("/v1/stats is missing {k:?}"))
+            };
+            let (submitted, admitted, rejected) =
+                (field("submitted")?, field("admitted")?, field("rejected")?);
+            if submitted != admitted + rejected
+                || admitted != report.admitted
+                || rejected != report.rejected
+            {
+                bail!(
+                    "counters do not reconcile: /v1/stats says {submitted} submitted = \
+                     {admitted} admitted + {rejected} rejected, but clients saw \
+                     {} admitted + {} rejected",
+                    report.admitted,
+                    report.rejected
+                );
+            }
+            Ok(())
+        })();
+        if let Some(dir) = &selftest_dir {
+            let _ = std::fs::remove_dir_all(dir);
         }
-        if report.completed() == 0 {
-            bail!("selftest completed zero requests");
-        }
-        if storm_applied == 0 || storm_applied != storm_sent {
-            bail!("revision storm applied {storm_applied}/{storm_sent} revisions");
-        }
-        println!("selftest OK: zero errors, sustained {:.1} RPS", report.sustained_rps);
+        verdict?;
+        println!(
+            "selftest OK: zero errors, counters reconcile, sustained {:.1} RPS",
+            report.sustained_rps
+        );
         return Ok(());
     }
 
@@ -516,6 +579,71 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             std::thread::sleep(Duration::from_secs(3600));
         }
     }
+    Ok(())
+}
+
+/// Throwaway per-process data dir for the self-test modes, so they never
+/// inherit or pollute a real deployment's `--data-dir`.
+fn ephemeral_data_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pallas-serve-{tag}-{}", std::process::id()))
+}
+
+/// `serve --selftest-recover`: the kill-and-recover durability scenario
+/// (DESIGN.md §14) against a throwaway data dir. Exits nonzero if any
+/// acknowledged job is lost or recovery is slow — the CI `durability`
+/// job's gate.
+fn cmd_serve_recover(
+    args: &Args,
+    shards: usize,
+    cluster: usize,
+    carbon: Vec<f64>,
+    no_wal: bool,
+) -> Result<()> {
+    if no_wal {
+        bail!("--selftest-recover needs durability; drop --no-wal");
+    }
+    const KILL_AFTER: usize = 100;
+    let threads = args.usize("threads")?;
+    let dir = ephemeral_data_dir("recover");
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "kill-and-recover: {shards} shards, {cluster} servers, {threads} client threads, \
+         kill after {KILL_AFTER} acknowledged jobs ..."
+    );
+    let result = loadgen::kill_and_recover(shards, cluster, carbon, &dir, threads, KILL_AFTER);
+    let _ = std::fs::remove_dir_all(&dir);
+    let r = result?;
+    println!(
+        "acked {} jobs before the kill; recovery replayed {} events from {} WAL bytes \
+         in {:.1} ms; {} lost",
+        r.acked,
+        r.replayed_events,
+        r.wal_bytes,
+        r.recovery.as_secs_f64() * 1e3,
+        r.lost.len()
+    );
+    if r.acked < KILL_AFTER {
+        bail!(
+            "scenario only acknowledged {} of {KILL_AFTER} jobs before its failsafe timeout",
+            r.acked
+        );
+    }
+    if !r.lost.is_empty() {
+        let show: Vec<&str> = r.lost.iter().take(8).map(String::as_str).collect();
+        bail!(
+            "durability violated: {} acknowledged jobs lost after recovery, e.g. {show:?}",
+            r.lost.len()
+        );
+    }
+    let limit = Duration::from_secs(10);
+    if r.recovery > limit {
+        bail!(
+            "recovery took {:.2} s (limit {:.0} s)",
+            r.recovery.as_secs_f64(),
+            limit.as_secs_f64()
+        );
+    }
+    println!("kill-and-recover OK: zero acknowledged jobs lost");
     Ok(())
 }
 

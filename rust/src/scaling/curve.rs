@@ -239,6 +239,13 @@ impl PhasedCurve {
     pub fn n_phases(&self) -> usize {
         self.phases.len()
     }
+
+    /// The raw (work-fraction bound, curve) pairs. Exposed so external
+    /// serializers (the pallas-serve WAL) can round-trip a job's scaling
+    /// profile losslessly.
+    pub fn phases(&self) -> &[(f64, MarginalCapacityCurve)] {
+        &self.phases
+    }
 }
 
 #[cfg(test)]

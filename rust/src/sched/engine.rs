@@ -202,6 +202,21 @@ impl ScheduleEngine {
         Ok(Self::new(PlanContext::uniform(start, cluster_size, carbon)?))
     }
 
+    /// Rebuild an engine from externally persisted state — the
+    /// pallas-serve snapshot path (DESIGN.md §14). The inverse of the
+    /// public accessors (`context`/`now`/`jobs`/`stats`); the caller
+    /// replays any WAL tail through [`ScheduleEngine::handle`]
+    /// afterwards, so a restored engine evolves bit-identically to the
+    /// live one it snapshots.
+    pub fn restore(ctx: PlanContext, now: usize, jobs: Vec<EngineJob>, stats: EngineStats) -> Self {
+        ScheduleEngine {
+            ctx,
+            now,
+            jobs,
+            stats,
+        }
+    }
+
     pub fn now(&self) -> usize {
         self.now
     }

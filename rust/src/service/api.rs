@@ -269,7 +269,10 @@ fn stats(state: &ServiceState) -> HttpResponse {
                 .set("coldReplans", s.cold_replans)
                 .set("noops", s.noops)
                 .set("engineRejected", s.rejected)
-                .set("meanReplanUs", s.mean_replan_us()),
+                .set("meanReplanUs", s.mean_replan_us())
+                .set("walBytes", snap.wal_bytes as usize)
+                .set("lastSnapshotSlot", snap.last_snapshot_seq as usize)
+                .set("replayedEvents", snap.replayed_events),
         );
     }
     HttpResponse::ok(pooled_body(

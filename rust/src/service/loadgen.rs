@@ -19,14 +19,18 @@
 //! (still a *successful* request), anything else as an error. The CI
 //! service smoke asserts zero errors at low offered load.
 
-use crate::service::http::HttpClient;
+use crate::service::api::{self as service_api, ServiceState};
+use crate::service::http::{HttpClient, HttpServer};
+use crate::service::shard::{ShardPool, ShardPoolConfig};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::workload::catalog;
 use anyhow::{bail, Result};
 use std::net::SocketAddr;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Monotonic per-process run counter: combined with the process id it
@@ -237,6 +241,151 @@ impl LoadGen {
             .set("slackFactor", self.template.slack)
             .to_string_compact()
     }
+}
+
+/// Result of the kill-and-recover durability scenario (DESIGN.md §14).
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Jobs acknowledged with HTTP 200 before the kill landed.
+    pub acked: usize,
+    /// Acknowledged jobs missing after recovery. The durability contract
+    /// is that this is empty: a 200 reply implies the admission was
+    /// fsync'd to the WAL first.
+    pub lost: Vec<String>,
+    /// Engine events replayed from the WAL tails across all shards.
+    pub replayed_events: usize,
+    /// Bytes left in the WALs at the kill point (post-compaction tails).
+    pub wal_bytes: u64,
+    /// Wall time of restarting the pool over the crashed data dir
+    /// (snapshot load + WAL replay for every shard).
+    pub recovery: Duration,
+}
+
+/// The kill-and-recover scenario behind `serve --selftest-recover` and
+/// the CI `durability` job: run a durable in-process service under
+/// multi-threaded submit/complete/revise load, tear it down
+/// SIGKILL-equivalently ([`ShardPool::kill`]) mid-stream once
+/// `kill_after` submissions have been acknowledged, restart a pool over
+/// the same data dir, and report every acknowledged job the recovered
+/// state fails to account for.
+pub fn kill_and_recover(
+    shards: usize,
+    cluster: usize,
+    carbon: Vec<f64>,
+    dir: &Path,
+    threads: usize,
+    kill_after: usize,
+) -> Result<RecoveryReport> {
+    let cfg = || {
+        ShardPoolConfig::new(shards, cluster, carbon.clone())
+            .durable(dir)
+            // Small cadence so the scenario exercises snapshot
+            // compaction *and* WAL-tail replay, not just one of them.
+            .compact_every(8)
+    };
+    let pool = ShardPool::start(cfg())?;
+    let state = ServiceState::new(pool);
+    let server = HttpServer::bind(
+        "127.0.0.1:0",
+        threads.max(2),
+        service_api::handler(state.clone()),
+    )?;
+    let addr = server.addr();
+
+    let acked = Mutex::new(Vec::<String>::new());
+    let acked_n = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let carbon_ref = &carbon;
+    std::thread::scope(|scope| {
+        for t in 0..threads.max(1) {
+            let acked = &acked;
+            let acked_n = &acked_n;
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut client = HttpClient::new(addr);
+                let names = catalog::names();
+                let mut k = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    let name = format!("kr-{t}-{k}");
+                    let body = Json::obj()
+                        .set("name", name.as_str())
+                        .set("tenant", format!("tenant-{}", (t * 31 + k) % 16))
+                        .set("workload", names[k % names.len()])
+                        .set("maxServers", 4usize)
+                        .set("lengthHours", 1.0)
+                        .set("slackFactor", 3.0)
+                        .to_string_compact();
+                    match client.request("POST", "/v1/jobs", &body) {
+                        Ok((200, _)) => {
+                            acked.lock().expect("acked poisoned").push(name.clone());
+                            acked_n.fetch_add(1, Ordering::SeqCst);
+                            // Sprinkle completions and forecast revisions
+                            // so every WAL record kind lands in the
+                            // replayed tail, not just arrivals.
+                            if k % 3 == 1 {
+                                let _ = client
+                                    .request("POST", &format!("/v1/jobs/{name}/complete"), "");
+                            }
+                            if t == 0 && k % 5 == 2 {
+                                let n = carbon_ref.len().min(8);
+                                let bump = (k % 3) as f64 * 10.0;
+                                let vals: Vec<Json> = carbon_ref[..n]
+                                    .iter()
+                                    .map(|c| Json::Num(c + bump))
+                                    .collect();
+                                let body = Json::obj()
+                                    .set("start", 0usize)
+                                    .set("carbon", Json::Arr(vals))
+                                    .to_string_compact();
+                                let _ = client.request("POST", "/v1/forecast", &body);
+                            }
+                        }
+                        Ok(_) => {}       // rejected or post-kill 5xx
+                        Err(_) => break,  // connection died: kill landed
+                    }
+                    k += 1;
+                }
+            });
+        }
+        // The killer: wait for enough acknowledgements, then pull the
+        // plug mid-stream. The time bound is a failsafe against a
+        // misconfigured scenario (cluster too small to ever ack
+        // `kill_after` jobs) hanging the CI job.
+        let t_kill = Instant::now();
+        while acked_n.load(Ordering::SeqCst) < kill_after
+            && t_kill.elapsed() < Duration::from_secs(30)
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop.store(true, Ordering::SeqCst);
+        state.pool().kill();
+        server.shutdown();
+    });
+    let acked = acked.into_inner().expect("acked poisoned");
+    let wal_bytes: u64 = state.pool().snapshots().iter().map(|s| s.wal_bytes).sum();
+
+    let t0 = Instant::now();
+    let recovered = ShardPool::start(cfg())?;
+    let recovery = t0.elapsed();
+    let snaps = recovered.snapshots();
+    let replayed_events: usize = snaps.iter().map(|s| s.replayed_events).sum();
+    let known: std::collections::HashSet<&str> = snaps
+        .iter()
+        .flat_map(|s| s.jobs.iter().map(|j| j.name.as_str()))
+        .collect();
+    let lost: Vec<String> = acked
+        .iter()
+        .filter(|n| !known.contains(n.as_str()))
+        .cloned()
+        .collect();
+    recovered.shutdown();
+    Ok(RecoveryReport {
+        acked: acked.len(),
+        lost,
+        replayed_events,
+        wal_bytes,
+        recovery,
+    })
 }
 
 fn merge(per_thread: Vec<ThreadStats>, wall: Duration) -> LoadReport {

@@ -21,17 +21,28 @@
 //! * [`snapshot`] — `Arc`-swapped read-mostly per-shard state so GETs
 //!   never block a planning thread;
 //! * [`api`] — the `/v1/*` JSON routes gluing the two together;
+//! * [`wal`] — per-shard write-ahead event log (length-prefixed,
+//!   checksummed, fsync'd per batch before replies), so a `200` implies
+//!   the admission is durable (DESIGN.md §14);
+//! * [`recover`] — periodic snapshot compaction of a shard's full state
+//!   and the startup snapshot-load + WAL-tail-replay path that rebuilds
+//!   a crashed shard bit-identical to its live predecessor;
 //! * [`loadgen`] — closed-loop multi-threaded load generator (Poisson
 //!   pacing or saturation batches) reporting sustained RPS and
-//!   p50/p99 latency; drives the `service` experiment, the
-//!   `benches/scheduler.rs` shard-scaling cases, and the CI smoke.
+//!   p50/p99 latency, plus the kill-and-recover durability scenario;
+//!   drives the `service` experiment, the `benches/scheduler.rs`
+//!   shard-scaling and WAL cases, and the CI smoke + durability jobs.
 //!
-//! Entry points: `carbonscaler serve` starts a server (`--selftest`
-//! adds an in-process load test and asserts zero errors);
+//! Entry points: `carbonscaler serve` starts a server (durable by
+//! default under `--data-dir`; `--no-wal` opts out; `--selftest` adds
+//! an in-process load test and asserts zero errors;
+//! `--selftest-recover` runs the kill-and-recover scenario);
 //! `carbonscaler loadtest` drives a remote instance.
 
 pub mod api;
 pub mod http;
 pub mod loadgen;
+pub mod recover;
 pub mod shard;
 pub mod snapshot;
+pub mod wal;

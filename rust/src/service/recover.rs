@@ -1,0 +1,475 @@
+//! Snapshot + replay recovery for pallas-serve shards (DESIGN.md §14).
+//!
+//! The WAL (`service::wal`) alone would grow without bound and make
+//! restart cost proportional to lifetime throughput. Compaction fixes
+//! both: every `compact_every` batches the shard worker serializes its
+//! full state — the engine's frozen-past context, incumbent plans and
+//! counters, plus the service-level metadata the engine does not own
+//! (tenant map, terminal ring, cumulative totals) — into a snapshot
+//! file, then truncates the log. Startup is the inverse: load the
+//! snapshot (if any), then replay the WAL tail **through the unchanged
+//! engine event path**, so recovered state is bit-identical to live
+//! state by construction rather than by a parallel reimplementation.
+//!
+//! Crash safety: snapshots are written to a temp file, fsynced, and
+//! renamed over the old one — a crash mid-write leaves the previous
+//! snapshot intact. The snapshot records the WAL sequence it covers; a
+//! crash *between* the rename and the log truncation merely leaves
+//! already-covered records in the log, which replay skips by sequence.
+//! A corrupt snapshot (checksum mismatch) is a hard error, never a
+//! silent fresh start — losing acknowledged state quietly is the one
+//! failure mode this layer exists to rule out.
+
+use crate::sched::engine::{EngineJob, EngineStats, JobState};
+use crate::sched::schedule::Schedule;
+use crate::service::snapshot::JobView;
+use crate::service::wal::{self, checksum, Cur};
+use std::io::{self, Write as _};
+use std::path::Path;
+
+/// Magic + version prefix of a snapshot file.
+const MAGIC: &[u8; 8] = b"PLSNAP01";
+
+/// Everything a shard worker must persist to come back bit-identical:
+/// the engine half (context, clock, jobs, counters) and the service half
+/// (tenant metadata, terminal ring, cumulative and batching counters).
+#[derive(Debug, Clone)]
+pub struct PersistedShard {
+    /// Last WAL sequence number this snapshot covers; replay applies
+    /// only records with a larger sequence.
+    pub seq: u64,
+    // Engine state.
+    pub start: usize,
+    pub capacity: Vec<usize>,
+    pub carbon: Vec<f64>,
+    pub now: usize,
+    pub jobs: Vec<EngineJob>,
+    pub stats: EngineStats,
+    // Service-level state.
+    /// job name → (tenant, workload), sorted by name for deterministic
+    /// bytes.
+    pub meta: Vec<(String, String, String)>,
+    pub terminal: Vec<JobView>,
+    pub completed_total: usize,
+    pub failed_total: usize,
+    pub admitted_carbon_g: f64,
+    pub batches: usize,
+    pub batched_events: usize,
+    pub coalesced: usize,
+    pub dirty_slots: usize,
+}
+
+fn put_stats(buf: &mut Vec<u8>, s: &EngineStats) {
+    wal::put_usize(buf, s.events);
+    wal::put_usize(buf, s.warm_repairs);
+    wal::put_usize(buf, s.escalated_repairs);
+    wal::put_usize(buf, s.cold_replans);
+    wal::put_usize(buf, s.noops);
+    wal::put_usize(buf, s.rejected);
+    // u128 wall-clock tally as two u64 halves.
+    wal::put_u64(buf, (s.replan_nanos >> 64) as u64);
+    wal::put_u64(buf, s.replan_nanos as u64);
+    wal::put_usize(buf, s.replans);
+    wal::put_usize(buf, s.seeded_jobs);
+}
+
+fn get_stats(cur: &mut Cur) -> Option<EngineStats> {
+    let events = cur.usize_()?;
+    let warm_repairs = cur.usize_()?;
+    let escalated_repairs = cur.usize_()?;
+    let cold_replans = cur.usize_()?;
+    let noops = cur.usize_()?;
+    let rejected = cur.usize_()?;
+    let hi = cur.u64()?;
+    let lo = cur.u64()?;
+    let replans = cur.usize_()?;
+    let seeded_jobs = cur.usize_()?;
+    Some(EngineStats {
+        events,
+        warm_repairs,
+        escalated_repairs,
+        cold_replans,
+        noops,
+        rejected,
+        replan_nanos: (u128::from(hi) << 64) | u128::from(lo),
+        replans,
+        seeded_jobs,
+    })
+}
+
+fn put_schedule(buf: &mut Vec<u8>, plan: &Schedule) {
+    wal::put_usize(buf, plan.arrival);
+    wal::put_u32(buf, plan.alloc.len() as u32);
+    for &a in &plan.alloc {
+        wal::put_usize(buf, a);
+    }
+}
+
+fn get_schedule(cur: &mut Cur) -> Option<Schedule> {
+    let arrival = cur.usize_()?;
+    let n = cur.u32()? as usize;
+    let mut alloc = Vec::with_capacity(n);
+    for _ in 0..n {
+        alloc.push(cur.usize_()?);
+    }
+    Some(Schedule { arrival, alloc })
+}
+
+fn state_tag(state: JobState) -> u8 {
+    match state {
+        JobState::Active => 0,
+        JobState::Completed => 1,
+        JobState::Failed => 2,
+    }
+}
+
+fn tag_state(tag: u8) -> Option<JobState> {
+    match tag {
+        0 => Some(JobState::Active),
+        1 => Some(JobState::Completed),
+        2 => Some(JobState::Failed),
+        _ => None,
+    }
+}
+
+fn view_state_tag(state: &str) -> u8 {
+    match state {
+        "active" => 0,
+        "completed" => 1,
+        _ => 2,
+    }
+}
+
+fn tag_view_state(tag: u8) -> Option<&'static str> {
+    match tag {
+        0 => Some("active"),
+        1 => Some("completed"),
+        2 => Some("failed"),
+        _ => None,
+    }
+}
+
+fn put_view(buf: &mut Vec<u8>, v: &JobView) {
+    wal::put_str(buf, &v.name);
+    wal::put_str(buf, &v.tenant);
+    wal::put_str(buf, &v.workload);
+    wal::put_u8(buf, view_state_tag(v.state));
+    wal::put_f64(buf, v.carbon_g);
+    match v.completion_hours {
+        Some(h) => {
+            wal::put_u8(buf, 1);
+            wal::put_f64(buf, h);
+        }
+        None => wal::put_u8(buf, 0),
+    }
+    wal::put_usize(buf, v.arrival);
+    wal::put_u32(buf, v.alloc.len() as u32);
+    for &a in &v.alloc {
+        wal::put_usize(buf, a);
+    }
+}
+
+fn get_view(cur: &mut Cur) -> Option<JobView> {
+    let name = cur.str_()?;
+    let tenant = cur.str_()?;
+    let workload = cur.str_()?;
+    let state = tag_view_state(cur.u8()?)?;
+    let carbon_g = cur.f64()?;
+    let completion_hours = match cur.u8()? {
+        0 => None,
+        1 => Some(cur.f64()?),
+        _ => return None,
+    };
+    let arrival = cur.usize_()?;
+    let n = cur.u32()? as usize;
+    let mut alloc = Vec::with_capacity(n);
+    for _ in 0..n {
+        alloc.push(cur.usize_()?);
+    }
+    Some(JobView {
+        name,
+        tenant,
+        workload,
+        state,
+        carbon_g,
+        completion_hours,
+        arrival,
+        alloc,
+    })
+}
+
+fn encode(shard: &PersistedShard) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4096);
+    wal::put_u64(&mut buf, shard.seq);
+    wal::put_usize(&mut buf, shard.start);
+    wal::put_u32(&mut buf, shard.capacity.len() as u32);
+    for &c in &shard.capacity {
+        wal::put_usize(&mut buf, c);
+    }
+    wal::put_u32(&mut buf, shard.carbon.len() as u32);
+    for &c in &shard.carbon {
+        wal::put_f64(&mut buf, c);
+    }
+    wal::put_usize(&mut buf, shard.now);
+    wal::put_u32(&mut buf, shard.jobs.len() as u32);
+    for j in &shard.jobs {
+        wal::put_spec(&mut buf, &j.spec);
+        put_schedule(&mut buf, &j.plan);
+        wal::put_u8(&mut buf, state_tag(j.state));
+    }
+    put_stats(&mut buf, &shard.stats);
+    wal::put_u32(&mut buf, shard.meta.len() as u32);
+    for (name, tenant, workload) in &shard.meta {
+        wal::put_str(&mut buf, name);
+        wal::put_str(&mut buf, tenant);
+        wal::put_str(&mut buf, workload);
+    }
+    wal::put_u32(&mut buf, shard.terminal.len() as u32);
+    for v in &shard.terminal {
+        put_view(&mut buf, v);
+    }
+    wal::put_usize(&mut buf, shard.completed_total);
+    wal::put_usize(&mut buf, shard.failed_total);
+    wal::put_f64(&mut buf, shard.admitted_carbon_g);
+    wal::put_usize(&mut buf, shard.batches);
+    wal::put_usize(&mut buf, shard.batched_events);
+    wal::put_usize(&mut buf, shard.coalesced);
+    wal::put_usize(&mut buf, shard.dirty_slots);
+    buf
+}
+
+fn decode(payload: &[u8]) -> Option<PersistedShard> {
+    let mut cur = Cur::new(payload);
+    let seq = cur.u64()?;
+    let start = cur.usize_()?;
+    let n = cur.u32()? as usize;
+    let mut capacity = Vec::with_capacity(n);
+    for _ in 0..n {
+        capacity.push(cur.usize_()?);
+    }
+    let n = cur.u32()? as usize;
+    let mut carbon = Vec::with_capacity(n);
+    for _ in 0..n {
+        carbon.push(cur.f64()?);
+    }
+    let now = cur.usize_()?;
+    let n = cur.u32()? as usize;
+    let mut jobs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let spec = wal::get_spec(&mut cur)?;
+        let plan = get_schedule(&mut cur)?;
+        let state = tag_state(cur.u8()?)?;
+        jobs.push(EngineJob { spec, plan, state });
+    }
+    let stats = get_stats(&mut cur)?;
+    let n = cur.u32()? as usize;
+    let mut meta = Vec::with_capacity(n);
+    for _ in 0..n {
+        meta.push((cur.str_()?, cur.str_()?, cur.str_()?));
+    }
+    let n = cur.u32()? as usize;
+    let mut terminal = Vec::with_capacity(n);
+    for _ in 0..n {
+        terminal.push(get_view(&mut cur)?);
+    }
+    let completed_total = cur.usize_()?;
+    let failed_total = cur.usize_()?;
+    let admitted_carbon_g = cur.f64()?;
+    let batches = cur.usize_()?;
+    let batched_events = cur.usize_()?;
+    let coalesced = cur.usize_()?;
+    let dirty_slots = cur.usize_()?;
+    if !cur.done() {
+        return None;
+    }
+    Some(PersistedShard {
+        seq,
+        start,
+        capacity,
+        carbon,
+        now,
+        jobs,
+        stats,
+        meta,
+        terminal,
+        completed_total,
+        failed_total,
+        admitted_carbon_g,
+        batches,
+        batched_events,
+        coalesced,
+        dirty_slots,
+    })
+}
+
+/// Atomically publish a snapshot: temp file, fsync, rename over `path`.
+pub fn write_snapshot(path: &Path, shard: &PersistedShard) -> io::Result<()> {
+    let payload = encode(shard);
+    let mut bytes = Vec::with_capacity(MAGIC.len() + payload.len() + 8);
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&payload);
+    bytes.extend_from_slice(&checksum(&payload).to_le_bytes());
+    let tmp = path.with_extension("snap.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    // Durably record the rename itself where the platform allows opening
+    // a directory (best effort elsewhere).
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Load a snapshot. `Ok(None)` when no snapshot exists yet; corruption
+/// is a hard `Err` (refusing to silently restart from zero).
+pub fn read_snapshot(path: &Path) -> io::Result<Option<PersistedShard>> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let corrupt = |what: &str| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("snapshot {}: {what}", path.display()),
+        )
+    };
+    if bytes.len() < MAGIC.len() + 8 || &bytes[..MAGIC.len()] != MAGIC {
+        return Err(corrupt("bad magic/version"));
+    }
+    let payload = &bytes[MAGIC.len()..bytes.len() - 8];
+    let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if checksum(payload) != sum {
+        return Err(corrupt("checksum mismatch"));
+    }
+    decode(payload).map(Some).ok_or_else(|| corrupt("truncated payload"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::workload::job::JobBuilder;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pallas-snap-test-{}-{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("shard-0.snap")
+    }
+
+    fn sample() -> PersistedShard {
+        let spec = JobBuilder::new("j1", MarginalCapacityCurve::linear(2))
+            .length(2.0)
+            .slack_factor(2.0)
+            .build()
+            .unwrap();
+        PersistedShard {
+            seq: 42,
+            start: 0,
+            capacity: vec![4, 4, 3],
+            carbon: vec![10.0, 0.25, 99.5],
+            now: 1,
+            jobs: vec![EngineJob {
+                spec,
+                plan: Schedule {
+                    arrival: 0,
+                    alloc: vec![2, 0, 1],
+                },
+                state: JobState::Active,
+            }],
+            stats: EngineStats {
+                events: 9,
+                warm_repairs: 3,
+                escalated_repairs: 1,
+                cold_replans: 2,
+                noops: 1,
+                rejected: 2,
+                replan_nanos: u128::from(u64::MAX) + 17,
+                replans: 6,
+                seeded_jobs: 5,
+            },
+            meta: vec![("j1".into(), "acme".into(), "resnet18".into())],
+            terminal: vec![JobView {
+                name: "old".into(),
+                tenant: "acme".into(),
+                workload: "custom".into(),
+                state: "completed",
+                carbon_g: 12.5,
+                completion_hours: Some(3.0),
+                arrival: 0,
+                alloc: vec![1, 1],
+            }],
+            completed_total: 1,
+            failed_total: 0,
+            admitted_carbon_g: 34.0625,
+            batches: 7,
+            batched_events: 11,
+            coalesced: 2,
+            dirty_slots: 4,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_lossless() {
+        let path = tmp("roundtrip");
+        let s = sample();
+        write_snapshot(&path, &s).unwrap();
+        let r = read_snapshot(&path).unwrap().expect("snapshot present");
+        assert_eq!(r.seq, 42);
+        assert_eq!(r.capacity, s.capacity);
+        assert_eq!(r.carbon[1].to_bits(), 0.25f64.to_bits());
+        assert_eq!(r.now, 1);
+        assert_eq!(r.jobs.len(), 1);
+        assert_eq!(r.jobs[0].plan, s.jobs[0].plan);
+        assert_eq!(r.jobs[0].state, JobState::Active);
+        assert_eq!(r.stats.replan_nanos, s.stats.replan_nanos);
+        assert_eq!(r.stats.events, 9);
+        assert_eq!(r.meta, s.meta);
+        assert_eq!(r.terminal[0].state, "completed");
+        assert_eq!(
+            r.admitted_carbon_g.to_bits(),
+            s.admitted_carbon_g.to_bits()
+        );
+        assert_eq!(r.dirty_slots, 4);
+    }
+
+    #[test]
+    fn absent_snapshot_is_none() {
+        assert!(read_snapshot(&tmp("absent")).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_a_hard_error() {
+        let path = tmp("corrupt");
+        write_snapshot(&path, &sample()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x5a;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_snapshot(&path).is_err(), "never silently restart from zero");
+    }
+
+    #[test]
+    fn overwrite_replaces_atomically() {
+        let path = tmp("overwrite");
+        let mut s = sample();
+        write_snapshot(&path, &s).unwrap();
+        s.seq = 99;
+        s.jobs.clear();
+        write_snapshot(&path, &s).unwrap();
+        let r = read_snapshot(&path).unwrap().unwrap();
+        assert_eq!(r.seq, 99);
+        assert!(r.jobs.is_empty());
+        assert!(!path.with_extension("snap.tmp").exists());
+    }
+}

@@ -39,13 +39,16 @@ use crate::sched::dirty::DirtySet;
 use crate::sched::engine::{EngineJob, Event, JobState, RepairKind, ScheduleEngine};
 use crate::sched::fleet::PlanContext;
 use crate::sched::schedule::Schedule;
+use crate::service::recover::{self, PersistedShard};
 use crate::service::snapshot::{JobView, ShardSnapshot, Swap};
+use crate::service::wal::{self, WalArrival, WalRecord, WalWriter};
 use crate::workload::job::JobSpec;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context as _, Result};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -62,6 +65,14 @@ pub struct ShardPoolConfig {
     pub carbon: Vec<f64>,
     /// Most events drained into one batch (bounds per-batch latency).
     pub max_batch: usize,
+    /// Where per-shard WAL + snapshot files live (`shard-N.wal` /
+    /// `shard-N.snap`). `None` runs in-memory only — no durability, no
+    /// recovery (DESIGN.md §14).
+    pub data_dir: Option<PathBuf>,
+    /// Batches between snapshot compactions when durable (each
+    /// compaction serializes the shard's full state and truncates its
+    /// log, bounding both log growth and restart replay time).
+    pub compact_every: usize,
 }
 
 impl ShardPoolConfig {
@@ -71,7 +82,21 @@ impl ShardPoolConfig {
             cluster_size,
             carbon,
             max_batch: 64,
+            data_dir: None,
+            compact_every: 256,
         }
+    }
+
+    /// Enable durability under `dir` (recovering any state found there).
+    pub fn durable(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.data_dir = Some(dir.into());
+        self
+    }
+
+    /// Override the compaction cadence (batches between snapshots).
+    pub fn compact_every(mut self, batches: usize) -> Self {
+        self.compact_every = batches;
+        self
     }
 }
 
@@ -148,13 +173,17 @@ pub struct ShardPool {
     txs: Mutex<Vec<Sender<ShardRequest>>>,
     cells: Vec<Arc<Swap<ShardSnapshot>>>,
     handles: Mutex<Vec<JoinHandle<()>>>,
+    killed: Arc<AtomicBool>,
     submitted: AtomicUsize,
     admitted: Arc<AtomicUsize>,
     rejected: Arc<AtomicUsize>,
 }
 
 impl ShardPool {
-    /// Spawn the shard threads and return the pool.
+    /// Spawn the shard threads and return the pool. With a
+    /// [`ShardPoolConfig::data_dir`] set, each shard first recovers from
+    /// its snapshot + WAL tail (DESIGN.md §14) and publishes the
+    /// recovered state before accepting traffic.
     pub fn start(cfg: ShardPoolConfig) -> Result<ShardPool> {
         if cfg.shards == 0 {
             bail!("pool needs at least one shard");
@@ -172,8 +201,13 @@ impl ShardPool {
         if cfg.max_batch == 0 {
             bail!("max_batch must be >= 1");
         }
+        if let Some(dir) = &cfg.data_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating data dir {}", dir.display()))?;
+        }
         let admitted = Arc::new(AtomicUsize::new(0));
         let rejected = Arc::new(AtomicUsize::new(0));
+        let killed = Arc::new(AtomicBool::new(false));
         let mut txs = Vec::with_capacity(cfg.shards);
         let mut cells = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
@@ -182,7 +216,7 @@ impl ShardPool {
             let ctx = PlanContext::uniform(0, cap, cfg.carbon.clone())?;
             let cell = Arc::new(Swap::new(ShardSnapshot::empty(shard, 0, ctx.capacity.clone())));
             let (tx, rx) = channel();
-            let worker = ShardWorker {
+            let mut worker = ShardWorker {
                 shard,
                 engine: ScheduleEngine::new(ctx),
                 meta: HashMap::new(),
@@ -195,9 +229,21 @@ impl ShardPool {
                 batched_events: 0,
                 coalesced: 0,
                 dirty_slots: 0,
+                durable: None,
+                replayed_events: 0,
+                replaying: false,
+                killed: Arc::clone(&killed),
                 admitted: Arc::clone(&admitted),
                 rejected: Arc::clone(&rejected),
             };
+            if let Some(dir) = &cfg.data_dir {
+                worker
+                    .recover(dir, &cfg)
+                    .with_context(|| format!("recovering shard {shard}"))?;
+                // Recovered state must be visible before the first
+                // request, not after the first batch.
+                worker.publish();
+            }
             let max_batch = cfg.max_batch;
             handles.push(
                 std::thread::Builder::new()
@@ -212,6 +258,7 @@ impl ShardPool {
             txs: Mutex::new(txs),
             cells,
             handles: Mutex::new(handles),
+            killed,
             submitted: AtomicUsize::new(0),
             admitted,
             rejected,
@@ -393,6 +440,22 @@ impl ShardPool {
             let _ = h.join();
         }
     }
+
+    /// SIGKILL-equivalent teardown for the kill-and-recover scenario
+    /// (`service::loadgen`): workers stop at the next batch boundary
+    /// **without** draining queued requests, flushing, or compacting —
+    /// queued-but-unacknowledged requests are dropped (their callers see
+    /// transport errors), and the on-disk state is left exactly as the
+    /// last acknowledged batch synced it. The threads are still joined
+    /// (an in-process "kill" must not leave a worker racing its
+    /// successor for the WAL file), which is why this is equivalent to,
+    /// not literally, SIGKILL; the crash-at-every-record-boundary
+    /// property tests (`rust/tests/wal_replay.rs`) cover the stronger
+    /// mid-write interruptions.
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+        self.shutdown();
+    }
 }
 
 /// Shard `shard`'s share of `total` units under the pool's even
@@ -411,6 +474,15 @@ pub fn planned_carbon(spec: &JobSpec, plan: &Schedule, ctx: &PlanContext) -> f64
     .0
 }
 
+/// Durability sidecar of one shard worker (DESIGN.md §14).
+struct Durable {
+    wal: WalWriter,
+    snap_path: PathBuf,
+    compact_every: usize,
+    batches_since_compact: usize,
+    last_snapshot_seq: u64,
+}
+
 struct ShardWorker {
     shard: usize,
     engine: ScheduleEngine,
@@ -427,6 +499,15 @@ struct ShardWorker {
     coalesced: usize,
     /// Cumulative popcount of the per-batch `DirtySet` unions.
     dirty_slots: usize,
+    /// WAL + snapshot state; `None` runs in-memory only.
+    durable: Option<Durable>,
+    /// Engine events replayed from the WAL tail at startup.
+    replayed_events: usize,
+    /// True while replaying: suppresses the pool-level transport
+    /// counters (replayed admissions were counted by the process that
+    /// acknowledged them).
+    replaying: bool,
+    killed: Arc<AtomicBool>,
     admitted: Arc<AtomicUsize>,
     rejected: Arc<AtomicUsize>,
 }
@@ -445,6 +526,12 @@ impl ShardWorker {
                 Ok(msg) => msg,
                 Err(_) => break, // pool dropped the sender: shut down
             };
+            // `kill()` (SIGKILL-equivalent teardown): stop at the batch
+            // boundary without draining queued requests — their callers
+            // see transport errors, never a lost acknowledgement.
+            if self.killed.load(Ordering::SeqCst) {
+                break;
+            }
             let mut batch = vec![first];
             while batch.len() < max_batch {
                 match rx.try_recv() {
@@ -453,6 +540,7 @@ impl ShardWorker {
                 }
             }
             let replies = self.process_batch(batch);
+            self.maybe_compact();
             self.publish();
             for reply in replies {
                 // A dropped receiver just means the caller gave up.
@@ -471,9 +559,13 @@ impl ShardWorker {
         }
     }
 
+    /// Batch commit ordering (DESIGN.md §14): validate/coalesce → WAL
+    /// append + fsync → apply to the engine → (caller) publish snapshot
+    /// → (caller) reply. A crash before the fsync loses only requests
+    /// nobody was told succeeded; a crash after it replays to the same
+    /// state the replies described.
     fn process_batch(&mut self, batch: Vec<ShardRequest>) -> Vec<DeferredReply> {
-        self.batches += 1;
-        self.batched_events += batch.len();
+        let raw_events = batch.len();
         let batched_with = batch.len() - 1;
         let mut submits = Vec::new();
         let mut completes = Vec::new();
@@ -485,63 +577,77 @@ impl ShardWorker {
                     tenant,
                     workload,
                     reply,
-                } => submits.push((spec, tenant, workload, reply)),
+                } => submits.push((
+                    WalArrival {
+                        spec,
+                        tenant,
+                        workload,
+                    },
+                    reply,
+                )),
                 ShardRequest::Complete { name, reply } => completes.push((name, reply)),
                 ShardRequest::Revise { event, reply } => revisions.push((event, reply)),
             }
         }
         let mut replies = Vec::new();
 
-        // 1. Revisions, coalesced to one repair pass per signal.
-        self.apply_revisions(revisions, &mut replies);
+        // 1. Validate and coalesce revisions into at most one merged
+        // event per signal — no engine mutation yet: merged events must
+        // reach the WAL before they reach the engine.
+        let (merged, coalesced_delta) = self.plan_revisions(revisions, &mut replies);
 
-        // 2. Completions, freeing capacity for the arrivals below; the
+        // 2. WAL: log exactly what will be applied and fsync — the
+        // commit point of the batch.
+        self.log_batch(raw_events, coalesced_delta, &merged, &completes, &submits);
+
+        self.batches += 1;
+        self.batched_events += raw_events;
+        self.coalesced += coalesced_delta;
+
+        // 3. Revisions, one repair pass per signal.
+        for (event, senders) in merged {
+            let verdict = self.commit_revision(event);
+            for reply in senders {
+                replies.push(DeferredReply::Revise(reply, verdict.clone()));
+            }
+        }
+
+        // 4. Completions, freeing capacity for the arrivals below; the
         // departed jobs are then retired into the bounded terminal ring
         // so the engine never grows with lifetime throughput.
-        for (name, reply) in completes {
-            let out = self
-                .engine
-                .handle(Event::JobCompleted { name })
-                .map(|_| ())
-                .map_err(|e| format!("{e:#}"));
-            replies.push(DeferredReply::Complete(reply, out));
+        if !completes.is_empty() {
+            let names: Vec<String> = completes.iter().map(|(n, _)| n.clone()).collect();
+            let outs = self.commit_completions(names);
+            for ((_, reply), out) in completes.into_iter().zip(outs) {
+                replies.push(DeferredReply::Complete(reply, out));
+            }
         }
-        self.retire_terminal();
 
-        // 3. Arrivals, admitted jointly (per-job fallback inside).
+        // 5. Arrivals, admitted jointly (per-job fallback inside).
         if !submits.is_empty() {
-            let specs: Vec<JobSpec> = submits.iter().map(|(s, ..)| s.clone()).collect();
-            let names: Vec<String> = specs.iter().map(|s| s.name.clone()).collect();
-            let results = self.engine.handle_arrivals(specs);
-            for (((_, tenant, workload, reply), name), result) in
-                submits.into_iter().zip(names).zip(results)
-            {
-                let out = match result {
-                    Ok(_) => {
-                        self.meta.insert(name.clone(), (tenant, workload));
-                        self.admitted.fetch_add(1, Ordering::SeqCst);
-                        let outcome = self.outcome_of(&name, batched_with);
-                        self.admitted_carbon_g += outcome.carbon_g;
-                        SubmitResult::Admitted(outcome)
-                    }
-                    Err(e) => {
-                        self.rejected.fetch_add(1, Ordering::SeqCst);
-                        SubmitResult::Rejected(format!("{e:#}"))
-                    }
-                };
+            let (arrivals, senders): (Vec<WalArrival>, Vec<Sender<SubmitResult>>) =
+                submits.into_iter().unzip();
+            let outs = self.commit_arrivals(arrivals, batched_with);
+            for (reply, out) in senders.into_iter().zip(outs) {
                 replies.push(DeferredReply::Submit(reply, out));
             }
         }
         replies
     }
 
-    fn apply_revisions(
-        &mut self,
+    /// Validate every revision in the batch against the service window
+    /// and coalesce the valid ones slot-wise into at most one merged
+    /// event per signal (forecast first, then capacity — the same order
+    /// they are committed and replayed in). Pure with respect to the
+    /// engine; invalid revisions are answered immediately and never
+    /// reach the WAL or the engine.
+    fn plan_revisions(
+        &self,
         revisions: Vec<(Event, Sender<ReviseVerdict>)>,
         replies: &mut Vec<DeferredReply>,
-    ) {
+    ) -> (Vec<(Event, Vec<Sender<ReviseVerdict>>)>, usize) {
         if revisions.is_empty() {
-            return;
+            return (Vec::new(), 0);
         }
         let ctx_start = self.engine.context().start;
         let ctx_end = self.engine.context().end();
@@ -590,48 +696,299 @@ impl ShardWorker {
                 }
             }
         }
+        let mut merged = Vec::new();
+        let mut coalesced = 0;
         if !forecast.is_empty() {
-            self.coalesced += forecast.len() - 1;
-            let merged = merge_forecast(self.engine.context(), &forecast);
+            coalesced += forecast.len() - 1;
+            merged.push((
+                merge_forecast(self.engine.context(), &forecast),
+                forecast_replies,
+            ));
+        }
+        if !capacity.is_empty() {
+            coalesced += capacity.len() - 1;
+            merged.push((
+                merge_capacity(self.engine.context(), &capacity),
+                capacity_replies,
+            ));
+        }
+        (merged, coalesced)
+    }
+
+    /// Append the batch's records and fsync. Panics on I/O failure:
+    /// continuing past a failed append would acknowledge state the log
+    /// does not hold — fail-stop is the only honest WAL behavior. A
+    /// panicked shard drops its reply channels, so in-flight callers see
+    /// transport errors, never false acknowledgements.
+    fn log_batch(
+        &mut self,
+        raw_events: usize,
+        coalesced: usize,
+        merged: &[(Event, Vec<Sender<ReviseVerdict>>)],
+        completes: &[(String, Sender<CompleteVerdict>)],
+        submits: &[(WalArrival, Sender<SubmitResult>)],
+    ) {
+        let Some(d) = self.durable.as_mut() else {
+            return;
+        };
+        let shard = self.shard;
+        let mut append = |rec: &WalRecord| {
+            d.wal.append(rec).unwrap_or_else(|e| {
+                panic!(
+                    "shard {shard}: WAL append failed ({e}); \
+                     refusing to acknowledge unlogged state"
+                )
+            });
+        };
+        append(&WalRecord::BatchStats {
+            raw_events,
+            coalesced,
+        });
+        for (event, _) in merged {
+            append(&WalRecord::Revision(event.clone()));
+        }
+        if !completes.is_empty() {
+            append(&WalRecord::Completions(
+                completes.iter().map(|(n, _)| n.clone()).collect(),
+            ));
+        }
+        if !submits.is_empty() {
+            append(&WalRecord::Arrivals(
+                submits.iter().map(|(a, _)| a.clone()).collect(),
+            ));
+        }
+        d.wal.sync().unwrap_or_else(|e| {
+            panic!(
+                "shard {shard}: WAL fsync failed ({e}); \
+                 refusing to acknowledge unlogged state"
+            )
+        });
+    }
+
+    /// Apply one merged revision: dirty-slot accounting against the
+    /// incumbent (DESIGN.md §13), then the engine repair. Shared verbatim
+    /// by the live path and WAL replay, which is what makes recovered
+    /// counters bit-identical.
+    fn commit_revision(&mut self, event: Event) -> ReviseVerdict {
+        match &event {
             // One DirtySet union per shard per batch (DESIGN.md §13):
-            // the merged slot-wise splice diffed against the incumbent
-            // forecast. This is a subset of the per-revision diffs
-            // unioned — a slot revised away and back within one batch
-            // needs no repair at all.
-            if let Event::ForecastRevised { start, carbon } = &merged {
+            // the merged slot-wise splice diffed against the incumbent.
+            // A slot revised away and back within one batch needs no
+            // repair at all.
+            Event::ForecastRevised { start, carbon } => {
                 let ctx = self.engine.context();
                 let lo = start - ctx.start;
                 let from = self.engine.now().saturating_sub(ctx.start);
                 self.dirty_slots +=
                     DirtySet::from_carbon_diff(&ctx.carbon, carbon, lo, from).count();
             }
-            let out = self
-                .engine
-                .handle(merged)
-                .map(|s| s.kind)
-                .map_err(|e| format!("{e:#}"));
-            for reply in forecast_replies {
-                replies.push(DeferredReply::Revise(reply, out.clone()));
-            }
-        }
-        if !capacity.is_empty() {
-            self.coalesced += capacity.len() - 1;
-            let merged = merge_capacity(self.engine.context(), &capacity);
-            if let Event::CapacityChanged { start, capacity } = &merged {
+            Event::CapacityChanged { start, capacity } => {
                 let ctx = self.engine.context();
                 let lo = start - ctx.start;
                 let from = self.engine.now().saturating_sub(ctx.start);
                 self.dirty_slots +=
                     DirtySet::from_capacity_diff(&ctx.capacity, capacity, lo, from).count();
             }
-            let out = self
-                .engine
-                .handle(merged)
-                .map(|s| s.kind)
-                .map_err(|e| format!("{e:#}"));
-            for reply in capacity_replies {
-                replies.push(DeferredReply::Revise(reply, out.clone()));
+            _ => {}
+        }
+        self.engine
+            .handle(event)
+            .map(|s| s.kind)
+            .map_err(|e| format!("{e:#}"))
+    }
+
+    /// Apply one batch's completions and retire the departed jobs into
+    /// the terminal ring. Shared by the live path and WAL replay.
+    fn commit_completions(&mut self, names: Vec<String>) -> Vec<CompleteVerdict> {
+        let outs: Vec<CompleteVerdict> = names
+            .into_iter()
+            .map(|name| {
+                self.engine
+                    .handle(Event::JobCompleted { name })
+                    .map(|_| ())
+                    .map_err(|e| format!("{e:#}"))
+            })
+            .collect();
+        self.retire_terminal();
+        outs
+    }
+
+    /// Admit one arrival batch jointly. Shared by the live path and WAL
+    /// replay; replay suppresses only the pool-level transport counters
+    /// (the acknowledging process already counted them).
+    fn commit_arrivals(
+        &mut self,
+        arrivals: Vec<WalArrival>,
+        batched_with: usize,
+    ) -> Vec<SubmitResult> {
+        let specs: Vec<JobSpec> = arrivals.iter().map(|a| a.spec.clone()).collect();
+        let results = self.engine.handle_arrivals(specs);
+        arrivals
+            .into_iter()
+            .zip(results)
+            .map(|(arrival, result)| match result {
+                Ok(_) => {
+                    let name = arrival.spec.name;
+                    self.meta
+                        .insert(name.clone(), (arrival.tenant, arrival.workload));
+                    if !self.replaying {
+                        self.admitted.fetch_add(1, Ordering::SeqCst);
+                    }
+                    let outcome = self.outcome_of(&name, batched_with);
+                    self.admitted_carbon_g += outcome.carbon_g;
+                    SubmitResult::Admitted(outcome)
+                }
+                Err(e) => {
+                    if !self.replaying {
+                        self.rejected.fetch_add(1, Ordering::SeqCst);
+                    }
+                    SubmitResult::Rejected(format!("{e:#}"))
+                }
+            })
+            .collect()
+    }
+
+    /// Recover this shard from `dir`: snapshot load, then WAL-tail
+    /// replay through the same `commit_*` methods live traffic uses
+    /// (DESIGN.md §14). Leaves the worker with an open, tail-repaired
+    /// log ready for appends.
+    fn recover(&mut self, dir: &Path, cfg: &ShardPoolConfig) -> Result<()> {
+        let snap_path = dir.join(format!("shard-{}.snap", self.shard));
+        let wal_path = dir.join(format!("shard-{}.wal", self.shard));
+        let mut last_seq = 0u64;
+        if let Some(p) = recover::read_snapshot(&snap_path)? {
+            if p.carbon.len() != cfg.carbon.len() {
+                bail!(
+                    "snapshot horizon {} != configured horizon {} — \
+                     this data dir belongs to a differently-shaped service",
+                    p.carbon.len(),
+                    cfg.carbon.len()
+                );
             }
+            last_seq = p.seq;
+            let ctx = PlanContext::new(p.start, p.capacity, p.carbon)?;
+            self.engine = ScheduleEngine::restore(ctx, p.now, p.jobs, p.stats);
+            self.meta = p.meta.into_iter().map(|(n, t, w)| (n, (t, w))).collect();
+            self.terminal = p.terminal.into();
+            self.completed_total = p.completed_total;
+            self.failed_total = p.failed_total;
+            self.admitted_carbon_g = p.admitted_carbon_g;
+            self.batches = p.batches;
+            self.batched_events = p.batched_events;
+            self.coalesced = p.coalesced;
+            self.dirty_slots = p.dirty_slots;
+        }
+        let scan = wal::scan(&wal_path)?;
+        if scan.truncated {
+            eprintln!(
+                "shard {}: dropping torn/corrupt WAL tail after byte {} — \
+                 replaying only the checksummed prefix",
+                self.shard, scan.valid_len
+            );
+        }
+        let mut max_seq = last_seq;
+        self.replaying = true;
+        for (seq, rec) in scan.records {
+            if seq <= last_seq {
+                // Already covered by the snapshot — a crash landed
+                // between the snapshot publish and the log truncation.
+                continue;
+            }
+            max_seq = seq;
+            self.replayed_events += wal::record_events(&rec);
+            match rec {
+                WalRecord::BatchStats {
+                    raw_events,
+                    coalesced,
+                } => {
+                    self.batches += 1;
+                    self.batched_events += raw_events;
+                    self.coalesced += coalesced;
+                }
+                WalRecord::Revision(event) => {
+                    let _ = self.commit_revision(event);
+                }
+                WalRecord::Completions(names) => {
+                    let _ = self.commit_completions(names);
+                }
+                WalRecord::Arrivals(arrivals) => {
+                    let _ = self.commit_arrivals(arrivals, 0);
+                }
+            }
+        }
+        self.replaying = false;
+        let wal = WalWriter::open(&wal_path, scan.valid_len, max_seq + 1)
+            .with_context(|| format!("opening WAL {}", wal_path.display()))?;
+        self.durable = Some(Durable {
+            wal,
+            snap_path,
+            compact_every: cfg.compact_every.max(1),
+            batches_since_compact: 0,
+            last_snapshot_seq: last_seq,
+        });
+        Ok(())
+    }
+
+    fn maybe_compact(&mut self) {
+        let due = match self.durable.as_mut() {
+            Some(d) => {
+                d.batches_since_compact += 1;
+                d.batches_since_compact >= d.compact_every
+            }
+            None => false,
+        };
+        if due {
+            self.compact();
+        }
+    }
+
+    /// Compaction: serialize full shard state covering every logged
+    /// record, publish it atomically, then truncate the log. Fail-stop
+    /// on I/O errors for the same reason as `log_batch`.
+    fn compact(&mut self) {
+        let Some(d) = self.durable.as_ref() else {
+            return;
+        };
+        let seq = d.wal.next_seq().saturating_sub(1);
+        let snap = self.persisted_state(seq);
+        let shard = self.shard;
+        let d = self.durable.as_mut().expect("durable checked above");
+        recover::write_snapshot(&d.snap_path, &snap).unwrap_or_else(|e| {
+            panic!("shard {shard}: snapshot write failed ({e}); refusing to continue")
+        });
+        d.last_snapshot_seq = seq;
+        d.batches_since_compact = 0;
+        d.wal.reset().unwrap_or_else(|e| {
+            panic!("shard {shard}: WAL truncation after snapshot failed ({e})")
+        });
+    }
+
+    /// Full persistence surface of this shard as of now.
+    fn persisted_state(&self, seq: u64) -> PersistedShard {
+        let ctx = self.engine.context();
+        let mut meta: Vec<(String, String, String)> = self
+            .meta
+            .iter()
+            .map(|(n, (t, w))| (n.clone(), t.clone(), w.clone()))
+            .collect();
+        meta.sort();
+        PersistedShard {
+            seq,
+            start: ctx.start,
+            capacity: ctx.capacity.clone(),
+            carbon: ctx.carbon.clone(),
+            now: self.engine.now(),
+            jobs: self.engine.jobs().to_vec(),
+            stats: self.engine.stats().clone(),
+            meta,
+            terminal: self.terminal.iter().cloned().collect(),
+            completed_total: self.completed_total,
+            failed_total: self.failed_total,
+            admitted_carbon_g: self.admitted_carbon_g,
+            batches: self.batches,
+            batched_events: self.batched_events,
+            coalesced: self.coalesced,
+            dirty_slots: self.dirty_slots,
         }
     }
 
@@ -738,6 +1095,9 @@ impl ShardWorker {
             batched_events: self.batched_events,
             coalesced_revisions: self.coalesced,
             dirty_slots: self.dirty_slots,
+            wal_bytes: self.durable.as_ref().map_or(0, |d| d.wal.bytes()),
+            last_snapshot_seq: self.durable.as_ref().map_or(0, |d| d.last_snapshot_seq),
+            replayed_events: self.replayed_events,
         });
     }
 }
@@ -997,6 +1357,102 @@ mod tests {
         assert_eq!(snap.dirty_slots, 2, "empty diff adds no dirty slots");
         assert_eq!(snap.stats.seeded_jobs, before, "no-op must not reseed");
         p.shutdown();
+    }
+
+    /// Fresh per-test data dir under the system temp dir.
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pallas-shard-test-{}-{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn durable_pool_recovers_acknowledged_state_after_kill() {
+        let dir = tmpdir("recover");
+        let carbon = vec![10.0, 40.0, 20.0, 80.0, 15.0, 60.0];
+        let cfg = || {
+            ShardPoolConfig::new(2, 8, carbon.clone())
+                .durable(&dir)
+                .compact_every(1000) // never compacts: pure WAL replay
+        };
+        let p = ShardPool::start(cfg()).unwrap();
+        for i in 0..4 {
+            let out = p
+                .submit(
+                    &format!("tenant-{i}"),
+                    "custom",
+                    job(&format!("j{i}"), 1.0, 3.0, 1),
+                )
+                .unwrap();
+            assert!(matches!(out, SubmitResult::Admitted(_)));
+        }
+        assert!(p.complete("j0").unwrap());
+        let verdicts = p
+            .revise_all(Event::ForecastRevised {
+                start: 0,
+                carbon: vec![5.0; 6],
+            })
+            .unwrap();
+        assert!(verdicts.iter().all(|v| v.is_ok()), "{verdicts:?}");
+        let before = p.snapshots();
+        p.kill();
+
+        let q = ShardPool::start(cfg()).unwrap();
+        for i in 0..4 {
+            assert!(q.find_job(&format!("j{i}")).is_some(), "j{i} lost by recovery");
+        }
+        let (_, v) = q.find_job("j0").unwrap();
+        assert_eq!(v.state, "completed");
+        // Recovered snapshots match the last published live state
+        // field-for-field (replay runs the same commit path).
+        for (b, a) in before.iter().zip(q.snapshots()) {
+            assert_eq!(b.now, a.now);
+            assert_eq!(b.usage, a.usage);
+            assert_eq!(b.completed_total, a.completed_total);
+            assert_eq!(b.admitted_carbon_g, a.admitted_carbon_g);
+            assert_eq!(b.batches, a.batches);
+            assert_eq!(b.batched_events, a.batched_events);
+            assert_eq!(b.coalesced_revisions, a.coalesced_revisions);
+            assert_eq!(b.dirty_slots, a.dirty_slots);
+            assert_eq!(b.stats.replans, a.stats.replans);
+            assert_eq!(b.stats.events, a.stats.events);
+        }
+        q.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_truncates_the_wal_and_recovery_uses_the_snapshot() {
+        let dir = tmpdir("compact");
+        let carbon = vec![10.0, 40.0, 20.0, 80.0, 15.0, 60.0];
+        let cfg = || {
+            ShardPoolConfig::new(1, 4, carbon.clone())
+                .durable(&dir)
+                .compact_every(1)
+        };
+        let p = ShardPool::start(cfg()).unwrap();
+        for i in 0..3 {
+            let out = p
+                .submit("t", "custom", job(&format!("c{i}"), 1.0, 3.0, 1))
+                .unwrap();
+            assert!(matches!(out, SubmitResult::Admitted(_)));
+        }
+        let snap = &p.snapshots()[0];
+        assert_eq!(snap.wal_bytes, 0, "compact_every=1 truncates every batch");
+        assert!(snap.last_snapshot_seq > 0);
+        p.kill();
+        // Restart recovers purely from the snapshot: nothing to replay.
+        let q = ShardPool::start(cfg()).unwrap();
+        let snap = &q.snapshots()[0];
+        assert_eq!(snap.replayed_events, 0);
+        for i in 0..3 {
+            assert!(q.find_job(&format!("c{i}")).is_some());
+        }
+        q.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

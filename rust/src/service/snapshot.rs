@@ -97,6 +97,15 @@ pub struct ShardSnapshot {
     /// this is the cumulative popcount). A re-issue of the incumbent
     /// forecast adds 0 — the dirty-repair no-op guarantee.
     pub dirty_slots: usize,
+    /// Bytes currently in this shard's write-ahead log (0 when the shard
+    /// runs without durability, DESIGN.md §14).
+    pub wal_bytes: u64,
+    /// Last WAL sequence number covered by a compaction snapshot (0
+    /// before the first compaction).
+    pub last_snapshot_seq: u64,
+    /// Engine events replayed from the WAL tail at startup (0 on a fresh
+    /// start; stays constant for the shard's lifetime after recovery).
+    pub replayed_events: usize,
 }
 
 impl ShardSnapshot {
@@ -118,6 +127,9 @@ impl ShardSnapshot {
             batched_events: 0,
             coalesced_revisions: 0,
             dirty_slots: 0,
+            wal_bytes: 0,
+            last_snapshot_seq: 0,
+            replayed_events: 0,
         }
     }
 

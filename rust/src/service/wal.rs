@@ -1,0 +1,631 @@
+//! Per-shard write-ahead event log (DESIGN.md §14).
+//!
+//! The shard worker (`service::shard`) appends every batch's engine
+//! events here **before** mutating the engine, and fsyncs **before** any
+//! reply is sent — so a `200` from `pallas-serve` means the admission is
+//! durable, not merely in memory. The engine is already event-sourced
+//! (DESIGN.md §10): what gets logged is exactly what the engine applies —
+//! the *merged* post-coalesce revision events, the batch's completion
+//! names, and the full arrival batch including specs the engine will
+//! reject (a rejection still bumps engine counters, so replay must see
+//! it). Replaying the log through the unchanged
+//! [`ScheduleEngine::handle`](crate::sched::engine::ScheduleEngine::handle)
+//! path therefore reconstructs state bit-identical to live operation by
+//! construction (property-tested in `rust/tests/wal_replay.rs`).
+//!
+//! Framing: each record is `[u32 LE payload length][u64 LE FNV-1a
+//! checksum][payload]`; the payload starts with a monotone `u64`
+//! sequence number (snapshots record the sequence they cover, so a crash
+//! between snapshot publish and log truncation never double-applies) and
+//! a kind tag. Floats are persisted as raw IEEE-754 bits
+//! ([`f64::to_bits`]) — the service's JSON layer is decimal-text and
+//! lossy, which is unusable for a log whose whole contract is
+//! bit-identical recovery. A torn tail (partial record at EOF) or a
+//! checksum-corrupt record ends the scan: everything before it replays,
+//! everything from it on is reported truncated and discarded on the next
+//! append — never silently applied.
+
+use crate::sched::engine::Event;
+use crate::scaling::curve::{MarginalCapacityCurve, PhasedCurve};
+use crate::workload::job::JobSpec;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read as _, Seek, SeekFrom, Write as _};
+use std::path::Path;
+
+/// Bytes of framing before each record payload.
+pub const RECORD_HEADER: usize = 12;
+
+/// FNV-1a 64-bit, the repo-idiomatic std-only checksum (fast, and the
+/// threat model is torn writes and bit rot, not adversaries).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One arrival as the shard received it: the spec plus the service-level
+/// metadata (`tenant`, `workload`) the snapshot views join back in.
+#[derive(Debug, Clone)]
+pub struct WalArrival {
+    pub spec: JobSpec,
+    pub tenant: String,
+    pub workload: String,
+}
+
+/// One durable unit in a shard's log.
+#[derive(Debug, Clone)]
+pub enum WalRecord {
+    /// Per-batch telemetry deltas that coalescing makes unrecoverable
+    /// from the event records alone (`batches`, `batched_events`,
+    /// `coalesced_revisions` in the published snapshot stay exact across
+    /// a crash). Logged once per batch, first.
+    BatchStats { raw_events: usize, coalesced: usize },
+    /// A merged (post-coalesce, window-validated) `ForecastRevised` or
+    /// `CapacityChanged` event, exactly as handed to the engine.
+    Revision(Event),
+    /// The batch's completion requests, in arrival order (unknown names
+    /// included — the engine's refusal is itself a counted event).
+    Completions(Vec<String>),
+    /// One admission batch in submit order, including specs the engine
+    /// will reject.
+    Arrivals(Vec<WalArrival>),
+}
+
+const KIND_BATCH_STATS: u8 = 1;
+const KIND_REVISION: u8 = 2;
+const KIND_COMPLETIONS: u8 = 3;
+const KIND_ARRIVALS: u8 = 4;
+
+/// Engine-visible events carried by a record (what `replayedEvents`
+/// counts): revisions and completions count 1 each, arrival batches
+/// their length, telemetry records 0.
+pub fn record_events(rec: &WalRecord) -> usize {
+    match rec {
+        WalRecord::BatchStats { .. } => 0,
+        WalRecord::Revision(_) => 1,
+        WalRecord::Completions(names) => names.len(),
+        WalRecord::Arrivals(arrivals) => arrivals.len(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Byte-level codec (shared with `service::recover` snapshots).
+
+pub(crate) fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over a byte slice. Every getter
+/// returns `None` past the end (or on malformed UTF-8 / impossible
+/// lengths), which the scanners treat as corruption.
+pub(crate) struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    pub(crate) fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|b| b[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub(crate) fn usize_(&mut self) -> Option<usize> {
+        self.u64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub(crate) fn f64(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+
+    pub(crate) fn str_(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).ok()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spec / event payloads.
+
+pub(crate) fn put_spec(buf: &mut Vec<u8>, spec: &JobSpec) {
+    put_str(buf, &spec.name);
+    put_usize(buf, spec.arrival);
+    put_usize(buf, spec.min_servers);
+    put_usize(buf, spec.max_servers);
+    put_f64(buf, spec.length_hours);
+    put_f64(buf, spec.completion_hours);
+    put_f64(buf, spec.power_watts);
+    let phases = spec.curve.phases();
+    put_u32(buf, phases.len() as u32);
+    for (bound, curve) in phases {
+        put_f64(buf, *bound);
+        let mc = curve.marginals();
+        put_u32(buf, mc.len() as u32);
+        for &m in mc {
+            put_f64(buf, m);
+        }
+    }
+}
+
+pub(crate) fn get_spec(cur: &mut Cur) -> Option<JobSpec> {
+    let name = cur.str_()?;
+    let arrival = cur.usize_()?;
+    let min_servers = cur.usize_()?;
+    let max_servers = cur.usize_()?;
+    let length_hours = cur.f64()?;
+    let completion_hours = cur.f64()?;
+    let power_watts = cur.f64()?;
+    let n_phases = cur.u32()? as usize;
+    let mut phases = Vec::with_capacity(n_phases);
+    for _ in 0..n_phases {
+        let bound = cur.f64()?;
+        let n_mc = cur.u32()? as usize;
+        let mut mc = Vec::with_capacity(n_mc);
+        for _ in 0..n_mc {
+            mc.push(cur.f64()?);
+        }
+        // The curve is rebuilt through the same constructor live specs
+        // used, so the derived prefix sums are bit-identical too.
+        phases.push((bound, MarginalCapacityCurve::from_marginals(mc).ok()?));
+    }
+    let curve = PhasedCurve::new(phases).ok()?;
+    Some(JobSpec {
+        name,
+        arrival,
+        min_servers,
+        max_servers,
+        length_hours,
+        completion_hours,
+        curve,
+        power_watts,
+    })
+}
+
+fn put_event(buf: &mut Vec<u8>, event: &Event) -> bool {
+    match event {
+        Event::ForecastRevised { start, carbon } => {
+            put_u8(buf, 0);
+            put_usize(buf, *start);
+            put_u32(buf, carbon.len() as u32);
+            for &c in carbon {
+                put_f64(buf, c);
+            }
+            true
+        }
+        Event::CapacityChanged { start, capacity } => {
+            put_u8(buf, 1);
+            put_usize(buf, *start);
+            put_u32(buf, capacity.len() as u32);
+            for &c in capacity {
+                put_usize(buf, c);
+            }
+            true
+        }
+        // Arrivals and completions have dedicated record kinds; they are
+        // never logged as bare `Revision` payloads.
+        _ => false,
+    }
+}
+
+fn get_event(cur: &mut Cur) -> Option<Event> {
+    match cur.u8()? {
+        0 => {
+            let start = cur.usize_()?;
+            let n = cur.u32()? as usize;
+            let mut carbon = Vec::with_capacity(n);
+            for _ in 0..n {
+                carbon.push(cur.f64()?);
+            }
+            Some(Event::ForecastRevised { start, carbon })
+        }
+        1 => {
+            let start = cur.usize_()?;
+            let n = cur.u32()? as usize;
+            let mut capacity = Vec::with_capacity(n);
+            for _ in 0..n {
+                capacity.push(cur.usize_()?);
+            }
+            Some(Event::CapacityChanged { start, capacity })
+        }
+        _ => None,
+    }
+}
+
+/// Serialize one record payload (sequence number + kind + body).
+fn encode(seq: u64, rec: &WalRecord) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    put_u64(&mut buf, seq);
+    match rec {
+        WalRecord::BatchStats { raw_events, coalesced } => {
+            put_u8(&mut buf, KIND_BATCH_STATS);
+            put_usize(&mut buf, *raw_events);
+            put_usize(&mut buf, *coalesced);
+        }
+        WalRecord::Revision(event) => {
+            put_u8(&mut buf, KIND_REVISION);
+            assert!(put_event(&mut buf, event), "non-revision event in WAL Revision record");
+        }
+        WalRecord::Completions(names) => {
+            put_u8(&mut buf, KIND_COMPLETIONS);
+            put_u32(&mut buf, names.len() as u32);
+            for name in names {
+                put_str(&mut buf, name);
+            }
+        }
+        WalRecord::Arrivals(arrivals) => {
+            put_u8(&mut buf, KIND_ARRIVALS);
+            put_u32(&mut buf, arrivals.len() as u32);
+            for a in arrivals {
+                put_spec(&mut buf, &a.spec);
+                put_str(&mut buf, &a.tenant);
+                put_str(&mut buf, &a.workload);
+            }
+        }
+    }
+    buf
+}
+
+/// Decode one record payload. `None` means corruption (the scanner
+/// truncates from here).
+fn decode(payload: &[u8]) -> Option<(u64, WalRecord)> {
+    let mut cur = Cur::new(payload);
+    let seq = cur.u64()?;
+    let rec = match cur.u8()? {
+        KIND_BATCH_STATS => WalRecord::BatchStats {
+            raw_events: cur.usize_()?,
+            coalesced: cur.usize_()?,
+        },
+        KIND_REVISION => WalRecord::Revision(get_event(&mut cur)?),
+        KIND_COMPLETIONS => {
+            let n = cur.u32()? as usize;
+            let mut names = Vec::with_capacity(n);
+            for _ in 0..n {
+                names.push(cur.str_()?);
+            }
+            WalRecord::Completions(names)
+        }
+        KIND_ARRIVALS => {
+            let n = cur.u32()? as usize;
+            let mut arrivals = Vec::with_capacity(n);
+            for _ in 0..n {
+                let spec = get_spec(&mut cur)?;
+                let tenant = cur.str_()?;
+                let workload = cur.str_()?;
+                arrivals.push(WalArrival {
+                    spec,
+                    tenant,
+                    workload,
+                });
+            }
+            WalRecord::Arrivals(arrivals)
+        }
+        _ => return None,
+    };
+    if !cur.done() {
+        return None; // trailing garbage inside a checksummed frame
+    }
+    Some((seq, rec))
+}
+
+// ---------------------------------------------------------------------
+// Writer.
+
+/// Appender for one shard's log. Records are buffered into the file as
+/// they are appended; [`WalWriter::sync`] makes the batch durable.
+pub struct WalWriter {
+    file: File,
+    bytes: u64,
+    next_seq: u64,
+}
+
+impl WalWriter {
+    /// Open (creating if absent) for appending. `valid_len` is the byte
+    /// length of the valid prefix reported by [`scan`]; anything after it
+    /// (a torn or corrupt tail) is cut off here so the repaired log stays
+    /// contiguous. `next_seq` seeds the sequence counter (one past the
+    /// highest sequence ever written, from the scan + snapshot).
+    pub fn open(path: &Path, valid_len: u64, next_seq: u64) -> io::Result<WalWriter> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)?;
+        file.set_len(valid_len)?;
+        let mut file = file;
+        file.seek(SeekFrom::Start(valid_len))?;
+        Ok(WalWriter {
+            file,
+            bytes: valid_len,
+            next_seq,
+        })
+    }
+
+    /// Append one record (unsynced) and return its sequence number.
+    pub fn append(&mut self, rec: &WalRecord) -> io::Result<u64> {
+        let seq = self.next_seq;
+        let payload = encode(seq, rec);
+        let mut frame = Vec::with_capacity(RECORD_HEADER + payload.len());
+        put_u32(&mut frame, payload.len() as u32);
+        put_u64(&mut frame, checksum(&payload));
+        frame.extend_from_slice(&payload);
+        self.file.write_all(&frame)?;
+        self.next_seq += 1;
+        self.bytes += frame.len() as u64;
+        Ok(seq)
+    }
+
+    /// Make everything appended so far durable (the commit point: replies
+    /// for the batch may be sent only after this returns).
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.file.sync_data()
+    }
+
+    /// Bytes in the log (valid prefix + appends this session).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Sequence the next append will carry.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Drop the whole log after a snapshot has made it redundant
+    /// (compaction). Sequence numbers keep counting — they are global to
+    /// the shard, not per-file.
+    pub fn reset(&mut self) -> io::Result<()> {
+        self.file.set_len(0)?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.bytes = 0;
+        self.file.sync_data()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scanner.
+
+/// Result of scanning a log: the decodable records in order, the byte
+/// length of the valid prefix, and whether a torn/corrupt tail was
+/// dropped to get there.
+pub struct WalScan {
+    pub records: Vec<(u64, WalRecord)>,
+    pub valid_len: u64,
+    pub truncated: bool,
+}
+
+/// Read every valid record from `path`. An absent file is an empty log.
+/// The scan stops at the first torn frame (fewer bytes than the header
+/// or declared length promises) or corrupt record (checksum or payload
+/// decode failure); such tails are *reported*, never applied.
+pub fn scan(path: &Path) -> io::Result<WalScan> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(e),
+    };
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    while bytes.len() - pos >= RECORD_HEADER {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(bytes[pos + 4..pos + 12].try_into().unwrap());
+        let Some(end) = pos.checked_add(RECORD_HEADER).and_then(|p| p.checked_add(len)) else {
+            break;
+        };
+        if end > bytes.len() {
+            break; // torn tail: the frame promises more bytes than exist
+        }
+        let payload = &bytes[pos + RECORD_HEADER..end];
+        if checksum(payload) != sum {
+            break; // corrupt record: truncate from here
+        }
+        let Some(rec) = decode(payload) else {
+            break;
+        };
+        records.push(rec);
+        pos = end;
+    }
+    Ok(WalScan {
+        records,
+        valid_len: pos as u64,
+        truncated: pos < bytes.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "pallas-wal-test-{}-{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("shard-0.wal")
+    }
+
+    fn spec(name: &str) -> JobSpec {
+        crate::workload::job::JobBuilder::new(name, MarginalCapacityCurve::linear(3))
+            .length(2.5)
+            .slack_factor(1.5)
+            .power(420.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_all_record_kinds() {
+        let path = tmp("roundtrip");
+        let mut w = WalWriter::open(&path, 0, 7).unwrap();
+        let records = vec![
+            WalRecord::BatchStats {
+                raw_events: 3,
+                coalesced: 1,
+            },
+            WalRecord::Revision(Event::ForecastRevised {
+                start: 2,
+                carbon: vec![10.5, 0.1, 99.0],
+            }),
+            WalRecord::Revision(Event::CapacityChanged {
+                start: 0,
+                capacity: vec![4, 0, 7],
+            }),
+            WalRecord::Completions(vec!["a".into(), "missing".into()]),
+            WalRecord::Arrivals(vec![WalArrival {
+                spec: spec("j1"),
+                tenant: "acme".into(),
+                workload: "resnet18".into(),
+            }]),
+        ];
+        for r in &records {
+            w.append(r).unwrap();
+        }
+        w.sync().unwrap();
+        let scan = scan(&path).unwrap();
+        assert!(!scan.truncated);
+        assert_eq!(scan.valid_len, w.bytes());
+        assert_eq!(scan.records.len(), records.len());
+        assert_eq!(scan.records[0].0, 7, "seq seeds from open()");
+        assert_eq!(scan.records.last().unwrap().0, 11);
+        match &scan.records[1].1 {
+            WalRecord::Revision(Event::ForecastRevised { start, carbon }) => {
+                assert_eq!(*start, 2);
+                // Bit-exact floats, not decimal-text roundtrips.
+                assert_eq!(carbon[0].to_bits(), 10.5f64.to_bits());
+            }
+            other => panic!("wrong record: {other:?}"),
+        }
+        match &scan.records[4].1 {
+            WalRecord::Arrivals(arrs) => {
+                assert_eq!(arrs[0].spec.name, "j1");
+                assert_eq!(arrs[0].tenant, "acme");
+                assert_eq!(
+                    arrs[0].spec.curve.phases()[0].1.marginals(),
+                    spec("j1").curve.phases()[0].1.marginals()
+                );
+            }
+            other => panic!("wrong record: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn torn_tail_is_detected_and_cut() {
+        let path = tmp("torn");
+        let mut w = WalWriter::open(&path, 0, 0).unwrap();
+        w.append(&WalRecord::Completions(vec!["x".into()])).unwrap();
+        let good = w.bytes();
+        w.append(&WalRecord::Completions(vec!["y".into()])).unwrap();
+        w.sync().unwrap();
+        drop(w);
+        // Tear the second record mid-frame.
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..good as usize + 5]).unwrap();
+        let s = scan(&path).unwrap();
+        assert!(s.truncated);
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.valid_len, good);
+        // Re-opening at the valid prefix repairs the file.
+        let w = WalWriter::open(&path, s.valid_len, 1).unwrap();
+        assert_eq!(w.bytes(), good);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), good);
+    }
+
+    #[test]
+    fn corrupt_record_stops_the_scan() {
+        let path = tmp("corrupt");
+        let mut w = WalWriter::open(&path, 0, 0).unwrap();
+        w.append(&WalRecord::Completions(vec!["x".into()])).unwrap();
+        let good = w.bytes();
+        w.append(&WalRecord::Completions(vec!["y".into()])).unwrap();
+        w.append(&WalRecord::Completions(vec!["z".into()])).unwrap();
+        w.sync().unwrap();
+        drop(w);
+        // Flip one payload byte inside the second record.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let i = good as usize + RECORD_HEADER + 9;
+        bytes[i] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let s = scan(&path).unwrap();
+        assert!(s.truncated, "corruption must not be silently applied");
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.valid_len, good);
+    }
+
+    #[test]
+    fn absent_file_is_an_empty_log() {
+        let path = tmp("absent");
+        let s = scan(&path).unwrap();
+        assert!(s.records.is_empty());
+        assert_eq!(s.valid_len, 0);
+        assert!(!s.truncated);
+    }
+
+    #[test]
+    fn reset_truncates_but_keeps_sequencing() {
+        let path = tmp("reset");
+        let mut w = WalWriter::open(&path, 0, 0).unwrap();
+        w.append(&WalRecord::Completions(vec!["x".into()])).unwrap();
+        w.sync().unwrap();
+        w.reset().unwrap();
+        assert_eq!(w.bytes(), 0);
+        let seq = w
+            .append(&WalRecord::Completions(vec!["y".into()]))
+            .unwrap();
+        w.sync().unwrap();
+        assert_eq!(seq, 1, "sequence survives compaction");
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.records[0].0, 1);
+    }
+}
