@@ -499,6 +499,101 @@ fn main() {
         results.push(replay);
     }
 
+    println!("\n== group commit (durable ingest under concurrent submitters, DESIGN.md §14) ==");
+    {
+        // ISSUE 9 acceptance: with >= 8 concurrent submitters, the
+        // pipelined group commit must ingest >= 3x faster than the
+        // legacy per-batch-fsync ordering (planning thread blocks on
+        // fsync before every reply). The comparison is deliberately
+        // rigged against amortization-by-accident: max_batch is pinned
+        // to 1 so admission batching cannot merge submits into one
+        // record batch — every event is its own planning batch, and in
+        // per-batch mode therefore its own fsync. In group mode the
+        // writer coalesces whatever accumulated during the previous
+        // sync, so up to THREADS closed-loop submitters share each
+        // fsync. mode=none (no WAL) charts the planning-only ceiling.
+        // The 1k group/per-batch ratio is gated in CI (bench_gate.py
+        // "ratio_gates").
+        const THREADS: usize = 8;
+        const CLUSTER: usize = 64;
+        const HORIZON: usize = 24;
+        let carbon = trace.window(0, HORIZON);
+        let dir = std::env::temp_dir().join(format!("pallas-bench-gc-{}", std::process::id()));
+        fn gc_job(t: usize, k: usize) -> JobSpec {
+            JobBuilder::new(&format!("gc-{t}-{k}"), presets::RESNET18.curve(2))
+                .servers(1, 2)
+                .length(1.0)
+                .slack_factor(3.0)
+                .build()
+                .unwrap()
+        }
+        // Closed-loop drive: each submitter completes its previous job
+        // after the next submit, so the active set stays O(THREADS) and
+        // planning cost is flat — the durability path is what's timed.
+        let drive = |pool: &ShardPool, events: usize| {
+            let per_thread = events / THREADS;
+            std::thread::scope(|scope| {
+                for t in 0..THREADS {
+                    scope.spawn(move || {
+                        let mut prev: Option<String> = None;
+                        for k in 0..per_thread {
+                            let out = pool
+                                .submit(&format!("tenant-{t}"), "resnet18", gc_job(t, k))
+                                .expect("bench submit succeeds");
+                            assert!(
+                                matches!(out, carbonscaler::service::shard::SubmitResult::Admitted(_)),
+                                "bench must admit every job"
+                            );
+                            if let Some(p) = prev.take() {
+                                let _ = pool.complete(&p);
+                            }
+                            prev = Some(format!("gc-{t}-{k}"));
+                        }
+                    });
+                }
+            });
+        };
+        for events in [1000usize, 10_000] {
+            let (warmup, iters, case_budget) = if events >= 10_000 {
+                (0, 1, Duration::from_secs(30))
+            } else {
+                (1, 2, Duration::from_secs(4))
+            };
+            for mode in ["per-batch", "group", "none"] {
+                let carbon = carbon.clone();
+                let dir = dir.clone();
+                results.push(bench(
+                    &format!("wal ingest mode={mode} events={events}"),
+                    warmup,
+                    iters,
+                    case_budget,
+                    || {
+                        let _ = std::fs::remove_dir_all(&dir);
+                        let mut cfg = ShardPoolConfig::new(1, CLUSTER, carbon.clone());
+                        cfg.max_batch = 1;
+                        let cfg = match mode {
+                            "per-batch" => cfg.durable(&dir).per_batch_fsync(),
+                            "group" => cfg.durable(&dir),
+                            _ => cfg,
+                        };
+                        let pool = ShardPool::start(cfg).expect("bench pool starts");
+                        drive(&pool, events);
+                        pool.kill();
+                    },
+                ));
+            }
+            let per_batch = &results[results.len() - 3];
+            let group = &results[results.len() - 2];
+            let speedup =
+                per_batch.mean.as_nanos() as f64 / group.mean.as_nanos().max(1) as f64;
+            println!(
+                "group-commit ingest speedup vs per-batch fsync at {events} events, \
+                 {THREADS} submitters: {speedup:.1}x (acceptance: >= 3x at 1k)"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     println!("\n== geo engine (multi-region placement, 96-slot windows) ==");
     {
         let (n_jobs, n_regions, cap) = (40usize, 8usize, 16usize);

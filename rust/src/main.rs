@@ -25,8 +25,9 @@ use carbonscaler::sched::{
 };
 use carbonscaler::service::api::{self as service_api, ServiceState};
 use carbonscaler::service::http::{HttpClient, HttpServer};
-use carbonscaler::service::loadgen::{self, JobTemplate, LoadGen, LoadReport};
+use carbonscaler::service::loadgen::{self, JobTemplate, KillMode, LoadGen, LoadReport};
 use carbonscaler::service::shard::{ShardPool, ShardPoolConfig};
+use carbonscaler::service::wal::GroupCommitOpts;
 use carbonscaler::util::cli::{Args, ArgSpec};
 use carbonscaler::util::json::{self, Json};
 use carbonscaler::util::table::{f, pct, Table};
@@ -414,6 +415,20 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         ArgSpec::opt("data-dir", "per-shard WAL + snapshot dir", "pallas-data"),
         ArgSpec::flag("no-wal", "run in-memory only (no durability, no recovery)"),
         ArgSpec::opt("compact-every", "batches between WAL compactions", "256"),
+        ArgSpec::opt(
+            "group-commit-max-delay",
+            "extra ms the WAL writer may wait to widen a group commit (0 = natural batching only)",
+            "0",
+        ),
+        ArgSpec::opt(
+            "group-commit-max-bytes",
+            "flush a group commit early once this many buffered WAL bytes accumulate",
+            "1048576",
+        ),
+        ArgSpec::flag(
+            "fsync-per-batch",
+            "legacy durability ordering: the planning thread waits for fsync before replying",
+        ),
         ArgSpec::flag("selftest", "drive an in-process load test, then exit"),
         ArgSpec::flag(
             "selftest-recover",
@@ -438,7 +453,14 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     }
 
     let mut cfg = ShardPoolConfig::new(shards, cluster, trace.window(0, horizon))
-        .compact_every(args.usize("compact-every")?);
+        .compact_every(args.usize("compact-every")?)
+        .group_commit(GroupCommitOpts {
+            max_delay: Duration::from_millis(args.u64("group-commit-max-delay")?),
+            max_bytes: args.u64("group-commit-max-bytes")?,
+        });
+    if args.flag("fsync-per-batch") {
+        cfg = cfg.per_batch_fsync();
+    }
     // The selftest must not inherit (or pollute) a real deployment's
     // data dir: it gets a throwaway directory, removed on exit.
     let selftest_dir = (selftest && !no_wal).then(|| ephemeral_data_dir("selftest"));
@@ -589,9 +611,10 @@ fn ephemeral_data_dir(tag: &str) -> PathBuf {
 }
 
 /// `serve --selftest-recover`: the kill-and-recover durability scenario
-/// (DESIGN.md §14) against a throwaway data dir. Exits nonzero if any
-/// acknowledged job is lost or recovery is slow — the CI `durability`
-/// job's gate.
+/// (DESIGN.md §14) against a throwaway data dir, run twice — once
+/// killing at a batch boundary, once mid-group-commit with buffered
+/// records still unsynced. Exits nonzero if any acknowledged job is
+/// lost or recovery is slow — the CI `durability` job's gate.
 fn cmd_serve_recover(
     args: &Args,
     shards: usize,
@@ -604,46 +627,61 @@ fn cmd_serve_recover(
     }
     const KILL_AFTER: usize = 100;
     let threads = args.usize("threads")?;
-    let dir = ephemeral_data_dir("recover");
-    let _ = std::fs::remove_dir_all(&dir);
-    println!(
-        "kill-and-recover: {shards} shards, {cluster} servers, {threads} client threads, \
-         kill after {KILL_AFTER} acknowledged jobs ..."
-    );
-    let result = loadgen::kill_and_recover(shards, cluster, carbon, &dir, threads, KILL_AFTER);
-    let _ = std::fs::remove_dir_all(&dir);
-    let r = result?;
-    println!(
-        "acked {} jobs before the kill; recovery replayed {} events from {} WAL bytes \
-         in {:.1} ms; {} lost",
-        r.acked,
-        r.replayed_events,
-        r.wal_bytes,
-        r.recovery.as_secs_f64() * 1e3,
-        r.lost.len()
-    );
-    if r.acked < KILL_AFTER {
-        bail!(
-            "scenario only acknowledged {} of {KILL_AFTER} jobs before its failsafe timeout",
-            r.acked
+    for (mode, label) in [
+        (KillMode::Boundary, "batch-boundary"),
+        (KillMode::MidCommit, "mid-group-commit"),
+    ] {
+        let dir = ephemeral_data_dir(&format!("recover-{label}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        println!(
+            "kill-and-recover [{label}]: {shards} shards, {cluster} servers, \
+             {threads} client threads, kill after {KILL_AFTER} acknowledged jobs ..."
         );
-    }
-    if !r.lost.is_empty() {
-        let show: Vec<&str> = r.lost.iter().take(8).map(String::as_str).collect();
-        bail!(
-            "durability violated: {} acknowledged jobs lost after recovery, e.g. {show:?}",
+        let result = loadgen::kill_and_recover(
+            shards,
+            cluster,
+            carbon.clone(),
+            &dir,
+            threads,
+            KILL_AFTER,
+            mode,
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = result?;
+        println!(
+            "acked {} jobs before the kill; recovery replayed {} events from {} WAL bytes \
+             in {:.1} ms; {} lost",
+            r.acked,
+            r.replayed_events,
+            r.wal_bytes,
+            r.recovery.as_secs_f64() * 1e3,
             r.lost.len()
         );
+        if r.acked < KILL_AFTER {
+            bail!(
+                "[{label}] scenario only acknowledged {} of {KILL_AFTER} jobs before its \
+                 failsafe timeout",
+                r.acked
+            );
+        }
+        if !r.lost.is_empty() {
+            let show: Vec<&str> = r.lost.iter().take(8).map(String::as_str).collect();
+            bail!(
+                "[{label}] durability violated: {} acknowledged jobs lost after recovery, \
+                 e.g. {show:?}",
+                r.lost.len()
+            );
+        }
+        let limit = Duration::from_secs(10);
+        if r.recovery > limit {
+            bail!(
+                "[{label}] recovery took {:.2} s (limit {:.0} s)",
+                r.recovery.as_secs_f64(),
+                limit.as_secs_f64()
+            );
+        }
+        println!("kill-and-recover [{label}] OK: zero acknowledged jobs lost");
     }
-    let limit = Duration::from_secs(10);
-    if r.recovery > limit {
-        bail!(
-            "recovery took {:.2} s (limit {:.0} s)",
-            r.recovery.as_secs_f64(),
-            limit.as_secs_f64()
-        );
-    }
-    println!("kill-and-recover OK: zero acknowledged jobs lost");
     Ok(())
 }
 

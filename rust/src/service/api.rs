@@ -272,7 +272,11 @@ fn stats(state: &ServiceState) -> HttpResponse {
                 .set("meanReplanUs", s.mean_replan_us())
                 .set("walBytes", snap.wal_bytes as usize)
                 .set("lastSnapshotSlot", snap.last_snapshot_seq as usize)
-                .set("replayedEvents", snap.replayed_events),
+                .set("replayedEvents", snap.replayed_events)
+                .set("groupCommitBatches", snap.group_commit_batches as usize)
+                .set("fsyncs", snap.fsyncs as usize)
+                .set("fsyncsPerSec", snap.fsyncs_per_sec)
+                .set("ackLagMicros", snap.ack_lag_micros as usize),
         );
     }
     HttpResponse::ok(pooled_body(

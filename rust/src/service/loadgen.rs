@@ -243,6 +243,21 @@ impl LoadGen {
     }
 }
 
+/// Where the simulated crash lands relative to the group-commit
+/// pipeline (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KillMode {
+    /// [`ShardPool::kill`]: the writer drains staged records, so the
+    /// log ends at the last processed batch boundary.
+    Boundary,
+    /// [`ShardPool::kill_mid_commit`]: records buffered but not yet
+    /// fsynced are destroyed, as if the process died between `write`
+    /// and `fsync`. Their acks are never released, so the durability
+    /// contract (`200 ⇒ crash-durable`) must still hold — the scenario
+    /// asserts unacked-only loss.
+    MidCommit,
+}
+
 /// Result of the kill-and-recover durability scenario (DESIGN.md §14).
 #[derive(Debug, Clone)]
 pub struct RecoveryReport {
@@ -264,10 +279,10 @@ pub struct RecoveryReport {
 /// The kill-and-recover scenario behind `serve --selftest-recover` and
 /// the CI `durability` job: run a durable in-process service under
 /// multi-threaded submit/complete/revise load, tear it down
-/// SIGKILL-equivalently ([`ShardPool::kill`]) mid-stream once
-/// `kill_after` submissions have been acknowledged, restart a pool over
-/// the same data dir, and report every acknowledged job the recovered
-/// state fails to account for.
+/// SIGKILL-equivalently mid-stream once `kill_after` submissions have
+/// been acknowledged — at a batch boundary or mid-group-commit,
+/// per [`KillMode`] — restart a pool over the same data dir, and report
+/// every acknowledged job the recovered state fails to account for.
 pub fn kill_and_recover(
     shards: usize,
     cluster: usize,
@@ -275,6 +290,7 @@ pub fn kill_and_recover(
     dir: &Path,
     threads: usize,
     kill_after: usize,
+    mode: KillMode,
 ) -> Result<RecoveryReport> {
     let cfg = || {
         ShardPoolConfig::new(shards, cluster, carbon.clone())
@@ -358,7 +374,10 @@ pub fn kill_and_recover(
             std::thread::sleep(Duration::from_millis(1));
         }
         stop.store(true, Ordering::SeqCst);
-        state.pool().kill();
+        match mode {
+            KillMode::Boundary => state.pool().kill(),
+            KillMode::MidCommit => state.pool().kill_mid_commit(),
+        }
         server.shutdown();
     });
     let acked = acked.into_inner().expect("acked poisoned");

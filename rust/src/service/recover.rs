@@ -5,20 +5,30 @@
 //! both: every `compact_every` batches the shard worker serializes its
 //! full state — the engine's frozen-past context, incumbent plans and
 //! counters, plus the service-level metadata the engine does not own
-//! (tenant map, terminal ring, cumulative totals) — into a snapshot
-//! file, then truncates the log. Startup is the inverse: load the
-//! snapshot (if any), then replay the WAL tail **through the unchanged
-//! engine event path**, so recovered state is bit-identical to live
-//! state by construction rather than by a parallel reimplementation.
+//! (tenant map, terminal ring, cumulative totals) — and hands the
+//! by-value [`PersistedShard`] to the shard's WAL writer thread, which
+//! writes the snapshot file and truncates the log *in the background*
+//! (the planning thread never blocks on either). Startup is the
+//! inverse: load the snapshot (if any), then replay the WAL tail
+//! **through the unchanged engine event path**, so recovered state is
+//! bit-identical to live state by construction rather than by a
+//! parallel reimplementation.
 //!
 //! Crash safety: snapshots are written to a temp file, fsynced, and
 //! renamed over the old one — a crash mid-write leaves the previous
-//! snapshot intact. The snapshot records the WAL sequence it covers; a
-//! crash *between* the rename and the log truncation merely leaves
-//! already-covered records in the log, which replay skips by sequence.
-//! A corrupt snapshot (checksum mismatch) is a hard error, never a
-//! silent fresh start — losing acknowledged state quietly is the one
-//! failure mode this layer exists to rule out.
+//! snapshot intact. The snapshot records the WAL sequence it covers
+//! (`seq`), captured on the planning thread when the compaction was
+//! requested; because the writer thread processes its queue in order,
+//! every record with sequence <= `seq` is already in the file (or being
+//! replaced by this very snapshot) by the time the snapshot is written,
+//! and the log reset that follows discards only records the snapshot
+//! covers. A crash *between* the rename and the truncation merely
+//! leaves already-covered records in the log, which replay skips by
+//! sequence (`seq <= snapshot.seq` ⇒ skip) — sequences are monotone
+//! across compactions precisely so this skip is well-defined. A corrupt
+//! snapshot (checksum mismatch) is a hard error, never a silent fresh
+//! start — losing acknowledged state quietly is the one failure mode
+//! this layer exists to rule out.
 
 use crate::sched::engine::{EngineJob, EngineStats, JobState};
 use crate::sched::schedule::Schedule;

@@ -33,7 +33,12 @@
 //! Replies are sent only *after* the shard publishes its post-batch
 //! [`ShardSnapshot`], so a client that saw `admitted` is guaranteed to
 //! find its job in every subsequent read — the consistency contract the
-//! concurrency tests (`rust/tests/service_concurrent.rs`) assert.
+//! concurrency tests (`rust/tests/service_concurrent.rs`) assert. With
+//! durability on, replies are additionally gated on the batch's commit
+//! sequence becoming durable (group commit, DESIGN.md §14): the
+//! planning thread stages records with a per-shard WAL writer thread
+//! and moves on; the writer amortizes one fsync across everything that
+//! accumulated and releases the covered acks.
 
 use crate::sched::dirty::DirtySet;
 use crate::sched::engine::{EngineJob, Event, JobState, RepairKind, ScheduleEngine};
@@ -41,17 +46,18 @@ use crate::sched::fleet::PlanContext;
 use crate::sched::schedule::Schedule;
 use crate::service::recover::{self, PersistedShard};
 use crate::service::snapshot::{JobView, ShardSnapshot, Swap};
-use crate::service::wal::{self, WalArrival, WalRecord, WalWriter};
+use crate::service::wal::{
+    self, GroupCommit, GroupCommitControl, GroupCommitOpts, WalArrival, WalRecord, WalWriter,
+};
 use crate::workload::job::JobSpec;
 use anyhow::{anyhow, bail, Context as _, Result};
-use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, VecDeque};
-use std::hash::{Hash, Hasher};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Configuration for a [`ShardPool`].
 #[derive(Debug, Clone)]
@@ -73,6 +79,14 @@ pub struct ShardPoolConfig {
     /// compaction serializes the shard's full state and truncates its
     /// log, bounding both log growth and restart replay time).
     pub compact_every: usize,
+    /// Group-commit tuning for the per-shard WAL writer thread
+    /// (DESIGN.md §14): accumulation window and byte cap per group.
+    pub group_commit: GroupCommitOpts,
+    /// Legacy PR-8 durability ordering: the planning thread blocks until
+    /// its own batch is fsynced before applying it — one fsync per
+    /// batch, no pipelining. Kept for benchmarking the group-commit win
+    /// (`wal ingest mode=per-batch`) and for bisecting durability bugs.
+    pub per_batch_fsync: bool,
 }
 
 impl ShardPoolConfig {
@@ -84,6 +98,8 @@ impl ShardPoolConfig {
             max_batch: 64,
             data_dir: None,
             compact_every: 256,
+            group_commit: GroupCommitOpts::default(),
+            per_batch_fsync: false,
         }
     }
 
@@ -96,6 +112,19 @@ impl ShardPoolConfig {
     /// Override the compaction cadence (batches between snapshots).
     pub fn compact_every(mut self, batches: usize) -> Self {
         self.compact_every = batches;
+        self
+    }
+
+    /// Override the group-commit knobs (`--group-commit-max-delay` /
+    /// `--group-commit-max-bytes`).
+    pub fn group_commit(mut self, opts: GroupCommitOpts) -> Self {
+        self.group_commit = opts;
+        self
+    }
+
+    /// Fall back to the per-batch-fsync ordering (`--fsync-per-batch`).
+    pub fn per_batch_fsync(mut self) -> Self {
+        self.per_batch_fsync = true;
         self
     }
 }
@@ -174,6 +203,9 @@ pub struct ShardPool {
     cells: Vec<Arc<Swap<ShardSnapshot>>>,
     handles: Mutex<Vec<JoinHandle<()>>>,
     killed: Arc<AtomicBool>,
+    /// Kill handles for the per-shard WAL writer threads (empty for
+    /// in-memory pools) — the mid-group-commit crash simulation.
+    wal_controls: Vec<GroupCommitControl>,
     submitted: AtomicUsize,
     admitted: Arc<AtomicUsize>,
     rejected: Arc<AtomicUsize>,
@@ -211,6 +243,7 @@ impl ShardPool {
         let mut txs = Vec::with_capacity(cfg.shards);
         let mut cells = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
+        let mut wal_controls = Vec::new();
         for shard in 0..cfg.shards {
             let cap = partition_share(cfg.cluster_size, cfg.shards, shard);
             let ctx = PlanContext::uniform(0, cap, cfg.carbon.clone())?;
@@ -232,6 +265,7 @@ impl ShardPool {
                 durable: None,
                 replayed_events: 0,
                 replaying: false,
+                started: Instant::now(),
                 killed: Arc::clone(&killed),
                 admitted: Arc::clone(&admitted),
                 rejected: Arc::clone(&rejected),
@@ -240,6 +274,9 @@ impl ShardPool {
                 worker
                     .recover(dir, &cfg)
                     .with_context(|| format!("recovering shard {shard}"))?;
+                if let Some(d) = &worker.durable {
+                    wal_controls.push(d.gc.control());
+                }
                 // Recovered state must be visible before the first
                 // request, not after the first batch.
                 worker.publish();
@@ -259,6 +296,7 @@ impl ShardPool {
             cells,
             handles: Mutex::new(handles),
             killed,
+            wal_controls,
             submitted: AtomicUsize::new(0),
             admitted,
             rejected,
@@ -269,11 +307,14 @@ impl ShardPool {
         self.shards
     }
 
-    /// Deterministic tenant → shard placement.
+    /// Deterministic tenant → shard placement, stable across toolchain
+    /// and process versions (FNV-1a, the same hash the WAL checksums
+    /// use). Per-shard WAL/snapshot state persists across restarts, so
+    /// placement must too: `DefaultHasher` (SipHash with unspecified
+    /// keys) could silently re-route a tenant away from its durable
+    /// shard on a compiler upgrade (DESIGN.md §14).
     pub fn shard_of(&self, tenant: &str) -> usize {
-        let mut h = DefaultHasher::new();
-        tenant.hash(&mut h);
-        (h.finish() % self.shards as u64) as usize
+        (wal::checksum(tenant.as_bytes()) % self.shards as u64) as usize
     }
 
     fn sender(&self, shard: usize) -> Result<Sender<ShardRequest>> {
@@ -443,18 +484,38 @@ impl ShardPool {
 
     /// SIGKILL-equivalent teardown for the kill-and-recover scenario
     /// (`service::loadgen`): workers stop at the next batch boundary
-    /// **without** draining queued requests, flushing, or compacting —
-    /// queued-but-unacknowledged requests are dropped (their callers see
-    /// transport errors), and the on-disk state is left exactly as the
-    /// last acknowledged batch synced it. The threads are still joined
-    /// (an in-process "kill" must not leave a worker racing its
-    /// successor for the WAL file), which is why this is equivalent to,
-    /// not literally, SIGKILL; the crash-at-every-record-boundary
-    /// property tests (`rust/tests/wal_replay.rs`) cover the stronger
+    /// **without** draining queued requests — those are dropped (their
+    /// callers see transport errors) — while each shard's WAL writer
+    /// drains its already-staged records to disk, so the log ends
+    /// exactly at the last processed batch's boundary (acks still in
+    /// the writer's pipeline may be released on the way out; they are
+    /// durable, so they are honest). The threads are still joined (an
+    /// in-process "kill" must not leave a worker racing its successor
+    /// for the WAL file), which is why this is equivalent to, not
+    /// literally, SIGKILL; [`ShardPool::kill_mid_commit`] and the
+    /// crash-at-every-record-boundary property tests
+    /// (`rust/tests/wal_replay.rs`) cover the harsher mid-commit and
     /// mid-write interruptions.
     pub fn kill(&self) {
         self.killed.store(true, Ordering::SeqCst);
         self.shutdown();
+    }
+
+    /// Crash **mid-group-commit**: first the per-shard WAL writers are
+    /// aborted — frames written but not yet fsynced are torn off the
+    /// file (what a power loss could do) and every queued-but-unreleased
+    /// ack is dropped, so its caller sees a transport error — then the
+    /// planning threads are torn down as in [`ShardPool::kill`]. The
+    /// surviving on-disk state is exactly the durable prefix: strictly
+    /// harsher than `kill()`, which drains the writers at a batch
+    /// boundary. Acknowledged requests are still never lost (they were
+    /// durable before their ack was released); everything in the
+    /// pipeline dies unacknowledged.
+    pub fn kill_mid_commit(&self) {
+        for control in &self.wal_controls {
+            control.abort();
+        }
+        self.kill();
     }
 }
 
@@ -474,13 +535,15 @@ pub fn planned_carbon(spec: &JobSpec, plan: &Schedule, ctx: &PlanContext) -> f64
     .0
 }
 
-/// Durability sidecar of one shard worker (DESIGN.md §14).
+/// Durability sidecar of one shard worker (DESIGN.md §14). The log
+/// itself lives behind the [`GroupCommit`] writer thread — the planning
+/// thread only stages records and queues work; it never touches disk.
 struct Durable {
-    wal: WalWriter,
+    gc: GroupCommit,
     snap_path: PathBuf,
     compact_every: usize,
     batches_since_compact: usize,
-    last_snapshot_seq: u64,
+    per_batch_fsync: bool,
 }
 
 struct ShardWorker {
@@ -507,6 +570,8 @@ struct ShardWorker {
     /// counters (replayed admissions were counted by the process that
     /// acknowledged them).
     replaying: bool,
+    /// Worker birth, the denominator of the published `fsyncsPerSec`.
+    started: Instant,
     killed: Arc<AtomicBool>,
     admitted: Arc<AtomicUsize>,
     rejected: Arc<AtomicUsize>,
@@ -539,9 +604,21 @@ impl ShardWorker {
                     Err(_) => break,
                 }
             }
-            let replies = self.process_batch(batch);
+            let (replies, top_seq) = self.process_batch(batch);
             self.maybe_compact();
             self.publish();
+            self.release(top_seq, replies);
+        }
+    }
+
+    /// Hand the batch's replies out. In-memory pools send immediately;
+    /// durable pools defer the send to the WAL writer thread via
+    /// [`GroupCommit::on_durable`], so no caller sees a `200` before the
+    /// commit sequence covering its batch is durable. Ordering matters:
+    /// this runs *after* `publish()`, preserving the PR-5 contract that
+    /// an acknowledged job is visible to every subsequent read.
+    fn release(&self, top_seq: Option<u64>, replies: Vec<DeferredReply>) {
+        let send_all = move || {
             for reply in replies {
                 // A dropped receiver just means the caller gave up.
                 match reply {
@@ -556,15 +633,22 @@ impl ShardWorker {
                     }
                 }
             }
+        };
+        match (top_seq, self.durable.as_ref()) {
+            (Some(seq), Some(d)) => d.gc.on_durable(seq, Box::new(send_all)),
+            _ => send_all(),
         }
     }
 
-    /// Batch commit ordering (DESIGN.md §14): validate/coalesce → WAL
-    /// append + fsync → apply to the engine → (caller) publish snapshot
-    /// → (caller) reply. A crash before the fsync loses only requests
-    /// nobody was told succeeded; a crash after it replays to the same
-    /// state the replies described.
-    fn process_batch(&mut self, batch: Vec<ShardRequest>) -> Vec<DeferredReply> {
+    /// Batch commit ordering (DESIGN.md §14): validate/coalesce → stage
+    /// records with the WAL writer → apply to the engine → (caller)
+    /// publish snapshot → (caller) release replies once the writer
+    /// reports the batch's top sequence durable. The planning thread
+    /// never fsyncs; a crash before the group's fsync loses only
+    /// requests nobody was told succeeded, and a crash after it replays
+    /// to the same state the replies described. Returns the replies and
+    /// the batch's top staged sequence (`None` when in-memory).
+    fn process_batch(&mut self, batch: Vec<ShardRequest>) -> (Vec<DeferredReply>, Option<u64>) {
         let raw_events = batch.len();
         let batched_with = batch.len() - 1;
         let mut submits = Vec::new();
@@ -596,9 +680,10 @@ impl ShardWorker {
         // reach the WAL before they reach the engine.
         let (merged, coalesced_delta) = self.plan_revisions(revisions, &mut replies);
 
-        // 2. WAL: log exactly what will be applied and fsync — the
-        // commit point of the batch.
-        self.log_batch(raw_events, coalesced_delta, &merged, &completes, &submits);
+        // 2. WAL: stage exactly what will be applied with the writer
+        // thread. The batch's acks are gated on its top sequence
+        // becoming durable; planning continues immediately.
+        let top_seq = self.stage_batch(raw_events, coalesced_delta, &merged, &completes, &submits);
 
         self.batches += 1;
         self.batched_events += raw_events;
@@ -632,7 +717,7 @@ impl ShardWorker {
                 replies.push(DeferredReply::Submit(reply, out));
             }
         }
-        replies
+        (replies, top_seq)
     }
 
     /// Validate every revision in the batch against the service window
@@ -715,54 +800,47 @@ impl ShardWorker {
         (merged, coalesced)
     }
 
-    /// Append the batch's records and fsync. Panics on I/O failure:
-    /// continuing past a failed append would acknowledge state the log
-    /// does not hold — fail-stop is the only honest WAL behavior. A
-    /// panicked shard drops its reply channels, so in-flight callers see
-    /// transport errors, never false acknowledgements.
-    fn log_batch(
+    /// Stage the batch's records with the WAL writer thread and return
+    /// the top sequence (`None` when in-memory). No disk I/O happens
+    /// here; if the writer has fail-stopped, `append_batch` panics this
+    /// thread too — continuing would acknowledge state the log does not
+    /// hold, and a panicked shard drops its reply channels so in-flight
+    /// callers see transport errors, never false acknowledgements.
+    fn stage_batch(
         &mut self,
         raw_events: usize,
         coalesced: usize,
         merged: &[(Event, Vec<Sender<ReviseVerdict>>)],
         completes: &[(String, Sender<CompleteVerdict>)],
         submits: &[(WalArrival, Sender<SubmitResult>)],
-    ) {
-        let Some(d) = self.durable.as_mut() else {
-            return;
-        };
-        let shard = self.shard;
-        let mut append = |rec: &WalRecord| {
-            d.wal.append(rec).unwrap_or_else(|e| {
-                panic!(
-                    "shard {shard}: WAL append failed ({e}); \
-                     refusing to acknowledge unlogged state"
-                )
-            });
-        };
-        append(&WalRecord::BatchStats {
+    ) -> Option<u64> {
+        let d = self.durable.as_ref()?;
+        let mut recs = Vec::with_capacity(3 + merged.len());
+        recs.push(WalRecord::BatchStats {
             raw_events,
             coalesced,
         });
         for (event, _) in merged {
-            append(&WalRecord::Revision(event.clone()));
+            recs.push(WalRecord::Revision(event.clone()));
         }
         if !completes.is_empty() {
-            append(&WalRecord::Completions(
+            recs.push(WalRecord::Completions(
                 completes.iter().map(|(n, _)| n.clone()).collect(),
             ));
         }
         if !submits.is_empty() {
-            append(&WalRecord::Arrivals(
+            recs.push(WalRecord::Arrivals(
                 submits.iter().map(|(a, _)| a.clone()).collect(),
             ));
         }
-        d.wal.sync().unwrap_or_else(|e| {
-            panic!(
-                "shard {shard}: WAL fsync failed ({e}); \
-                 refusing to acknowledge unlogged state"
-            )
-        });
+        let top = d.gc.append_batch(&recs);
+        if d.per_batch_fsync {
+            // Legacy ordering: durable before the engine is touched.
+            // `false` (writer aborted or died) is fine to ignore — the
+            // acks will be dropped in `release`, exactly like a crash.
+            let _ = d.gc.wait_durable(top);
+        }
+        Some(top)
     }
 
     /// Apply one merged revision: dirty-slot accounting against the
@@ -919,12 +997,16 @@ impl ShardWorker {
         self.replaying = false;
         let wal = WalWriter::open(&wal_path, scan.valid_len, max_seq + 1)
             .with_context(|| format!("opening WAL {}", wal_path.display()))?;
+        // Hand the opened log to the writer thread: from here on the
+        // planning thread only stages records and queues work.
+        let gc = GroupCommit::spawn(self.shard, wal, last_seq, cfg.group_commit.clone())
+            .with_context(|| format!("spawning WAL writer for shard {}", self.shard))?;
         self.durable = Some(Durable {
-            wal,
+            gc,
             snap_path,
             compact_every: cfg.compact_every.max(1),
             batches_since_compact: 0,
-            last_snapshot_seq: last_seq,
+            per_batch_fsync: cfg.per_batch_fsync,
         });
         Ok(())
     }
@@ -942,25 +1024,25 @@ impl ShardWorker {
         }
     }
 
-    /// Compaction: serialize full shard state covering every logged
-    /// record, publish it atomically, then truncate the log. Fail-stop
-    /// on I/O errors for the same reason as `log_batch`.
+    /// Compaction: capture full shard state covering every staged record
+    /// (by value, on this thread — the engine is single-threaded), then
+    /// ship the snapshot write to the WAL writer as a durability
+    /// barrier: it lands atomically (tmp+fsync+rename) *after* every
+    /// record ≤ `seq` has been written, and only then is the log
+    /// truncated. The planning thread never blocks on the snapshot I/O;
+    /// writer-side failures fail-stop there for the same reason as
+    /// `stage_batch`.
     fn compact(&mut self) {
         let Some(d) = self.durable.as_ref() else {
             return;
         };
-        let seq = d.wal.next_seq().saturating_sub(1);
+        let seq = d.gc.last_seq();
         let snap = self.persisted_state(seq);
-        let shard = self.shard;
         let d = self.durable.as_mut().expect("durable checked above");
-        recover::write_snapshot(&d.snap_path, &snap).unwrap_or_else(|e| {
-            panic!("shard {shard}: snapshot write failed ({e}); refusing to continue")
-        });
-        d.last_snapshot_seq = seq;
         d.batches_since_compact = 0;
-        d.wal.reset().unwrap_or_else(|e| {
-            panic!("shard {shard}: WAL truncation after snapshot failed ({e})")
-        });
+        let path = d.snap_path.clone();
+        d.gc
+            .request_compact(seq, Box::new(move || recover::write_snapshot(&path, &snap)));
     }
 
     /// Full persistence surface of this shard as of now.
@@ -1064,6 +1146,7 @@ impl ShardWorker {
     }
 
     fn publish(&self) {
+        let dv = self.durable.as_ref().map(|d| d.gc.view());
         let ctx = self.engine.context();
         let mut usage = vec![0usize; ctx.horizon()];
         for j in self.engine.jobs() {
@@ -1095,9 +1178,21 @@ impl ShardWorker {
             batched_events: self.batched_events,
             coalesced_revisions: self.coalesced,
             dirty_slots: self.dirty_slots,
-            wal_bytes: self.durable.as_ref().map_or(0, |d| d.wal.bytes()),
-            last_snapshot_seq: self.durable.as_ref().map_or(0, |d| d.last_snapshot_seq),
+            wal_bytes: dv.as_ref().map_or(0, |v| v.logical_bytes),
+            last_snapshot_seq: dv.as_ref().map_or(0, |v| v.last_snapshot_seq),
             replayed_events: self.replayed_events,
+            group_commit_batches: dv.as_ref().map_or(0, |v| v.committed_batches),
+            fsyncs: dv.as_ref().map_or(0, |v| v.fsyncs),
+            fsyncs_per_sec: dv.as_ref().map_or(0.0, |v| {
+                v.fsyncs as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+            }),
+            ack_lag_micros: dv.as_ref().map_or(0, |v| {
+                if v.ack_releases == 0 {
+                    0
+                } else {
+                    v.ack_lag_micros / v.ack_releases
+                }
+            }),
         });
     }
 }
@@ -1451,6 +1546,83 @@ mod tests {
         for i in 0..3 {
             assert!(q.find_job(&format!("c{i}")).is_some());
         }
+        q.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn placement_is_stable_fnv_not_default_hasher() {
+        // Per-shard durable state pins tenants to shards across process
+        // and toolchain versions, so placement must be a *specified*
+        // hash: FNV-1a over the tenant bytes, mod shard count.
+        let p = pool(4, 8);
+        for tenant in ["tenant-a", "t", "acme-corp", ""] {
+            assert_eq!(
+                p.shard_of(tenant),
+                (wal::checksum(tenant.as_bytes()) % 4) as usize,
+                "{tenant:?}"
+            );
+        }
+        p.shutdown();
+    }
+
+    #[test]
+    fn mid_commit_kill_preserves_every_acknowledged_job() {
+        let dir = tmpdir("mid-commit");
+        let carbon = vec![10.0, 40.0, 20.0, 80.0, 15.0, 60.0];
+        let cfg = || {
+            ShardPoolConfig::new(2, 8, carbon.clone())
+                .durable(&dir)
+                .compact_every(1000)
+        };
+        let p = ShardPool::start(cfg()).unwrap();
+        for i in 0..4 {
+            let out = p
+                .submit(
+                    &format!("tenant-{i}"),
+                    "custom",
+                    job(&format!("m{i}"), 1.0, 3.0, 1),
+                )
+                .unwrap();
+            assert!(matches!(out, SubmitResult::Admitted(_)));
+        }
+        // Abort the writers first (torn unsynced tail, dropped pipeline
+        // acks), then tear the planning threads down.
+        p.kill_mid_commit();
+        let q = ShardPool::start(cfg()).unwrap();
+        for i in 0..4 {
+            assert!(
+                q.find_job(&format!("m{i}")).is_some(),
+                "acked m{i} lost by a mid-commit crash"
+            );
+        }
+        q.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn per_batch_fsync_mode_still_recovers_acknowledged_state() {
+        let dir = tmpdir("per-batch");
+        let carbon = vec![10.0, 40.0, 20.0, 80.0, 15.0, 60.0];
+        let cfg = || {
+            ShardPoolConfig::new(1, 4, carbon.clone())
+                .durable(&dir)
+                .compact_every(1000)
+                .per_batch_fsync()
+        };
+        let p = ShardPool::start(cfg()).unwrap();
+        for i in 0..3 {
+            let out = p
+                .submit("t", "custom", job(&format!("pb{i}"), 1.0, 3.0, 1))
+                .unwrap();
+            assert!(matches!(out, SubmitResult::Admitted(_)));
+        }
+        p.kill();
+        let q = ShardPool::start(cfg()).unwrap();
+        for i in 0..3 {
+            assert!(q.find_job(&format!("pb{i}")).is_some());
+        }
+        assert!(q.snapshots()[0].replayed_events > 0);
         q.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -106,6 +106,18 @@ pub struct ShardSnapshot {
     /// Engine events replayed from the WAL tail at startup (0 on a fresh
     /// start; stays constant for the shard's lifetime after recovery).
     pub replayed_events: usize,
+    /// Planning batches committed by the WAL writer thread (group
+    /// commit, DESIGN.md §14). Divide by `fsyncs` for the amortization
+    /// the group commit bought (1.0 ⇒ no pipelining happened).
+    pub group_commit_batches: u64,
+    /// fsyncs issued by the WAL writer thread over the shard's lifetime.
+    pub fsyncs: u64,
+    /// `fsyncs` per wall-clock second since the shard worker started.
+    pub fsyncs_per_sec: f64,
+    /// Mean microseconds between an ack entering the writer's pipeline
+    /// and its covering commit sequence becoming durable (the latency
+    /// the durability gate adds to a reply).
+    pub ack_lag_micros: u64,
 }
 
 impl ShardSnapshot {
@@ -130,6 +142,10 @@ impl ShardSnapshot {
             wal_bytes: 0,
             last_snapshot_seq: 0,
             replayed_events: 0,
+            group_commit_batches: 0,
+            fsyncs: 0,
+            fsyncs_per_sec: 0.0,
+            ack_lag_micros: 0,
         }
     }
 

@@ -1,9 +1,14 @@
-//! Per-shard write-ahead event log (DESIGN.md §14).
+//! Per-shard write-ahead event log with pipelined group commit
+//! (DESIGN.md §14).
 //!
-//! The shard worker (`service::shard`) appends every batch's engine
-//! events here **before** mutating the engine, and fsyncs **before** any
-//! reply is sent — so a `200` from `pallas-serve` means the admission is
-//! durable, not merely in memory. The engine is already event-sourced
+//! The shard worker (`service::shard`) stages every batch's engine
+//! events here **before** mutating the engine; a dedicated per-shard
+//! writer thread ([`GroupCommit`]) owns the file, coalesces everything
+//! that accumulated during the previous `fsync` into one write+sync,
+//! and releases replies only once the commit sequence covering their
+//! batch is durable — so a `200` from `pallas-serve` still means the
+//! admission is durable, not merely in memory, while the planning
+//! thread never blocks on disk. The engine is already event-sourced
 //! (DESIGN.md §10): what gets logged is exactly what the engine applies —
 //! the *merged* post-coalesce revision events, the batch's completion
 //! names, and the full arrival batch including specs the engine will
@@ -31,6 +36,8 @@ use crate::workload::job::JobSpec;
 use std::fs::{File, OpenOptions};
 use std::io::{self, Read as _, Seek, SeekFrom, Write as _};
 use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Bytes of framing before each record payload.
 pub const RECORD_HEADER: usize = 12;
@@ -280,6 +287,14 @@ fn get_event(cur: &mut Cur) -> Option<Event> {
     }
 }
 
+/// Append one fully framed record (`[len][checksum][payload]`) to `buf`.
+fn frame_into(buf: &mut Vec<u8>, seq: u64, rec: &WalRecord) {
+    let payload = encode(seq, rec);
+    put_u32(buf, payload.len() as u32);
+    put_u64(buf, checksum(&payload));
+    buf.extend_from_slice(&payload);
+}
+
 /// Serialize one record payload (sequence number + kind + body).
 fn encode(seq: u64, rec: &WalRecord) -> Vec<u8> {
     let mut buf = Vec::with_capacity(64);
@@ -393,15 +408,31 @@ impl WalWriter {
     /// Append one record (unsynced) and return its sequence number.
     pub fn append(&mut self, rec: &WalRecord) -> io::Result<u64> {
         let seq = self.next_seq;
-        let payload = encode(seq, rec);
-        let mut frame = Vec::with_capacity(RECORD_HEADER + payload.len());
-        put_u32(&mut frame, payload.len() as u32);
-        put_u64(&mut frame, checksum(&payload));
-        frame.extend_from_slice(&payload);
+        let mut frame = Vec::with_capacity(RECORD_HEADER + 64);
+        frame_into(&mut frame, seq, rec);
         self.file.write_all(&frame)?;
         self.next_seq += 1;
         self.bytes += frame.len() as u64;
         Ok(seq)
+    }
+
+    /// Append pre-framed bytes (length + checksum + payload, encoded by
+    /// the group-commit staging path). Sequencing is owned by the
+    /// caller; only the byte count is tracked here.
+    pub fn write_frames(&mut self, frames: &[u8]) -> io::Result<()> {
+        self.file.write_all(frames)?;
+        self.bytes += frames.len() as u64;
+        Ok(())
+    }
+
+    /// Cut the file back to `len` bytes and persist the cut — the
+    /// simulated mid-commit crash: written-but-unsynced frames are
+    /// exactly what a power loss is allowed to destroy.
+    pub fn truncate_to(&mut self, len: u64) -> io::Result<()> {
+        self.file.set_len(len)?;
+        self.file.seek(SeekFrom::Start(len))?;
+        self.bytes = len;
+        self.file.sync_data()
     }
 
     /// Make everything appended so far durable (the commit point: replies
@@ -429,6 +460,521 @@ impl WalWriter {
         self.bytes = 0;
         self.file.sync_data()
     }
+}
+
+// ---------------------------------------------------------------------
+// Group commit: a per-shard writer thread owning the log.
+
+/// Tuning knobs for the group-commit writer (`--group-commit-*` flags).
+#[derive(Debug, Clone)]
+pub struct GroupCommitOpts {
+    /// Extra time the writer may wait, after finding work, for more
+    /// records to join the group. Zero (the default) relies on natural
+    /// batching only — whatever piles up during the previous fsync
+    /// commits as one group — which adds no latency to a sequential
+    /// caller.
+    pub max_delay: Duration,
+    /// Stop accumulating early once this many queued bytes are waiting.
+    pub max_bytes: u64,
+}
+
+impl Default for GroupCommitOpts {
+    fn default() -> Self {
+        GroupCommitOpts {
+            max_delay: Duration::ZERO,
+            max_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Callback released once its covering commit sequence is durable
+/// (the deferred reply send in `service::shard`).
+pub type OnDurable = Box<dyn FnOnce() + Send>;
+
+/// A snapshot write shipped to the writer thread (`recover::
+/// write_snapshot` over a by-value engine checkpoint: tmp+fsync+rename,
+/// atomic and itself durable).
+pub type SnapshotWrite = Box<dyn FnOnce() -> io::Result<()> + Send>;
+
+/// One unit of writer-thread work, processed strictly in queue order.
+enum Item {
+    /// Pre-framed record bytes staged by the planning thread.
+    Frames {
+        bytes: Vec<u8>,
+        top_seq: u64,
+        batches: u64,
+    },
+    /// Release an ack once everything up to `top_seq` is durable.
+    Release {
+        top_seq: u64,
+        queued: Instant,
+        release: OnDurable,
+    },
+    /// Durability barrier: write the snapshot covering `seq`, then drop
+    /// the log prefix it makes redundant.
+    Compact { seq: u64, write: SnapshotWrite },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// Normal operation.
+    Run,
+    /// Shutdown: commit everything queued, then exit (the `kill()` /
+    /// drop path — the on-disk log ends at a batch boundary).
+    Drain,
+    /// Simulated mid-commit crash: destroy written-but-unsynced bytes
+    /// and drop queued work, acks included.
+    Abort,
+    /// The writer hit an I/O error and fail-stopped.
+    Dead,
+}
+
+/// State shared between the planning thread and the writer thread. The
+/// mutex is held only for queue handoff and watermark reads — all disk
+/// I/O happens outside it.
+struct GroupState {
+    queue: Vec<Item>,
+    queued_bytes: u64,
+    mode: Mode,
+    /// Sequence the next staged record will carry (owned here, not by
+    /// the `WalWriter`, because staging happens off the writer thread).
+    next_seq: u64,
+    /// Highest sequence known durable (fsynced log or covering
+    /// snapshot). Acks for a batch are released only once this reaches
+    /// the batch's top sequence.
+    durable_seq: u64,
+    /// Bytes of log that exist logically (staged + written), the number
+    /// published as `walBytes`. Reset optimistically when a compaction
+    /// is requested: the barrier semantics guarantee the writer
+    /// truncates before committing anything staged afterwards.
+    logical_bytes: u64,
+    last_snapshot_seq: u64,
+    fsyncs: u64,
+    committed_batches: u64,
+    ack_releases: u64,
+    ack_lag_micros: u64,
+}
+
+struct GroupShared {
+    state: Mutex<GroupState>,
+    /// Signals the writer: work queued, or mode changed.
+    work: Condvar,
+    /// Signals producers: durable watermark advanced, or mode changed.
+    done: Condvar,
+}
+
+/// Telemetry counters surfaced in `/v1/stats` (via the shard snapshot).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupCommitView {
+    pub logical_bytes: u64,
+    pub durable_seq: u64,
+    pub last_snapshot_seq: u64,
+    pub fsyncs: u64,
+    pub committed_batches: u64,
+    pub ack_releases: u64,
+    pub ack_lag_micros: u64,
+}
+
+/// Handle to kill the writer mid-commit from outside the shard thread
+/// (`ShardPool::kill_mid_commit`). Cloneable so the pool can keep one
+/// per shard while the worker owns the [`GroupCommit`].
+#[derive(Clone)]
+pub struct GroupCommitControl {
+    shared: Arc<GroupShared>,
+}
+
+impl GroupCommitControl {
+    /// Simulate a crash mid-group-commit: frames written but not yet
+    /// fsynced are torn off the file (what a power loss could do),
+    /// queued work — including un-released acks — is dropped, and every
+    /// waiter is woken. Callers whose replies die here observe
+    /// transport errors, never a `200`.
+    pub fn abort(&self) {
+        let mut st = self.shared.state.lock().expect("wal group state poisoned");
+        if st.mode == Mode::Run || st.mode == Mode::Drain {
+            st.mode = Mode::Abort;
+        }
+        drop(st);
+        self.shared.work.notify_all();
+        self.shared.done.notify_all();
+    }
+}
+
+/// The group-commit front end held by a shard worker. Staging
+/// ([`append_batch`](GroupCommit::append_batch)) is a lock-push-notify;
+/// the writer thread does every write, fsync, snapshot, and truncation.
+/// Dropping it drains: all staged records are committed before the
+/// writer exits, so a clean shutdown leaves the log at a batch
+/// boundary.
+pub struct GroupCommit {
+    shard: usize,
+    shared: Arc<GroupShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GroupCommit {
+    /// Take ownership of an opened log (positioned at its valid tail)
+    /// and start the writer thread. `last_snapshot_seq` seeds the
+    /// published compaction watermark from recovery.
+    pub fn spawn(
+        shard: usize,
+        wal: WalWriter,
+        last_snapshot_seq: u64,
+        opts: GroupCommitOpts,
+    ) -> io::Result<GroupCommit> {
+        let next_seq = wal.next_seq();
+        let shared = Arc::new(GroupShared {
+            state: Mutex::new(GroupState {
+                queue: Vec::new(),
+                queued_bytes: 0,
+                mode: Mode::Run,
+                next_seq,
+                // Everything the recovered writer position covers is
+                // durable by construction (scan + snapshot survived the
+                // restart that produced it).
+                durable_seq: next_seq.saturating_sub(1),
+                logical_bytes: wal.bytes(),
+                last_snapshot_seq,
+                fsyncs: 0,
+                committed_batches: 0,
+                ack_releases: 0,
+                ack_lag_micros: 0,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let thread_shared = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name(format!("wal-{shard}"))
+            .spawn(move || run_writer(&thread_shared, wal, &opts, shard))?;
+        Ok(GroupCommit {
+            shard,
+            shared,
+            handle: Some(handle),
+        })
+    }
+
+    /// Stage one batch's records (assigning their sequence numbers) and
+    /// return the top sequence. Returns immediately — no disk I/O on
+    /// this thread. Panics if the writer fail-stopped: acknowledging
+    /// unlogged state is the one thing this module must never do.
+    pub fn append_batch(&self, recs: &[WalRecord]) -> u64 {
+        assert!(!recs.is_empty(), "empty WAL batch");
+        let mut st = self.shared.state.lock().expect("wal group state poisoned");
+        match st.mode {
+            Mode::Dead => panic!(
+                "shard {}: WAL writer is dead; refusing to acknowledge unlogged state",
+                self.shard
+            ),
+            Mode::Abort => {
+                // Crash already simulated: keep the sequence math moving
+                // so the planning thread can finish its batch, but log
+                // nothing — the acks die in `on_durable`.
+                let top = st.next_seq + recs.len() as u64 - 1;
+                st.next_seq = top + 1;
+                return top;
+            }
+            Mode::Run | Mode::Drain => {}
+        }
+        let mut bytes = Vec::with_capacity(64 * recs.len());
+        let mut top = st.next_seq;
+        for rec in recs {
+            top = st.next_seq;
+            st.next_seq += 1;
+            frame_into(&mut bytes, top, rec);
+        }
+        st.logical_bytes += bytes.len() as u64;
+        st.queued_bytes += bytes.len() as u64;
+        st.queue.push(Item::Frames {
+            bytes,
+            top_seq: top,
+            batches: 1,
+        });
+        drop(st);
+        self.shared.work.notify_one();
+        top
+    }
+
+    /// Queue `release` to run once everything up to `top_seq` is
+    /// durable. On an aborted (simulated-crash) or dead writer the
+    /// closure is dropped instead — its reply senders disconnect and
+    /// the callers see transport errors.
+    pub fn on_durable(&self, top_seq: u64, release: OnDurable) {
+        let mut st = self.shared.state.lock().expect("wal group state poisoned");
+        match st.mode {
+            Mode::Abort | Mode::Dead => return,
+            Mode::Run | Mode::Drain => {}
+        }
+        st.queue.push(Item::Release {
+            top_seq,
+            queued: Instant::now(),
+            release,
+        });
+        drop(st);
+        self.shared.work.notify_one();
+    }
+
+    /// Queue a compaction barrier: `write` persists a snapshot covering
+    /// `seq` (atomically), after which the writer drops the log prefix.
+    /// The snapshot itself is the durability for sequences ≤ `seq`, so
+    /// no log fsync precedes the truncation.
+    pub fn request_compact(&self, seq: u64, write: SnapshotWrite) {
+        let mut st = self.shared.state.lock().expect("wal group state poisoned");
+        match st.mode {
+            Mode::Abort | Mode::Dead => return,
+            Mode::Run | Mode::Drain => {}
+        }
+        // Optimistic accounting: everything staged so far is ≤ seq and
+        // will be truncated at the barrier; anything staged later
+        // starts the new log.
+        st.logical_bytes = 0;
+        st.last_snapshot_seq = st.last_snapshot_seq.max(seq);
+        st.queue.push(Item::Compact { seq, write });
+        drop(st);
+        self.shared.work.notify_one();
+    }
+
+    /// Highest sequence assigned so far (the engine state a planning
+    /// thread sees is exactly the prefix up to this).
+    pub fn last_seq(&self) -> u64 {
+        let st = self.shared.state.lock().expect("wal group state poisoned");
+        st.next_seq.saturating_sub(1)
+    }
+
+    /// Block until everything up to `seq` is durable (the legacy
+    /// per-batch-fsync mode). Returns `false` if the writer aborted or
+    /// died instead — the caller must not treat the batch as durable.
+    pub fn wait_durable(&self, seq: u64) -> bool {
+        let mut st = self.shared.state.lock().expect("wal group state poisoned");
+        loop {
+            if st.durable_seq >= seq {
+                return true;
+            }
+            match st.mode {
+                Mode::Abort | Mode::Dead => return false,
+                Mode::Run | Mode::Drain => {}
+            }
+            st = self.shared.done.wait(st).expect("wal group state poisoned");
+        }
+    }
+
+    /// Current counters for the published shard snapshot.
+    pub fn view(&self) -> GroupCommitView {
+        let st = self.shared.state.lock().expect("wal group state poisoned");
+        GroupCommitView {
+            logical_bytes: st.logical_bytes,
+            durable_seq: st.durable_seq,
+            last_snapshot_seq: st.last_snapshot_seq,
+            fsyncs: st.fsyncs,
+            committed_batches: st.committed_batches,
+            ack_releases: st.ack_releases,
+            ack_lag_micros: st.ack_lag_micros,
+        }
+    }
+
+    /// A cloneable kill handle for the pool (usable off-thread).
+    pub fn control(&self) -> GroupCommitControl {
+        GroupCommitControl {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+impl Drop for GroupCommit {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("wal group state poisoned");
+            if st.mode == Mode::Run {
+                st.mode = Mode::Drain;
+            }
+        }
+        self.shared.work.notify_all();
+        if let Some(handle) = self.handle.take() {
+            // A Dead writer already panicked with its own message; the
+            // shard thread is unwinding right behind it.
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The writer thread: take whatever accumulated, write it as one group,
+/// fsync once, advance the durable watermark, release the covered acks.
+/// Compaction barriers run inline here — never on a planning thread.
+fn run_writer(shared: &Arc<GroupShared>, mut wal: WalWriter, opts: &GroupCommitOpts, shard: usize) {
+    // Byte length of the durable prefix of the file — what a real crash
+    // (or the simulated one in `abort`) is guaranteed to preserve.
+    let mut synced_len = wal.bytes();
+    loop {
+        let items = {
+            let mut st = shared.state.lock().expect("wal group state poisoned");
+            loop {
+                if st.mode == Mode::Abort {
+                    abort_cleanup(&mut st, &mut wal, synced_len, shared);
+                    return;
+                }
+                if !st.queue.is_empty() {
+                    break;
+                }
+                if st.mode == Mode::Drain {
+                    shared.done.notify_all();
+                    return;
+                }
+                st = shared.work.wait(st).expect("wal group state poisoned");
+            }
+            // Optional accumulation window: trade ack latency for
+            // bigger groups.
+            if opts.max_delay > Duration::ZERO {
+                let deadline = Instant::now() + opts.max_delay;
+                while st.mode == Mode::Run && st.queued_bytes < opts.max_bytes {
+                    let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                        break;
+                    };
+                    let (guard, timeout) = shared
+                        .work
+                        .wait_timeout(st, left)
+                        .expect("wal group state poisoned");
+                    st = guard;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+                if st.mode == Mode::Abort {
+                    abort_cleanup(&mut st, &mut wal, synced_len, shared);
+                    return;
+                }
+            }
+            st.queued_bytes = 0;
+            std::mem::take(&mut st.queue)
+        };
+
+        let mut releases: Vec<(u64, Instant, OnDurable)> = Vec::new();
+        let mut pending_batches = 0u64; // written, awaiting a sync point
+        let mut committed = 0u64;
+        let mut fsyncs = 0u64;
+        let mut top_written = 0u64;
+        let mut dirty = false; // unsynced bytes in the log
+        for item in items {
+            match item {
+                Item::Frames {
+                    bytes,
+                    top_seq,
+                    batches,
+                } => {
+                    if let Err(e) = wal.write_frames(&bytes) {
+                        die(shared, shard, "append", &e);
+                    }
+                    dirty = true;
+                    top_written = top_seq;
+                    pending_batches += batches;
+                }
+                Item::Release {
+                    top_seq,
+                    queued,
+                    release,
+                } => releases.push((top_seq, queued, release)),
+                Item::Compact { seq, write } => {
+                    // Durability barrier. Queue order means every record
+                    // with sequence ≤ seq has been written by now; the
+                    // snapshot (tmp + fsync + rename) covers them all by
+                    // itself, so the log — including bytes written but
+                    // not yet synced in this very cycle — is dropped
+                    // without a log fsync first. A crash between the
+                    // rename and the truncation replays a log whose
+                    // records are all ≤ seq; recovery skips them via the
+                    // snapshot's sequence horizon.
+                    if let Err(e) = write() {
+                        die(shared, shard, "snapshot write", &e);
+                    }
+                    if let Err(e) = wal.reset() {
+                        die(shared, shard, "post-snapshot truncate", &e);
+                    }
+                    synced_len = 0;
+                    dirty = false;
+                    committed += pending_batches;
+                    pending_batches = 0;
+                    publish_durable(shared, seq, 0, 0);
+                    release_covered(shared, &mut releases, seq);
+                }
+            }
+        }
+        if dirty {
+            if let Err(e) = wal.sync() {
+                die(shared, shard, "fsync", &e);
+            }
+            synced_len = wal.bytes();
+            fsyncs += 1;
+            committed += pending_batches;
+        }
+        publish_durable(shared, top_written, fsyncs, committed);
+        // Everything taken this cycle is durable now (by the group's
+        // fsync or a covering snapshot): release the remaining acks.
+        release_covered(shared, &mut releases, u64::MAX);
+        debug_assert!(releases.is_empty());
+    }
+}
+
+/// Advance the durable watermark and fold in writer counters, then wake
+/// every `wait_durable` caller.
+fn publish_durable(shared: &GroupShared, durable_up_to: u64, fsyncs: u64, batches: u64) {
+    let mut st = shared.state.lock().expect("wal group state poisoned");
+    if durable_up_to > st.durable_seq {
+        st.durable_seq = durable_up_to;
+    }
+    st.fsyncs += fsyncs;
+    st.committed_batches += batches;
+    drop(st);
+    shared.done.notify_all();
+}
+
+/// Invoke (outside the lock) every queued release whose covering
+/// sequence is ≤ `up_to`, keeping the rest.
+fn release_covered(shared: &GroupShared, releases: &mut Vec<(u64, Instant, OnDurable)>, up_to: u64) {
+    let mut rest = Vec::with_capacity(releases.len());
+    let mut run = Vec::new();
+    let now = Instant::now();
+    let mut lag = 0u64;
+    for (top_seq, queued, release) in releases.drain(..) {
+        if top_seq <= up_to {
+            lag += now.duration_since(queued).as_micros() as u64;
+            run.push(release);
+        } else {
+            rest.push((top_seq, queued, release));
+        }
+    }
+    *releases = rest;
+    if !run.is_empty() {
+        let mut st = shared.state.lock().expect("wal group state poisoned");
+        st.ack_releases += run.len() as u64;
+        st.ack_lag_micros += lag;
+    }
+    for release in run {
+        release();
+    }
+}
+
+/// The simulated mid-commit crash (called with the state lock held).
+fn abort_cleanup(st: &mut GroupState, wal: &mut WalWriter, synced_len: u64, shared: &GroupShared) {
+    // Dropping the queue drops un-released ack closures: their reply
+    // senders disconnect and the waiting callers see transport errors.
+    st.queue.clear();
+    st.queued_bytes = 0;
+    st.logical_bytes = synced_len;
+    let _ = wal.truncate_to(synced_len);
+    shared.done.notify_all();
+}
+
+/// Fail-stop on writer I/O errors: mark Dead, drop all queued work (no
+/// ack can ever be released for it), wake everyone, panic.
+fn die(shared: &GroupShared, shard: usize, what: &str, e: &io::Error) -> ! {
+    {
+        let mut st = shared.state.lock().expect("wal group state poisoned");
+        st.mode = Mode::Dead;
+        st.queue.clear();
+        st.queued_bytes = 0;
+    }
+    shared.work.notify_all();
+    shared.done.notify_all();
+    panic!("shard {shard}: WAL {what} failed: {e}; refusing to acknowledge unlogged state");
 }
 
 // ---------------------------------------------------------------------
@@ -608,6 +1154,116 @@ mod tests {
         let s = scan(&path).unwrap();
         assert!(s.records.is_empty());
         assert_eq!(s.valid_len, 0);
+        assert!(!s.truncated);
+    }
+
+    fn gc_open(name: &str, opts: GroupCommitOpts) -> (GroupCommit, std::path::PathBuf) {
+        let path = tmp(name);
+        let w = WalWriter::open(&path, 0, 1).unwrap();
+        (GroupCommit::spawn(0, w, 0, opts).unwrap(), path)
+    }
+
+    #[test]
+    fn group_commit_releases_only_after_the_covering_sequence_is_durable() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let (gc, path) = gc_open("gc-release", GroupCommitOpts::default());
+        let released = Arc::new(AtomicBool::new(false));
+        let shared = Arc::clone(&gc.shared);
+        let flag = Arc::clone(&released);
+        let top = gc.append_batch(&[WalRecord::Completions(vec!["a".into()])]);
+        gc.on_durable(
+            top,
+            Box::new(move || {
+                // Runs on the writer thread: the watermark must already
+                // cover us (a failure here panics the writer, so the
+                // flag stays false and the test fails).
+                let st = shared.state.lock().unwrap();
+                assert!(st.durable_seq >= top, "release before durability");
+                drop(st);
+                flag.store(true, Ordering::SeqCst);
+            }),
+        );
+        assert!(gc.wait_durable(top));
+        for _ in 0..2000 {
+            if released.load(Ordering::SeqCst) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(released.load(Ordering::SeqCst), "ack never released");
+        let v = gc.view();
+        assert!(v.fsyncs >= 1);
+        assert_eq!(v.committed_batches, 1);
+        assert_eq!(v.ack_releases, 1);
+        drop(gc);
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.records[0].0, top);
+    }
+
+    #[test]
+    fn abort_destroys_buffered_records_and_never_releases_their_acks() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        // A huge accumulation window keeps the batch buffered in memory
+        // long enough for the abort to land before any fsync.
+        let (gc, path) = gc_open(
+            "gc-abort",
+            GroupCommitOpts {
+                max_delay: Duration::from_secs(30),
+                max_bytes: 1 << 30,
+            },
+        );
+        let released = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&released);
+        let top = gc.append_batch(&[WalRecord::Completions(vec!["a".into()])]);
+        gc.on_durable(top, Box::new(move || flag.store(true, Ordering::SeqCst)));
+        gc.control().abort();
+        assert!(!gc.wait_durable(top), "aborted batch must not read durable");
+        drop(gc); // joins the writer
+        assert!(!released.load(Ordering::SeqCst), "ack released across a crash");
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 0, "unsynced records die with the crash");
+    }
+
+    #[test]
+    fn compact_barrier_snapshots_then_truncates_and_sequencing_continues() {
+        let (gc, path) = gc_open("gc-compact", GroupCommitOpts::default());
+        let top = gc.append_batch(&[WalRecord::Completions(vec!["a".into()])]);
+        assert!(gc.wait_durable(top));
+        let marker = path.with_extension("snap-marker");
+        let marker_w = marker.clone();
+        gc.request_compact(top, Box::new(move || std::fs::write(&marker_w, b"ok")));
+        let top2 = gc.append_batch(&[WalRecord::Completions(vec!["b".into()])]);
+        assert!(gc.wait_durable(top2));
+        assert!(marker.exists(), "snapshot write must have run");
+        let v = gc.view();
+        assert_eq!(v.last_snapshot_seq, top);
+        drop(gc);
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 1, "compaction dropped the covered prefix");
+        assert_eq!(s.records[0].0, top2, "sequence survives compaction");
+    }
+
+    #[test]
+    fn drop_drains_staged_records_to_disk() {
+        // Even mid-accumulation, a clean shutdown (Drain) commits every
+        // staged record — `ShardPool::kill()` relies on this to leave
+        // the log at a batch boundary.
+        let (gc, path) = gc_open(
+            "gc-drain",
+            GroupCommitOpts {
+                max_delay: Duration::from_secs(30),
+                max_bytes: 1 << 30,
+            },
+        );
+        let top = gc.append_batch(&[
+            WalRecord::Completions(vec!["a".into()]),
+            WalRecord::Completions(vec!["b".into()]),
+        ]);
+        drop(gc);
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 2);
+        assert_eq!(s.records.last().unwrap().0, top);
         assert!(!s.truncated);
     }
 

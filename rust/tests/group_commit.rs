@@ -1,0 +1,266 @@
+//! Ack/durability ordering under the group-commit WAL pipeline
+//! (DESIGN.md §14).
+//!
+//! PR 8's contract was `200 ⇒ crash-durable` with the fsync issued
+//! inline on the planning thread. The group-commit pipeline moves the
+//! fsync to a per-shard writer thread and releases replies only when
+//! the commit sequence covering their batch becomes durable — so the
+//! contract now has to survive a crash at *any* writer-thread stage:
+//! records buffered but unwritten, written but unsynced, synced but
+//! unreleased. These tests simulate exactly that with
+//! [`ShardPool::kill_mid_commit`], which destroys everything past the
+//! last fsync (as a real crash between `write` and `fsync` would) and
+//! then proves the recovered state accounts for every acknowledged
+//! operation — and nothing is claimed about unacknowledged ones.
+
+use carbonscaler::scaling::MarginalCapacityCurve;
+use carbonscaler::sched::engine::Event;
+use carbonscaler::service::shard::{ShardPool, ShardPoolConfig, SubmitResult};
+use carbonscaler::service::wal::GroupCommitOpts;
+use carbonscaler::workload::job::{JobBuilder, JobSpec};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+const HORIZON: usize = 12;
+
+fn carbon() -> Vec<f64> {
+    (0..HORIZON).map(|h| 10.0 + 7.0 * ((h % 5) as f64)).collect()
+}
+
+fn fresh_dir(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "pallas-group-commit-{}-{case}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn job(name: &str, len: f64, slack: f64, max: usize) -> JobSpec {
+    JobBuilder::new(name, MarginalCapacityCurve::linear(max))
+        .length(len)
+        .slack_factor(slack)
+        .power(500.0)
+        .build()
+        .unwrap()
+}
+
+fn pool_cfg(shards: usize, cluster: usize, dir: &Path) -> ShardPoolConfig {
+    ShardPoolConfig::new(shards, cluster, carbon())
+        .durable(dir)
+        .compact_every(1_000_000)
+}
+
+/// Crash mid-commit after every prefix of a mixed operation sequence
+/// (submits, completions, forecast revisions — every WAL record kind),
+/// and prove replay reproduces exactly the acked prefix. Looping over
+/// the cut position walks the crash across every writer-thread stage
+/// the sequential path can reach: each `k` leaves a different log tail
+/// behind the abort's truncate-to-last-fsync.
+#[test]
+fn acked_operations_survive_a_mid_commit_crash_at_every_cut_position() {
+    for k in 1..=10usize {
+        let dir = fresh_dir(&format!("cut{k}"));
+        let pool = ShardPool::start(pool_cfg(1, 8, &dir)).unwrap();
+        let mut admitted: Vec<String> = Vec::new();
+        let mut completed: Vec<String> = Vec::new();
+        for i in 0..k {
+            let name = format!("gc-cut-{i}");
+            let out = pool.submit("t", "custom", job(&name, 1.0, 3.0, 2)).unwrap();
+            if matches!(out, SubmitResult::Admitted(_)) {
+                admitted.push(name.clone());
+            }
+            if i % 3 == 2 {
+                let victim = admitted.remove(0);
+                assert!(pool.complete(&victim).unwrap());
+                completed.push(victim);
+            }
+            if i % 4 == 3 {
+                let vals: Vec<f64> = (0..HORIZON).map(|h| 5.0 + (h + i) as f64).collect();
+                let verdicts = pool
+                    .revise_all(Event::ForecastRevised {
+                        start: 0,
+                        carbon: vals,
+                    })
+                    .unwrap();
+                assert!(verdicts.iter().all(|v| v.is_ok()));
+            }
+        }
+        pool.kill_mid_commit();
+
+        let recovered = ShardPool::start(pool_cfg(1, 8, &dir)).unwrap();
+        for name in &admitted {
+            let (_, view) = recovered
+                .find_job(name)
+                .unwrap_or_else(|| panic!("cut {k}: acked job {name} lost"));
+            assert_eq!(view.state, "active", "cut {k}: {name}");
+        }
+        let snap = recovered.snapshots().remove(0);
+        assert_eq!(
+            snap.completed_total,
+            completed.len(),
+            "cut {k}: acked completions lost"
+        );
+        assert_eq!(snap.overcommitted_slots(), 0, "cut {k}");
+        recovered.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// 8 concurrent submitters against a 2-shard durable pool, killed
+/// mid-group-commit while submits are in flight. The abort destroys
+/// buffered-unsynced records and drops their pending replies — so some
+/// submitters see transport errors — but every submit that returned
+/// `Admitted` must be present after recovery: unacked-only loss.
+#[test]
+fn concurrent_mid_commit_kill_loses_only_unacknowledged_jobs() {
+    const THREADS: usize = 8;
+    const KILL_AFTER: usize = 60;
+    let dir = fresh_dir("concurrent");
+    let pool = ShardPool::start(pool_cfg(2, 32, &dir)).unwrap();
+    let acked = Mutex::new(Vec::<String>::new());
+    let acked_n = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let pool = &pool;
+            let acked = &acked;
+            let acked_n = &acked_n;
+            let stop = &stop;
+            scope.spawn(move || {
+                for k in 0..400usize {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let name = format!("gc-{t}-{k}");
+                    let tenant = format!("tenant-{}", (t * 7 + k) % 8);
+                    match pool.submit(&tenant, "custom", job(&name, 1.0, 4.0, 4)) {
+                        Ok(SubmitResult::Admitted(_)) => {
+                            acked.lock().unwrap().push(name);
+                            acked_n.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Ok(_) => {}      // rejected: no durability claim
+                        Err(_) => break, // reply dropped: kill landed
+                    }
+                }
+            });
+        }
+        // The killer fires while submits are mid-pipeline; the time
+        // bound is a failsafe against a misconfigured scenario.
+        let t0 = Instant::now();
+        while acked_n.load(Ordering::SeqCst) < KILL_AFTER
+            && t0.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::yield_now();
+        }
+        pool.kill_mid_commit();
+        stop.store(true, Ordering::SeqCst);
+    });
+    let acked = acked.into_inner().unwrap();
+    assert!(
+        acked.len() >= KILL_AFTER,
+        "scenario only acked {} jobs before its failsafe",
+        acked.len()
+    );
+
+    let recovered = ShardPool::start(pool_cfg(2, 32, &dir)).unwrap();
+    let known: std::collections::HashSet<String> = recovered
+        .snapshots()
+        .iter()
+        .flat_map(|s| s.jobs.iter().map(|j| j.name.clone()))
+        .collect();
+    let lost: Vec<&String> = acked.iter().filter(|n| !known.contains(*n)).collect();
+    assert!(
+        lost.is_empty(),
+        "durability violated: {} acked jobs lost after mid-commit crash: {:?}",
+        lost.len(),
+        &lost[..lost.len().min(8)]
+    );
+    for s in recovered.snapshots() {
+        assert_eq!(s.overcommitted_slots(), 0);
+    }
+    recovered.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// No reply is released before its covering commit sequence is on disk:
+/// every time an admitted submit returns, the shard's WAL file must
+/// already contain the batch's records. Run both with natural batching
+/// (`max_delay = 0`) and with a real accumulation window, which forces
+/// the writer through the delayed-coalescing path the pipeline uses
+/// under load.
+#[test]
+fn reply_release_implies_the_records_are_already_on_disk() {
+    for (tag, opts) in [
+        ("natural", GroupCommitOpts::default()),
+        (
+            "windowed",
+            GroupCommitOpts {
+                max_delay: Duration::from_millis(25),
+                ..GroupCommitOpts::default()
+            },
+        ),
+    ] {
+        let dir = fresh_dir(&format!("ondisk-{tag}"));
+        let pool = ShardPool::start(pool_cfg(1, 8, &dir).group_commit(opts)).unwrap();
+        let wal = dir.join("shard-0.wal");
+        let mut last_len = 0u64;
+        for i in 0..6usize {
+            let name = format!("gc-disk-{i}");
+            let out = pool.submit("t", "custom", job(&name, 1.0, 3.0, 2)).unwrap();
+            assert!(matches!(out, SubmitResult::Admitted(_)), "{tag}: {name}");
+            let len = std::fs::metadata(&wal).unwrap().len();
+            assert!(
+                len > last_len,
+                "{tag}: ack for {name} released before its records hit the log \
+                 (len {len} <= {last_len})"
+            );
+            last_len = len;
+        }
+        pool.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Crash mid-commit with background compaction running every batch: the
+/// writer thread interleaves snapshot writes, log resets, and fsyncs,
+/// and the abort can land between any of them. Acked state must still
+/// be exactly reproduced from snapshot + WAL tail.
+#[test]
+fn mid_commit_crash_with_aggressive_compaction_preserves_acked_state() {
+    let dir = fresh_dir("compact");
+    let cfg = || {
+        ShardPoolConfig::new(1, 8, carbon())
+            .durable(&dir)
+            .compact_every(1)
+    };
+    let pool = ShardPool::start(cfg()).unwrap();
+    let mut admitted: Vec<String> = Vec::new();
+    for i in 0..12usize {
+        let name = format!("gc-comp-{i}");
+        let out = pool.submit("t", "custom", job(&name, 1.0, 4.0, 2)).unwrap();
+        if matches!(out, SubmitResult::Admitted(_)) {
+            admitted.push(name);
+        }
+    }
+    assert!(!admitted.is_empty());
+    pool.kill_mid_commit();
+
+    let recovered = ShardPool::start(cfg()).unwrap();
+    for name in &admitted {
+        let (_, view) = recovered
+            .find_job(name)
+            .unwrap_or_else(|| panic!("acked job {name} lost across compaction crash"));
+        assert_eq!(view.state, "active", "{name}");
+    }
+    let snap = recovered.snapshots().remove(0);
+    assert!(
+        snap.last_snapshot_seq > 0,
+        "aggressive cadence must have compacted at least once"
+    );
+    recovered.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
