@@ -1,0 +1,226 @@
+//! Joint simulation: interactive request streams co-scheduled with a
+//! batch fleet on shared regional capacity (DESIGN.md §15).
+//!
+//! The interactive side is routed first ([`crate::sched::interactive`]),
+//! its reservations squeeze the geo context, and the unchanged batch
+//! planner runs on the residual. Both sides are then charged at ground
+//! truth: batch via [`sim::account_geo`], interactive by pricing every
+//! routed server-slot at its serving region's true intensity. Baselines
+//! swap only the routing policy — route-to-nearest (latency-only) and
+//! route-to-greenest (carbon-only, SLO-breaking) — keeping the batch
+//! planner and accounting identical, so differences are attributable to
+//! routing alone.
+
+use crate::advisor::sim::{self, GeoSimResult, SimConfig};
+use crate::carbon::trace::CarbonTrace;
+use crate::sched::geo::{self, MigrationPolicy};
+use crate::sched::interactive::{self, InteractiveSet, RoutePlan};
+use crate::workload::interactive::ServiceSpec;
+use crate::workload::JobSpec;
+use anyhow::Result;
+
+/// Outcome of one joint batch + interactive simulation.
+#[derive(Debug, Clone)]
+pub struct JointSimResult {
+    /// Batch fleet outcome on the squeezed residual capacity.
+    pub batch: GeoSimResult,
+    /// The committed interactive routing (forecast view).
+    pub route: RoutePlan,
+    /// Interactive emissions, grams, charged at each serving region's
+    /// ground truth.
+    pub interactive_carbon_g: f64,
+    /// Interactive server-slots served.
+    pub interactive_served: usize,
+    /// Server-slots unserved or served in breach of the latency floor.
+    pub slo_violations: usize,
+}
+
+impl JointSimResult {
+    /// Batch + interactive emissions, grams.
+    pub fn total_carbon_g(&self) -> f64 {
+        self.batch.carbon_g + self.interactive_carbon_g
+    }
+}
+
+/// Which routing policy serves the interactive side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Exact min-carbon routing within latency floors (the co-scheduler).
+    CoSchedule,
+    /// Serve every stream at its home region (latency-only baseline).
+    Nearest,
+    /// Fill greenest regions first, ignoring floors (carbon-only baseline).
+    Greenest,
+}
+
+/// Simulate services and jobs sharing one uniform-capacity region set:
+/// route interactive demand with `policy`, squeeze the context, plan the
+/// batch fleet on the residual, charge both at ground truth.
+pub fn simulate_joint_with(
+    policy: RoutePolicy,
+    jobs: &[JobSpec],
+    services: &[ServiceSpec],
+    truths: &[CarbonTrace],
+    capacity: usize,
+    migration: MigrationPolicy,
+    cfg: &SimConfig,
+) -> Result<JointSimResult> {
+    let ctx = sim::geo_forecast_context(jobs, truths, capacity, migration, cfg)?;
+    let set = interactive::build_set(services, &ctx, cfg.seed)?;
+    let route = match policy {
+        RoutePolicy::CoSchedule => interactive::route(&set, &ctx),
+        RoutePolicy::Nearest => interactive::route_nearest(&set, &ctx),
+        RoutePolicy::Greenest => interactive::route_greenest(&set, &ctx),
+    };
+    let residual = interactive::squeeze(&ctx, &route)?;
+    let planned = geo::plan_geo(jobs, &residual)?;
+    let batch = sim::account_geo(jobs, truths, planned);
+    let interactive_carbon_g = truth_carbon(&set, &route, truths);
+    Ok(JointSimResult {
+        batch,
+        interactive_carbon_g,
+        interactive_served: route.served,
+        slo_violations: route.violations,
+        route,
+    })
+}
+
+/// Co-scheduled joint simulation (the headline configuration).
+pub fn simulate_joint(
+    jobs: &[JobSpec],
+    services: &[ServiceSpec],
+    truths: &[CarbonTrace],
+    capacity: usize,
+    migration: MigrationPolicy,
+    cfg: &SimConfig,
+) -> Result<JointSimResult> {
+    simulate_joint_with(RoutePolicy::CoSchedule, jobs, services, truths, capacity, migration, cfg)
+}
+
+/// Route-to-nearest baseline under identical batch planning/accounting.
+pub fn simulate_joint_nearest(
+    jobs: &[JobSpec],
+    services: &[ServiceSpec],
+    truths: &[CarbonTrace],
+    capacity: usize,
+    migration: MigrationPolicy,
+    cfg: &SimConfig,
+) -> Result<JointSimResult> {
+    simulate_joint_with(RoutePolicy::Nearest, jobs, services, truths, capacity, migration, cfg)
+}
+
+/// Route-to-greenest baseline under identical batch planning/accounting.
+pub fn simulate_joint_greenest(
+    jobs: &[JobSpec],
+    services: &[ServiceSpec],
+    truths: &[CarbonTrace],
+    capacity: usize,
+    migration: MigrationPolicy,
+    cfg: &SimConfig,
+) -> Result<JointSimResult> {
+    simulate_joint_with(RoutePolicy::Greenest, jobs, services, truths, capacity, migration, cfg)
+}
+
+/// Price every routed server-slot at its serving region's ground truth.
+fn truth_carbon(set: &InteractiveSet, route: &RoutePlan, truths: &[CarbonTrace]) -> f64 {
+    let mut g = 0.0;
+    for (t, flows) in route.flows.iter().enumerate() {
+        for &(s, r, amount) in flows {
+            let watts = set.services[s].power_watts;
+            g += amount as f64 * watts / 1000.0 * truths[r].at(set.start + t);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::{regions, synthetic};
+    use crate::scaling::MarginalCapacityCurve;
+    use crate::workload::job::JobBuilder;
+
+    fn truths() -> Vec<CarbonTrace> {
+        ["jakarta", "warsaw", "quebec", "iceland"]
+            .iter()
+            .map(|n| synthetic::generate(regions::by_name(n).unwrap(), 7 * 24, 3))
+            .collect()
+    }
+
+    fn jobs(n: usize) -> Vec<JobSpec> {
+        (0..n)
+            .map(|i| {
+                JobBuilder::new(&format!("b{i}"), MarginalCapacityCurve::linear(4))
+                    .servers(1, 4)
+                    .arrival(i % 4)
+                    .length(12.0)
+                    .slack_factor(1.5)
+                    .power(1000.0)
+                    .build()
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    fn services() -> Vec<ServiceSpec> {
+        vec![
+            // Tight floor: nothing but home (jakarta) is within 50 ms.
+            ServiceSpec {
+                name: "id-web".into(),
+                home: "jakarta".into(),
+                slo_ms: 50.0,
+                peak_servers: 3,
+                arrival: 0,
+                hours: 18,
+                power_watts: 210.0,
+            },
+            // Loose enough to reach iceland (~28 ms) but not quebec.
+            ServiceSpec {
+                name: "pl-api".into(),
+                home: "warsaw".into(),
+                slo_ms: 60.0,
+                peak_servers: 2,
+                arrival: 0,
+                hours: 18,
+                power_watts: 210.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn cosched_weakly_dominates_nearest_at_zero_violations() {
+        let (t, j, s) = (truths(), jobs(3), services());
+        let cfg = SimConfig::default();
+        let co =
+            simulate_joint(&j, &s, &t, 12, MigrationPolicy::none(), &cfg).unwrap();
+        let near =
+            simulate_joint_nearest(&j, &s, &t, 12, MigrationPolicy::none(), &cfg).unwrap();
+        assert_eq!(co.slo_violations, 0);
+        assert_eq!(near.slo_violations, 0);
+        assert_eq!(co.interactive_served, near.interactive_served);
+        assert!(co.batch.all_finished() && near.batch.all_finished());
+        assert!(
+            co.interactive_carbon_g <= near.interactive_carbon_g + 1e-6,
+            "routing within floors must not cost more than staying home: {} vs {}",
+            co.interactive_carbon_g,
+            near.interactive_carbon_g
+        );
+        assert!(
+            co.total_carbon_g() <= near.total_carbon_g() + 1e-6,
+            "joint co-scheduling must weakly dominate nearest: {} vs {}",
+            co.total_carbon_g(),
+            near.total_carbon_g()
+        );
+    }
+
+    #[test]
+    fn greenest_saves_interactive_carbon_by_breaking_floors() {
+        let (t, j, s) = (truths(), jobs(2), services());
+        let cfg = SimConfig::default();
+        let co = simulate_joint(&j, &s, &t, 12, MigrationPolicy::none(), &cfg).unwrap();
+        let green =
+            simulate_joint_greenest(&j, &s, &t, 12, MigrationPolicy::none(), &cfg).unwrap();
+        assert!(green.slo_violations > 0, "greenest must break the tight floor");
+        assert!(green.interactive_carbon_g <= co.interactive_carbon_g + 1e-6);
+    }
+}

@@ -3,12 +3,17 @@
 //! event-driven scheduling engine (DESIGN.md §10).
 
 pub mod analysis;
+pub mod joint;
 pub mod online;
 pub mod sim;
 
 pub use analysis::{
     even_starts, fleet_vs_independent, geo_vs_baselines, savings_pct, savings_vs_baseline,
     summarize, sweep_cluster_sizes, sweep_regions, sweep_start_times, FleetComparison, GeoWhatIf,
+};
+pub use joint::{
+    simulate_joint, simulate_joint_greenest, simulate_joint_nearest, simulate_joint_with,
+    JointSimResult, RoutePolicy,
 };
 pub use online::{
     online_vs_baselines, simulate_online, simulate_online_agnostic, ArrivalProcess,

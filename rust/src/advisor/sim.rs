@@ -396,7 +396,7 @@ impl GeoSimResult {
 /// ground-truth trace, uniform per-region capacity, forecasts optionally
 /// perturbed per `cfg.forecast_error` (independent error stream per
 /// region).
-fn geo_forecast_context(
+pub(crate) fn geo_forecast_context(
     jobs: &[JobSpec],
     truths: &[CarbonTrace],
     capacity: usize,
@@ -439,7 +439,7 @@ fn geo_forecast_context(
 
 /// Charge a committed geo plan at ground truth: each active slot pays its
 /// assigned region's true intensity.
-fn account_geo(
+pub(crate) fn account_geo(
     jobs: &[JobSpec],
     truths: &[CarbonTrace],
     planned: GeoFleetSchedule,

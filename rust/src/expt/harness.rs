@@ -85,6 +85,7 @@ pub fn all() -> Vec<Box<dyn Experiment>> {
         Box::new(geo::GeoPlacement),
         Box::new(online::OnlineArrivals),
         Box::new(service::ServiceThroughput),
+        Box::new(interactive::InteractiveCoSched),
         Box::new(sensitivity::Fig13),
         Box::new(sensitivity::Fig14),
         Box::new(sensitivity::Fig15),
@@ -124,8 +125,9 @@ mod tests {
         let mut dedup = ids.clone();
         dedup.dedup();
         assert_eq!(ids, dedup);
-        assert_eq!(ids.len(), 25);
+        assert_eq!(ids.len(), 26);
         assert!(by_id("fig9").is_some());
+        assert!(by_id("interactive").is_some());
         assert!(by_id("fleet").is_some());
         assert!(by_id("geo").is_some());
         assert!(by_id("online").is_some());

@@ -1,0 +1,237 @@
+//! Interactive co-scheduling experiment (beyond paper; CASPER-style):
+//! latency-SLO request streams routed across the region catalog and
+//! co-scheduled with a batch fleet on shared capacity, swept over SLO
+//! tightness to trace the joint carbon vs. SLO-violation Pareto
+//! frontier against route-to-nearest and route-to-greenest baselines
+//! (DESIGN.md §15).
+
+use crate::advisor::{self, RoutePolicy, SimConfig};
+use crate::carbon::{regions, synthetic, CarbonTrace};
+use crate::expt::harness::{ExpContext, Experiment};
+use crate::sched::MigrationPolicy;
+use crate::util::table::{f, Table};
+use crate::workload::catalog;
+use crate::workload::interactive::ServiceSpec;
+use crate::workload::job::JobSpec;
+use anyhow::Result;
+
+/// Per-region cluster size: room for the batch mix plus interactive
+/// peaks, so the comparison isolates routing rather than admission.
+pub const REGION_CAPACITY: usize = 10;
+
+/// The bench instance's region slice: three dirty-grid homes (warsaw,
+/// frankfurt, london) and three green refuges (paris, stockholm,
+/// iceland) at staggered RTTs, so SLO tightness directly controls how
+/// much of the catalog each stream can reach.
+pub const REGION_SET: &[&str] = &["warsaw", "frankfurt", "london", "paris", "stockholm", "iceland"];
+
+/// Ground-truth traces for the bench region slice.
+pub fn truths(seed: u64) -> Vec<CarbonTrace> {
+    REGION_SET
+        .iter()
+        .map(|n| synthetic::generate(regions::by_name(n).unwrap(), 14 * 24, seed))
+        .collect()
+}
+
+/// Five-job Table-1 mix (one per workload, staggered arrivals,
+/// T = 1.8 l, M = 6): enough batch load to make the squeeze visible,
+/// small enough that every policy's residual still completes it.
+pub fn job_mix() -> Result<Vec<JobSpec>> {
+    catalog::WORKLOADS
+        .iter()
+        .enumerate()
+        .map(|(i, w)| w.job(i % 4, 12.0, 1.8, 6))
+        .collect()
+}
+
+/// Three request streams homed in the dirty half of the region slice,
+/// all sharing one SLO so the sweep has a single tightness knob.
+pub fn services(slo_ms: f64) -> Vec<ServiceSpec> {
+    ["warsaw", "frankfurt", "london"]
+        .iter()
+        .map(|home| ServiceSpec {
+            name: format!("{home}-web"),
+            home: (*home).to_string(),
+            slo_ms,
+            peak_servers: 3,
+            arrival: 0,
+            hours: 20,
+            power_watts: 210.0,
+        })
+        .collect()
+}
+
+/// The `interactive` experiment: joint carbon vs. SLO violations.
+pub struct InteractiveCoSched;
+
+impl Experiment for InteractiveCoSched {
+    fn id(&self) -> &'static str {
+        "interactive"
+    }
+    fn title(&self) -> &'static str {
+        "Interactive request streams co-scheduled with the batch fleet (CASPER-style Pareto sweep, beyond paper)"
+    }
+    fn run(&self, ctx: &ExpContext) -> Result<Vec<Table>> {
+        let jobs = job_mix()?;
+        let tr = truths(ctx.seed);
+        let cfg = SimConfig::default();
+        let slos: Vec<f64> = if ctx.quick {
+            vec![12.0, 60.0]
+        } else {
+            vec![5.0, 12.0, 25.0, 60.0]
+        };
+
+        let mut t = Table::new(&format!(
+            "joint carbon vs SLO violations, {} streams + {}-job mix, {REGION_CAPACITY} servers/region",
+            services(60.0).len(),
+            jobs.len()
+        ))
+        .headers(&[
+            "slo (ms)",
+            "policy",
+            "interactive (g)",
+            "batch (g)",
+            "total (g)",
+            "violations",
+            "batch done",
+        ]);
+        let mut loosest_co = None;
+        for &slo in &slos {
+            let specs = services(slo);
+            for (policy, label) in [
+                (RoutePolicy::CoSchedule, "co-sched"),
+                (RoutePolicy::Nearest, "nearest"),
+                (RoutePolicy::Greenest, "greenest"),
+            ] {
+                match advisor::simulate_joint_with(
+                    policy,
+                    &jobs,
+                    &specs,
+                    &tr,
+                    REGION_CAPACITY,
+                    MigrationPolicy::none(),
+                    &cfg,
+                ) {
+                    Ok(r) => {
+                        t.row(vec![
+                            f(slo, 0),
+                            label.into(),
+                            f(r.interactive_carbon_g, 0),
+                            f(r.batch.carbon_g, 0),
+                            f(r.total_carbon_g(), 0),
+                            r.slo_violations.to_string(),
+                            format!("{}/{}", r.batch.n_finished, jobs.len()),
+                        ]);
+                        if policy == RoutePolicy::CoSchedule {
+                            loosest_co = Some(r);
+                        }
+                    }
+                    Err(e) => t.row(vec![
+                        f(slo, 0),
+                        label.into(),
+                        format!("infeasible: {e}"),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]),
+                }
+            }
+        }
+
+        // Where the co-scheduler actually serves the streams at the
+        // loosest SLO: the carbon story is the reservation migration.
+        let mut tp = Table::new("co-scheduled reservations at the loosest SLO (server-slots)")
+            .headers(&["region", "reserved", "share"]);
+        if let Some(r) = &loosest_co {
+            let h = r.route.horizon;
+            let total = r.route.served.max(1);
+            let mut rows: Vec<(usize, usize)> = (0..tr.len())
+                .map(|ri| (ri, r.route.reserved[ri * h..(ri + 1) * h].iter().sum::<usize>()))
+                .filter(|(_, s)| *s > 0)
+                .collect();
+            rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            for (ri, slots) in rows {
+                tp.row(vec![
+                    tr[ri].region.clone(),
+                    slots.to_string(),
+                    crate::util::table::pct(slots as f64 / total as f64),
+                ]);
+            }
+        }
+        Ok(vec![t, tp])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpContext {
+        ExpContext {
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cosched_weakly_dominates_nearest_at_zero_violations_on_the_bench_instance() {
+        let ctx = quick();
+        let jobs = job_mix().unwrap();
+        let tr = truths(ctx.seed);
+        let cfg = SimConfig::default();
+        for slo in [12.0, 60.0] {
+            let specs = services(slo);
+            let co = advisor::simulate_joint(
+                &jobs, &specs, &tr, REGION_CAPACITY, MigrationPolicy::none(), &cfg,
+            )
+            .unwrap();
+            let near = advisor::simulate_joint_nearest(
+                &jobs, &specs, &tr, REGION_CAPACITY, MigrationPolicy::none(), &cfg,
+            )
+            .unwrap();
+            assert_eq!(co.slo_violations, 0, "slo {slo}");
+            assert_eq!(near.slo_violations, 0, "slo {slo}");
+            assert_eq!(co.interactive_served, near.interactive_served, "slo {slo}");
+            assert!(co.batch.all_finished(), "slo {slo}");
+            assert!(near.batch.all_finished(), "slo {slo}");
+            assert!(
+                co.total_carbon_g() <= near.total_carbon_g() + 1e-6,
+                "slo {slo}: co-sched {} vs nearest {}",
+                co.total_carbon_g(),
+                near.total_carbon_g()
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_table_covers_every_policy_and_slo() {
+        let tables = InteractiveCoSched.run(&quick()).unwrap();
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].n_rows(), 2 * 3);
+        let text = tables[0].render();
+        assert!(text.contains("co-sched") && text.contains("nearest") && text.contains("greenest"));
+        // Every batch residual completes the whole mix.
+        assert!(!text.contains("infeasible"), "{text}");
+        assert!(text.contains("5/5"), "no fully-completed batch row:\n{text}");
+        // The reservation table attributes the streams somewhere.
+        assert!(!tables[1].is_empty());
+    }
+
+    #[test]
+    fn greenest_breaks_floors_when_they_are_tight() {
+        let ctx = quick();
+        let jobs = job_mix().unwrap();
+        let tr = truths(ctx.seed);
+        let green = advisor::simulate_joint_greenest(
+            &jobs,
+            &services(12.0),
+            &tr,
+            REGION_CAPACITY,
+            MigrationPolicy::none(),
+            &SimConfig::default(),
+        )
+        .unwrap();
+        assert!(green.slo_violations > 0, "a 12 ms floor cannot reach iceland");
+    }
+}

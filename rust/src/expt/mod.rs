@@ -4,6 +4,7 @@
 pub mod evaluation;
 pub mod geo;
 pub mod harness;
+pub mod interactive;
 pub mod motivation;
 pub mod online;
 pub mod robustness;

@@ -426,6 +426,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             "1048576",
         ),
         ArgSpec::flag(
+            "group-commit-adaptive",
+            "tune the group-commit delay online from observed ack lag (bounded AIAD)",
+        ),
+        ArgSpec::flag(
             "fsync-per-batch",
             "legacy durability ordering: the planning thread waits for fsync before replying",
         ),
@@ -457,6 +461,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .group_commit(GroupCommitOpts {
             max_delay: Duration::from_millis(args.u64("group-commit-max-delay")?),
             max_bytes: args.u64("group-commit-max-bytes")?,
+            adaptive: args.flag("group-commit-adaptive"),
+            ..GroupCommitOpts::default()
         });
     if args.flag("fsync-per-batch") {
         cfg = cfg.per_batch_fsync();
@@ -521,6 +527,25 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 Ok((applied, sent))
             })
         };
+        // Interactive request streams (DESIGN.md §15): register a few
+        // with known demand before the batch load starts, so the final
+        // reconciliation can assert grant conservation — every demanded
+        // server-slot comes back either reserved or violated.
+        const SELFTEST_STREAMS: usize = 3;
+        let mut svc_demand_units = 0usize;
+        {
+            let mut client = HttpClient::new(server.addr());
+            for i in 0..SELFTEST_STREAMS {
+                let body = format!(
+                    r#"{{"name": "selftest-stream-{i}", "tenant": "stream-{i}", "start": 0, "demand": [1, 2, 1]}}"#
+                );
+                let (status, resp) = client.request("POST", "/v1/services", &body)?;
+                if status != 200 {
+                    bail!("selftest stream registration failed ({status}): {resp}");
+                }
+                svc_demand_units += 4;
+            }
+        }
         let gen = LoadGen::new(server.addr(), args.usize("threads")?, JobTemplate::default());
         let report = gen.paced(rps, duration)?;
         storm_stop.store(true, Ordering::SeqCst);
@@ -576,6 +601,16 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                      {} admitted + {} rejected",
                     report.admitted,
                     report.rejected
+                );
+            }
+            let services = field("services")?;
+            let reserved = field("interactiveReserved")?;
+            let violations = field("sloViolations")?;
+            if services != SELFTEST_STREAMS || reserved + violations != svc_demand_units {
+                bail!(
+                    "interactive counters do not reconcile: /v1/stats says {services} \
+                     streams with {reserved} reserved + {violations} violations, but \
+                     {SELFTEST_STREAMS} streams demanded {svc_demand_units} server-slots"
                 );
             }
             Ok(())

@@ -1,0 +1,569 @@
+//! SLO-feasible interactive request routing and batch co-scheduling
+//! (DESIGN.md §15).
+//!
+//! Each slot, every service's demand (in servers) must be split across
+//! the regions within its latency floor ([`crate::workload::interactive::rtt_ms`]
+//! from home), subject to per-region capacity, minimizing forecast
+//! carbon. That is a transportation problem; [`route`] solves it exactly
+//! per slot with a small min-cost max-flow (≤ 76 nodes over the
+//! 37-region catalog), serving as much demand as capacity allows and
+//! charging every served server-slot at its serving region's intensity
+//! weighted by the service's power draw. Greedy fill is *not* exact
+//! here — a cheap region reachable only by one service must be kept free
+//! for it — which is why the solver, not a heuristic, is the planner
+//! (property-tested against a brute-force oracle in
+//! `rust/tests/interactive_oracle.rs`).
+//!
+//! [`CoScheduler`] then turns the routed reservations into a capacity
+//! squeeze: per (region, slot) reserved servers are subtracted from the
+//! batch planner's [`GeoPlanContext`], and batch planning, warm repair,
+//! and dirty-slot revision repair all run unchanged on the residual —
+//! interactive demand is just time-varying capacity to them, and spare
+//! interactive headroom is batch harvest. Plans on the residual are
+//! bit-identical to plans against an explicitly pre-squeezed context
+//! (the squeeze *is* the context construction; property-tested).
+//!
+//! Baselines mirror CASPER's comparisons: [`route_nearest`] (serve at
+//! home, the latency-only policy) and [`route_greenest`]
+//! (carbon-only, ignoring latency floors — its floor-breaking
+//! server-slots count as SLO violations).
+
+use crate::sched::geo::GeoPlanContext;
+use crate::workload::interactive::{rtt_ms, ServiceSpec};
+use anyhow::{bail, Result};
+
+/// One service's routing-ready demand over a planning window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceDemand {
+    pub name: String,
+    /// Home region index into the context's region list.
+    pub home: usize,
+    /// Region indices within the latency floor (always includes `home`),
+    /// ascending.
+    pub feasible: Vec<usize>,
+    /// Demand in servers per window slot (0 outside the active span).
+    pub demand: Vec<usize>,
+    /// Per-server draw, watts (weights the routing objective).
+    pub power_watts: f64,
+}
+
+/// A set of services resolved against one geo planning window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InteractiveSet {
+    /// Absolute first slot (matches the geo context's).
+    pub start: usize,
+    /// Window length, slots.
+    pub horizon: usize,
+    pub services: Vec<ServiceDemand>,
+}
+
+impl InteractiveSet {
+    /// Total demand over the window, server-slots.
+    pub fn total_demand(&self) -> usize {
+        self.services.iter().map(|s| s.demand.iter().sum::<usize>()).sum()
+    }
+}
+
+/// Resolve specs against a geo context: latency floors become feasible
+/// region sets, diurnal curves become per-slot server demand.
+pub fn build_set(
+    specs: &[ServiceSpec],
+    geo: &GeoPlanContext,
+    seed: u64,
+) -> Result<InteractiveSet> {
+    let (start, horizon) = (geo.start(), geo.horizon());
+    let mut services = Vec::with_capacity(specs.len());
+    for spec in specs {
+        spec.validate()?;
+        if services.iter().any(|s: &ServiceDemand| s.name == spec.name) {
+            bail!("duplicate service {:?}", spec.name);
+        }
+        let home = geo
+            .region_index(&spec.home)
+            .ok_or_else(|| anyhow::anyhow!("service {}: home {:?} not in context", spec.name, spec.home))?;
+        if spec.arrival < start || spec.end() > start + horizon {
+            bail!(
+                "service {}: active span [{}, {}) outside window [{}, {})",
+                spec.name, spec.arrival, spec.end(), start, start + horizon
+            );
+        }
+        let feasible: Vec<usize> = (0..geo.n_regions())
+            .filter(|&r| {
+                rtt_ms(&spec.home, &geo.regions[r].name).is_some_and(|ms| ms <= spec.slo_ms)
+            })
+            .collect();
+        if !feasible.contains(&home) {
+            bail!("service {}: SLO {} ms below same-region RTT", spec.name, spec.slo_ms);
+        }
+        let curve = spec.demand(seed);
+        let mut demand = vec![0usize; horizon];
+        demand[spec.arrival - start..spec.end() - start].copy_from_slice(&curve);
+        services.push(ServiceDemand {
+            name: spec.name.clone(),
+            home,
+            feasible,
+            demand,
+            power_watts: spec.power_watts,
+        });
+    }
+    Ok(InteractiveSet { start, horizon, services })
+}
+
+/// A committed routing: who serves what, where, and what it squeezes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutePlan {
+    pub start: usize,
+    pub horizon: usize,
+    /// Reserved servers, region-major: `reserved[r * horizon + t]`.
+    pub reserved: Vec<usize>,
+    /// Per relative slot: `(service, region, servers)` routed flows.
+    pub flows: Vec<Vec<(usize, usize, usize)>>,
+    /// Server-slots served (sum of flows).
+    pub served: usize,
+    /// Server-slots either unserved (capacity) or served in breach of
+    /// the latency floor (only [`route_greenest`] produces the latter).
+    pub violations: usize,
+    /// Forecast carbon of the reservations, grams (power-weighted).
+    pub carbon_g: f64,
+}
+
+impl RoutePlan {
+    fn empty(start: usize, horizon: usize, n_regions: usize) -> Self {
+        RoutePlan {
+            start,
+            horizon,
+            reserved: vec![0; n_regions * horizon],
+            flows: vec![Vec::new(); horizon],
+            served: 0,
+            violations: 0,
+            carbon_g: 0.0,
+        }
+    }
+
+    /// Reserved servers at (region, relative slot).
+    pub fn reserved_at(&self, region: usize, rel: usize) -> usize {
+        self.reserved[region * self.horizon + rel]
+    }
+
+    /// Every reservation fits its region's capacity.
+    pub fn respects_capacity(&self, geo: &GeoPlanContext) -> bool {
+        geo.regions.iter().enumerate().all(|(r, region)| {
+            (0..self.horizon).all(|t| self.reserved_at(r, t) <= region.ctx.capacity[t])
+        })
+    }
+}
+
+// -- exact per-slot transportation solve ---------------------------------
+
+struct Edge {
+    to: usize,
+    rev: usize,
+    cap: usize,
+    cost: f64,
+}
+
+/// Min-cost max-flow by successive shortest paths (Bellman-Ford on the
+/// residual graph; original costs are non-negative, so no negative cycle
+/// can form and n relaxation rounds bound each search).
+struct Mcmf {
+    graph: Vec<Vec<Edge>>,
+}
+
+impl Mcmf {
+    fn new(n: usize) -> Self {
+        Mcmf { graph: (0..n).map(|_| Vec::new()).collect() }
+    }
+
+    fn add_edge(&mut self, from: usize, to: usize, cap: usize, cost: f64) -> (usize, usize) {
+        let (a, b) = (self.graph[from].len(), self.graph[to].len());
+        self.graph[from].push(Edge { to, rev: b, cap, cost });
+        self.graph[to].push(Edge { to: from, rev: a, cap: 0, cost: -cost });
+        (from, a)
+    }
+
+    fn flow_of(&self, handle: (usize, usize)) -> usize {
+        // Flow pushed along an edge equals its reverse edge's capacity.
+        let e = &self.graph[handle.0][handle.1];
+        self.graph[e.to][e.rev].cap
+    }
+
+    fn run(&mut self, s: usize, t: usize) -> (usize, f64) {
+        let n = self.graph.len();
+        let (mut flow, mut cost) = (0usize, 0.0f64);
+        loop {
+            let mut dist = vec![f64::INFINITY; n];
+            let mut prev: Vec<Option<(usize, usize)>> = vec![None; n];
+            dist[s] = 0.0;
+            for _ in 0..n {
+                let mut changed = false;
+                for u in 0..n {
+                    if !dist[u].is_finite() {
+                        continue;
+                    }
+                    for (ei, e) in self.graph[u].iter().enumerate() {
+                        if e.cap > 0 && dist[u] + e.cost < dist[e.to] - 1e-12 {
+                            dist[e.to] = dist[u] + e.cost;
+                            prev[e.to] = Some((u, ei));
+                            changed = true;
+                        }
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            if !dist[t].is_finite() {
+                break;
+            }
+            let mut push = usize::MAX;
+            let mut v = t;
+            while v != s {
+                let (u, ei) = prev[v].expect("path exists");
+                push = push.min(self.graph[u][ei].cap);
+                v = u;
+            }
+            debug_assert!(push > 0 && push < usize::MAX);
+            let mut v = t;
+            while v != s {
+                let (u, ei) = prev[v].expect("path exists");
+                let (to, rev, c) = {
+                    let e = &self.graph[u][ei];
+                    (e.to, e.rev, e.cost)
+                };
+                self.graph[u][ei].cap -= push;
+                self.graph[to][rev].cap += push;
+                cost += c * push as f64;
+                v = u;
+            }
+            flow += push;
+        }
+        (flow, cost)
+    }
+}
+
+/// Exact SLO-feasible routing: per slot, serve as much demand as
+/// capacity allows (max flow), at minimum power-weighted forecast
+/// carbon among all max flows. Unserved server-slots are violations.
+pub fn route(set: &InteractiveSet, geo: &GeoPlanContext) -> RoutePlan {
+    let h = set.horizon;
+    let nr = geo.n_regions();
+    let mut plan = RoutePlan::empty(set.start, h, nr);
+    for t in 0..h {
+        let active: Vec<usize> = (0..set.services.len())
+            .filter(|&s| set.services[s].demand[t] > 0)
+            .collect();
+        if active.is_empty() {
+            continue;
+        }
+        // Nodes: 0 = source, 1..=S services, S+1..=S+R regions, last = sink.
+        let ns = active.len();
+        let (src, sink) = (0, ns + nr + 1);
+        let mut net = Mcmf::new(ns + nr + 2);
+        let mut handles = Vec::new();
+        for (i, &s) in active.iter().enumerate() {
+            let svc = &set.services[s];
+            net.add_edge(src, 1 + i, svc.demand[t], 0.0);
+            for &r in &svc.feasible {
+                let per_unit = svc.power_watts / 1000.0 * geo.regions[r].ctx.carbon[t];
+                let handle = net.add_edge(1 + i, 1 + ns + r, usize::MAX / 2, per_unit);
+                handles.push((s, r, handle));
+            }
+        }
+        for r in 0..nr {
+            net.add_edge(1 + ns + r, sink, geo.regions[r].ctx.capacity[t], 0.0);
+        }
+        let (flow, cost) = net.run(src, sink);
+        let demand_t: usize = active.iter().map(|&s| set.services[s].demand[t]).sum();
+        plan.served += flow;
+        plan.violations += demand_t - flow;
+        plan.carbon_g += cost;
+        for (s, r, handle) in handles {
+            let amount = net.flow_of(handle);
+            if amount > 0 {
+                plan.reserved[r * h + t] += amount;
+                plan.flows[t].push((s, r, amount));
+            }
+        }
+    }
+    plan
+}
+
+/// Latency-only baseline: every service is served entirely at its home
+/// region, first-registered-first-filled; demand beyond home capacity is
+/// dropped (violations).
+pub fn route_nearest(set: &InteractiveSet, geo: &GeoPlanContext) -> RoutePlan {
+    let h = set.horizon;
+    let mut plan = RoutePlan::empty(set.start, h, geo.n_regions());
+    for t in 0..h {
+        for (s, svc) in set.services.iter().enumerate() {
+            let d = svc.demand[t];
+            if d == 0 {
+                continue;
+            }
+            let r = svc.home;
+            let free = geo.regions[r].ctx.capacity[t] - plan.reserved[r * h + t];
+            let take = d.min(free);
+            if take > 0 {
+                plan.reserved[r * h + t] += take;
+                plan.flows[t].push((s, r, take));
+                plan.served += take;
+                plan.carbon_g += take as f64 * svc.power_watts / 1000.0 * geo.regions[r].ctx.carbon[t];
+            }
+            plan.violations += d - take;
+        }
+    }
+    plan
+}
+
+/// Carbon-only baseline: fill the greenest regions first, ignoring
+/// latency floors entirely. Server-slots served outside a service's
+/// feasible set — and any left unserved — count as violations.
+pub fn route_greenest(set: &InteractiveSet, geo: &GeoPlanContext) -> RoutePlan {
+    let h = set.horizon;
+    let nr = geo.n_regions();
+    let mut plan = RoutePlan::empty(set.start, h, nr);
+    for t in 0..h {
+        let mut order: Vec<usize> = (0..nr).collect();
+        order.sort_by(|&a, &b| {
+            geo.regions[a].ctx.carbon[t]
+                .partial_cmp(&geo.regions[b].ctx.carbon[t])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for (s, svc) in set.services.iter().enumerate() {
+            let mut left = svc.demand[t];
+            for &r in &order {
+                if left == 0 {
+                    break;
+                }
+                let free = geo.regions[r].ctx.capacity[t] - plan.reserved[r * h + t];
+                let take = left.min(free);
+                if take == 0 {
+                    continue;
+                }
+                plan.reserved[r * h + t] += take;
+                plan.flows[t].push((s, r, take));
+                plan.served += take;
+                plan.carbon_g += take as f64 * svc.power_watts / 1000.0 * geo.regions[r].ctx.carbon[t];
+                if !svc.feasible.contains(&r) {
+                    plan.violations += take;
+                }
+                left -= take;
+            }
+            plan.violations += left;
+        }
+    }
+    plan
+}
+
+/// Subtract a route plan's reservations from a geo context's capacity:
+/// the residual the batch planners see. Errors if any reservation
+/// exceeds capacity (never produced by the routers in this module).
+pub fn squeeze(geo: &GeoPlanContext, plan: &RoutePlan) -> Result<GeoPlanContext> {
+    if plan.horizon != geo.horizon() || plan.start != geo.start() {
+        bail!("route plan window does not match context");
+    }
+    let mut out = geo.clone();
+    for (r, region) in out.regions.iter_mut().enumerate() {
+        for t in 0..plan.horizon {
+            let res = plan.reserved[r * plan.horizon + t];
+            let cap = &mut region.ctx.capacity[t];
+            if res > *cap {
+                bail!("reservation {res} exceeds capacity {cap} at region {r}, slot {t}");
+            }
+            *cap -= res;
+        }
+    }
+    Ok(out)
+}
+
+/// Routes an interactive set, then exposes the squeezed residual context
+/// for the unchanged batch stack (plan → warm repair → dirty revision
+/// repair all see interactive demand as less capacity).
+#[derive(Debug, Clone)]
+pub struct CoScheduler {
+    plan: RoutePlan,
+    residual: GeoPlanContext,
+}
+
+impl CoScheduler {
+    pub fn new(geo: &GeoPlanContext, set: &InteractiveSet) -> Result<Self> {
+        if set.start != geo.start() || set.horizon != geo.horizon() {
+            bail!("interactive set window does not match context");
+        }
+        let plan = route(set, geo);
+        let residual = squeeze(geo, &plan)?;
+        Ok(CoScheduler { plan, residual })
+    }
+
+    /// The committed routing.
+    pub fn plan(&self) -> &RoutePlan {
+        &self.plan
+    }
+
+    /// The squeezed context for batch planning.
+    pub fn residual(&self) -> &GeoPlanContext {
+        &self.residual
+    }
+
+    /// Reserved interactive servers at (region, relative slot).
+    pub fn reserved_at(&self, region: usize, rel: usize) -> usize {
+        self.plan.reserved_at(region, rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::fleet::PlanContext;
+    use crate::sched::geo::{GeoRegion, MigrationPolicy};
+
+    /// Hand-built two/three-region contexts with flat carbon.
+    fn ctx(regions: &[(&str, usize, f64)], horizon: usize) -> GeoPlanContext {
+        let regions = regions
+            .iter()
+            .map(|(name, cap, carbon)| GeoRegion {
+                name: (*name).into(),
+                ctx: PlanContext::uniform(0, *cap, vec![*carbon; horizon]).unwrap(),
+            })
+            .collect();
+        GeoPlanContext::new(regions, MigrationPolicy::none()).unwrap()
+    }
+
+    fn svc(name: &str, home: usize, feasible: &[usize], demand: Vec<usize>) -> ServiceDemand {
+        ServiceDemand {
+            name: name.into(),
+            home,
+            feasible: feasible.to_vec(),
+            demand,
+            power_watts: 1000.0,
+        }
+    }
+
+    #[test]
+    fn exact_router_keeps_contested_cheap_region_for_the_constrained_service() {
+        // s0 can only be served at quebec (cheap); s1 at quebec or
+        // montreal. A cheapest-first greedy that routes s1 into quebec
+        // strands s0; the exact solve must serve both.
+        let g = ctx(&[("quebec", 1, 10.0), ("montreal", 1, 50.0)], 1);
+        let set = InteractiveSet {
+            start: 0,
+            horizon: 1,
+            services: vec![svc("s0", 0, &[0], vec![1]), svc("s1", 1, &[0, 1], vec![1])],
+        };
+        let plan = route(&set, &g);
+        assert_eq!(plan.served, 2);
+        assert_eq!(plan.violations, 0);
+        assert!((plan.carbon_g - (10.0 + 50.0)).abs() < 1e-9, "{}", plan.carbon_g);
+        assert_eq!(plan.reserved_at(0, 0), 1);
+        assert_eq!(plan.reserved_at(1, 0), 1);
+    }
+
+    #[test]
+    fn router_prefers_green_within_the_floor_and_respects_capacity() {
+        let g = ctx(&[("warsaw", 4, 600.0), ("iceland", 3, 30.0)], 2);
+        let set = InteractiveSet {
+            start: 0,
+            horizon: 2,
+            services: vec![svc("web", 0, &[0, 1], vec![5, 2])],
+        };
+        let plan = route(&set, &g);
+        assert!(plan.respects_capacity(&g));
+        assert_eq!(plan.served, 7);
+        assert_eq!(plan.violations, 0);
+        // Slot 0: iceland fills first (3), warsaw takes the rest (2).
+        assert_eq!(plan.reserved_at(1, 0), 3);
+        assert_eq!(plan.reserved_at(0, 0), 2);
+        // Slot 1: all demand fits in iceland.
+        assert_eq!(plan.reserved_at(1, 1), 2);
+        assert_eq!(plan.reserved_at(0, 1), 0);
+    }
+
+    #[test]
+    fn overload_becomes_violations_not_overcommit() {
+        let g = ctx(&[("tokyo", 2, 400.0)], 1);
+        let set = InteractiveSet {
+            start: 0,
+            horizon: 1,
+            services: vec![svc("s", 0, &[0], vec![5])],
+        };
+        for plan in [route(&set, &g), route_nearest(&set, &g), route_greenest(&set, &g)] {
+            assert!(plan.respects_capacity(&g));
+            assert_eq!(plan.served, 2);
+            assert_eq!(plan.violations, 3);
+        }
+    }
+
+    #[test]
+    fn nearest_serves_home_greenest_breaks_floors() {
+        let g = ctx(&[("jakarta", 8, 700.0), ("iceland", 8, 30.0)], 1);
+        let set = InteractiveSet {
+            start: 0,
+            horizon: 1,
+            services: vec![svc("s", 0, &[0], vec![4])],
+        };
+        let near = route_nearest(&set, &g);
+        assert_eq!((near.served, near.violations), (4, 0));
+        assert_eq!(near.reserved_at(0, 0), 4);
+        let green = route_greenest(&set, &g);
+        assert_eq!(green.served, 4);
+        assert_eq!(green.violations, 4, "all served out of floor");
+        assert_eq!(green.reserved_at(1, 0), 4);
+        assert!(green.carbon_g < near.carbon_g);
+        // Within the same served amount, exact routing never costs more
+        // than nearest.
+        let exact = route(&set, &g);
+        assert_eq!(exact.violations, 0);
+        assert!(exact.carbon_g <= near.carbon_g + 1e-9);
+    }
+
+    #[test]
+    fn co_scheduler_squeezes_exactly_the_reservations() {
+        let g = ctx(&[("quebec", 5, 30.0), ("warsaw", 5, 600.0)], 2);
+        let set = InteractiveSet {
+            start: 0,
+            horizon: 2,
+            services: vec![svc("s", 0, &[0, 1], vec![2, 3])],
+        };
+        let co = CoScheduler::new(&g, &set).unwrap();
+        for r in 0..2 {
+            for t in 0..2 {
+                assert_eq!(
+                    co.residual().regions[r].ctx.capacity[t],
+                    g.regions[r].ctx.capacity[t] - co.reserved_at(r, t)
+                );
+            }
+        }
+        assert_eq!(co.plan().violations, 0);
+    }
+
+    #[test]
+    fn build_set_resolves_floors_from_rtt() {
+        let g = ctx(&[("tokyo", 4, 400.0), ("osaka", 4, 380.0), ("london", 4, 200.0)], 24);
+        let specs = vec![ServiceSpec {
+            name: "jp-web".into(),
+            home: "tokyo".into(),
+            slo_ms: 10.0,
+            peak_servers: 3,
+            arrival: 2,
+            hours: 10,
+            power_watts: 210.0,
+        }];
+        let set = build_set(&specs, &g, 11).unwrap();
+        let s = &set.services[0];
+        // Osaka (~400 km) is inside a 10 ms floor, London is not.
+        assert_eq!(s.feasible, vec![0, 1]);
+        assert_eq!(s.home, 0);
+        assert!(s.demand[..2].iter().all(|&d| d == 0));
+        assert!(s.demand[2..12].iter().all(|&d| d >= 1));
+        assert!(s.demand[12..].iter().all(|&d| d == 0));
+
+        // Window and duplicate validation.
+        let late = vec![ServiceSpec { arrival: 20, ..specs[0].clone() }];
+        assert!(build_set(&late, &g, 11).is_err(), "span past window");
+        let dup = vec![specs[0].clone(), specs[0].clone()];
+        assert!(build_set(&dup, &g, 11).is_err(), "duplicate name");
+        let tight = vec![ServiceSpec { slo_ms: 1.0, ..specs[0].clone() }];
+        assert!(build_set(&tight, &g, 11).is_err(), "SLO below same-region RTT");
+    }
+}

@@ -1,8 +1,9 @@
 //! Scheduling policies: CarbonScaler's greedy Algorithm 1 and the paper's
 //! baselines, the capacity-constrained fleet planning engine, the
 //! geo-distributed placement engine, the online event-driven scheduling
-//! engine with warm-start incremental replanning, plus the schedule type
-//! and accounting.
+//! engine with warm-start incremental replanning, the SLO-feasible
+//! interactive request router and its batch co-scheduler, plus the
+//! schedule type and accounting.
 
 pub mod baselines;
 pub mod dirty;
@@ -10,6 +11,7 @@ pub mod engine;
 pub mod fleet;
 pub mod geo;
 pub mod greedy;
+pub mod interactive;
 pub mod policy;
 pub mod prio;
 pub mod reference;
@@ -26,6 +28,10 @@ pub use engine::{
 };
 pub use fleet::{FleetSchedule, IndependentFleet, PlanContext};
 pub use geo::{GeoFleetSchedule, GeoPlanContext, GeoRegion, GeoSchedule, MigrationPolicy};
+pub use interactive::{
+    build_set, route, route_greenest, route_nearest, squeeze, CoScheduler, InteractiveSet,
+    RoutePlan, ServiceDemand,
+};
 pub use policy::{CarbonScalerPolicy, Policy};
 pub use prio::{BucketQueue, Cand};
 pub use schedule::{Schedule, ScheduleAccounting};

@@ -9,6 +9,7 @@
 //! | POST   | `/v1/jobs/{id}/complete` | mark a job finished, freeing its capacity |
 //! | POST   | `/v1/forecast`           | `{"start": h, "carbon": [...]}` — revision fan-out to every shard |
 //! | POST   | `/v1/capacity`           | `{"start": h, "capacity": [...]}` — **total cluster** capacity revision, partitioned across shards |
+//! | POST   | `/v1/services`           | `{"name": s, "tenant": s, "start": h, "demand": [...]}` — register an interactive request stream (DESIGN.md §15); its per-slot demand is reserved out of the tenant's shard ahead of batch jobs, demand that does not fit is returned as SLO violations |
 //! | GET    | `/v1/stats`              | pool totals + per-shard planning/batching counters |
 //! | GET    | `/healthz`               | liveness |
 //!
@@ -20,7 +21,7 @@
 use crate::cluster::api as jobspec;
 use crate::sched::engine::Event;
 use crate::service::http::{Handler, HttpRequest, HttpResponse};
-use crate::service::shard::{kind_str, ReviseVerdict, ShardPool, SubmitResult};
+use crate::service::shard::{kind_str, ReviseVerdict, ServiceResult, ShardPool, SubmitResult};
 use crate::service::snapshot::JobView;
 use crate::util::json::{self, Json};
 use std::sync::Arc;
@@ -70,6 +71,7 @@ fn route(state: &ServiceState, req: &HttpRequest) -> HttpResponse {
         ("POST", ["v1", "jobs", id, "complete"]) => complete(state, id),
         ("POST", ["v1", "forecast"]) => revise(state, &req.body, Signal::Forecast),
         ("POST", ["v1", "capacity"]) => revise(state, &req.body, Signal::Capacity),
+        ("POST", ["v1", "services"]) => register_service(state, &req.body),
         ("GET", ["v1", "stats"]) => stats(state),
         ("GET", ["healthz"]) => HttpResponse::ok(pooled_body(
             &Json::obj()
@@ -167,6 +169,51 @@ fn complete(state: &ServiceState, id: &str) -> HttpResponse {
     }
 }
 
+fn register_service(state: &ServiceState, body: &str) -> HttpResponse {
+    let doc = match json::parse(body) {
+        Ok(doc) => doc,
+        Err(e) => return HttpResponse::bad_request(&format!("{e}")),
+    };
+    let Some(name) = doc.get("name").and_then(Json::as_str) else {
+        return HttpResponse::bad_request("missing string 'name'");
+    };
+    let tenant = doc.get("tenant").and_then(Json::as_str).unwrap_or(name);
+    let start = doc.get("start").and_then(Json::as_usize).unwrap_or(0);
+    let Some(demand) = doc
+        .get("demand")
+        .and_then(Json::as_arr)
+        .and_then(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<usize>>>())
+    else {
+        return HttpResponse::bad_request("missing 'demand' integer array");
+    };
+    let name = name.to_string();
+    let tenant = tenant.to_string();
+    match state.pool.submit_service(&tenant, &name, start, demand) {
+        Ok(ServiceResult::Registered(out)) => HttpResponse::ok(pooled_body(
+            &Json::obj()
+                .set("service", name)
+                .set("tenant", tenant)
+                .set("registered", true)
+                .set("shard", out.shard)
+                .set("start", start)
+                .set("reserved", out.reserved)
+                .set("reservedUnits", out.reserved_units)
+                .set("sloViolations", out.violations),
+        )),
+        Ok(ServiceResult::Rejected(msg)) => HttpResponse::json(
+            409,
+            pooled_body(
+                &Json::obj()
+                    .set("service", name)
+                    .set("tenant", tenant)
+                    .set("registered", false)
+                    .set("error", msg),
+            ),
+        ),
+        Err(e) => HttpResponse::error(503, &format!("{e:#}")),
+    }
+}
+
 enum Signal {
     Forecast,
     Capacity,
@@ -241,12 +288,18 @@ fn stats(state: &ServiceState) -> HttpResponse {
     let mut completed = 0usize;
     let mut failed = 0usize;
     let mut carbon_g = 0.0f64;
+    let mut services = 0usize;
+    let mut interactive_reserved = 0usize;
+    let mut slo_violations = 0usize;
     let mut shard_rows: Vec<Json> = Vec::with_capacity(snaps.len());
     for snap in &snaps {
         active += snap.active_jobs();
         completed += snap.completed_total;
         failed += snap.failed_total;
         carbon_g += snap.admitted_carbon_g;
+        services += snap.services;
+        interactive_reserved += snap.interactive_reserved;
+        slo_violations += snap.slo_violations;
         let s = &snap.stats;
         shard_rows.push(
             Json::obj()
@@ -263,6 +316,9 @@ fn stats(state: &ServiceState) -> HttpResponse {
                 .set("batchedEvents", snap.batched_events)
                 .set("coalescedRevisions", snap.coalesced_revisions)
                 .set("dirtySlots", snap.dirty_slots)
+                .set("services", snap.services)
+                .set("interactiveReserved", snap.interactive_reserved)
+                .set("sloViolations", snap.slo_violations)
                 .set("seededJobs", s.seeded_jobs)
                 .set("warmRepairs", s.warm_repairs)
                 .set("escalatedRepairs", s.escalated_repairs)
@@ -288,6 +344,9 @@ fn stats(state: &ServiceState) -> HttpResponse {
             .set("completed", completed)
             .set("failed", failed)
             .set("carbonG", carbon_g)
+            .set("services", services)
+            .set("interactiveReserved", interactive_reserved)
+            .set("sloViolations", slo_violations)
             .set("shards", Json::Arr(shard_rows)),
     ))
 }
@@ -409,6 +468,59 @@ mod tests {
         assert_eq!(status, 404);
         let (status, _) = call(&st, "DELETE", "/v1/jobs", "");
         assert_eq!(status, 405);
+        st.pool().shutdown();
+    }
+
+    #[test]
+    fn service_registration_reserves_capacity_and_shows_in_stats() {
+        let st = state();
+        // Shard capacity is 4 servers/slot (8 split 2 ways); ask for 6
+        // in one slot so exactly 2 units overflow into violations.
+        let (status, doc) = call(
+            &st,
+            "POST",
+            "/v1/services",
+            r#"{"name": "web", "tenant": "acme", "start": 1, "demand": [2, 6]}"#,
+        );
+        assert_eq!(status, 200, "{doc:?}");
+        assert_eq!(doc.get("registered").and_then(Json::as_bool), Some(true));
+        assert_eq!(doc.get("reservedUnits").and_then(Json::as_usize), Some(6));
+        assert_eq!(doc.get("sloViolations").and_then(Json::as_usize), Some(2));
+        let reserved: Vec<usize> = doc
+            .get("reserved")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(reserved, vec![2, 4]);
+        // The reservation squeezed the owning shard's capacity.
+        let shard = doc.get("shard").and_then(Json::as_usize).unwrap();
+        let snap = &st.pool().snapshots()[shard];
+        assert_eq!(snap.capacity[1], 2);
+        assert_eq!(snap.capacity[2], 0);
+        // Stats totals and the shard row both reconcile.
+        let (_, doc) = call(&st, "GET", "/v1/stats", "");
+        assert_eq!(doc.get("services").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            doc.get("interactiveReserved").and_then(Json::as_usize),
+            Some(6)
+        );
+        assert_eq!(doc.get("sloViolations").and_then(Json::as_usize), Some(2));
+        // Duplicate registration is refused.
+        let (status, doc) = call(
+            &st,
+            "POST",
+            "/v1/services",
+            r#"{"name": "web", "tenant": "acme", "start": 0, "demand": [1]}"#,
+        );
+        assert_eq!(status, 409, "{doc:?}");
+        assert_eq!(doc.get("registered").and_then(Json::as_bool), Some(false));
+        // Malformed bodies are 400s.
+        let (status, _) = call(&st, "POST", "/v1/services", r#"{"name": "x"}"#);
+        assert_eq!(status, 400);
+        let (status, _) = call(&st, "POST", "/v1/services", r#"{"demand": [1]}"#);
+        assert_eq!(status, 400);
         st.pool().shutdown();
     }
 

@@ -37,8 +37,11 @@ use crate::service::wal::{self, checksum, Cur};
 use std::io::{self, Write as _};
 use std::path::Path;
 
-/// Magic + version prefix of a snapshot file.
-const MAGIC: &[u8; 8] = b"PLSNAP01";
+/// Magic + version prefix of a snapshot file. Bumped to 02 when the
+/// interactive-service fields were appended (DESIGN.md §15): an old
+/// snapshot fails loudly as a version mismatch instead of decoding as
+/// a truncated payload.
+const MAGIC: &[u8; 8] = b"PLSNAP02";
 
 /// Everything a shard worker must persist to come back bit-identical:
 /// the engine half (context, clock, jobs, counters) and the service half
@@ -67,6 +70,12 @@ pub struct PersistedShard {
     pub batched_events: usize,
     pub coalesced: usize,
     pub dirty_slots: usize,
+    /// Registered interactive services, in registration order.
+    pub services: Vec<String>,
+    /// Server-slots reserved for interactive streams (lifetime total).
+    pub interactive_reserved: usize,
+    /// Interactive demand units refused for lack of capacity.
+    pub slo_violations: usize,
 }
 
 fn put_stats(buf: &mut Vec<u8>, s: &EngineStats) {
@@ -245,6 +254,12 @@ fn encode(shard: &PersistedShard) -> Vec<u8> {
     wal::put_usize(&mut buf, shard.batched_events);
     wal::put_usize(&mut buf, shard.coalesced);
     wal::put_usize(&mut buf, shard.dirty_slots);
+    wal::put_u32(&mut buf, shard.services.len() as u32);
+    for name in &shard.services {
+        wal::put_str(&mut buf, name);
+    }
+    wal::put_usize(&mut buf, shard.interactive_reserved);
+    wal::put_usize(&mut buf, shard.slo_violations);
     buf
 }
 
@@ -289,6 +304,13 @@ fn decode(payload: &[u8]) -> Option<PersistedShard> {
     let batched_events = cur.usize_()?;
     let coalesced = cur.usize_()?;
     let dirty_slots = cur.usize_()?;
+    let n = cur.u32()? as usize;
+    let mut services = Vec::with_capacity(n);
+    for _ in 0..n {
+        services.push(cur.str_()?);
+    }
+    let interactive_reserved = cur.usize_()?;
+    let slo_violations = cur.usize_()?;
     if !cur.done() {
         return None;
     }
@@ -309,6 +331,9 @@ fn decode(payload: &[u8]) -> Option<PersistedShard> {
         batched_events,
         coalesced,
         dirty_slots,
+        services,
+        interactive_reserved,
+        slo_violations,
     })
 }
 
@@ -426,6 +451,9 @@ mod tests {
             batched_events: 11,
             coalesced: 2,
             dirty_slots: 4,
+            services: vec!["eu-web".into(), "us-api".into()],
+            interactive_reserved: 17,
+            slo_violations: 3,
         }
     }
 
@@ -451,6 +479,9 @@ mod tests {
             s.admitted_carbon_g.to_bits()
         );
         assert_eq!(r.dirty_slots, 4);
+        assert_eq!(r.services, s.services);
+        assert_eq!(r.interactive_reserved, 17);
+        assert_eq!(r.slo_violations, 3);
     }
 
     #[test]

@@ -159,6 +159,27 @@ pub struct PoolTotals {
     pub rejected: usize,
 }
 
+/// What a registered interactive service gets back (DESIGN.md §15): the
+/// per-slot reservation actually granted out of the shard's capacity.
+#[derive(Debug, Clone)]
+pub struct ServiceOutcome {
+    pub shard: usize,
+    /// Granted servers per slot, aligned with the requested demand.
+    pub reserved: Vec<usize>,
+    /// Total granted server-slots (`reserved` summed).
+    pub reserved_units: usize,
+    /// Demand units refused for lack of capacity — each is an SLO
+    /// violation the caller must absorb (shed or remote-serve).
+    pub violations: usize,
+}
+
+/// Registration verdict for one interactive service.
+#[derive(Debug, Clone)]
+pub enum ServiceResult {
+    Registered(ServiceOutcome),
+    Rejected(String),
+}
+
 /// Terminal (completed/failed) jobs retained per shard for reads after
 /// the engine evicts them — an always-on shard must not grow with
 /// lifetime throughput (the cumulative snapshot counters stay exact).
@@ -193,6 +214,25 @@ enum ShardRequest {
         event: Event,
         reply: Sender<ReviseVerdict>,
     },
+    Service {
+        name: String,
+        tenant: String,
+        start: usize,
+        demand: Vec<usize>,
+        reply: Sender<ServiceResult>,
+    },
+}
+
+/// A service grant planned (validated, reservation computed) but not yet
+/// staged/committed — the in-batch twin of [`WalRecord::Service`].
+struct GrantedService {
+    name: String,
+    tenant: String,
+    start: usize,
+    demand: Vec<usize>,
+    reserved: Vec<usize>,
+    violations: usize,
+    reply: Sender<ServiceResult>,
 }
 
 /// The sharded scheduler pool. Cheap to share behind an `Arc`; all
@@ -262,6 +302,9 @@ impl ShardPool {
                 batched_events: 0,
                 coalesced: 0,
                 dirty_slots: 0,
+                services: Vec::new(),
+                interactive_reserved: 0,
+                slo_violations: 0,
                 durable: None,
                 replayed_events: 0,
                 replaying: false,
@@ -340,6 +383,36 @@ impl ShardPool {
         })
         .map_err(|_| anyhow!("shard {shard} is gone"))?;
         self.submitted.fetch_add(1, Ordering::SeqCst);
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("shard {shard} dropped the request"))
+    }
+
+    /// Register an interactive request stream for `tenant` (DESIGN.md
+    /// §15): per-slot demand is reserved out of the tenant's shard's
+    /// capacity ahead of the batch jobs there (the shard repairs its
+    /// batch plans against the residual), demand that does not fit
+    /// counts as SLO violations, and the grant flows through the same
+    /// WAL batch/group-commit pipeline as submits — the ack is released
+    /// only once the [`wal::WalRecord::Service`] record is durable.
+    pub fn submit_service(
+        &self,
+        tenant: &str,
+        name: &str,
+        start: usize,
+        demand: Vec<usize>,
+    ) -> Result<ServiceResult> {
+        let shard = self.shard_of(tenant);
+        let tx = self.sender(shard)?;
+        let (reply_tx, reply_rx) = channel();
+        tx.send(ShardRequest::Service {
+            name: name.to_string(),
+            tenant: tenant.to_string(),
+            start,
+            demand,
+            reply: reply_tx,
+        })
+        .map_err(|_| anyhow!("shard {shard} is gone"))?;
         reply_rx
             .recv()
             .map_err(|_| anyhow!("shard {shard} dropped the request"))
@@ -562,6 +635,13 @@ struct ShardWorker {
     coalesced: usize,
     /// Cumulative popcount of the per-batch `DirtySet` unions.
     dirty_slots: usize,
+    /// Registered interactive services, in registration order (names are
+    /// unique per shard; duplicates are rejected at planning time).
+    services: Vec<String>,
+    /// Server-slots reserved for interactive services (lifetime total).
+    interactive_reserved: usize,
+    /// Interactive demand units refused for lack of capacity (lifetime).
+    slo_violations: usize,
     /// WAL + snapshot state; `None` runs in-memory only.
     durable: Option<Durable>,
     /// Engine events replayed from the WAL tail at startup.
@@ -582,6 +662,7 @@ enum DeferredReply {
     Submit(Sender<SubmitResult>, SubmitResult),
     Complete(Sender<CompleteVerdict>, CompleteVerdict),
     Revise(Sender<ReviseVerdict>, ReviseVerdict),
+    Service(Sender<ServiceResult>, ServiceResult),
 }
 
 impl ShardWorker {
@@ -631,6 +712,9 @@ impl ShardWorker {
                     DeferredReply::Revise(tx, out) => {
                         let _ = tx.send(out);
                     }
+                    DeferredReply::Service(tx, out) => {
+                        let _ = tx.send(out);
+                    }
                 }
             }
         };
@@ -654,6 +738,7 @@ impl ShardWorker {
         let mut submits = Vec::new();
         let mut completes = Vec::new();
         let mut revisions = Vec::new();
+        let mut services = Vec::new();
         for msg in batch {
             match msg {
                 ShardRequest::Submit {
@@ -671,6 +756,13 @@ impl ShardWorker {
                 )),
                 ShardRequest::Complete { name, reply } => completes.push((name, reply)),
                 ShardRequest::Revise { event, reply } => revisions.push((event, reply)),
+                ShardRequest::Service {
+                    name,
+                    tenant,
+                    start,
+                    demand,
+                    reply,
+                } => services.push((name, tenant, start, demand, reply)),
             }
         }
         let mut replies = Vec::new();
@@ -680,10 +772,24 @@ impl ShardWorker {
         // reach the WAL before they reach the engine.
         let (merged, coalesced_delta) = self.plan_revisions(revisions, &mut replies);
 
+        // 1b. Plan interactive service grants against the post-revision
+        // capacity (DESIGN.md §15): each grant's reservation is the
+        // slot-wise min of its demand and what is left after earlier
+        // grants, so the stored reservation is exactly what commit (and
+        // replay) will subtract. Still no engine mutation.
+        let granted = self.plan_services(services, &merged, &mut replies);
+
         // 2. WAL: stage exactly what will be applied with the writer
         // thread. The batch's acks are gated on its top sequence
         // becoming durable; planning continues immediately.
-        let top_seq = self.stage_batch(raw_events, coalesced_delta, &merged, &completes, &submits);
+        let top_seq = self.stage_batch(
+            raw_events,
+            coalesced_delta,
+            &merged,
+            &granted,
+            &completes,
+            &submits,
+        );
 
         self.batches += 1;
         self.batched_events += raw_events;
@@ -695,6 +801,20 @@ impl ShardWorker {
             for reply in senders {
                 replies.push(DeferredReply::Revise(reply, verdict.clone()));
             }
+        }
+
+        // 3b. Service grants: each subtracts its stored reservation from
+        // shard capacity (one dirty-slot repair over the squeezed span)
+        // before the batch's completions/arrivals see the residual.
+        for g in granted {
+            let outcome = ServiceResult::Registered(ServiceOutcome {
+                shard: self.shard,
+                reserved: g.reserved.clone(),
+                reserved_units: g.reserved.iter().sum(),
+                violations: g.violations,
+            });
+            self.commit_service(g.name, g.start, &g.reserved, g.violations);
+            replies.push(DeferredReply::Service(g.reply, outcome));
         }
 
         // 4. Completions, freeing capacity for the arrivals below; the
@@ -800,6 +920,113 @@ impl ShardWorker {
         (merged, coalesced)
     }
 
+    /// Validate the batch's interactive service requests and compute
+    /// their reservations against the post-revision capacity, in request
+    /// order (first come, first reserved). Pure with respect to the
+    /// engine; invalid requests are answered immediately and never reach
+    /// the WAL. The granted reservation — not the demand — is what
+    /// commit subtracts and what the WAL stores, so replay re-applies
+    /// exactly the acknowledged squeeze without recomputing anything.
+    fn plan_services(
+        &self,
+        requests: Vec<(String, String, usize, Vec<usize>, Sender<ServiceResult>)>,
+        merged: &[(Event, Vec<Sender<ReviseVerdict>>)],
+        replies: &mut Vec<DeferredReply>,
+    ) -> Vec<GrantedService> {
+        if requests.is_empty() {
+            return Vec::new();
+        }
+        let ctx = self.engine.context();
+        // Grants take only *free* capacity: the slot-wise min of the
+        // incumbent and the batch's merged capacity revision (if any),
+        // minus what active batch jobs already committed. The engine
+        // refuses capacity shrinks no repair can satisfy (rolling the
+        // splice back), so a reservation that stranded an admitted job
+        // would be silently undone after we acknowledged it — capping at
+        // free capacity keeps every acknowledged squeeze applicable, and
+        // the overflow is honestly returned as SLO violations.
+        let mut avail = ctx.capacity.clone();
+        for (event, _) in merged {
+            if let Event::CapacityChanged { start, capacity } = event {
+                let lo = start - ctx.start;
+                for (i, &c) in capacity.iter().enumerate() {
+                    avail[lo + i] = avail[lo + i].min(c);
+                }
+            }
+        }
+        for j in self.engine.jobs() {
+            if j.state != JobState::Active {
+                continue;
+            }
+            for (fi, a) in avail.iter_mut().enumerate() {
+                *a = a.saturating_sub(j.plan.at(ctx.start + fi));
+            }
+        }
+        let mut granted: Vec<GrantedService> = Vec::new();
+        for (name, tenant, start, demand, reply) in requests {
+            let error = if name.is_empty() {
+                Some("service name must be non-empty".to_string())
+            } else if demand.is_empty() || start < ctx.start || start + demand.len() > ctx.end() {
+                Some(format!(
+                    "stream window [{start}, {}) outside service window [{}, {})",
+                    start + demand.len(),
+                    ctx.start,
+                    ctx.end()
+                ))
+            } else if self.services.contains(&name) || granted.iter().any(|g| g.name == name) {
+                Some(format!("service {name:?} is already registered"))
+            } else {
+                None
+            };
+            if let Some(msg) = error {
+                replies.push(DeferredReply::Service(reply, ServiceResult::Rejected(msg)));
+                continue;
+            }
+            let lo = start - ctx.start;
+            let mut reserved = Vec::with_capacity(demand.len());
+            let mut violations = 0usize;
+            for (i, &want) in demand.iter().enumerate() {
+                let got = want.min(avail[lo + i]);
+                avail[lo + i] -= got;
+                violations += want - got;
+                reserved.push(got);
+            }
+            granted.push(GrantedService {
+                name,
+                tenant,
+                start,
+                demand,
+                reserved,
+                violations,
+                reply,
+            });
+        }
+        granted
+    }
+
+    /// Apply one service grant: subtract the stored reservation from
+    /// shard capacity via the normal revision path (dirty-slot
+    /// accounting included) and bump the interactive counters. Shared
+    /// verbatim by the live path and WAL replay — replay re-applies the
+    /// *stored* reservation, never recomputing it, which is what makes
+    /// recovered capacity bit-identical to what was acknowledged.
+    fn commit_service(&mut self, name: String, start: usize, reserved: &[usize], violations: usize) {
+        let units: usize = reserved.iter().sum();
+        if units > 0 {
+            let ctx = self.engine.context();
+            let lo = start - ctx.start;
+            let capacity: Vec<usize> = reserved
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| ctx.capacity[lo + i].saturating_sub(r))
+                .collect();
+            let _ = self.commit_revision(Event::CapacityChanged { start, capacity });
+        }
+        self.interactive_reserved += units;
+        self.slo_violations += violations;
+        self.services.push(name);
+    }
+
     /// Stage the batch's records with the WAL writer thread and return
     /// the top sequence (`None` when in-memory). No disk I/O happens
     /// here; if the writer has fail-stopped, `append_batch` panics this
@@ -811,17 +1038,28 @@ impl ShardWorker {
         raw_events: usize,
         coalesced: usize,
         merged: &[(Event, Vec<Sender<ReviseVerdict>>)],
+        granted: &[GrantedService],
         completes: &[(String, Sender<CompleteVerdict>)],
         submits: &[(WalArrival, Sender<SubmitResult>)],
     ) -> Option<u64> {
         let d = self.durable.as_ref()?;
-        let mut recs = Vec::with_capacity(3 + merged.len());
+        let mut recs = Vec::with_capacity(3 + merged.len() + granted.len());
         recs.push(WalRecord::BatchStats {
             raw_events,
             coalesced,
         });
         for (event, _) in merged {
             recs.push(WalRecord::Revision(event.clone()));
+        }
+        for g in granted {
+            recs.push(WalRecord::Service {
+                name: g.name.clone(),
+                tenant: g.tenant.clone(),
+                start: g.start,
+                demand: g.demand.clone(),
+                reserved: g.reserved.clone(),
+                violations: g.violations,
+            });
         }
         if !completes.is_empty() {
             recs.push(WalRecord::Completions(
@@ -955,6 +1193,9 @@ impl ShardWorker {
             self.batched_events = p.batched_events;
             self.coalesced = p.coalesced;
             self.dirty_slots = p.dirty_slots;
+            self.services = p.services;
+            self.interactive_reserved = p.interactive_reserved;
+            self.slo_violations = p.slo_violations;
         }
         let scan = wal::scan(&wal_path)?;
         if scan.truncated {
@@ -991,6 +1232,15 @@ impl ShardWorker {
                 }
                 WalRecord::Arrivals(arrivals) => {
                     let _ = self.commit_arrivals(arrivals, 0);
+                }
+                WalRecord::Service {
+                    name,
+                    start,
+                    reserved,
+                    violations,
+                    ..
+                } => {
+                    self.commit_service(name, start, &reserved, violations);
                 }
             }
         }
@@ -1071,6 +1321,9 @@ impl ShardWorker {
             batched_events: self.batched_events,
             coalesced: self.coalesced,
             dirty_slots: self.dirty_slots,
+            services: self.services.clone(),
+            interactive_reserved: self.interactive_reserved,
+            slo_violations: self.slo_violations,
         }
     }
 
@@ -1178,6 +1431,9 @@ impl ShardWorker {
             batched_events: self.batched_events,
             coalesced_revisions: self.coalesced,
             dirty_slots: self.dirty_slots,
+            services: self.services.len(),
+            interactive_reserved: self.interactive_reserved,
+            slo_violations: self.slo_violations,
             wal_bytes: dv.as_ref().map_or(0, |v| v.logical_bytes),
             last_snapshot_seq: dv.as_ref().map_or(0, |v| v.last_snapshot_seq),
             replayed_events: self.replayed_events,
@@ -1454,6 +1710,49 @@ mod tests {
         p.shutdown();
     }
 
+    #[test]
+    fn service_reservation_squeezes_capacity_ahead_of_batch_jobs() {
+        let p = pool(1, 4);
+        let out = p.submit_service("acme", "web", 0, vec![3; 6]).unwrap();
+        let ServiceResult::Registered(out) = out else {
+            panic!("web must register");
+        };
+        assert_eq!(out.reserved, vec![3; 6]);
+        assert_eq!(out.reserved_units, 18);
+        assert_eq!(out.violations, 0);
+        let snap = &p.snapshots()[0];
+        assert_eq!(snap.capacity, vec![1; 6]);
+        assert_eq!(snap.services, 1);
+        assert_eq!(snap.interactive_reserved, 18);
+        assert_eq!(snap.slo_violations, 0);
+        // Batch jobs plan against the residual single server.
+        let ok = p.submit("t", "custom", job("fits", 6.0, 1.0, 1)).unwrap();
+        assert!(matches!(ok, SubmitResult::Admitted(_)));
+        let no = p.submit("t", "custom", job("spill", 6.0, 1.0, 1)).unwrap();
+        assert!(matches!(no, SubmitResult::Rejected(_)));
+        // A second stream only gets what is *free* — the admitted batch
+        // job keeps its server (the engine would refuse a shrink that
+        // strands it) — so the whole demand overflows into violations.
+        let out = p.submit_service("acme", "api", 0, vec![2; 6]).unwrap();
+        let ServiceResult::Registered(out) = out else {
+            panic!("api must register");
+        };
+        assert_eq!(out.reserved, vec![0; 6]);
+        assert_eq!(out.violations, 12);
+        let snap = &p.snapshots()[0];
+        assert_eq!(snap.services, 2);
+        assert_eq!(snap.interactive_reserved, 18);
+        assert_eq!(snap.slo_violations, 12);
+        // Duplicate names and out-of-window spans are refused.
+        let dup = p.submit_service("acme", "web", 0, vec![1]).unwrap();
+        assert!(matches!(dup, ServiceResult::Rejected(_)));
+        let oow = p.submit_service("acme", "late", 4, vec![1; 10]).unwrap();
+        assert!(matches!(oow, ServiceResult::Rejected(_)));
+        let snap = &p.snapshots()[0];
+        assert_eq!(snap.services, 2, "rejections never register");
+        p.shutdown();
+    }
+
     /// Fresh per-test data dir under the system temp dir.
     fn tmpdir(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join(format!(
@@ -1515,6 +1814,44 @@ mod tests {
             assert_eq!(b.stats.replans, a.stats.replans);
             assert_eq!(b.stats.events, a.stats.events);
         }
+        q.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn durable_pool_replays_service_reservations_bit_identical() {
+        let dir = tmpdir("service-recover");
+        let carbon = vec![10.0, 40.0, 20.0, 80.0, 15.0, 60.0];
+        let cfg = || {
+            ShardPoolConfig::new(1, 4, carbon.clone())
+                .durable(&dir)
+                .compact_every(1000) // never compacts: pure WAL replay
+        };
+        let p = ShardPool::start(cfg()).unwrap();
+        let out = p.submit_service("acme", "web", 0, vec![2; 6]).unwrap();
+        assert!(matches!(out, ServiceResult::Registered(_)));
+        let out = p.submit("t", "custom", job("j", 6.0, 1.0, 2)).unwrap();
+        assert!(matches!(out, SubmitResult::Admitted(_)));
+        // Gets only what the batch job's plan left free; whatever the
+        // grant was — violations included — it must survive the crash.
+        let out = p.submit_service("acme", "api", 0, vec![1; 6]).unwrap();
+        assert!(matches!(out, ServiceResult::Registered(_)));
+        let before = p.snapshots();
+        p.kill();
+
+        let q = ShardPool::start(cfg()).unwrap();
+        let b = &before[0];
+        let a = &q.snapshots()[0];
+        assert_eq!(b.capacity, a.capacity, "replayed squeeze differs");
+        assert_eq!(b.services, a.services);
+        assert_eq!(b.interactive_reserved, a.interactive_reserved);
+        assert_eq!(b.slo_violations, a.slo_violations);
+        assert_eq!(b.dirty_slots, a.dirty_slots);
+        assert_eq!(b.stats.events, a.stats.events);
+        // Replay re-applies the *stored* reservation: a duplicate
+        // registration is still refused after recovery.
+        let dup = q.submit_service("acme", "web", 0, vec![1]).unwrap();
+        assert!(matches!(dup, ServiceResult::Rejected(_)));
         q.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }

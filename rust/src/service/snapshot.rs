@@ -97,6 +97,15 @@ pub struct ShardSnapshot {
     /// this is the cumulative popcount). A re-issue of the incumbent
     /// forecast adds 0 — the dirty-repair no-op guarantee.
     pub dirty_slots: usize,
+    /// Interactive request streams registered on this shard (DESIGN.md
+    /// §15; lifetime count — registrations are permanent reservations).
+    pub services: usize,
+    /// Server-slots reserved out of this shard's capacity for
+    /// interactive streams (lifetime total over every registration).
+    pub interactive_reserved: usize,
+    /// Interactive demand units refused for lack of capacity — SLO
+    /// violations the callers were told to absorb (lifetime total).
+    pub slo_violations: usize,
     /// Bytes currently in this shard's write-ahead log (0 when the shard
     /// runs without durability, DESIGN.md §14).
     pub wal_bytes: u64,
@@ -139,6 +148,9 @@ impl ShardSnapshot {
             batched_events: 0,
             coalesced_revisions: 0,
             dirty_slots: 0,
+            services: 0,
+            interactive_reserved: 0,
+            slo_violations: 0,
             wal_bytes: 0,
             last_snapshot_seq: 0,
             replayed_events: 0,

@@ -79,12 +79,30 @@ pub enum WalRecord {
     /// One admission batch in submit order, including specs the engine
     /// will reject.
     Arrivals(Vec<WalArrival>),
+    /// One registered interactive request stream (DESIGN.md §15): the
+    /// demand it asked for and the per-slot reservation the shard
+    /// granted at commit time. Replay re-applies the *stored*
+    /// reservation as a capacity squeeze — never recomputing it — so
+    /// recovery is bit-identical regardless of arrival interleaving.
+    Service {
+        name: String,
+        tenant: String,
+        /// Absolute first slot of the reservation window.
+        start: usize,
+        /// Requested servers per slot.
+        demand: Vec<usize>,
+        /// Granted servers per slot (`min(demand, capacity)` at commit).
+        reserved: Vec<usize>,
+        /// Requested-minus-granted server-slots (SLO violations).
+        violations: usize,
+    },
 }
 
 const KIND_BATCH_STATS: u8 = 1;
 const KIND_REVISION: u8 = 2;
 const KIND_COMPLETIONS: u8 = 3;
 const KIND_ARRIVALS: u8 = 4;
+const KIND_SERVICE: u8 = 5;
 
 /// Engine-visible events carried by a record (what `replayedEvents`
 /// counts): revisions and completions count 1 each, arrival batches
@@ -95,6 +113,9 @@ pub fn record_events(rec: &WalRecord) -> usize {
         WalRecord::Revision(_) => 1,
         WalRecord::Completions(names) => names.len(),
         WalRecord::Arrivals(arrivals) => arrivals.len(),
+        // A service registration drives exactly one engine event (its
+        // capacity squeeze).
+        WalRecord::Service { .. } => 1,
     }
 }
 
@@ -325,6 +346,28 @@ fn encode(seq: u64, rec: &WalRecord) -> Vec<u8> {
                 put_str(&mut buf, &a.workload);
             }
         }
+        WalRecord::Service {
+            name,
+            tenant,
+            start,
+            demand,
+            reserved,
+            violations,
+        } => {
+            put_u8(&mut buf, KIND_SERVICE);
+            put_str(&mut buf, name);
+            put_str(&mut buf, tenant);
+            put_usize(&mut buf, *start);
+            put_u32(&mut buf, demand.len() as u32);
+            for &d in demand {
+                put_usize(&mut buf, d);
+            }
+            put_u32(&mut buf, reserved.len() as u32);
+            for &r in reserved {
+                put_usize(&mut buf, r);
+            }
+            put_usize(&mut buf, *violations);
+        }
     }
     buf
 }
@@ -362,6 +405,30 @@ fn decode(payload: &[u8]) -> Option<(u64, WalRecord)> {
                 });
             }
             WalRecord::Arrivals(arrivals)
+        }
+        KIND_SERVICE => {
+            let name = cur.str_()?;
+            let tenant = cur.str_()?;
+            let start = cur.usize_()?;
+            let nd = cur.u32()? as usize;
+            let mut demand = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                demand.push(cur.usize_()?);
+            }
+            let nr = cur.u32()? as usize;
+            let mut reserved = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                reserved.push(cur.usize_()?);
+            }
+            let violations = cur.usize_()?;
+            WalRecord::Service {
+                name,
+                tenant,
+                start,
+                demand,
+                reserved,
+                violations,
+            }
         }
         _ => return None,
     };
@@ -476,6 +543,19 @@ pub struct GroupCommitOpts {
     pub max_delay: Duration,
     /// Stop accumulating early once this many queued bytes are waiting.
     pub max_bytes: u64,
+    /// Tune the accumulation delay online from observed ack lag
+    /// (`--group-commit-adaptive`): bounded additive-increase/decrease
+    /// via [`AdaptiveDelay`], seeded from `max_delay`. Off by default —
+    /// the fixed `max_delay` behavior is unchanged.
+    pub adaptive: bool,
+    /// Adaptive mode: mean ack lag the controller steers toward. Lag
+    /// above it shrinks the delay (latency first); lag under half of it
+    /// grows the delay (bigger groups are free).
+    pub adapt_target: Duration,
+    /// Adaptive mode: additive step per commit cycle.
+    pub adapt_step: Duration,
+    /// Adaptive mode: hard ceiling on the tuned delay.
+    pub adapt_max: Duration,
 }
 
 impl Default for GroupCommitOpts {
@@ -483,6 +563,51 @@ impl Default for GroupCommitOpts {
         GroupCommitOpts {
             max_delay: Duration::ZERO,
             max_bytes: 1 << 20,
+            adaptive: false,
+            adapt_target: Duration::from_micros(500),
+            adapt_step: Duration::from_micros(100),
+            adapt_max: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Bounded additive-increase/additive-decrease controller for the
+/// group-commit accumulation delay, fed by the observed mean ack lag
+/// (`ackLagMicros / ackReleases` per commit cycle). Pure state machine —
+/// the writer thread owns one and consults it each cycle; no shared
+/// state, so it is unit-testable in isolation.
+#[derive(Debug, Clone)]
+pub struct AdaptiveDelay {
+    current: Duration,
+    max: Duration,
+    target: Duration,
+    step: Duration,
+}
+
+impl AdaptiveDelay {
+    pub fn new(initial: Duration, max: Duration, target: Duration, step: Duration) -> Self {
+        AdaptiveDelay {
+            current: initial.min(max),
+            max,
+            target,
+            step,
+        }
+    }
+
+    /// Delay the writer should use for its next accumulation window.
+    pub fn current(&self) -> Duration {
+        self.current
+    }
+
+    /// Feed one cycle's mean ack lag. Lag above target: back off toward
+    /// zero (never below). Lag under half the target: widen toward the
+    /// ceiling (never above). The dead zone in between holds steady so
+    /// the controller doesn't oscillate around the target.
+    pub fn observe(&mut self, mean_ack_lag: Duration) {
+        if mean_ack_lag > self.target {
+            self.current = self.current.saturating_sub(self.step);
+        } else if mean_ack_lag < self.target / 2 {
+            self.current = (self.current + self.step).min(self.max);
         }
     }
 }
@@ -804,6 +929,10 @@ fn run_writer(shared: &Arc<GroupShared>, mut wal: WalWriter, opts: &GroupCommitO
     // Byte length of the durable prefix of the file — what a real crash
     // (or the simulated one in `abort`) is guaranteed to preserve.
     let mut synced_len = wal.bytes();
+    // Adaptive delay controller state: cumulative ack counters as of the
+    // previous cycle, so each cycle feeds only its own delta.
+    let mut adaptive = AdaptiveDelay::new(opts.max_delay, opts.adapt_max, opts.adapt_target, opts.adapt_step);
+    let (mut seen_lag, mut seen_releases) = (0u64, 0u64);
     loop {
         let items = {
             let mut st = shared.state.lock().expect("wal group state poisoned");
@@ -821,10 +950,22 @@ fn run_writer(shared: &Arc<GroupShared>, mut wal: WalWriter, opts: &GroupCommitO
                 }
                 st = shared.work.wait(st).expect("wal group state poisoned");
             }
+            let max_delay = if opts.adaptive {
+                let (lag, rel) = (st.ack_lag_micros, st.ack_releases);
+                if rel > seen_releases {
+                    adaptive.observe(Duration::from_micros(
+                        (lag - seen_lag) / (rel - seen_releases),
+                    ));
+                }
+                (seen_lag, seen_releases) = (lag, rel);
+                adaptive.current()
+            } else {
+                opts.max_delay
+            };
             // Optional accumulation window: trade ack latency for
             // bigger groups.
-            if opts.max_delay > Duration::ZERO {
-                let deadline = Instant::now() + opts.max_delay;
+            if max_delay > Duration::ZERO {
+                let deadline = Instant::now() + max_delay;
                 while st.mode == Mode::Run && st.queued_bytes < opts.max_bytes {
                     let Some(left) = deadline.checked_duration_since(Instant::now()) else {
                         break;
@@ -1073,6 +1214,14 @@ mod tests {
                 tenant: "acme".into(),
                 workload: "resnet18".into(),
             }]),
+            WalRecord::Service {
+                name: "eu-web".into(),
+                tenant: "acme".into(),
+                start: 3,
+                demand: vec![2, 4, 1],
+                reserved: vec![0, 2, 4, 1, 0, 0],
+                violations: 2,
+            },
         ];
         for r in &records {
             w.append(r).unwrap();
@@ -1083,7 +1232,7 @@ mod tests {
         assert_eq!(scan.valid_len, w.bytes());
         assert_eq!(scan.records.len(), records.len());
         assert_eq!(scan.records[0].0, 7, "seq seeds from open()");
-        assert_eq!(scan.records.last().unwrap().0, 11);
+        assert_eq!(scan.records.last().unwrap().0, 12);
         match &scan.records[1].1 {
             WalRecord::Revision(Event::ForecastRevised { start, carbon }) => {
                 assert_eq!(*start, 2);
@@ -1103,6 +1252,50 @@ mod tests {
             }
             other => panic!("wrong record: {other:?}"),
         }
+        match &scan.records[5].1 {
+            WalRecord::Service {
+                name,
+                tenant,
+                start,
+                demand,
+                reserved,
+                violations,
+            } => {
+                assert_eq!(name, "eu-web");
+                assert_eq!(tenant, "acme");
+                assert_eq!(*start, 3);
+                assert_eq!(demand, &[2, 4, 1]);
+                assert_eq!(reserved, &[0, 2, 4, 1, 0, 0]);
+                assert_eq!(*violations, 2);
+            }
+            other => panic!("wrong record: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn adaptive_delay_backs_off_under_lag_and_widens_when_idle() {
+        let us = Duration::from_micros;
+        let mut d = AdaptiveDelay::new(us(250), us(1000), us(500), us(100));
+        assert_eq!(d.current(), us(250));
+        // Lag above target: additive decrease, floored at zero.
+        d.observe(us(600));
+        assert_eq!(d.current(), us(150));
+        for _ in 0..5 {
+            d.observe(us(9999));
+        }
+        assert_eq!(d.current(), Duration::ZERO, "never goes negative");
+        // Lag under half the target: additive increase, capped at max.
+        for _ in 0..20 {
+            d.observe(us(100));
+        }
+        assert_eq!(d.current(), us(1000), "capped at adapt_max");
+        // Dead zone [target/2, target]: holds steady.
+        d.observe(us(400));
+        d.observe(us(500));
+        assert_eq!(d.current(), us(1000));
+        // The seed itself is clamped to the ceiling.
+        let d = AdaptiveDelay::new(us(5000), us(1000), us(500), us(100));
+        assert_eq!(d.current(), us(1000));
     }
 
     #[test]
@@ -1211,6 +1404,7 @@ mod tests {
             GroupCommitOpts {
                 max_delay: Duration::from_secs(30),
                 max_bytes: 1 << 30,
+                ..GroupCommitOpts::default()
             },
         );
         let released = Arc::new(AtomicBool::new(false));
@@ -1254,6 +1448,7 @@ mod tests {
             GroupCommitOpts {
                 max_delay: Duration::from_secs(30),
                 max_bytes: 1 << 30,
+                ..GroupCommitOpts::default()
             },
         );
         let top = gc.append_batch(&[

@@ -1,0 +1,244 @@
+//! Interactive (latency-SLO) workload class: per-region diurnal request
+//! streams with latency floors derived from inter-region RTTs.
+//!
+//! CarbonScaler schedules only delay-tolerant batch jobs; CASPER
+//! (PAPERS.md) shows that latency-sensitive web services can also be
+//! carbon-aware, by routing requests to greener regions *within* the
+//! service's latency SLO. This module models the demand side of that
+//! story over the same 37-region catalog the batch planners use:
+//!
+//! * a coordinate table for every catalog region and a great-circle RTT
+//!   model between them ([`rtt_ms`]), giving each (home, serving) region
+//!   pair a latency floor no routing policy can beat;
+//! * [`ServiceSpec`]: a registered request stream — home region, latency
+//!   SLO, diurnal demand curve in *server* units (requests are already
+//!   converted to servers via the service's provisioning ratio, so the
+//!   scheduler trades in the same capacity units as batch jobs).
+//!
+//! SUBSTITUTION (see DESIGN.md §3/§15): the paper's ecosystem (CASPER)
+//! measures real inter-region RTTs and request traces; neither is
+//! reachable here. RTTs are synthesized from great-circle distance at
+//! effective fiber propagation speed (~200 km/ms one-way, i.e. ~1 ms RTT
+//! per 100 km) plus a 2 ms stack overhead — matching published
+//! cloud-ping orders of magnitude — and demand is a deterministic
+//! sinusoid peaking mid-afternoon *local* time (timezone from the home
+//! region's longitude) with seeded multiplicative jitter. Real RTT
+//! matrices or request traces drop in without touching the planner.
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Geographic coordinates of one catalog region (metro-area centroid).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegionCoord {
+    /// Catalog name, matching [`crate::carbon::regions::REGIONS`].
+    pub name: &'static str,
+    /// Latitude, degrees north.
+    pub lat: f64,
+    /// Longitude, degrees east.
+    pub lon: f64,
+}
+
+/// Coordinates for all 37 catalog regions (same order as the catalog is
+/// not required; lookups go by name — coverage is asserted in tests).
+pub const COORDS: &[RegionCoord] = &[
+    RegionCoord { name: "ontario", lat: 43.7, lon: -79.4 },
+    RegionCoord { name: "netherlands", lat: 52.4, lon: 4.9 },
+    RegionCoord { name: "california", lat: 34.1, lon: -118.2 },
+    RegionCoord { name: "iceland", lat: 64.1, lon: -21.9 },
+    RegionCoord { name: "india", lat: 28.6, lon: 77.2 },
+    RegionCoord { name: "singapore", lat: 1.4, lon: 103.8 },
+    RegionCoord { name: "sweden", lat: 65.6, lon: 22.2 },
+    RegionCoord { name: "quebec", lat: 46.8, lon: -71.2 },
+    RegionCoord { name: "oregon", lat: 45.8, lon: -119.7 },
+    RegionCoord { name: "virginia", lat: 39.0, lon: -77.5 },
+    RegionCoord { name: "ohio", lat: 40.0, lon: -83.0 },
+    RegionCoord { name: "texas", lat: 32.8, lon: -96.8 },
+    RegionCoord { name: "ireland", lat: 53.3, lon: -6.3 },
+    RegionCoord { name: "london", lat: 51.5, lon: -0.1 },
+    RegionCoord { name: "frankfurt", lat: 50.1, lon: 8.7 },
+    RegionCoord { name: "paris", lat: 48.9, lon: 2.4 },
+    RegionCoord { name: "milan", lat: 45.5, lon: 9.2 },
+    RegionCoord { name: "stockholm", lat: 59.3, lon: 18.1 },
+    RegionCoord { name: "zurich", lat: 47.4, lon: 8.5 },
+    RegionCoord { name: "spain", lat: 40.4, lon: -3.7 },
+    RegionCoord { name: "warsaw", lat: 52.2, lon: 21.0 },
+    RegionCoord { name: "tokyo", lat: 35.7, lon: 139.7 },
+    RegionCoord { name: "osaka", lat: 34.7, lon: 135.5 },
+    RegionCoord { name: "seoul", lat: 37.6, lon: 127.0 },
+    RegionCoord { name: "mumbai", lat: 19.1, lon: 72.9 },
+    RegionCoord { name: "hyderabad", lat: 17.4, lon: 78.5 },
+    RegionCoord { name: "jakarta", lat: -6.2, lon: 106.8 },
+    RegionCoord { name: "sydney", lat: -33.9, lon: 151.2 },
+    RegionCoord { name: "melbourne", lat: -37.8, lon: 145.0 },
+    RegionCoord { name: "saopaulo", lat: -23.6, lon: -46.6 },
+    RegionCoord { name: "capetown", lat: -33.9, lon: 18.4 },
+    RegionCoord { name: "bahrain", lat: 26.2, lon: 50.6 },
+    RegionCoord { name: "uae", lat: 25.2, lon: 55.3 },
+    RegionCoord { name: "telaviv", lat: 32.1, lon: 34.8 },
+    RegionCoord { name: "montreal", lat: 45.5, lon: -73.6 },
+    RegionCoord { name: "calgary", lat: 51.0, lon: -114.1 },
+    RegionCoord { name: "norcal", lat: 37.8, lon: -122.4 },
+];
+
+/// Look up a region's coordinates by catalog name.
+pub fn coord_of(name: &str) -> Option<&'static RegionCoord> {
+    COORDS.iter().find(|c| c.name == name)
+}
+
+/// Great-circle distance between two coordinates, km (haversine).
+pub fn dist_km(a: &RegionCoord, b: &RegionCoord) -> f64 {
+    const EARTH_RADIUS_KM: f64 = 6371.0;
+    let (la1, la2) = (a.lat.to_radians(), b.lat.to_radians());
+    let dla = (b.lat - a.lat).to_radians();
+    let dlo = (b.lon - a.lon).to_radians();
+    let h = (dla / 2.0).sin().powi(2) + la1.cos() * la2.cos() * (dlo / 2.0).sin().powi(2);
+    2.0 * EARTH_RADIUS_KM * h.sqrt().asin()
+}
+
+/// Modeled round-trip time between two catalog regions, milliseconds:
+/// 2 ms stack overhead + great-circle propagation at ~200 km/ms each
+/// way. Same-region RTT is therefore 2 ms — every positive SLO of at
+/// least that much admits serving at home. `None` if either name is
+/// missing from [`COORDS`].
+pub fn rtt_ms(a: &str, b: &str) -> Option<f64> {
+    let (ca, cb) = (coord_of(a)?, coord_of(b)?);
+    Some(2.0 + 2.0 * dist_km(ca, cb) / 200.0)
+}
+
+/// A registered interactive service: a request stream anchored at a home
+/// region, with a latency SLO bounding which regions may serve it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceSpec {
+    /// Service identifier (unique within a deployment).
+    pub name: String,
+    /// Home region (catalog name): where the users are.
+    pub home: String,
+    /// Latency SLO, ms: a region may serve this stream only if
+    /// `rtt_ms(home, region) <= slo_ms`.
+    pub slo_ms: f64,
+    /// Diurnal peak demand, in servers (requests/s already divided by the
+    /// service's per-server throughput).
+    pub peak_servers: usize,
+    /// First active slot (absolute hour).
+    pub arrival: usize,
+    /// Active duration, slots.
+    pub hours: usize,
+    /// Per-server draw at full load, watts (carbon accounting).
+    pub power_watts: f64,
+}
+
+impl ServiceSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("service name empty");
+        }
+        if coord_of(&self.home).is_none() {
+            bail!("service {}: unknown home region {:?}", self.name, self.home);
+        }
+        if !(self.slo_ms.is_finite() && self.slo_ms > 0.0) {
+            bail!("service {}: non-positive SLO {}", self.name, self.slo_ms);
+        }
+        if self.peak_servers == 0 {
+            bail!("service {}: zero peak demand", self.name);
+        }
+        if self.hours == 0 {
+            bail!("service {}: zero duration", self.name);
+        }
+        if !(self.power_watts.is_finite() && self.power_watts > 0.0) {
+            bail!("service {}: bad power {}", self.name, self.power_watts);
+        }
+        Ok(())
+    }
+
+    /// Per-slot demand in servers over `[arrival, arrival + hours)`:
+    /// a diurnal sinusoid peaking at 15:00 *local* time (timezone from
+    /// the home longitude, 15°/h), trough at 30 % of peak, with ±5 %
+    /// seeded multiplicative jitter. Deterministic in (spec, seed).
+    pub fn demand(&self, seed: u64) -> Vec<usize> {
+        let tz = (coord_of(&self.home).map_or(0.0, |c| c.lon) / 15.0).round() as i64;
+        let mut rng = Rng::new(seed).fork(crate::service::wal::checksum(self.name.as_bytes()));
+        (0..self.hours)
+            .map(|t| {
+                let local = (self.arrival as i64 + t as i64 + tz).rem_euclid(24) as f64;
+                let day = 0.5 * (1.0 + (std::f64::consts::TAU * (local - 15.0) / 24.0).cos());
+                let base = self.peak_servers as f64 * (0.3 + 0.7 * day);
+                (base * rng.range(0.95, 1.05)).ceil() as usize
+            })
+            .collect()
+    }
+
+    /// Slot one past the last active one.
+    pub fn end(&self) -> usize {
+        self.arrival + self.hours
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::regions;
+
+    #[test]
+    fn coords_cover_the_whole_catalog_exactly() {
+        assert_eq!(COORDS.len(), regions::REGIONS.len());
+        for r in regions::REGIONS {
+            assert!(coord_of(r.name).is_some(), "no coordinates for {}", r.name);
+        }
+    }
+
+    #[test]
+    fn rtt_is_symmetric_zero_based_and_triangleish() {
+        assert!((rtt_ms("tokyo", "tokyo").unwrap() - 2.0).abs() < 1e-9);
+        let ab = rtt_ms("london", "sydney").unwrap();
+        let ba = rtt_ms("sydney", "london").unwrap();
+        assert!((ab - ba).abs() < 1e-9);
+        // Nearby pairs are fast, antipodal pairs are slow.
+        assert!(rtt_ms("tokyo", "osaka").unwrap() < 10.0);
+        assert!(rtt_ms("london", "sydney").unwrap() > 100.0);
+        assert!(rtt_ms("nowhere", "tokyo").is_none());
+    }
+
+    fn spec() -> ServiceSpec {
+        ServiceSpec {
+            name: "web".into(),
+            home: "virginia".into(),
+            slo_ms: 50.0,
+            peak_servers: 8,
+            arrival: 0,
+            hours: 48,
+            power_watts: 210.0,
+        }
+    }
+
+    #[test]
+    fn demand_is_diurnal_bounded_and_deterministic() {
+        let s = spec();
+        s.validate().unwrap();
+        let d = s.demand(7);
+        assert_eq!(d.len(), 48);
+        assert_eq!(d, s.demand(7), "same seed must reproduce");
+        let peak = *d.iter().max().unwrap();
+        let trough = *d.iter().min().unwrap();
+        assert!(peak <= (s.peak_servers as f64 * 1.05).ceil() as usize);
+        assert!(trough >= 1, "trough floor keeps the service warm");
+        assert!(trough < peak, "curve must actually be diurnal");
+        // The two days repeat in shape (same local hours), modulo jitter.
+        let day_gap: i64 = (0..24).map(|t| d[t] as i64 - d[t + 24] as i64).sum();
+        assert!(day_gap.abs() <= 24, "days diverge beyond jitter: {day_gap}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        for bad in [
+            ServiceSpec { name: "".into(), ..spec() },
+            ServiceSpec { home: "atlantis".into(), ..spec() },
+            ServiceSpec { slo_ms: 0.0, ..spec() },
+            ServiceSpec { peak_servers: 0, ..spec() },
+            ServiceSpec { hours: 0, ..spec() },
+            ServiceSpec { power_watts: f64::NAN, ..spec() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should fail");
+        }
+    }
+}

@@ -1,7 +1,10 @@
-//! Workload definitions: job specifications and the Table-1 catalog.
+//! Workload definitions: job specifications, the Table-1 catalog, and
+//! the interactive (latency-SLO) request-stream class.
 
 pub mod catalog;
+pub mod interactive;
 pub mod job;
 
 pub use catalog::{WorkloadInfo, WORKLOADS};
+pub use interactive::{coord_of, rtt_ms, RegionCoord, ServiceSpec};
 pub use job::{JobBuilder, JobSpec};
